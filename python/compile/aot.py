@@ -1,0 +1,123 @@
+"""AOT export: lower the L1/L2 graphs once to HLO *text* + manifest.json.
+
+HLO text (NOT `.serialize()` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the published `xla` rust
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/gen_hlo.py and DESIGN.md.
+
+Run once via `make artifacts`; python is never on the solve path.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Exported problem geometry (static shapes for the AOT path).
+DECODE_N = 4096
+ELL_ROWS = 256
+ELL_WIDTH = 16
+X_LEN = ELL_ROWS  # square demo systems
+CG_ITERS = 50
+
+U32 = jnp.uint32
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries():
+    """(name, fn, [(shape, dtype, label)], n_outputs) for every artifact."""
+    plane = (ELL_ROWS, ELL_WIDTH)
+    vec = (X_LEN,)
+    entries = []
+    for level in ("head", "t1", "full"):
+        entries.append(
+            (
+                f"decode_{level}",
+                functools.partial(model.decode_model, level=level),
+                [((DECODE_N,), U32, "u32")] * 4 + [((64,), F64, "f64")],
+                1,
+            )
+        )
+        entries.append(
+            (
+                f"spmv_ell_{level}",
+                functools.partial(model.spmv_model, level=level),
+                [(plane, U32, "u32")] * 5 + [((64,), F64, "f64"), (vec, F64, "f64")],
+                1,
+            )
+        )
+        entries.append(
+            (
+                f"cg_step_{level}",
+                functools.partial(model.cg_step_model, level=level),
+                [(plane, U32, "u32")] * 5
+                + [((64,), F64, "f64"), (vec, F64, "f64"), (vec, F64, "f64"),
+                   (vec, F64, "f64"), ((1,), F64, "f64")],
+                4,
+            )
+        )
+    entries.append(
+        (
+            "cg_run_head",
+            functools.partial(model.cg_run_model, level="head", iters=CG_ITERS),
+            [(plane, U32, "u32")] * 5 + [((64,), F64, "f64"), (vec, F64, "f64")],
+            2,
+        )
+    )
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"kernels": []}
+    for name, fn, specs, n_out in build_entries():
+        example = [_spec(shape, dtype) for shape, dtype, _ in specs]
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["kernels"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(shape) for shape, _, _ in specs],
+                "dtypes": [label for _, _, label in specs],
+                "outputs": n_out,
+            }
+        )
+        print(f"  {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['kernels'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels + the pure-numpy reference oracle."""

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: GSE-SEM decode (head / head+tail1 / full -> f64).
+
+The format-conversion hot-spot of the paper's Algorithm 2, rethought for
+TPU (DESIGN.md §6 Hardware-Adaptation): no per-lane bit-scan — the frame
+is assembled with *float* multiply-adds (each term is an integer below
+2^52, so f64 arithmetic is exact) and rescaled by a power-of-two gathered
+from the VMEM-resident shared-exponent scale table:
+
+    value = sign * (head_mant * 2^37 + tail1 * 2^21 + tail2) * scale[idx]
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU efficiency is estimated in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+S_HEAD = 37
+S_TAIL1 = 21
+
+# block size for the 1-D decode grid (8*128 lanes = one VPU tile of f32,
+# a safe multiple for f64 too)
+BLOCK = 1024
+
+
+def _decode_block(heads, tail1, tail2, idx, scales, level):
+    """Decode a block of SEM words; all inputs are jnp arrays (u32/f64)."""
+    hm = (heads & 0x7FFF).astype(jnp.float64)
+    sign = jnp.where((heads & 0x8000) != 0, -1.0, 1.0).astype(jnp.float64)
+    d = hm * float(1 << S_HEAD)
+    if level in ("t1", "full"):
+        d = d + tail1.astype(jnp.float64) * float(1 << S_TAIL1)
+    if level == "full":
+        d = d + tail2.astype(jnp.float64)
+    scale = scales[idx]  # gather from the 64-entry VMEM table
+    return sign * d * scale
+
+
+def _decode_kernel(heads_ref, tail1_ref, tail2_ref, idx_ref, scales_ref, out_ref, *, level):
+    heads = heads_ref[...]
+    tail1 = tail1_ref[...]
+    tail2 = tail2_ref[...]
+    idx = idx_ref[...]
+    scales = scales_ref[...]
+    out_ref[...] = _decode_block(heads, tail1, tail2, idx, scales, level)
+
+
+@functools.partial(jax.jit, static_argnames=("level",))
+def gse_decode(heads, tail1, tail2, idx, scales, *, level="full"):
+    """Decode `n` SEM words (u32 planes) to f64.
+
+    heads/tail1/tail2/idx: uint32[n] (u16 planes widened at the boundary —
+    the rust `xla` crate only constructs u32/u64 integer literals).
+    scales: float64[64] per-index scale table.
+    """
+    n = heads.shape[0]
+    assert n % BLOCK == 0, f"n={n} must be a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    block = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    # the scale table rides along whole in every grid step
+    table_spec = pl.BlockSpec((64,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, level=level),
+        grid=grid,
+        in_specs=[block, block, block, block, table_spec],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float64),
+        interpret=True,
+    )(heads, tail1, tail2, idx, scales)
+
+
+def gse_decode_ref(heads, tail1, tail2, idx, scales, *, level="full"):
+    """Plain-jnp oracle of the same computation (no pallas)."""
+    return _decode_block(
+        jnp.asarray(heads), jnp.asarray(tail1), jnp.asarray(tail2), jnp.asarray(idx),
+        jnp.asarray(scales), level,
+    )

@@ -1,0 +1,170 @@
+"""Pure-numpy GSE-SEM reference (oracle) — bit-exact mirror of the rust
+encoder/decoder (rust/src/formats/{gse,sem}.rs, External layout).
+
+This file is the single normative python definition of the format; the
+Pallas kernels are validated against it by pytest + hypothesis, and it is
+itself validated against f64 semantics in test_ref.py.
+
+Encoding spec (DESIGN.md §8, External/matrix layout):
+  * table entries are IEEE-754 biased f64 exponents + 1, frequency order,
+    with max_exp+1 guaranteed present;
+  * index of a value = entry with the smallest diff = entry - exp >= 1
+    (first match wins on ties);
+  * D = ((1<<52) | mant52) >> minDiff  (explicit leading one,
+    denormalized into a common 52-bit frame);
+  * head  (u16) = sign<<15 | D>>37          (15 mantissa bits)
+  * tail1 (u16) = (D>>21) & 0xFFFF
+  * tail2 (u32) = D & (2^21 - 1)
+  * decode(level) = sign * D_level * 2^(stored - 1075).
+"""
+
+import numpy as np
+
+M_HEAD = 15
+S_HEAD = 37
+S_TAIL1 = 21
+W_TAIL2 = 21
+SCALE_EXP = 1075  # bias 1023 + mantissa 52
+
+LEVELS = ("head", "t1", "full")
+
+
+def split_f64(x):
+    """(sign, biased_exp, mant52) of float64 array."""
+    bits = np.asarray(x, dtype=np.float64).view(np.uint64)
+    sign = (bits >> np.uint64(63)).astype(np.uint32)
+    exp = ((bits >> np.uint64(52)) & np.uint64(0x7FF)).astype(np.uint32)
+    mant = bits & np.uint64((1 << 52) - 1)
+    return sign, exp, mant
+
+
+def gse_extract(values, k):
+    """Top-k shared exponents (biased+1), frequency-desc, max+1 present.
+
+    Mirrors GseTable::from_histogram: ties break toward the smaller
+    exponent; if max_exp+1 is absent it replaces the last entry.
+    """
+    _, exp, _ = split_f64(values)
+    ok = (exp != 0) & (exp != 0x7FF)
+    exp = exp[ok]
+    if exp.size == 0:
+        return np.array([1024], dtype=np.uint32)
+    counts = np.bincount(exp, minlength=2048)
+    nz = np.nonzero(counts)[0]
+    # sort by count desc then exponent asc (match rust determinism)
+    order = sorted(nz, key=lambda e: (-counts[e], e))
+    entries = [int(e) + 1 for e in order[:k]]
+    need = int(exp.max()) + 1
+    if need not in entries:
+        entries[-1] = need
+    # dedup keeping first occurrence
+    seen, out = set(), []
+    for e in entries:
+        if e not in seen:
+            seen.add(e)
+            out.append(e)
+    return np.array(out, dtype=np.uint32)
+
+
+def lookup(table, biased_exp):
+    """(idx, minDiff) arrays for each exponent; idx = -1 if out of range."""
+    biased_exp = np.asarray(biased_exp, dtype=np.int64)
+    diffs = table.astype(np.int64)[None, :] - biased_exp[..., None]
+    valid = diffs >= 1
+    big = np.where(valid, diffs, np.int64(1 << 40))
+    idx = np.argmin(big, axis=-1)  # first minimum wins ties, like rust
+    mind = np.take_along_axis(big, idx[..., None], axis=-1)[..., 0]
+    out_of_range = ~valid.any(axis=-1)
+    idx = np.where(out_of_range, -1, idx)
+    mind = np.where(out_of_range, 0, mind)
+    return idx.astype(np.int64), mind.astype(np.uint64)
+
+
+def sem_encode(values, table):
+    """Encode float64 array -> (heads u16, tail1 u16, tail2 u32, idx u16).
+
+    Zeros/subnormals encode to zero mantissa. Out-of-table exponents
+    saturate to the largest shared binade (matching the rust fallback).
+    """
+    values = np.asarray(values, dtype=np.float64)
+    sign, exp, mant = split_f64(values)
+    idx, mind = lookup(table, exp)
+
+    # saturation for out-of-range exponents
+    oor = idx < 0
+    if oor.any():
+        bi = int(np.argmax(table))
+        stored = int(table[bi])
+        maxval = float(np.ldexp(float((1 << 52) - 1), stored - SCALE_EXP))
+        vals2 = values.copy()
+        vals2[oor] = np.where(np.isnan(values[oor]), 0.0, np.copysign(maxval, values[oor]))
+        sign, exp, mant = split_f64(vals2)
+        idx, mind = lookup(table, exp)
+
+    normal = (exp != 0) & (exp != 0x7FF)
+    d = (mant | np.uint64(1 << 52)) >> np.minimum(mind, np.uint64(63))
+    d = np.where(normal, d, np.uint64(0))
+    idx = np.where(normal, idx, 0)
+
+    heads = ((sign.astype(np.uint64) << np.uint64(15)) | (d >> np.uint64(S_HEAD))).astype(
+        np.uint16
+    )
+    tail1 = ((d >> np.uint64(S_TAIL1)) & np.uint64(0xFFFF)).astype(np.uint16)
+    tail2 = (d & np.uint64((1 << W_TAIL2) - 1)).astype(np.uint32)
+    return heads, tail1, tail2, idx.astype(np.uint16)
+
+
+def frame(heads, tail1, tail2, level):
+    """Reconstruct the D-frame prefix available at a level (uint64)."""
+    d = (np.asarray(heads, dtype=np.uint64) & np.uint64(0x7FFF)) << np.uint64(S_HEAD)
+    if level in ("t1", "full"):
+        d = d | (np.asarray(tail1, dtype=np.uint64) << np.uint64(S_TAIL1))
+    if level == "full":
+        d = d | (np.asarray(tail2, dtype=np.uint64) & np.uint64((1 << W_TAIL2) - 1))
+    return d
+
+
+def decode(heads, tail1, tail2, idx, table, level):
+    """Decode to float64 at a precision level (the rust ldexp path)."""
+    d = frame(heads, tail1, tail2, level)
+    stored = table.astype(np.int64)[np.asarray(idx, dtype=np.int64)]
+    v = np.ldexp(d.astype(np.float64), (stored - SCALE_EXP).astype(np.int32))
+    neg = (np.asarray(heads, dtype=np.uint16) & np.uint16(0x8000)) != 0
+    return np.where(neg, -v, v)
+
+
+def scales_from_table(table):
+    """Per-index decode scale 2^(stored-1075), padded to 64 entries f64
+    (what the Pallas kernels consume instead of integer exponent math)."""
+    s = np.ldexp(1.0, table.astype(np.int64) - SCALE_EXP)
+    out = np.zeros(64, dtype=np.float64)
+    out[: len(s)] = s
+    return out
+
+
+def decode_float(heads, tail1, tail2, idx, scales, level):
+    """Float-only decode used by the Pallas kernels (DESIGN.md §6): the
+    frame is assembled in f64 arithmetic (exact, < 2^53) and scaled by a
+    gathered power of two. Must agree bit-for-bit with `decode`."""
+    h = np.asarray(heads, dtype=np.uint16)
+    hm = (h & np.uint16(0x7FFF)).astype(np.float64)
+    t1 = np.asarray(tail1, dtype=np.uint16).astype(np.float64)
+    t2 = np.asarray(tail2, dtype=np.uint32).astype(np.float64)
+    d = hm * float(1 << S_HEAD)
+    if level in ("t1", "full"):
+        d = d + t1 * float(1 << S_TAIL1)
+    if level == "full":
+        d = d + t2
+    v = d * scales[np.asarray(idx, dtype=np.int64)]
+    neg = (h & np.uint16(0x8000)) != 0
+    return np.where(neg, -v, v)
+
+
+def spmv_ell_ref(heads, tail1, tail2, idx, cols, scales, x, level):
+    """Reference ELL SpMV: decode every slot, gather x, row-sum.
+
+    All arrays are (R, W); padding slots must have zero heads/tails.
+    """
+    vals = decode_float(heads, tail1, tail2, idx, scales, level)
+    gathered = x[np.asarray(cols, dtype=np.int64)]
+    return (vals * gathered).sum(axis=1)

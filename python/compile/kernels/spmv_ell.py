@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: GSE-SEM padded-ELL SpMV.
+
+The matrix travels as fixed-shape (R, W) planes — heads / tail1 / tail2 /
+exp-idx / column-index — the static-shape view the rust side produces
+with `spmv::ell::to_ell`. The grid tiles rows (`ROWS_PER_BLOCK` per
+step); each step decodes its tile with the float-only SEM decode and
+accumulates `sum_w vals * x[cols]`.
+
+Hardware adaptation (DESIGN.md §6): the CUDA CSR-vector kernel assigns a
+warp per row and staggers loads; here BlockSpec expresses the HBM->VMEM
+tiling, the 64-entry scale table lives in VMEM with the tile, and the
+gather of x is left to XLA (interpret mode) / Mosaic (real TPU).
+
+VMEM estimate per tile at ROWS_PER_BLOCK=256, W=16 (f64 x resident):
+5 planes * 256*16 * 4B = 80 KiB + x — far under the 16 MiB budget; see
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import gse_decode
+
+ROWS_PER_BLOCK = 256
+
+
+def _spmv_kernel(heads_ref, tail1_ref, tail2_ref, idx_ref, cols_ref, scales_ref, x_ref,
+                 y_ref, *, level):
+    vals = gse_decode._decode_block(
+        heads_ref[...], tail1_ref[...], tail2_ref[...], idx_ref[...], scales_ref[...], level
+    )
+    x = x_ref[...]
+    gathered = x[cols_ref[...]]  # (rows, W) gather
+    y_ref[...] = (vals * gathered).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("level",))
+def spmv_ell(heads, tail1, tail2, idx, cols, scales, x, *, level="head"):
+    """y = decode(A_ell, level) @ x.
+
+    heads/tail1/tail2/idx/cols: uint32[R, W]; scales: f64[64]; x: f64[N].
+    R must be a multiple of ROWS_PER_BLOCK.
+    """
+    r, w = heads.shape
+    assert r % ROWS_PER_BLOCK == 0, f"R={r} must be a multiple of {ROWS_PER_BLOCK}"
+    n = x.shape[0]
+    grid = (r // ROWS_PER_BLOCK,)
+    plane = pl.BlockSpec((ROWS_PER_BLOCK, w), lambda i: (i, 0))
+    table = pl.BlockSpec((64,), lambda i: (0,))
+    xspec = pl.BlockSpec((n,), lambda i: (0,))
+    yspec = pl.BlockSpec((ROWS_PER_BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_spmv_kernel, level=level),
+        grid=grid,
+        in_specs=[plane, plane, plane, plane, plane, table, xspec],
+        out_specs=yspec,
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float64),
+        interpret=True,
+    )(heads, tail1, tail2, idx, cols, scales, x)
+
+
+def spmv_ell_ref(heads, tail1, tail2, idx, cols, scales, x, *, level="head"):
+    """Plain-jnp oracle."""
+    vals = gse_decode._decode_block(
+        jnp.asarray(heads), jnp.asarray(tail1), jnp.asarray(tail2), jnp.asarray(idx),
+        jnp.asarray(scales), level,
+    )
+    return (vals * jnp.asarray(x)[jnp.asarray(cols)]).sum(axis=1)

@@ -1,0 +1,66 @@
+"""L2 JAX model: the solver compute graph over the GSE-SEM ELL planes.
+
+The paper's contribution lives at L1 (format/kernels) and the controller
+at L3; the L2 graph composes the Pallas SpMV with the FP64 vector ops of
+one CG iteration so XLA can fuse the whole step into a single HLO module
+that the rust runtime executes AOT (no python at solve time).
+
+Exported entry points (lowered by aot.py):
+  * decode_{level}(heads, tail1, tail2, idx, scales) -> values
+  * spmv_{level}(planes..., scales, x) -> y
+  * cg_step_{level}(planes..., scales, x, r, p, rr) -> (x', r', p', rr')
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gse_decode, spmv_ell
+
+
+def decode_model(heads, tail1, tail2, idx, scales, *, level):
+    return (gse_decode.gse_decode(heads, tail1, tail2, idx, scales, level=level),)
+
+
+def spmv_model(heads, tail1, tail2, idx, cols, scales, x, *, level):
+    return (spmv_ell.spmv_ell(heads, tail1, tail2, idx, cols, scales, x, level=level),)
+
+
+@functools.partial(jax.jit, static_argnames=("level",))
+def cg_step(heads, tail1, tail2, idx, cols, scales, x, r, p, rr, *, level):
+    """One unpreconditioned CG iteration over the ELL operator.
+
+    rr is carried as shape-(1,) so every port is a tensor (scalars in the
+    PJRT boundary are awkward from rust). Returns (x', r', p', rr').
+    """
+    w = spmv_ell.spmv_ell(heads, tail1, tail2, idx, cols, scales, p, level=level)
+    rr0 = rr[0]
+    pw = jnp.dot(p, w)
+    alpha = rr0 / pw
+    x_new = x + alpha * p
+    r_new = r - alpha * w
+    rr_new = jnp.dot(r_new, r_new)
+    beta = rr_new / rr0
+    p_new = r_new + beta * p
+    return x_new, r_new, p_new, jnp.reshape(rr_new, (1,))
+
+
+def cg_step_model(*args, level):
+    return tuple(cg_step(*args, level=level))
+
+
+def cg_run_model(heads, tail1, tail2, idx, cols, scales, b, *, level, iters=50):
+    """A fixed-iteration CG solve fused into one module (e2e demo): runs
+    `iters` CG steps from x0 = 0 and returns (x, final rr)."""
+    x = jnp.zeros_like(b)
+    r = b
+    p = b
+    rr = jnp.reshape(jnp.dot(b, b), (1,))
+
+    def body(_, carry):
+        x, r, p, rr = carry
+        return cg_step(heads, tail1, tail2, idx, cols, scales, x, r, p, rr, level=level)
+
+    x, r, p, rr = jax.lax.fori_loop(0, iters, body, (x, r, p, rr))
+    return x, rr

@@ -1,0 +1,5 @@
+"""Test setup: f64 must be enabled before any jax tracing happens."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,137 @@
+"""Pallas kernels vs the numpy oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes, k, magnitude spreads, and precision levels;
+every comparison is exact (the decode is float-exact by construction) or
+allclose for the SpMV reductions (summation-order drift only).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gse_decode, ref, spmv_ell
+
+
+def make_planes(rng, n, k, sigma):
+    vals = np.exp(rng.normal(0, sigma, size=n)) * rng.choice([-1.0, 1.0], size=n)
+    table = ref.gse_extract(vals, k)
+    h, t1, t2, idx = ref.sem_encode(vals, table)
+    scales = ref.scales_from_table(table)
+    return vals, table, h, t1, t2, idx, scales
+
+
+def widen(a):
+    return np.ascontiguousarray(a, dtype=np.uint32)
+
+
+class TestDecodeKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.sampled_from([1024, 2048, 4096]),
+        st.sampled_from([1, 2, 8, 64]),
+        st.floats(0.1, 6.0),
+        st.sampled_from(list(ref.LEVELS)),
+        st.integers(0, 2**31),
+    )
+    def test_matches_oracle(self, n, k, sigma, level, seed):
+        rng = np.random.default_rng(seed)
+        _, table, h, t1, t2, idx, scales = make_planes(rng, n, k, sigma)
+        got = np.asarray(
+            gse_decode.gse_decode(
+                widen(h), widen(t1), widen(t2), widen(idx), scales, level=level
+            )
+        )
+        want = ref.decode_float(h, t1, t2, idx, scales, level)
+        np.testing.assert_array_equal(got, want)
+
+    def test_decode_equals_true_values_at_full(self):
+        rng = np.random.default_rng(7)
+        vals, table, h, t1, t2, idx, scales = make_planes(rng, 1024, 8, 2.0)
+        got = np.asarray(
+            gse_decode.gse_decode(widen(h), widen(t1), widen(t2), widen(idx), scales,
+                                  level="full")
+        )
+        nz = vals != 0
+        rel = np.abs(got[nz] - vals[nz]) / np.abs(vals[nz])
+        assert rel.max() <= 2.0 ** -40
+
+    def test_block_misalignment_rejected(self):
+        rng = np.random.default_rng(1)
+        _, _, h, t1, t2, idx, scales = make_planes(rng, 1024, 8, 1.0)
+        with pytest.raises(AssertionError):
+            gse_decode.gse_decode(
+                widen(h[:1000]), widen(t1[:1000]), widen(t2[:1000]), widen(idx[:1000]),
+                scales, level="head",
+            )
+
+    def test_kernel_vs_plain_jnp_path(self):
+        rng = np.random.default_rng(5)
+        _, _, h, t1, t2, idx, scales = make_planes(rng, 2048, 16, 3.0)
+        a = np.asarray(
+            gse_decode.gse_decode(widen(h), widen(t1), widen(t2), widen(idx), scales,
+                                  level="t1")
+        )
+        b = np.asarray(
+            gse_decode.gse_decode_ref(widen(h), widen(t1), widen(t2), widen(idx), scales,
+                                      level="t1")
+        )
+        np.testing.assert_array_equal(a, b)
+
+
+class TestSpmvKernel:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        st.sampled_from([256, 512]),
+        st.sampled_from([4, 16]),
+        st.sampled_from([2, 8]),
+        st.sampled_from(list(ref.LEVELS)),
+        st.integers(0, 2**31),
+    )
+    def test_matches_oracle(self, rows, width, k, level, seed):
+        rng = np.random.default_rng(seed)
+        n = rows
+        _, table, h, t1, t2, idx, scales = make_planes(rng, rows * width, k, 2.0)
+        shape = (rows, width)
+        cols = rng.integers(0, n, size=shape).astype(np.uint32)
+        x = rng.normal(size=n)
+        got = np.asarray(
+            spmv_ell.spmv_ell(
+                widen(h.reshape(shape)), widen(t1.reshape(shape)),
+                widen(t2.reshape(shape)), widen(idx.reshape(shape)),
+                cols, scales, x, level=level,
+            )
+        )
+        want = ref.spmv_ell_ref(
+            h.reshape(shape), t1.reshape(shape), t2.reshape(shape),
+            idx.reshape(shape), cols, scales, x, level,
+        )
+        # identical decode, summation order may differ inside the kernel
+        scale = np.abs(want).max() if want.size else 1.0
+        np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-12 * max(scale, 1e-300))
+
+    def test_zero_padding_contributes_nothing(self):
+        rows, width, n = 256, 8, 256
+        rng = np.random.default_rng(2)
+        _, table, h, t1, t2, idx, scales = make_planes(rng, rows * width, 8, 1.0)
+        shape = (rows, width)
+        h = h.reshape(shape).copy()
+        t1 = t1.reshape(shape).copy()
+        t2 = t2.reshape(shape).copy()
+        idx = idx.reshape(shape).copy()
+        cols = rng.integers(0, n, size=shape).astype(np.uint32)
+        # zero out the last two slots of every row (padding)
+        for plane in (h, t1, t2, idx):
+            plane[:, -2:] = 0
+        x = rng.normal(size=n)
+        full = np.asarray(
+            spmv_ell.spmv_ell(widen(h), widen(t1), widen(t2), widen(idx), cols, scales,
+                              x, level="full")
+        )
+        # same result when padding columns point anywhere else
+        cols2 = cols.copy()
+        cols2[:, -2:] = 0
+        moved = np.asarray(
+            spmv_ell.spmv_ell(widen(h), widen(t1), widen(t2), widen(idx), cols2, scales,
+                              x, level="full")
+        )
+        np.testing.assert_allclose(full, moved, rtol=1e-13)

@@ -1,0 +1,158 @@
+"""Validate the numpy GSE-SEM oracle against float64 semantics.
+
+These tests pin down the format spec itself (DESIGN.md §8); the Pallas
+kernels are then validated against this oracle in test_kernel.py, and
+the rust implementation pins the same golden values in its unit tests —
+the three implementations meet at this spec.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def finite_values(min_mag=1e-300, max_mag=1e300):
+    return st.floats(
+        allow_nan=False,
+        allow_infinity=False,
+        allow_subnormal=False,
+        min_value=-max_mag,
+        max_value=max_mag,
+    ).filter(lambda x: x == 0.0 or abs(x) >= min_mag)
+
+
+class TestExtract:
+    def test_single_binade(self):
+        t = ref.gse_extract(np.array([1.0, 1.5, 1.9]), 8)
+        assert list(t) == [1024]  # biased 1023 + 1
+
+    def test_frequency_order_and_max_guarantee(self):
+        vals = np.array([2.0] * 5 + [1.0] * 3 + [1e300])
+        t = ref.gse_extract(vals, 2)
+        assert t[0] == 1025  # most frequent first
+        maxe = np.frexp(1e300)[1] - 1 + 1023  # biased exponent of 1e300
+        assert (maxe + 1) in t  # max+1 present even at k=2
+
+    def test_k_larger_than_distinct(self):
+        t = ref.gse_extract(np.array([1.0, 2.0]), 64)
+        assert len(t) == 2
+
+    def test_empty_and_zero_input(self):
+        t = ref.gse_extract(np.array([0.0, 0.0]), 4)
+        assert list(t) == [1024]
+
+
+class TestGolden:
+    """Golden values shared with the rust tests (sem.rs)."""
+
+    def test_encode_1p5_single_entry_table(self):
+        table = np.array([1024], dtype=np.uint32)
+        h, t1, t2, idx = ref.sem_encode(np.array([1.5]), table)
+        # D = (0b11 << 51) >> 1 = 3 << 50; head mant = D >> 37 = 3 << 13
+        assert h[0] == 0x6000
+        assert t1[0] == 0 and t2[0] == 0 and idx[0] == 0
+        assert ref.decode(h, t1, t2, idx, table, "head")[0] == 1.5
+
+    def test_encode_negative_sign_bit(self):
+        table = np.array([1024], dtype=np.uint32)
+        h, *_ = ref.sem_encode(np.array([-1.5]), table)
+        assert h[0] == 0xE000
+
+    def test_zero_encodes_to_zero(self):
+        table = np.array([1024], dtype=np.uint32)
+        h, t1, t2, idx = ref.sem_encode(np.array([0.0, -0.0, 1e-310]), table)
+        for level in ref.LEVELS:
+            np.testing.assert_array_equal(
+                ref.decode(h, t1, t2, idx, table, level), [0.0, 0.0, 0.0]
+            )
+
+
+class TestRoundtrip:
+    @settings(max_examples=300, deadline=None)
+    @given(
+        st.lists(finite_values(1e-30, 1e30), min_size=1, max_size=100),
+        st.sampled_from([1, 2, 4, 8, 16, 64]),
+    )
+    def test_full_precision_relative_error(self, vals, k):
+        vals = np.array(vals, dtype=np.float64)
+        table = ref.gse_extract(vals, k)
+        h, t1, t2, idx = ref.sem_encode(vals, table)
+        out = ref.decode(h, t1, t2, idx, table, "full")
+        nz = vals != 0
+        if nz.any():
+            rel = np.abs(out[nz] - vals[nz]) / np.abs(vals[nz])
+            # full level keeps >= 52 - (minDiff-1) frame bits; with the
+            # guaranteed max+1 entry minDiff is small for top binades but
+            # can be large for tiny values under small k — bound by the
+            # k=1 worst case: every kept value within its own binade
+            # loses at most minDiff bits.
+            assert np.all(rel <= 1.0)
+            # exact-hit values (minDiff == 1) lose only mantissa bit 0
+            _, exp, _ = ref.split_f64(vals)
+            rel_full = np.zeros_like(vals)
+            rel_full[nz] = rel
+            exact = np.isin(exp + 1, table) & nz
+            assert np.all(rel_full[exact] <= 2.0 ** -51)
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        st.lists(finite_values(1e-6, 1e6), min_size=1, max_size=60),
+        st.sampled_from([2, 8, 32]),
+    )
+    def test_levels_monotone(self, vals, k):
+        vals = np.array(vals, dtype=np.float64)
+        table = ref.gse_extract(vals, k)
+        h, t1, t2, idx = ref.sem_encode(vals, table)
+        errs = [
+            np.abs(ref.decode(h, t1, t2, idx, table, lvl) - vals).max()
+            for lvl in ref.LEVELS
+        ]
+        assert errs[0] >= errs[1] >= errs[2]
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(finite_values(1e-10, 1e10), min_size=1, max_size=60))
+    def test_decode_equals_decode_float(self, vals):
+        """The integer (ldexp) and float-only (Pallas-style) decodes are
+        the same function."""
+        vals = np.array(vals, dtype=np.float64)
+        table = ref.gse_extract(vals, 8)
+        h, t1, t2, idx = ref.sem_encode(vals, table)
+        scales = ref.scales_from_table(table)
+        for lvl in ref.LEVELS:
+            a = ref.decode(h, t1, t2, idx, table, lvl)
+            b = ref.decode_float(h, t1, t2, idx, scales, lvl)
+            np.testing.assert_array_equal(a, b)
+
+    def test_saturation_out_of_table(self):
+        table = np.array([1024], dtype=np.uint32)  # covers exp <= 1023
+        h, t1, t2, idx = ref.sem_encode(np.array([1e300, -1e300]), table)
+        out = ref.decode(h, t1, t2, idx, table, "full")
+        assert np.isfinite(out).all()
+        assert out[0] > 0 > out[1]
+        assert out[0] < 2.0  # clamped into the largest shared binade
+
+
+class TestSpmvRef:
+    def test_matches_dense_matvec(self):
+        rng = np.random.default_rng(3)
+        R, W, N = 8, 4, 8
+        dense = np.zeros((R, N))
+        cols = rng.integers(0, N, size=(R, W))
+        vals = rng.normal(size=(R, W)) * np.exp(rng.normal(size=(R, W)))
+        # build ELL planes; allow duplicate cols (they sum)
+        table = ref.gse_extract(vals.ravel(), 8)
+        h, t1, t2, idx = ref.sem_encode(vals.ravel(), table)
+        shape = (R, W)
+        scales = ref.scales_from_table(table)
+        x = rng.normal(size=N)
+        y = ref.spmv_ell_ref(
+            h.reshape(shape), t1.reshape(shape), t2.reshape(shape),
+            idx.reshape(shape), cols, scales, x, "full",
+        )
+        decoded = ref.decode(h, t1, t2, idx, table, "full").reshape(shape)
+        for r in range(R):
+            for w in range(W):
+                dense[r, cols[r, w]] += decoded[r, w]
+        np.testing.assert_allclose(y, dense @ x, rtol=1e-12)

@@ -1,0 +1,91 @@
+//! Ablation — decode-strategy cost in the GSE-SEM SpMV hot loop:
+//! the faithful Algorithm-2 bit-scan vs the branch-free ldexp decode vs
+//! the per-index scale LUT (the optimized kernel), at each precision
+//! level. This quantifies the "format conversion overhead" the paper's
+//! GSE-SEM* analysis removes (§IV-D3).
+
+#[path = "common.rs"]
+mod common;
+
+use gsem::formats::Precision;
+use gsem::sparse::gen::corpus::spmv_corpus;
+use gsem::spmv::{fp64, DecodeStrategy, GseCsr};
+use gsem::util::csv::write_csv;
+use gsem::util::stats::geomean;
+use gsem::util::table::TextTable;
+
+fn main() {
+    let corpus = spmv_corpus(common::bench_corpus_size());
+    // take the largest few matrices of each class for stable timing
+    let mut picks: Vec<&gsem::sparse::gen::corpus::NamedMatrix> = Vec::new();
+    for class in ["pde", "cfd", "fem", "circuit", "random"] {
+        let mut of_class: Vec<_> = corpus.iter().filter(|m| m.class == class).collect();
+        of_class.sort_by_key(|m| m.a.nnz());
+        picks.extend(of_class.into_iter().rev().take(2));
+    }
+    eprintln!("ablation_decode: {} matrices", picks.len());
+    let budget = common::cell_budget();
+
+    let strategies = [
+        ("bitscan", DecodeStrategy::BitScan),
+        ("ldexp", DecodeStrategy::Ldexp),
+        ("scale-lut", DecodeStrategy::ScaleLut),
+    ];
+    let mut per_strategy: Vec<Vec<f64>> = vec![Vec::new(); 3]; // speedup vs fp64, head level
+    let mut rows = Vec::new();
+    let mut t = TextTable::new(&["matrix", "level", "fp64", "bitscan", "ldexp", "scale-lut"]);
+    for m in &picks {
+        let a = &m.a;
+        let x = vec![1.0; a.ncols];
+        let t64 = common::quick_time(budget, || {
+            let mut y = vec![0.0; a.nrows];
+            fp64::spmv(a, &x, &mut y);
+            y
+        });
+        for level in Precision::LADDER {
+            let mut times = Vec::new();
+            for (_, s) in strategies {
+                let g = GseCsr::from_csr(a, 8).with_strategy(s);
+                times.push(common::quick_time(budget, || {
+                    let mut y = vec![0.0; a.nrows];
+                    g.spmv(&x, &mut y, level);
+                    y
+                }));
+            }
+            if level == Precision::Head {
+                for (i, &tt) in times.iter().enumerate() {
+                    per_strategy[i].push(t64 / tt);
+                }
+            }
+            t.row(&[
+                m.name.clone(),
+                format!("{level:?}"),
+                format!("{:.2}us", t64 * 1e6),
+                format!("{:.2}us", times[0] * 1e6),
+                format!("{:.2}us", times[1] * 1e6),
+                format!("{:.2}us", times[2] * 1e6),
+            ]);
+            rows.push(vec![
+                m.name.clone(),
+                format!("{level:?}"),
+                format!("{:.4e}", t64),
+                format!("{:.4e}", times[0]),
+                format!("{:.4e}", times[1]),
+                format!("{:.4e}", times[2]),
+            ]);
+        }
+    }
+    println!("Ablation — SpMV time per decode strategy");
+    t.print();
+    let _ = write_csv(
+        "ablation_decode",
+        &["matrix", "level", "t_fp64", "t_bitscan", "t_ldexp", "t_scalelut"],
+        &rows,
+    );
+    println!(
+        "\nhead-level speedup vs FP64 (geomean): bitscan {:.2}x  ldexp {:.2}x  scale-lut {:.2}x",
+        geomean(&per_strategy[0]),
+        geomean(&per_strategy[1]),
+        geomean(&per_strategy[2])
+    );
+}

@@ -1,0 +1,165 @@
+//! Ablation — the stepped controller's switch policy (§III-D):
+//! each condition disabled in turn, plus window/period sweeps, on hard
+//! CG systems where head-only stalls. Reports iterations, final
+//! residual, and when the switches fired — the evidence behind the
+//! three-condition design of Algorithm 3.
+
+#[path = "common.rs"]
+mod common;
+
+use gsem::formats::Precision;
+use gsem::solvers::cg::{cg_solve, CgOpts};
+use gsem::solvers::stepped::{PrecisionController, SteppedParams, SwitchableOp};
+use gsem::sparse::gen::fem::diffusion2d;
+use gsem::spmv::GseCsr;
+use gsem::util::csv::write_csv;
+use gsem::util::table::TextTable;
+
+/// Which conditions are active.
+#[derive(Clone, Copy, Debug)]
+struct Policy {
+    c1: bool,
+    c2: bool,
+    c3: bool,
+    label: &'static str,
+}
+
+fn run_policy(a: &gsem::sparse::Csr, params: SteppedParams, pol: Policy) -> (usize, f64, Vec<usize>) {
+    let g = GseCsr::from_csr(a, 8);
+    let op = SwitchableOp::new(g);
+    let mut ctrl = PrecisionController::new(params);
+    let ones = vec![1.0; a.ncols];
+    let mut b = vec![0.0; a.nrows];
+    gsem::spmv::fp64::spmv(a, &ones, &mut b);
+    let mut switch_iters = Vec::new();
+    let out = {
+        let opref = &op;
+        let ctrl = &mut ctrl;
+        let sw = &mut switch_iters;
+        cg_solve(
+            opref,
+            &b,
+            &CgOpts { tol: 1e-6, max_iters: if common::fast() { 1200 } else { 4000 }, inv_diag: None },
+            move |iter, resid| {
+                // replicate PrecisionController::observe but with
+                // conditions masked by the policy
+                if let Some(_lvl) = observe_masked(ctrl, iter, resid, pol) {
+                    opref.set_level(ctrl.tag);
+                    sw.push(iter);
+                    gsem::solvers::MonitorCmd::Restart
+                } else {
+                    gsem::solvers::MonitorCmd::Continue
+                }
+            },
+        )
+    };
+    // residual against the full-precision operator
+    let full = op.m.clone().at_level(Precision::Full);
+    let rel = gsem::solvers::true_relres(&full, &out.x, &b);
+    (out.iters, rel, switch_iters)
+}
+
+/// PrecisionController::observe with selectable conditions.
+fn observe_masked(
+    c: &mut PrecisionController,
+    iter: usize,
+    resid: f64,
+    pol: Policy,
+) -> Option<Precision> {
+    use gsem::solvers::stepped::window_metrics;
+    // maintain the window manually (mirror of the real controller)
+    let got = c.observe(iter, resid);
+    match got {
+        None => None,
+        Some(lvl) => {
+            // the real controller switched; check whether the masked
+            // policy would have: recompute on the pre-clear state is not
+            // possible, so approximate by re-deriving from the reason.
+            let reason = *c.reasons.last().unwrap();
+            let allowed = match reason {
+                gsem::solvers::stepped::SwitchReason::Fluctuating => pol.c1,
+                gsem::solvers::stepped::SwitchReason::SlowDecrease => pol.c2,
+                gsem::solvers::stepped::SwitchReason::NoDecrease => pol.c3,
+                // the safety valve is part of every policy
+                gsem::solvers::stepped::SwitchReason::Diverged => true,
+            };
+            let _ = window_metrics; // metrics derived inside observe
+            if allowed {
+                Some(lvl)
+            } else {
+                // undo the escalation the unmasked controller performed
+                c.tag = match c.tag {
+                    Precision::HeadTail1 => Precision::Head,
+                    Precision::Full => Precision::HeadTail1,
+                    p => p,
+                };
+                c.switches.pop();
+                c.reasons.pop();
+                None
+            }
+        }
+    }
+}
+
+fn main() {
+    let systems = vec![
+        ("contrast14", diffusion2d(28, 28, 14.0, 31)),
+        ("contrast18", diffusion2d(24, 24, 18.0, 77)),
+    ];
+    let params = SteppedParams {
+        l: 40,
+        t: 24,
+        m: 12,
+        rsd_limit: 0.5,
+        ndec_limit: 12,
+        reldec_limit: 0.45,
+        divergence_factor: 100.0,
+    };
+    let policies = [
+        Policy { c1: true, c2: true, c3: true, label: "all (paper)" },
+        Policy { c1: false, c2: true, c3: true, label: "-C1 fluctuation" },
+        Policy { c1: true, c2: false, c3: true, label: "-C2 slow-decrease" },
+        Policy { c1: true, c2: true, c3: false, label: "-C3 stagnation" },
+        Policy { c1: false, c2: false, c3: false, label: "never switch" },
+    ];
+
+    let mut t = TextTable::new(&["system", "policy", "iters", "relres(full)", "switch iters"]);
+    let mut rows = Vec::new();
+    for (name, a) in &systems {
+        for pol in policies {
+            let (iters, rel, sw) = run_policy(a, params, pol);
+            t.row(&[
+                name.to_string(),
+                pol.label.to_string(),
+                iters.to_string(),
+                format!("{rel:.3e}"),
+                format!("{sw:?}"),
+            ]);
+            rows.push(vec![
+                name.to_string(),
+                pol.label.to_string(),
+                iters.to_string(),
+                format!("{rel:.6e}"),
+                format!("{}", sw.len()),
+            ]);
+        }
+    }
+    println!("Ablation — stepped-switch policy (CG, hard diffusion systems)");
+    t.print();
+    let _ = write_csv(
+        "ablation_switch_policy",
+        &["system", "policy", "iters", "relres", "n_switches"],
+        &rows,
+    );
+
+    // window-length sweep with the full policy
+    println!("\nwindow sweep (t, m) with all conditions:");
+    let mut t2 = TextTable::new(&["t", "m", "iters", "relres"]);
+    for (tw, ms) in [(12, 6), (24, 12), (48, 24), (96, 48)] {
+        let p = SteppedParams { t: tw, m: ms, ..params };
+        let (iters, rel, _) =
+            run_policy(&systems[0].1, p, Policy { c1: true, c2: true, c3: true, label: "" });
+        t2.row(&[tw.to_string(), ms.to_string(), iters.to_string(), format!("{rel:.3e}")]);
+    }
+    t2.print();
+}

@@ -1,0 +1,126 @@
+//! Shared helpers for the paper-figure bench binaries (harness = false).
+#![allow(dead_code)]
+
+use gsem::coordinator::{FormatChoice, RhsSpec, SolveRequest, SolverKind};
+use gsem::formats::ValueFormat;
+use gsem::solvers::stepped::SteppedParams;
+use gsem::sparse::csr::Csr;
+use gsem::sparse::gen::corpus::CorpusSize;
+use gsem::util::Timer;
+use std::sync::Arc;
+
+/// Corpus scale for benches: GSEM_CORPUS, with GSEM_BENCH_FAST forcing
+/// Small.
+pub fn bench_corpus_size() -> CorpusSize {
+    if std::env::var("GSEM_BENCH_FAST").is_ok() {
+        CorpusSize::Small
+    } else {
+        CorpusSize::from_env()
+    }
+}
+
+/// Are we in the abbreviated CI mode?
+pub fn fast() -> bool {
+    std::env::var("GSEM_BENCH_FAST").is_ok()
+}
+
+/// Time `body` adaptively: enough iterations to fill ~`budget_s`,
+/// reporting seconds per call. Cheap replacement for the full harness
+/// when a figure needs hundreds of (matrix, format) cells.
+pub fn quick_time<T>(budget_s: f64, mut body: impl FnMut() -> T) -> f64 {
+    // calibrate with one call
+    let t0 = Timer::start();
+    std::hint::black_box(body());
+    let one = t0.elapsed_s().max(1e-9);
+    let iters = ((budget_s / one).ceil() as usize).clamp(1, 1_000_000);
+    let t = Timer::start();
+    for _ in 0..iters {
+        std::hint::black_box(body());
+    }
+    t.elapsed_s() / iters as f64
+}
+
+/// Per-cell measurement budget.
+pub fn cell_budget() -> f64 {
+    if fast() {
+        0.004
+    } else {
+        0.05
+    }
+}
+
+/// The format set of the solver comparisons (Tables III/IV, Figs. 8/9).
+pub fn solver_formats(solver: SolverKind) -> Vec<(&'static str, FormatChoice)> {
+    let stepped = match solver {
+        SolverKind::Gmres => SteppedParams::gmres_paper(),
+        _ => SteppedParams::cg_paper(),
+    }
+    .scaled(if fast() { 0.005 } else { 0.02 });
+    vec![
+        ("FP64", FormatChoice::Fixed(ValueFormat::Fp64)),
+        ("FP16", FormatChoice::Fixed(ValueFormat::Fp16)),
+        ("BF16", FormatChoice::Fixed(ValueFormat::Bf16)),
+        ("GSE-SEM", FormatChoice::Stepped { k: 8, params: stepped }),
+    ]
+}
+
+/// Run one (matrix, solver, format) cell with the paper's caps.
+pub fn run_solver_cell(
+    name: &str,
+    a: &Arc<Csr>,
+    solver: SolverKind,
+    fmt: FormatChoice,
+) -> gsem::coordinator::jobs::SolveResult {
+    let mut req = SolveRequest::new(name, Arc::clone(a), solver, fmt);
+    req.rhs = RhsSpec::AxOnes;
+    req.tol = 1e-6;
+    req.max_iters = match solver {
+        SolverKind::Cg | SolverKind::Bicgstab => {
+            if fast() {
+                1000
+            } else {
+                5000
+            }
+        }
+        SolverKind::Gmres => {
+            if fast() {
+                3000
+            } else {
+                15000
+            }
+        }
+    };
+    gsem::coordinator::jobs::dispatch(&req)
+}
+
+/// Geometric-mean speedup helper skipping non-positive entries.
+pub fn avg_speedup(speedups: &[f64]) -> f64 {
+    gsem::util::stats::geomean(speedups)
+}
+
+/// Run the paper's full (test set × format) grid for one solver.
+/// Returns per-matrix results in format order of [`solver_formats`].
+pub fn run_suite(
+    solver: SolverKind,
+    set: &[gsem::sparse::gen::corpus::NamedMatrix],
+) -> Vec<(String, Vec<gsem::coordinator::jobs::SolveResult>)> {
+    let mut out = Vec::new();
+    for m in set {
+        let a = Arc::new(m.a.clone());
+        let mut results = Vec::new();
+        for (_, fmt) in solver_formats(solver) {
+            results.push(run_solver_cell(&m.name, &a, solver, fmt));
+        }
+        eprintln!(
+            "  {}: {}",
+            m.name,
+            results
+                .iter()
+                .map(|r| format!("{}={}it", r.format_label, r.outcome.iters))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        out.push((m.name.clone(), results));
+    }
+    out
+}

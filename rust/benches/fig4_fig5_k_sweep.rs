@@ -1,0 +1,114 @@
+//! Fig. 4 + Fig. 5 — the shared-exponent-count sweep (k ∈ {2..64}):
+//! (4a) per-matrix speedup of GSE-SEM(head) SpMV over FP64 SpMV,
+//! (4b) per-matrix max absolute error vs the FP64 result (x = 1),
+//! (5)  average speedups per k.
+//!
+//! Reports both measured CPU speedups and the modeled-V100 speedups
+//! (DESIGN.md §5: the GPU numbers are traffic ratios; the CPU validates
+//! ordering and decode overhead). Paper: the average speedup peaks at
+//! k=8; error decreases monotonically with k.
+
+#[path = "common.rs"]
+mod common;
+
+use gsem::formats::gse::ExpHistogram;
+use gsem::formats::Precision;
+use gsem::sparse::gen::corpus::spmv_corpus;
+use gsem::spmv::traffic::{gse_head_time_at_k, V100};
+use gsem::spmv::{fp64, max_abs_diff, GseCsr};
+use gsem::util::csv::write_csv;
+use gsem::util::stats::{geomean, mean};
+use gsem::util::table::TextTable;
+
+const KS: [usize; 6] = [2, 4, 8, 16, 32, 64];
+
+fn main() {
+    let corpus = spmv_corpus(common::bench_corpus_size());
+    eprintln!("fig4/5: {} matrices x {} k values", corpus.len(), KS.len());
+    let budget = common::cell_budget();
+
+    let mut rows = Vec::new();
+    // speedups[ki] / errors[ki] across matrices
+    let mut cpu_speedups: Vec<Vec<f64>> = vec![Vec::new(); KS.len()];
+    let mut v100_speedups: Vec<Vec<f64>> = vec![Vec::new(); KS.len()];
+    let mut errors: Vec<Vec<f64>> = vec![Vec::new(); KS.len()];
+
+    for m in &corpus {
+        let a = &m.a;
+        let x = vec![1.0; a.ncols]; // paper: multiplication vector = 1
+        let mut y64 = vec![0.0; a.nrows];
+        fp64::spmv(a, &x, &mut y64);
+        let t64 = common::quick_time(budget, || {
+            let mut y = vec![0.0; a.nrows];
+            fp64::spmv(a, &x, &mut y);
+            y
+        });
+        let mut hist = ExpHistogram::new();
+        hist.push_all(&a.vals);
+
+        for (ki, &k) in KS.iter().enumerate() {
+            let g = GseCsr::from_csr(a, k);
+            let mut y = vec![0.0; a.nrows];
+            g.spmv(&x, &mut y, Precision::Head);
+            let err = max_abs_diff(&y64, &y);
+            let tg = common::quick_time(budget, || {
+                let mut y = vec![0.0; a.nrows];
+                g.spmv(&x, &mut y, Precision::Head);
+                y
+            });
+            let hit = g.table.exact_hit_ratio(&hist);
+            let t64_model = V100.spmv_time(a.nnz(), a.nrows, gsem::formats::ValueFormat::Fp64);
+            let tg_model = gse_head_time_at_k(&V100, a, k, hit);
+            cpu_speedups[ki].push(t64 / tg);
+            v100_speedups[ki].push(t64_model / tg_model);
+            errors[ki].push(err);
+            rows.push(vec![
+                m.name.clone(),
+                k.to_string(),
+                format!("{:.4}", t64 / tg),
+                format!("{:.4}", t64_model / tg_model),
+                format!("{err:.6e}"),
+                format!("{hit:.4}"),
+            ]);
+        }
+    }
+    let _ = write_csv(
+        "fig4_k_sweep",
+        &["matrix", "k", "cpu_speedup", "v100_model_speedup", "maxAbsErr", "exact_hit"],
+        &rows,
+    );
+
+    println!("Fig. 5 — average GSE-SEM(head) SpMV speedup vs FP64 per k");
+    let mut t = TextTable::new(&[
+        "k",
+        "cpu geomean speedup",
+        "V100-model geomean",
+        "mean maxAbsErr",
+        "median maxAbsErr",
+    ]);
+    for (ki, &k) in KS.iter().enumerate() {
+        t.row(&[
+            k.to_string(),
+            format!("{:.3}x", geomean(&cpu_speedups[ki])),
+            format!("{:.3}x", geomean(&v100_speedups[ki])),
+            format!("{:.3e}", mean(&errors[ki])),
+            format!("{:.3e}", gsem::util::stats::median(&errors[ki])),
+        ]);
+    }
+    t.print();
+
+    // the two headline shapes of the figure:
+    let v100_avgs: Vec<f64> = (0..KS.len()).map(|ki| geomean(&v100_speedups[ki])).collect();
+    let best = v100_avgs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    println!(
+        "\nshape checks: modeled speedup peaks at k={} (paper: k=8); \
+         error decreases with k: {}",
+        KS[best],
+        (0..KS.len() - 1).all(|i| mean(&errors[i]) >= mean(&errors[i + 1]) * 0.99)
+    );
+}

@@ -1,0 +1,147 @@
+//! Fig. 6 — SpMV format comparison across the corpus:
+//! (a) GFLOPS of FP64 / FP16 / BF16 / GSE-SEM(head) SpMV (sorted by nnz),
+//! (b) max absolute error of the three 16-bit-storage kernels vs FP64.
+//!
+//! Paper shape: FP16 ≈ BF16 fastest; GSE-SEM(head) beats FP64 on most
+//! matrices but trails the plain 16-bit loads (decode overhead); GSE-SEM
+//! error is far below FP16/BF16 (exactly 0 on many matrices).
+
+#[path = "common.rs"]
+mod common;
+
+use gsem::formats::{Bf16, Fp16, Precision, ValueFormat};
+use gsem::sparse::gen::corpus::spmv_corpus;
+use gsem::spmv::lowp::LowpCsr;
+use gsem::spmv::traffic::V100;
+use gsem::spmv::{fp64, max_abs_diff, GseCsr};
+use gsem::util::csv::write_csv;
+use gsem::util::stats::geomean;
+use gsem::util::table::TextTable;
+
+fn main() {
+    let mut corpus = spmv_corpus(common::bench_corpus_size());
+    corpus.sort_by_key(|m| m.a.nnz()); // Fig 6(a) sorts by nnz
+    eprintln!("fig6: {} matrices x 4 formats", corpus.len());
+    let budget = common::cell_budget();
+
+    let mut rows = Vec::new();
+    let mut gf = vec![Vec::new(); 4]; // cpu gflops per format
+    let mut errs = vec![Vec::new(); 3]; // fp16, bf16, gse
+    let mut zero_err_gse = 0usize;
+
+    for m in &corpus {
+        let a = &m.a;
+        let flops = 2.0 * a.nnz() as f64;
+        let x = vec![1.0; a.ncols];
+        let mut y64 = vec![0.0; a.nrows];
+        fp64::spmv(a, &x, &mut y64);
+
+        let h16 = LowpCsr::<Fp16>::from_csr(a);
+        let b16 = LowpCsr::<Bf16>::from_csr(a);
+        let gse = GseCsr::from_csr(a, 8);
+
+        let t64 = common::quick_time(budget, || {
+            let mut y = vec![0.0; a.nrows];
+            fp64::spmv(a, &x, &mut y);
+            y
+        });
+        let t16 = common::quick_time(budget, || {
+            let mut y = vec![0.0; a.nrows];
+            h16.spmv(&x, &mut y);
+            y
+        });
+        let tb = common::quick_time(budget, || {
+            let mut y = vec![0.0; a.nrows];
+            b16.spmv(&x, &mut y);
+            y
+        });
+        let tg = common::quick_time(budget, || {
+            let mut y = vec![0.0; a.nrows];
+            gse.spmv(&x, &mut y, Precision::Head);
+            y
+        });
+
+        let mut yh = vec![0.0; a.nrows];
+        h16.spmv(&x, &mut yh);
+        let mut yb = vec![0.0; a.nrows];
+        b16.spmv(&x, &mut yb);
+        let mut yg = vec![0.0; a.nrows];
+        gse.spmv(&x, &mut yg, Precision::Head);
+        let (e16, eb, eg) =
+            (max_abs_diff(&y64, &yh), max_abs_diff(&y64, &yb), max_abs_diff(&y64, &yg));
+        if eg == 0.0 {
+            zero_err_gse += 1;
+        }
+
+        for (i, t) in [t64, t16, tb, tg].iter().enumerate() {
+            gf[i].push(flops / t / 1e9);
+        }
+        errs[0].push(e16);
+        errs[1].push(eb);
+        errs[2].push(eg);
+        rows.push(vec![
+            m.name.clone(),
+            a.nnz().to_string(),
+            format!("{:.4}", flops / t64 / 1e9),
+            format!("{:.4}", flops / t16 / 1e9),
+            format!("{:.4}", flops / tb / 1e9),
+            format!("{:.4}", flops / tg / 1e9),
+            format!("{e16:.4e}"),
+            format!("{eb:.4e}"),
+            format!("{eg:.4e}"),
+        ]);
+    }
+    let _ = write_csv(
+        "fig6_spmv_formats",
+        &[
+            "matrix",
+            "nnz",
+            "gflops_fp64",
+            "gflops_fp16",
+            "gflops_bf16",
+            "gflops_gse_head",
+            "err_fp16",
+            "err_bf16",
+            "err_gse",
+        ],
+        &rows,
+    );
+
+    println!("Fig. 6(a) — geomean SpMV GFLOPS (CPU measured | V100 modeled)");
+    let mut t = TextTable::new(&["format", "cpu geomean GFLOPS", "V100 modeled GFLOPS (median mtx)"]);
+    let mid = &corpus[corpus.len() / 2].a;
+    for (i, (label, vf)) in [
+        ("FP64", ValueFormat::Fp64),
+        ("FP16", ValueFormat::Fp16),
+        ("BF16", ValueFormat::Bf16),
+        ("GSE-SEM(head)", ValueFormat::GseSem(Precision::Head)),
+    ]
+    .iter()
+    .enumerate()
+    {
+        t.row(&[
+            label.to_string(),
+            format!("{:.3}", geomean(&gf[i])),
+            format!("{:.1}", V100.spmv_gflops(mid, *vf)),
+        ]);
+    }
+    t.print();
+
+    println!("\nFig. 6(b) — error vs FP64 (x = 1)");
+    let mut t = TextTable::new(&["format", "median maxAbsErr", "mean maxAbsErr", "share err==0"]);
+    for (i, label) in ["FP16", "BF16", "GSE-SEM(head)"].iter().enumerate() {
+        let zero = errs[i].iter().filter(|&&e| e == 0.0).count();
+        t.row(&[
+            label.to_string(),
+            format!("{:.3e}", gsem::util::stats::median(&errs[i])),
+            format!("{:.3e}", gsem::util::stats::mean(&errs[i])),
+            format!("{:.1}%", 100.0 * zero as f64 / errs[i].len() as f64),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper: GSE-SEM matches FP64 exactly on the first ~97/300 matrices \
+         (here: {zero_err_gse}/{}), while FP16/BF16 errors reach 10..100.",
+        corpus.len()
+    );
+}

@@ -1,0 +1,96 @@
+//! Fig. 8 — GMRES wall-time speedup over FP64 for FP16 / BF16 /
+//! GSE-SEM(stepped) / GSE-SEM* on the GMRES set.
+//!
+//! GSE-SEM* removes the format-conversion overhead via the paper's
+//! Eq. 7: `TIME_fp16 / ITERS_fp16 * ITERS_gse` (FP16 shares the head's
+//! memory traffic but widens for free) — the "if hardware supported
+//! GSE-SEM" estimate. Paper averages: FP16 0.61x, BF16 0.67x,
+//! GSE-SEM 1.24x, GSE-SEM* 1.29x.
+
+#[path = "common.rs"]
+mod common;
+
+use gsem::coordinator::SolverKind;
+use gsem::sparse::gen::corpus::gmres_set;
+use gsem::util::csv::write_csv;
+use gsem::util::stats::geomean;
+use gsem::util::table::TextTable;
+
+fn main() {
+    let set = gmres_set(common::bench_corpus_size());
+    eprintln!("fig8: GMRES timing over {} matrices x 4 formats", set.len());
+    let grid = common::run_suite(SolverKind::Gmres, &set);
+
+    let mut t = TextTable::new(&["ID", "matrix", "FP16", "BF16", "GSE-SEM", "GSE-SEM*"]);
+    let mut sp = vec![Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+    let mut rows = Vec::new();
+    for (i, (name, rs)) in grid.iter().enumerate() {
+        let t64 = rs[0].outcome.seconds;
+        // a broken-down (overflowed) run has no meaningful time — the
+        // paper prints "/" and excludes it from the averages
+        let sp_of = |i: usize| {
+            if rs[i].outcome.broke_down {
+                f64::NAN
+            } else {
+                t64 / rs[i].outcome.seconds
+            }
+        };
+        let s16 = sp_of(1);
+        let sb = sp_of(2);
+        let sg = sp_of(3);
+        // Eq. 7: conversion-free GSE-SEM estimate from the FP16 (or BF16
+        // when FP16 overflowed) per-iteration cost
+        let proxy = if rs[1].outcome.broke_down { &rs[2] } else { &rs[1] };
+        let per_iter = proxy.outcome.seconds / proxy.outcome.iters.max(1) as f64;
+        let t_star = per_iter * rs[3].outcome.iters as f64;
+        let sstar = t64 / t_star;
+        for (v, s) in sp.iter_mut().zip([s16, sb, sg, sstar]) {
+            if s.is_finite() {
+                v.push(s);
+            }
+        }
+        t.row(&[
+            (i + 1).to_string(),
+            name.clone(),
+            fmt_sp(s16),
+            fmt_sp(sb),
+            fmt_sp(sg),
+            fmt_sp(sstar),
+        ]);
+        rows.push(vec![
+            name.clone(),
+            format!("{s16:.4}"),
+            format!("{sb:.4}"),
+            format!("{sg:.4}"),
+            format!("{sstar:.4}"),
+        ]);
+    }
+    println!("Fig. 8 — GMRES speedup over FP64 (measured wall time)");
+    t.print();
+    let _ = write_csv(
+        "fig8_gmres_speedup",
+        &["matrix", "fp16", "bf16", "gse", "gse_star"],
+        &rows,
+    );
+    println!(
+        "\naverages (geomean): FP16 {:.2}x  BF16 {:.2}x  GSE-SEM {:.2}x  GSE-SEM* {:.2}x",
+        geomean(&sp[0]),
+        geomean(&sp[1]),
+        geomean(&sp[2]),
+        geomean(&sp[3])
+    );
+    println!("paper averages:     FP16 0.61x  BF16 0.67x  GSE-SEM 1.24x  GSE-SEM* 1.29x");
+    println!(
+        "shape: GSE-SEM > max(FP16, BF16) on average and GSE-SEM* >= GSE-SEM: {} / {}",
+        geomean(&sp[2]) > geomean(&sp[0]).max(geomean(&sp[1])),
+        geomean(&sp[3]) >= geomean(&sp[2]) * 0.95
+    );
+}
+
+fn fmt_sp(s: f64) -> String {
+    if s.is_finite() {
+        format!("{s:.2}x")
+    } else {
+        "/".to_string()
+    }
+}

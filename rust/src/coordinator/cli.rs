@@ -1,0 +1,107 @@
+//! Hand-rolled CLI argument parsing (offline substitute for `clap`,
+//! DESIGN.md §5): `--key value` / `--key=value` / `--flag` options after
+//! a positional subcommand.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + options.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an args iterator (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli, String> {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare '--' not supported".to_string());
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    cli.options.insert(stripped.to_string(), v);
+                } else {
+                    cli.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if cli.command.is_none() {
+                cli.command = Some(arg);
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let c = parse("solve --matrix poisson --k 8 --tol=1e-8 --verbose");
+        assert_eq!(c.command.as_deref(), Some("solve"));
+        assert_eq!(c.get("matrix"), Some("poisson"));
+        assert_eq!(c.get_usize("k", 4).unwrap(), 8);
+        assert_eq!(c.get_f64("tol", 1e-6).unwrap(), 1e-8);
+        assert!(c.flag("verbose"));
+        assert!(!c.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = parse("spmv");
+        assert_eq!(c.get_usize("k", 8).unwrap(), 8);
+        assert_eq!(c.get_or("format", "gse"), "gse");
+    }
+
+    #[test]
+    fn positional_args() {
+        let c = parse("analyze a.mtx b.mtx --top 4");
+        assert_eq!(c.positional, vec!["a.mtx", "b.mtx"]);
+        assert_eq!(c.get_usize("top", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let c = parse("x --k eight");
+        assert!(c.get_usize("k", 1).is_err());
+    }
+}

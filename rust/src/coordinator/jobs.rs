@@ -1,0 +1,313 @@
+//! Solve-job model and worker pool.
+//!
+//! A [`SolveRequest`] names a matrix, a right-hand side, a solver and a
+//! storage format (including the stepped GSE-SEM mode); [`dispatch`]
+//! runs it; [`SolverPool`] fans a batch out over OS threads with an
+//! mpsc-based queue (the offline substitute for a tokio runtime —
+//! DESIGN.md §5).
+
+use crate::formats::ValueFormat;
+use crate::solvers::bicgstab::{bicgstab_solve, BicgstabOpts};
+use crate::solvers::stepped::{run_stepped, SteppedParams};
+use crate::solvers::{cg_solve, gmres_solve, CgOpts, GmresOpts, SolveOutcome};
+use crate::sparse::csr::Csr;
+use crate::spmv::fp64::Fp64Csr;
+use crate::spmv::lowp::LowpCsr;
+use crate::spmv::{GseCsr, SpmvOp};
+use crate::util::Prng;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Which solver to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    Cg,
+    Gmres,
+    Bicgstab,
+}
+
+/// Right-hand-side specification.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RhsSpec {
+    /// b = A·1 (exact solution = ones; the suite default)
+    AxOnes,
+    /// b = 1
+    Ones,
+    /// uniform random in [-1, 1]
+    Random(u64),
+}
+
+impl RhsSpec {
+    pub fn build(&self, a: &Csr) -> Vec<f64> {
+        match self {
+            RhsSpec::AxOnes => {
+                let ones = vec![1.0; a.ncols];
+                let mut b = vec![0.0; a.nrows];
+                crate::spmv::fp64::spmv(a, &ones, &mut b);
+                b
+            }
+            RhsSpec::Ones => vec![1.0; a.nrows],
+            RhsSpec::Random(seed) => {
+                let mut rng = Prng::new(*seed);
+                (0..a.nrows).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+            }
+        }
+    }
+}
+
+/// Storage format under test — the paper's comparison axis, plus the
+/// stepped mode (Algorithm 3).
+#[derive(Clone, Debug)]
+pub enum FormatChoice {
+    Fixed(ValueFormat),
+    /// GSE-SEM with the stepped controller; k shared exponents.
+    Stepped { k: usize, params: SteppedParams },
+}
+
+/// One solve job.
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    pub name: String,
+    pub a: Arc<Csr>,
+    pub rhs: RhsSpec,
+    pub solver: SolverKind,
+    pub format: FormatChoice,
+    pub tol: f64,
+    pub max_iters: usize,
+    /// GSE-SEM shared exponent count for Fixed(GseSem) formats
+    pub k: usize,
+}
+
+impl SolveRequest {
+    pub fn new(name: &str, a: Arc<Csr>, solver: SolverKind, format: FormatChoice) -> Self {
+        Self {
+            name: name.to_string(),
+            a,
+            rhs: RhsSpec::AxOnes,
+            solver,
+            format,
+            tol: 1e-6,
+            max_iters: match solver {
+                SolverKind::Cg | SolverKind::Bicgstab => 5000,
+                SolverKind::Gmres => 15000,
+            },
+            k: 8,
+        }
+    }
+}
+
+/// Job result: outcome + labels.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub name: String,
+    pub solver: SolverKind,
+    pub format_label: String,
+    pub outcome: SolveOutcome,
+    /// relative residual measured against the FP64 matrix (the paper's
+    /// reported "Relative Residual")
+    pub relres_fp64: f64,
+}
+
+/// Run one request synchronously.
+pub fn dispatch(req: &SolveRequest) -> SolveResult {
+    let a = req.a.as_ref();
+    let b = req.rhs.build(a);
+    let (outcome, label) = match &req.format {
+        FormatChoice::Fixed(fmt) => {
+            let op: Box<dyn SpmvOp> = match fmt {
+                ValueFormat::Fp64 => Box::new(Fp64Csr::new(a.clone())),
+                ValueFormat::Fp32 => Box::new(LowpCsr::<f32>::from_csr(a)),
+                ValueFormat::Fp16 => Box::new(LowpCsr::<crate::formats::Fp16>::from_csr(a)),
+                ValueFormat::Bf16 => Box::new(LowpCsr::<crate::formats::Bf16>::from_csr(a)),
+                ValueFormat::GseSem(level) => {
+                    Box::new(GseCsr::from_csr(a, req.k).at_level(*level))
+                }
+            };
+            (run_solver(req, op.as_ref(), &b), fmt.label().to_string())
+        }
+        FormatChoice::Stepped { k, params } => {
+            let g = GseCsr::from_csr(a, *k);
+            let (out, _, _) = run_stepped(g, *params, |op, monitor| match req.solver {
+                SolverKind::Cg => cg_solve(
+                    op,
+                    &b,
+                    &CgOpts { tol: req.tol, max_iters: req.max_iters, inv_diag: None },
+                    monitor,
+                ),
+                SolverKind::Gmres => gmres_solve(
+                    op,
+                    &b,
+                    &GmresOpts {
+                        tol: req.tol,
+                        restart: 30,
+                        max_outer: req.max_iters.div_ceil(30),
+                    },
+                    monitor,
+                ),
+                SolverKind::Bicgstab => bicgstab_solve(
+                    op,
+                    &b,
+                    &BicgstabOpts { tol: req.tol, max_iters: req.max_iters },
+                    monitor,
+                ),
+            });
+            (out, "GSE-SEM".to_string())
+        }
+    };
+    // the paper's reported residual: against the FP64 matrix
+    let fp64_op = Fp64Csr::new(a.clone());
+    let relres_fp64 = crate::solvers::true_relres(&fp64_op, &outcome.x, &b);
+    SolveResult { name: req.name.clone(), solver: req.solver, format_label: label, outcome, relres_fp64 }
+}
+
+fn run_solver(req: &SolveRequest, op: &dyn SpmvOp, b: &[f64]) -> SolveOutcome {
+    match req.solver {
+        SolverKind::Cg => cg_solve(
+            op,
+            b,
+            &CgOpts { tol: req.tol, max_iters: req.max_iters, inv_diag: None },
+            |_, _| crate::solvers::MonitorCmd::Continue,
+        ),
+        SolverKind::Gmres => gmres_solve(
+            op,
+            b,
+            &GmresOpts { tol: req.tol, restart: 30, max_outer: req.max_iters.div_ceil(30) },
+            |_, _| crate::solvers::MonitorCmd::Continue,
+        ),
+        SolverKind::Bicgstab => bicgstab_solve(
+            op,
+            b,
+            &BicgstabOpts { tol: req.tol, max_iters: req.max_iters },
+            |_, _| crate::solvers::MonitorCmd::Continue,
+        ),
+    }
+}
+
+/// Fixed-size worker pool over OS threads; jobs go down an mpsc channel,
+/// results come back tagged with their submission index.
+pub struct SolverPool {
+    workers: usize,
+}
+
+impl SolverPool {
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// Run a batch, preserving input order.
+    pub fn run_batch(&self, reqs: Vec<SolveRequest>) -> Vec<SolveResult> {
+        let n = reqs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let queue = Arc::new(Mutex::new(
+            reqs.into_iter().enumerate().collect::<Vec<(usize, SolveRequest)>>(),
+        ));
+        let (tx, rx) = mpsc::channel::<(usize, SolveResult)>();
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.min(n) {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                s.spawn(move || loop {
+                    let job = queue.lock().unwrap().pop();
+                    match job {
+                        Some((idx, req)) => {
+                            let res = dispatch(&req);
+                            if tx.send((idx, res)).is_err() {
+                                break;
+                            }
+                        }
+                        None => break,
+                    }
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<SolveResult>> = (0..n).map(|_| None).collect();
+            for (idx, res) in rx {
+                out[idx] = Some(res);
+            }
+            out.into_iter().map(|r| r.expect("worker died with job")).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Precision;
+    use crate::sparse::gen::convdiff::convdiff2d;
+    use crate::sparse::gen::poisson::poisson2d;
+
+    #[test]
+    fn dispatch_cg_fp64() {
+        let a = Arc::new(poisson2d(10, 10));
+        let req = SolveRequest::new("p", a, SolverKind::Cg, FormatChoice::Fixed(ValueFormat::Fp64));
+        let res = dispatch(&req);
+        assert!(res.outcome.converged);
+        assert!(res.relres_fp64 < 1e-6);
+        assert_eq!(res.format_label, "FP64");
+    }
+
+    #[test]
+    fn dispatch_gmres_gse_head() {
+        let a = Arc::new(convdiff2d(10, 10, 4.0, 2.0));
+        let req = SolveRequest::new(
+            "c",
+            a,
+            SolverKind::Gmres,
+            FormatChoice::Fixed(ValueFormat::GseSem(Precision::Head)),
+        );
+        let res = dispatch(&req);
+        // head-only decode still converges on this well-conditioned system
+        assert!(res.outcome.converged);
+    }
+
+    #[test]
+    fn dispatch_stepped_records_label() {
+        let a = Arc::new(poisson2d(8, 8));
+        let req = SolveRequest::new(
+            "s",
+            a,
+            SolverKind::Cg,
+            FormatChoice::Stepped { k: 8, params: SteppedParams::cg_paper().scaled(0.01) },
+        );
+        let res = dispatch(&req);
+        assert_eq!(res.format_label, "GSE-SEM");
+        assert!(res.outcome.converged);
+    }
+
+    #[test]
+    fn pool_preserves_order_and_completes() {
+        let a = Arc::new(poisson2d(8, 8));
+        let reqs: Vec<SolveRequest> = (0..6)
+            .map(|i| {
+                SolveRequest::new(
+                    &format!("job{i}"),
+                    Arc::clone(&a),
+                    SolverKind::Cg,
+                    FormatChoice::Fixed(ValueFormat::Fp64),
+                )
+            })
+            .collect();
+        let pool = SolverPool::new(3);
+        let res = pool.run_batch(reqs);
+        assert_eq!(res.len(), 6);
+        for (i, r) in res.iter().enumerate() {
+            assert_eq!(r.name, format!("job{i}"));
+            assert!(r.outcome.converged);
+        }
+    }
+
+    #[test]
+    fn rhs_specs() {
+        let a = poisson2d(4, 4);
+        assert_eq!(RhsSpec::Ones.build(&a), vec![1.0; 16]);
+        let b = RhsSpec::AxOnes.build(&a);
+        // row sums of the Laplacian: interior 0, boundary positive
+        assert!(b.iter().all(|&v| v >= 0.0));
+        let r1 = RhsSpec::Random(1).build(&a);
+        let r2 = RhsSpec::Random(1).build(&a);
+        assert_eq!(r1, r2);
+        assert_ne!(r1, RhsSpec::Random(2).build(&a));
+    }
+}

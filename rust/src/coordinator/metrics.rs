@@ -1,0 +1,113 @@
+//! Process-wide metrics registry: counters and timing histograms for the
+//! coordinator (solve counts, SpMV calls per format, precision switches).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timings: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn time(&self, name: &str, seconds: f64) {
+        self.timings.lock().unwrap().entry(name.to_string()).or_default().push(seconds);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// (count, total_s, mean_s) of a timing series.
+    pub fn timing(&self, name: &str) -> (usize, f64, f64) {
+        let t = self.timings.lock().unwrap();
+        match t.get(name) {
+            Some(v) if !v.is_empty() => {
+                let total: f64 = v.iter().sum();
+                (v.len(), total, total / v.len() as f64)
+            }
+            _ => (0, 0.0, 0.0),
+        }
+    }
+
+    /// Render a human-readable report.
+    pub fn report(&self) -> String {
+        let mut out = String::from("== metrics ==\n");
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("  {k:<40} {v}\n"));
+        }
+        for (k, v) in self.timings.lock().unwrap().iter() {
+            let total: f64 = v.iter().sum();
+            out.push_str(&format!(
+                "  {k:<40} n={} total={:.3}s mean={:.3}ms\n",
+                v.len(),
+                total,
+                1e3 * total / v.len() as f64
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("solves");
+        m.add("solves", 4);
+        assert_eq!(m.counter("solves"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timings_aggregate() {
+        let m = Metrics::new();
+        m.time("spmv", 0.5);
+        m.time("spmv", 1.5);
+        let (n, total, mean) = m.timing("spmv");
+        assert_eq!(n, 2);
+        assert!((total - 2.0).abs() < 1e-12);
+        assert!((mean - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        m.incr("x");
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("x"), 4000);
+    }
+
+    #[test]
+    fn report_contains_everything() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.time("b", 0.1);
+        let r = m.report();
+        assert!(r.contains("a") && r.contains("b"));
+    }
+}

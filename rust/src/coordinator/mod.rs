@@ -1,0 +1,11 @@
+//! Thin L3 coordinator (DESIGN.md §2): the paper's contribution is the
+//! numeric format + solver policy (L1/L2), so L3 is a driver — a solve-
+//! job model, a worker pool, a metrics registry, and the CLI plumbing
+//! that runs the experiment suite. No request-path python anywhere.
+
+pub mod jobs;
+pub mod metrics;
+pub mod cli;
+
+pub use jobs::{FormatChoice, RhsSpec, SolveRequest, SolveResult, SolverKind, SolverPool};
+pub use metrics::Metrics;

@@ -1,0 +1,98 @@
+//! Concrete bfloat16 storage type used by the BF16-SpMV baseline.
+//! Storage/transfer format only, like [`super::fp16::Fp16`].
+
+use super::minifloat::BF16;
+
+/// A 16-bit bfloat16 value (storage only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Round an f64 to the nearest representable bfloat16 (ties to even).
+    #[inline]
+    pub fn from_f64(x: f64) -> Self {
+        Bf16(BF16.encode(x) as u16)
+    }
+
+    /// Exact widening conversion. bfloat16 is the top half of an IEEE
+    /// f32, so widening is a single shift — the hot-path formulation
+    /// (hardware does exactly this).
+    #[inline(always)]
+    pub fn to_f64(self) -> f64 {
+        f32::from_bits((self.0 as u32) << 16) as f64
+    }
+
+    /// Reference widening through the generic minifloat decoder (tests).
+    pub fn to_f64_reference(self) -> f64 {
+        BF16.decode(self.0 as u32)
+    }
+
+    pub fn is_nan(self) -> bool {
+        self.to_f64().is_nan()
+    }
+
+    pub fn is_infinite(self) -> bool {
+        self.to_f64().is_infinite()
+    }
+
+    /// Convert a whole slice (the baseline matrix-conversion path).
+    pub fn encode_slice(xs: &[f64]) -> Vec<Bf16> {
+        xs.iter().map(|&x| Bf16::from_f64(x)).collect()
+    }
+}
+
+impl From<f64> for Bf16 {
+    fn from(x: f64) -> Self {
+        Bf16::from_f64(x)
+    }
+}
+
+impl From<Bf16> for f64 {
+    fn from(h: Bf16) -> f64 {
+        h.to_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shift_widen_matches_reference_exhaustively() {
+        for bits in 0u16..=u16::MAX {
+            let b = Bf16(bits);
+            let (x, y) = (b.to_f64(), b.to_f64_reference());
+            assert!(x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()), "bits={bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_equals_truncated_f32_semantics() {
+        // For values exactly representable in bf16, conversion is exact.
+        for x in [1.0, -2.0, 0.15625, 1.5 * 2f64.powi(127)] {
+            assert_eq!(Bf16::from_f64(x).to_f64(), x);
+        }
+    }
+
+    #[test]
+    fn bf16_wide_range_no_overflow() {
+        // The FP16-killer cases survive in bf16.
+        for x in [1e6, 1e20, 1e-20, -1e30] {
+            let y = Bf16::from_f64(x).to_f64();
+            assert!(y.is_finite());
+            assert!(((y - x) / x).abs() < 0.01, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        // bf16 has 7 mantissa bits -> rel err <= 2^-8 for RNE
+        let mut r = crate::util::Prng::new(31);
+        for _ in 0..5_000 {
+            let x = r.lognormal(0.0, 5.0);
+            let y = Bf16::from_f64(x).to_f64();
+            assert!(((y - x) / x).abs() <= 2f64.powi(-8), "x={x}");
+        }
+    }
+}

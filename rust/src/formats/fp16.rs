@@ -1,0 +1,116 @@
+//! Concrete IEEE binary16 storage type used by the FP16-SpMV baseline.
+//!
+//! Arithmetic is *not* implemented on the type — matching the paper's
+//! baselines, FP16 is a storage/transfer format only: values are loaded,
+//! widened to f64, and all multiply/accumulate happens in f64.
+
+use super::minifloat::FP16;
+use std::sync::OnceLock;
+
+/// A 16-bit IEEE half-precision value (storage only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct Fp16(pub u16);
+
+/// Widening LUT: real hardware converts FP16→FP64 in one instruction;
+/// the software simulation matches that cost with a 512 KiB table
+/// (hot-path requirement — the FP16-SpMV baseline is memory-bound, so
+/// the conversion must not dominate like the generic decoder would).
+fn widen_lut() -> &'static [f64; 1 << 16] {
+    static LUT: OnceLock<Box<[f64; 1 << 16]>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = vec![0f64; 1 << 16];
+        for (bits, slot) in t.iter_mut().enumerate() {
+            *slot = FP16.decode(bits as u32);
+        }
+        t.into_boxed_slice().try_into().unwrap()
+    })
+}
+
+impl Fp16 {
+    /// Round an f64 to the nearest representable half (ties to even).
+    #[inline]
+    pub fn from_f64(x: f64) -> Self {
+        Fp16(FP16.encode(x) as u16)
+    }
+
+    /// Exact widening conversion (table-driven; see [`widen_lut`]).
+    #[inline(always)]
+    pub fn to_f64(self) -> f64 {
+        widen_lut()[self.0 as usize]
+    }
+
+    /// Reference widening through the generic minifloat decoder (tests).
+    pub fn to_f64_reference(self) -> f64 {
+        FP16.decode(self.0 as u32)
+    }
+
+    pub fn is_nan(self) -> bool {
+        self.to_f64().is_nan()
+    }
+
+    pub fn is_infinite(self) -> bool {
+        self.to_f64().is_infinite()
+    }
+
+    /// Convert a whole slice (the baseline matrix-conversion path).
+    pub fn encode_slice(xs: &[f64]) -> Vec<Fp16> {
+        xs.iter().map(|&x| Fp16::from_f64(x)).collect()
+    }
+
+    /// Returns true if any value overflowed to ±Inf during encoding —
+    /// the paper reports FP16 "arithmetic overflow" on 4 GMRES and 10 CG
+    /// matrices; this is how the solver detects that condition up front.
+    pub fn any_overflow(xs: &[f64]) -> bool {
+        xs.iter().any(|&x| x.is_finite() && Fp16::from_f64(x).is_infinite())
+    }
+}
+
+impl From<f64> for Fp16 {
+    fn from(x: f64) -> Self {
+        Fp16::from_f64(x)
+    }
+}
+
+impl From<Fp16> for f64 {
+    fn from(h: Fp16) -> f64 {
+        h.to_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        for x in [0.0, 1.0, -1.0, 0.5, 1024.0, 0.333251953125] {
+            assert_eq!(Fp16::from_f64(x).to_f64(), FP16.round(x));
+        }
+    }
+
+    #[test]
+    fn lut_matches_reference_exhaustively() {
+        for bits in 0u16..=u16::MAX {
+            let h = Fp16(bits);
+            let (a, b) = (h.to_f64(), h.to_f64_reference());
+            assert!(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()), "bits={bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn overflow_detection() {
+        assert!(Fp16::any_overflow(&[1.0, 1e6]));
+        assert!(!Fp16::any_overflow(&[1.0, 65504.0]));
+        assert!(Fp16::from_f64(70000.0).is_infinite());
+    }
+
+    #[test]
+    fn encode_slice_matches_scalar() {
+        let xs = [1.5, -2.25, 3e-5];
+        let enc = Fp16::encode_slice(&xs);
+        for (e, &x) in enc.iter().zip(&xs) {
+            assert_eq!(e.0, Fp16::from_f64(x).0);
+        }
+    }
+}

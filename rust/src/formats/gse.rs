@@ -1,0 +1,402 @@
+//! Group-Shared Exponent (GSE) table extraction — §III-B1 of the paper.
+//!
+//! For a set of FP64 values we count the occurrences of each distinct
+//! biased exponent, keep the `k` most frequent, and store each as
+//! `biased_exp + 1`: the +1 implements the paper's explicit-leading-one
+//! convention (§III-B2) — every encoded significand is shifted right by
+//! at least `minDiff = 1`, so the hidden bit becomes an explicit stored
+//! bit and values whose exponent is *not* in the table are represented
+//! denormalized relative to the nearest larger shared exponent.
+//!
+//! The table also guarantees that `max_exponent + 1` is present
+//! (replacing the least frequent entry if needed); otherwise the largest
+//! values of the set would be unrepresentable (§III-B2).
+
+use super::ieee;
+
+/// Maximum supported table size: 6 index bits (the paper sweeps k ≤ 64).
+pub const MAX_SHARED_EXPONENTS: usize = 64;
+
+/// Histogram of biased FP64 exponents (2048 bins).
+#[derive(Clone)]
+pub struct ExpHistogram {
+    pub counts: Vec<u64>,
+    pub total: u64,
+    /// values skipped because they are zero/subnormal/Inf/NaN
+    pub skipped: u64,
+}
+
+impl Default for ExpHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExpHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0u64; 2048], total: 0, skipped: 0 }
+    }
+
+    /// Accumulate one value.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        let p = ieee::split(x);
+        if p.exp == 0 || p.exp == ieee::EXP_SPECIAL {
+            self.skipped += 1;
+        } else {
+            self.counts[p.exp as usize] += 1;
+            self.total += 1;
+        }
+    }
+
+    /// Accumulate a slice.
+    pub fn push_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    /// Number of distinct exponents observed.
+    pub fn num_distinct(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Fraction of values covered by the `k` most frequent exponents
+    /// (the paper's Eq. 2 / Fig. 1(b–h) "top-k" metric).
+    pub fn topk_coverage(&self, k: usize) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        let mut nonzero: Vec<u64> = self.counts.iter().copied().filter(|&c| c > 0).collect();
+        nonzero.sort_unstable_by(|a, b| b.cmp(a));
+        let covered: u64 = nonzero.iter().take(k).sum();
+        covered as f64 / self.total as f64
+    }
+
+    /// Largest biased exponent present, if any value was counted.
+    pub fn max_exp(&self) -> Option<u32> {
+        self.counts.iter().rposition(|&c| c > 0).map(|i| i as u32)
+    }
+}
+
+/// The extracted shared-exponent table plus the derived encode metadata.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GseTable {
+    /// Shared exponents stored as `biased_exp + 1`, ordered by descending
+    /// frequency (so index 0 is the most common — the fast path).
+    pub entries: Vec<u32>,
+    /// Bits needed to index the table (`EI_bit` in the paper).
+    pub ei_bit: u32,
+    /// Per-biased-exponent lookup: `lut[exp] = (index, minDiff)` of the
+    /// best (smallest `minDiff >= 1`) table entry, or `NO_ENTRY` if no
+    /// entry can represent that exponent. Precomputing this makes encode
+    /// O(1) per value instead of O(k) (the GPU kernel does the O(k) scan
+    /// in shared memory; see DESIGN.md §6).
+    lut: Vec<(u16, u16)>,
+}
+
+/// LUT marker for "no representable entry".
+pub const NO_ENTRY: (u16, u16) = (u16::MAX, u16::MAX);
+
+impl GseTable {
+    /// Build a table from an exponent histogram, keeping the `k` most
+    /// frequent exponents and guaranteeing `max_exp + 1` is present.
+    pub fn from_histogram(hist: &ExpHistogram, k: usize) -> Self {
+        assert!(k >= 1 && k <= MAX_SHARED_EXPONENTS, "k must be in 1..=64");
+        let mut freq: Vec<(u32, u64)> = hist
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(e, &c)| (e as u32, c))
+            .collect();
+        // descending count, ties by ascending exponent for determinism
+        freq.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+
+        let mut entries: Vec<u32> = freq.iter().take(k).map(|&(e, _)| e + 1).collect();
+        if entries.is_empty() {
+            // Degenerate input (all zeros): single entry representing 1.0
+            entries.push(ieee::BIAS as u32 + 1);
+        }
+        // Guarantee the maximum exponent (+1) is representable.
+        if let Some(maxe) = hist.max_exp() {
+            let need = maxe + 1;
+            if !entries.contains(&need) {
+                let last = entries.len() - 1;
+                entries[last] = need;
+            }
+        }
+        Self::from_entries(entries)
+    }
+
+    /// Build directly from `biased_exp + 1` entries (frequency order).
+    /// Duplicates are removed (first occurrence wins).
+    pub fn from_entries(mut entries: Vec<u32>) -> Self {
+        let mut seen = [false; 2049];
+        entries.retain(|&e| {
+            assert!(e <= 2047, "entry out of biased-exponent range");
+            let fresh = !seen[e as usize];
+            seen[e as usize] = true;
+            fresh
+        });
+        assert!(!entries.is_empty() && entries.len() <= MAX_SHARED_EXPONENTS);
+        let k = entries.len();
+        let ei_bit = if k <= 1 { 1 } else { (usize::BITS - (k - 1).leading_zeros()).max(1) };
+
+        // Precompute, for every biased exponent, the entry with the
+        // smallest positive minDiff = entry - exp (Alg. 1 lines 6-21).
+        let mut lut = vec![NO_ENTRY; 2048];
+        for (exp, slot) in lut.iter_mut().enumerate() {
+            let mut best: (u16, u16) = NO_ENTRY;
+            for (i, &e) in entries.iter().enumerate() {
+                let diff = e as i64 - exp as i64;
+                if diff >= 1 && (diff as u16) < best.1 {
+                    best = (i as u16, diff as u16);
+                }
+            }
+            *slot = best;
+        }
+        Self { entries, ei_bit, lut }
+    }
+
+    /// Convenience: build from a value slice.
+    pub fn from_values(xs: &[f64], k: usize) -> Self {
+        let mut h = ExpHistogram::new();
+        h.push_all(xs);
+        Self::from_histogram(&h, k)
+    }
+
+    /// Sampled extraction (§III-B1): rows are grouped into `nblocks`
+    /// blocks; one random row per block contributes its exponents. Used
+    /// to bound preprocessing cost on very large matrices.
+    pub fn from_sampled_rows<'a>(
+        rows: impl Fn(usize) -> &'a [f64],
+        nrows: usize,
+        k: usize,
+        nblocks: usize,
+        rng: &mut crate::util::Prng,
+    ) -> Self {
+        let nblocks = nblocks.clamp(1, nrows.max(1));
+        let mut h = ExpHistogram::new();
+        if nrows == 0 {
+            return Self::from_histogram(&h, k);
+        }
+        let block = nrows.div_ceil(nblocks);
+        let mut r = 0usize;
+        while r < nrows {
+            let hi = (r + block).min(nrows);
+            let pick = r + rng.below(hi - r);
+            h.push_all(rows(pick));
+            r = hi;
+        }
+        Self::from_histogram(&h, k)
+    }
+
+    /// Table size `k`.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// O(1) lookup: best (index, minDiff) for a biased exponent, or
+    /// `None` if the exponent exceeds every table entry.
+    #[inline(always)]
+    pub fn lookup(&self, biased_exp: u32) -> Option<(u16, u16)> {
+        let hit = self.lut[biased_exp as usize];
+        if hit == NO_ENTRY {
+            None
+        } else {
+            Some(hit)
+        }
+    }
+
+    /// O(k) reference lookup replicating Alg. 1's scan exactly; used by
+    /// tests to validate the LUT.
+    pub fn lookup_scan(&self, biased_exp: u32) -> Option<(u16, u16)> {
+        // lines 6-12: exact match (exp + 1 == SEM[k]) wins immediately
+        for (i, &e) in self.entries.iter().enumerate() {
+            if biased_exp + 1 == e {
+                return Some((i as u16, 1));
+            }
+        }
+        // lines 13-21: nearest greater entry
+        let mut best: Option<(u16, u16)> = None;
+        for (i, &e) in self.entries.iter().enumerate() {
+            let diff = e as i64 - biased_exp as i64;
+            if diff > 0 && best.map_or(true, |(_, d)| (diff as u16) < d) {
+                best = Some((i as u16, diff as u16));
+            }
+        }
+        best
+    }
+
+    /// The stored exponent (`biased + 1`) at `idx`.
+    #[inline(always)]
+    pub fn stored_exp(&self, idx: usize) -> u32 {
+        self.entries[idx]
+    }
+
+    /// Pick the smallest k from the paper's sweep {2,4,8,16,32,64} whose
+    /// top-k coverage reaches `target` (e.g. 0.9) — automatic tuning of
+    /// the §IV-B knob instead of the paper's fixed k=8.
+    pub fn auto_k(hist: &ExpHistogram, target: f64) -> usize {
+        for k in [2usize, 4, 8, 16, 32, 64] {
+            if hist.topk_coverage(k) >= target {
+                return k;
+            }
+        }
+        MAX_SHARED_EXPONENTS
+    }
+
+    /// Fraction of histogram values whose exponent is an exact table hit
+    /// (`minDiff == 1`) — the fast path of the decode kernel.
+    pub fn exact_hit_ratio(&self, hist: &ExpHistogram) -> f64 {
+        if hist.total == 0 {
+            return 1.0;
+        }
+        let hits: u64 = self
+            .entries
+            .iter()
+            .filter_map(|&e| e.checked_sub(1))
+            .map(|e| hist.counts[e as usize])
+            .sum();
+        hits as f64 / hist.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn hist_of(xs: &[f64]) -> ExpHistogram {
+        let mut h = ExpHistogram::new();
+        h.push_all(xs);
+        h
+    }
+
+    #[test]
+    fn histogram_counts_and_skips() {
+        let h = hist_of(&[1.0, 2.0, 2.5, 0.0, f64::NAN, 1e-310]);
+        assert_eq!(h.total, 3);
+        assert_eq!(h.skipped, 3);
+        assert_eq!(h.counts[1023], 1); // 1.0
+        assert_eq!(h.counts[1024], 2); // 2.0, 2.5
+        assert_eq!(h.num_distinct(), 2);
+        assert_eq!(h.max_exp(), Some(1024));
+    }
+
+    #[test]
+    fn topk_coverage_matches_eq2() {
+        // 6 values with exp 1023, 3 with 1024, 1 with 1020
+        let xs = [1.0, 1.1, 1.2, 1.3, 1.4, 1.5, 2.0, 2.1, 2.2, 0.1];
+        let h = hist_of(&xs);
+        assert!((h.topk_coverage(1) - 0.6).abs() < 1e-12);
+        assert!((h.topk_coverage(2) - 0.9).abs() < 1e-12);
+        assert!((h.topk_coverage(3) - 1.0).abs() < 1e-12);
+        assert!((h.topk_coverage(99) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_orders_by_frequency_and_stores_plus_one() {
+        let xs = [2.0, 2.5, 3.0, 1.0]; // exp 1024 x3, 1023 x1
+        let t = GseTable::from_values(&xs, 4);
+        assert_eq!(t.entries[0], 1025); // most frequent first, stored +1
+        assert!(t.entries.contains(&1024));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn max_exponent_guaranteed() {
+        // many small values, a single huge one; k=1 must still keep max+1
+        let mut xs = vec![1.0; 100];
+        xs.push(1e300);
+        let t = GseTable::from_values(&xs, 1);
+        let maxe = ieee::split(1e300).exp;
+        assert_eq!(t.entries, vec![maxe + 1]);
+        // k=2 keeps both
+        let t = GseTable::from_values(&xs, 2);
+        assert!(t.entries.contains(&(maxe + 1)));
+        assert!(t.entries.contains(&1024));
+    }
+
+    #[test]
+    fn ei_bit_widths() {
+        let mk = |k: usize| {
+            let entries: Vec<u32> = (0..k as u32).map(|i| 1000 + i).collect();
+            GseTable::from_entries(entries).ei_bit
+        };
+        assert_eq!(mk(1), 1);
+        assert_eq!(mk(2), 1);
+        assert_eq!(mk(3), 2);
+        assert_eq!(mk(4), 2);
+        assert_eq!(mk(8), 3);
+        assert_eq!(mk(16), 4);
+        assert_eq!(mk(64), 6);
+    }
+
+    #[test]
+    fn lut_matches_reference_scan() {
+        let mut r = Prng::new(17);
+        for _ in 0..50 {
+            let k = 1 + r.below(16);
+            let entries: Vec<u32> =
+                (0..k).map(|_| 900 + r.below(300) as u32).collect();
+            let t = GseTable::from_entries(entries);
+            for exp in 850..1250u32 {
+                assert_eq!(t.lookup(exp), t.lookup_scan(exp), "exp={exp} t={:?}", t.entries);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_none_above_all_entries() {
+        let t = GseTable::from_entries(vec![1024]);
+        assert_eq!(t.lookup(1024), None); // needs entry >= 1025
+        assert_eq!(t.lookup(1023), Some((0, 1)));
+        assert_eq!(t.lookup(1000), Some((0, 24)));
+    }
+
+    #[test]
+    fn exact_hit_ratio_computation() {
+        let xs = [1.0, 1.5, 2.0, 4.0]; // exps 1023 x2, 1024, 1025
+        let h = hist_of(&xs);
+        let t = GseTable::from_entries(vec![1024, 1026]); // hits 1023(x2) and 1025
+        assert!((t.exact_hit_ratio(&h) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_k_picks_smallest_sufficient() {
+        // two equally frequent exponents -> top-2 covers 100%
+        let h = hist_of(&[1.0, 2.0, 1.5, 2.5]);
+        assert_eq!(GseTable::auto_k(&h, 0.95), 2);
+        // 8 exponents uniform -> need k=8 for full coverage
+        let xs: Vec<f64> = (0..64).map(|i| 2f64.powi((i % 8) as i32)).collect();
+        let h = hist_of(&xs);
+        assert_eq!(GseTable::auto_k(&h, 0.99), 8);
+        assert_eq!(GseTable::auto_k(&h, 0.5), 4);
+    }
+
+    #[test]
+    fn sampled_extraction_covers_blocks() {
+        let rows: Vec<Vec<f64>> = (0..100)
+            .map(|i| vec![2f64.powi(i % 7), 1.0])
+            .collect();
+        let mut rng = Prng::new(5);
+        let t = GseTable::from_sampled_rows(|i| &rows[i], 100, 8, 10, &mut rng);
+        // exponent of 1.0 (1023+1) must be the most frequent entry
+        assert_eq!(t.entries[0], 1024);
+        assert!(t.len() <= 8);
+    }
+
+    #[test]
+    fn duplicate_entries_removed() {
+        let t = GseTable::from_entries(vec![1024, 1024, 1025]);
+        assert_eq!(t.entries, vec![1024, 1025]);
+    }
+}

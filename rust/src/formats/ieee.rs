@@ -1,0 +1,160 @@
+//! IEEE-754 double-precision bit-level utilities.
+//!
+//! Everything in the GSE-SEM pipeline works on the `(sign, biased
+//! exponent, 52-bit mantissa)` decomposition of `f64`; this module is the
+//! single place those bit conventions live.
+
+/// Number of mantissa bits in f64.
+pub const MANT_BITS: u32 = 52;
+/// f64 exponent bias.
+pub const BIAS: i32 = 1023;
+/// Mask of the 52 mantissa bits.
+pub const MANT_MASK: u64 = (1u64 << MANT_BITS) - 1;
+/// Biased exponent of Inf/NaN.
+pub const EXP_SPECIAL: u32 = 0x7FF;
+
+/// Decomposed f64: sign (0/1), biased exponent (0..=2047), mantissa.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct F64Parts {
+    pub sign: u32,
+    pub exp: u32,
+    pub mant: u64,
+}
+
+/// Split an f64 into its bit fields.
+#[inline(always)]
+pub fn split(x: f64) -> F64Parts {
+    let b = x.to_bits();
+    F64Parts {
+        sign: (b >> 63) as u32,
+        exp: ((b >> MANT_BITS) & 0x7FF) as u32,
+        mant: b & MANT_MASK,
+    }
+}
+
+/// Reassemble an f64 from bit fields.
+#[inline(always)]
+pub fn join(p: F64Parts) -> f64 {
+    debug_assert!(p.sign <= 1 && p.exp <= 0x7FF && p.mant <= MANT_MASK);
+    f64::from_bits(((p.sign as u64) << 63) | ((p.exp as u64) << MANT_BITS) | p.mant)
+}
+
+/// Is the value zero, subnormal, infinite, or NaN? (The GSE-SEM encoder
+/// treats these specially: zeros/subnormals truncate to 0; Inf/NaN are
+/// rejected at table-build time.)
+#[inline(always)]
+pub fn is_normal_nonzero(x: f64) -> bool {
+    let e = split(x).exp;
+    e != 0 && e != EXP_SPECIAL
+}
+
+/// Exact `x * 2^e` handling the full double range including gradual
+/// underflow (std has no `ldexp`).
+#[inline]
+pub fn ldexp(x: f64, e: i32) -> f64 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    // Fast path: result stays comfortably in the normal range.
+    if (-1000..=1000).contains(&e) {
+        let p = split(x);
+        let new_e = p.exp as i32 + e;
+        if p.exp != 0 && new_e > 0 && new_e < EXP_SPECIAL as i32 {
+            return join(F64Parts { sign: p.sign, exp: new_e as u32, mant: p.mant });
+        }
+    }
+    // Slow path: split the scale into two (or three) in-range factors.
+    let mut r = x;
+    let mut rem = e;
+    while rem != 0 {
+        let step = rem.clamp(-1000, 1000);
+        r *= pow2(step);
+        rem -= step;
+        if r == 0.0 || r.is_infinite() {
+            return r;
+        }
+    }
+    r
+}
+
+/// 2^e as f64 for e in the normal range [-1022, 1023]; saturates outside.
+#[inline]
+fn pow2(e: i32) -> f64 {
+    if e < -1074 {
+        0.0
+    } else if e < -1022 {
+        // subnormal power of two
+        f64::from_bits(1u64 << (e + 1074))
+    } else if e <= 1023 {
+        join(F64Parts { sign: 0, exp: (e + BIAS) as u32, mant: 0 })
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Unbiased exponent of a normal f64 (floor(log2|x|)).
+#[inline]
+pub fn exponent_of(x: f64) -> i32 {
+    split(x).exp as i32 - BIAS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn split_join_roundtrip_specials() {
+        for x in [0.0, -0.0, 1.0, -1.0, 0.5, 3.5, f64::MAX, f64::MIN_POSITIVE, 1e-310] {
+            assert_eq!(join(split(x)).to_bits(), x.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn split_known_values() {
+        let p = split(1.0);
+        assert_eq!((p.sign, p.exp, p.mant), (0, 1023, 0));
+        let p = split(-2.0);
+        assert_eq!((p.sign, p.exp, p.mant), (1, 1024, 0));
+        let p = split(1.5);
+        assert_eq!((p.sign, p.exp, p.mant), (0, 1023, 1u64 << 51));
+    }
+
+    #[test]
+    fn normal_nonzero_classification() {
+        assert!(is_normal_nonzero(1.0));
+        assert!(is_normal_nonzero(-1e300));
+        assert!(!is_normal_nonzero(0.0));
+        assert!(!is_normal_nonzero(1e-310)); // subnormal
+        assert!(!is_normal_nonzero(f64::INFINITY));
+        assert!(!is_normal_nonzero(f64::NAN));
+    }
+
+    #[test]
+    fn ldexp_matches_multiplication_in_range() {
+        let mut r = Prng::new(99);
+        for _ in 0..10_000 {
+            let x = r.range_f64(-10.0, 10.0);
+            let e = r.range_i64(-60, 60) as i32;
+            let want = x * 2f64.powi(e);
+            assert_eq!(ldexp(x, e).to_bits(), want.to_bits(), "x={x} e={e}");
+        }
+    }
+
+    #[test]
+    fn ldexp_underflow_and_overflow() {
+        assert_eq!(ldexp(1.0, -1080), 0.0);
+        assert!(ldexp(1.0, -1060) > 0.0); // subnormal, not zero
+        assert!(ldexp(1.0, 2000).is_infinite());
+        assert_eq!(ldexp(0.0, 500), 0.0);
+        // gradual underflow exactness
+        assert_eq!(ldexp(1.5, -1040), 1.5 * pow2(-1040));
+    }
+
+    #[test]
+    fn exponent_of_known() {
+        assert_eq!(exponent_of(1.0), 0);
+        assert_eq!(exponent_of(0.75), -1);
+        assert_eq!(exponent_of(1024.0), 10);
+    }
+}

@@ -1,0 +1,320 @@
+//! Generic software minifloat: any (exponent bits, mantissa bits) IEEE-
+//! style format with round-to-nearest-even conversion from/to f64,
+//! including subnormals, infinities and NaN.
+//!
+//! FP16, BF16, TF32 and the two FP8 variants the paper's intro mentions
+//! are instances; the FP16/BF16 instances back the baseline SpMV and
+//! solver comparisons (Fig. 6/8/9, Tables III/IV).
+
+use super::ieee;
+use crate::util::bits::{mask64, round_ties_even};
+
+/// Static description of a minifloat format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Format {
+    pub name: &'static str,
+    /// exponent field width in bits
+    pub ebits: u32,
+    /// mantissa field width in bits
+    pub mbits: u32,
+    /// true if the format reserves the all-ones exponent for Inf/NaN
+    /// (IEEE-style). FP8-E4M3 famously does not reserve Inf.
+    pub has_inf: bool,
+}
+
+/// IEEE binary16.
+pub const FP16: Format = Format { name: "FP16", ebits: 5, mbits: 10, has_inf: true };
+/// bfloat16.
+pub const BF16: Format = Format { name: "BF16", ebits: 8, mbits: 7, has_inf: true };
+/// NVIDIA TF32 (19 bits used of 32).
+pub const TF32: Format = Format { name: "TF32", ebits: 8, mbits: 10, has_inf: true };
+/// FP8 E4M3 (no infinities; max finite 448).
+pub const FP8_E4M3: Format = Format { name: "FP8-E4M3", ebits: 4, mbits: 3, has_inf: false };
+/// FP8 E5M2.
+pub const FP8_E5M2: Format = Format { name: "FP8-E5M2", ebits: 5, mbits: 2, has_inf: true };
+
+impl Format {
+    /// Total storage bits (sign + exponent + mantissa).
+    pub const fn bits(&self) -> u32 {
+        1 + self.ebits + self.mbits
+    }
+
+    /// Exponent bias.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+
+    /// Largest finite value.
+    pub fn max_finite(&self) -> f64 {
+        let max_exp = if self.has_inf {
+            (1i32 << self.ebits) - 2 - self.bias()
+        } else {
+            // all-ones exponent is a normal binade; its top mantissa
+            // pattern is NaN (E4M3 convention), so max mantissa is all
+            // ones minus one step.
+            (1i32 << self.ebits) - 1 - self.bias()
+        };
+        let frac_steps = if self.has_inf {
+            mask64(self.mbits)
+        } else {
+            mask64(self.mbits) - 1
+        };
+        let frac = 1.0 + frac_steps as f64 / (1u64 << self.mbits) as f64;
+        ieee::ldexp(frac, max_exp)
+    }
+
+    /// Smallest positive normal value.
+    pub fn min_normal(&self) -> f64 {
+        ieee::ldexp(1.0, 1 - self.bias())
+    }
+
+    /// Smallest positive subnormal value.
+    pub fn min_subnormal(&self) -> f64 {
+        ieee::ldexp(1.0, 1 - self.bias() - self.mbits as i32)
+    }
+
+    /// Encode an f64 into this format's bit pattern (round to nearest
+    /// even, overflow to Inf — or to NaN for formats without Inf).
+    pub fn encode(&self, x: f64) -> u32 {
+        let p = ieee::split(x);
+        let sign = (p.sign as u32) << (self.ebits + self.mbits);
+        let exp_all1 = mask64(self.ebits) as u32;
+
+        if x.is_nan() {
+            // canonical quiet NaN: all-ones exponent, top mantissa bit
+            // (for E4M3: all-ones everything)
+            return if self.has_inf {
+                sign | (exp_all1 << self.mbits) | (1 << (self.mbits - 1))
+            } else {
+                sign | (exp_all1 << self.mbits) | mask64(self.mbits) as u32
+            };
+        }
+        if x.is_infinite() {
+            return if self.has_inf {
+                sign | (exp_all1 << self.mbits)
+            } else {
+                // saturate to NaN-adjacent max? E4M3 overflows to NaN.
+                sign | (exp_all1 << self.mbits) | mask64(self.mbits) as u32
+            };
+        }
+        if x == 0.0 {
+            return sign;
+        }
+
+        // Effective unbiased exponent and 53-bit significand of |x|,
+        // normalizing f64 subnormals.
+        let (e, sig) = if p.exp == 0 {
+            // f64 subnormal: normalize
+            let shift = p.mant.leading_zeros() - 11; // bring MSB to bit 52
+            (
+                1 - ieee::BIAS - shift as i32,
+                (p.mant << shift) & ieee::MANT_MASK | (1u64 << 52),
+            )
+        } else {
+            (p.exp as i32 - ieee::BIAS, p.mant | (1u64 << 52))
+        };
+
+        let bias = self.bias();
+        let mut target_exp = e + bias; // tentative biased exponent
+
+        // Subnormal in the target format: shift the significand right so
+        // the exponent field becomes 0. The subnormal ULP is
+        // 2^(1 − bias − mbits), so frac = sig · 2^(e − 52) / ulp
+        // = sig >> (52 + extra − mbits) with extra = 1 − target_exp.
+        let (frac, carried) = if target_exp <= 0 {
+            let extra = (1 - target_exp) as u32;
+            let total_drop = 52 + extra - self.mbits;
+            if total_drop >= 64 {
+                return sign; // far below the smallest subnormal: 0
+            }
+            // Emulate the extra shift by treating sig as (52+extra)-wide.
+            let (f, c) = round_ties_even(sig, 52 + extra, self.mbits);
+            target_exp = 0;
+            (f, c)
+        } else {
+            round_ties_even(sig, 53, self.mbits + 1)
+        };
+
+        if target_exp > 0 {
+            // Normal path: frac has mbits+1 bits with the leading 1.
+            let mut frac = frac;
+            let mut texp = target_exp;
+            if carried {
+                texp += 1;
+            }
+            // Remove the implicit leading one.
+            frac &= mask64(self.mbits);
+            if texp >= exp_all1 as i32 {
+                // overflow
+                return if self.has_inf {
+                    sign | (exp_all1 << self.mbits)
+                } else if texp == exp_all1 as i32 && frac != mask64(self.mbits) as u32 as u64 {
+                    sign | (exp_all1 << self.mbits) | frac as u32
+                } else {
+                    sign | (exp_all1 << self.mbits) | mask64(self.mbits) as u32 // NaN (E4M3)
+                };
+            }
+            sign | ((texp as u32) << self.mbits) | frac as u32
+        } else {
+            // Subnormal result; a carry promotes it to the min normal
+            // (round_ties_even reports the carry after folding the value
+            // back down, so the promoted significand is exactly 1.0).
+            let (frac, texp) = if carried {
+                (0u64, 1u32)
+            } else if frac >> self.mbits != 0 {
+                (frac & mask64(self.mbits), 1u32)
+            } else {
+                (frac, 0u32)
+            };
+            sign | (texp << self.mbits) | frac as u32
+        }
+    }
+
+    /// Decode this format's bit pattern to f64 (exact).
+    pub fn decode(&self, bits: u32) -> f64 {
+        let sign = if bits >> (self.ebits + self.mbits) & 1 == 1 { -1.0 } else { 1.0 };
+        let exp = (bits >> self.mbits) & mask64(self.ebits) as u32;
+        let frac = (bits & mask64(self.mbits) as u32) as u64;
+        let exp_all1 = mask64(self.ebits) as u32;
+
+        if exp == exp_all1 && self.has_inf {
+            return if frac == 0 { sign * f64::INFINITY } else { f64::NAN };
+        }
+        if exp == exp_all1 && !self.has_inf && frac == mask64(self.mbits) {
+            return f64::NAN; // E4M3 NaN
+        }
+        if exp == 0 {
+            // subnormal (or zero)
+            let v = frac as f64 / (1u64 << self.mbits) as f64;
+            return sign * ieee::ldexp(v, 1 - self.bias());
+        }
+        let v = 1.0 + frac as f64 / (1u64 << self.mbits) as f64;
+        sign * ieee::ldexp(v, exp as i32 - self.bias())
+    }
+
+    /// Round an f64 through this format (encode + decode).
+    pub fn round(&self, x: f64) -> f64 {
+        self.decode(self.encode(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn fp16_known_values() {
+        assert_eq!(FP16.encode(1.0), 0x3C00);
+        assert_eq!(FP16.encode(-2.0), 0xC000);
+        assert_eq!(FP16.encode(0.5), 0x3800);
+        assert_eq!(FP16.decode(0x3C00), 1.0);
+        assert_eq!(FP16.decode(0x7C00), f64::INFINITY);
+        assert!(FP16.decode(0x7E00).is_nan());
+        assert_eq!(FP16.max_finite(), 65504.0);
+        assert_eq!(FP16.min_normal(), 6.103515625e-05);
+    }
+
+    #[test]
+    fn bf16_known_values() {
+        // bf16 is the top 16 bits of f32 for exactly-representable values
+        assert_eq!(BF16.encode(1.0), 0x3F80);
+        assert_eq!(BF16.encode(-1.0), 0xBF80);
+        assert_eq!(BF16.decode(0x3F80), 1.0);
+        assert!(BF16.max_finite() > 3.3e38 && BF16.max_finite() < 3.4e38);
+    }
+
+    #[test]
+    fn fp16_overflow_to_inf() {
+        assert_eq!(FP16.decode(FP16.encode(1e6)), f64::INFINITY);
+        assert_eq!(FP16.decode(FP16.encode(-1e6)), f64::NEG_INFINITY);
+        // BF16 handles the same magnitude fine
+        assert!((BF16.round(1e6) - 1e6).abs() / 1e6 < 0.01);
+    }
+
+    #[test]
+    fn fp16_subnormals() {
+        let tiny = FP16.min_subnormal();
+        assert!(tiny > 0.0);
+        assert_eq!(FP16.round(tiny), tiny);
+        assert_eq!(FP16.round(tiny / 3.0), 0.0);
+        // halfway between 0 and min_subnormal rounds to even (0)
+        assert_eq!(FP16.round(tiny / 2.0), 0.0);
+        assert_eq!(FP16.round(tiny * 1.5), tiny * 2.0); // tie to even
+    }
+
+    #[test]
+    fn roundtrip_exhaustive_fp16() {
+        // every finite FP16 pattern decodes then re-encodes to itself
+        for bits in 0u32..=0xFFFF {
+            let v = FP16.decode(bits);
+            if v.is_nan() {
+                continue;
+            }
+            let re = FP16.encode(v);
+            // -0.0 and 0.0 both fine, compare decoded values
+            assert_eq!(
+                FP16.decode(re).to_bits(),
+                v.to_bits(),
+                "bits={bits:#06x} v={v}"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_exhaustive_bf16() {
+        for bits in 0u32..=0xFFFF {
+            let v = BF16.decode(bits);
+            if v.is_nan() {
+                continue;
+            }
+            assert_eq!(BF16.decode(BF16.encode(v)).to_bits(), v.to_bits(), "bits={bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even_fp16() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 -> even (1.0)
+        assert_eq!(FP16.round(1.0 + 2f64.powi(-11)), 1.0);
+        // slightly above goes up
+        assert_eq!(FP16.round(1.0 + 2f64.powi(-11) + 1e-10), 1.0 + 2f64.powi(-10));
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 -> even (1+2^-9)
+        assert_eq!(FP16.round(1.0 + 3.0 * 2f64.powi(-11)), 1.0 + 2.0 * 2f64.powi(-10));
+    }
+
+    #[test]
+    fn rounding_error_bounded_random() {
+        let mut r = Prng::new(1234);
+        for _ in 0..20_000 {
+            let x = r.lognormal(0.0, 3.0) * if r.chance(0.5) { -1.0 } else { 1.0 };
+            for f in [FP16, BF16, TF32, FP8_E5M2] {
+                let y = f.round(x);
+                // The relative-error bound only holds for normal results;
+                // subnormals trade relative precision for gradual underflow.
+                if y.is_finite() && y.abs() >= f.min_normal() {
+                    let rel = ((y - x) / x).abs();
+                    let ulp = 2f64.powi(-(f.mbits as i32));
+                    assert!(rel <= ulp, "{} x={x} y={y} rel={rel}", f.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_e4m3_max_is_448() {
+        assert_eq!(FP8_E4M3.max_finite(), 448.0);
+        // E4M3 overflows to NaN, not Inf
+        assert!(FP8_E4M3.round(1000.0).is_nan());
+    }
+
+    #[test]
+    fn decode_encode_monotone_fp16() {
+        // format rounding must be monotone non-decreasing
+        let mut r = Prng::new(77);
+        for _ in 0..5_000 {
+            let a = r.range_f64(-100.0, 100.0);
+            let b = a + r.f64().abs();
+            assert!(FP16.round(a) <= FP16.round(b), "a={a} b={b}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Floating-point formats: IEEE-754 bit tools, software minifloats
+//! (FP16 / BF16 / FP8 / TF32), and the paper's GSE-SEM format.
+//!
+//! The GSE-SEM pieces:
+//! * [`gse`] — group-shared exponent table extraction (§III-B1).
+//! * [`sem`] — sign / exponent-index / mantissa encoding with
+//!   denormalized significands (§III-B2, Alg. 1) and the three-level
+//!   decode (head / head+tail1 / head+tail1+tail2, Alg. 2).
+//! * [`segmented`] — the SoA segmented memory layout (§III-B3, Fig. 3).
+//! * [`entropy`] — value/exponent/mantissa information-entropy analysis
+//!   backing Fig. 1.
+
+pub mod ieee;
+pub mod minifloat;
+pub mod fp16;
+pub mod bf16;
+pub mod gse;
+pub mod sem;
+pub mod segmented;
+pub mod entropy;
+pub mod msplit;
+
+pub use bf16::Bf16;
+pub use fp16::Fp16;
+pub use gse::GseTable;
+pub use segmented::SemVector;
+
+/// Storage precision level of a GSE-SEM datum (§III-B3): which mantissa
+/// segments are read from memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Precision {
+    /// 16-bit head only (lowest precision, least traffic).
+    Head,
+    /// head + 16-bit tail1.
+    HeadTail1,
+    /// head + tail1 + tail2 (full stored mantissa).
+    Full,
+}
+
+impl Precision {
+    /// All levels in escalation order (the "stepped" ladder of §III-D).
+    pub const LADDER: [Precision; 3] = [Precision::Head, Precision::HeadTail1, Precision::Full];
+
+    /// The paper's integer tag (Alg. 3): 1, 2, 3.
+    pub fn tag(self) -> u8 {
+        match self {
+            Precision::Head => 1,
+            Precision::HeadTail1 => 2,
+            Precision::Full => 3,
+        }
+    }
+
+    /// Next level up the ladder, saturating at `Full`.
+    pub fn escalate(self) -> Precision {
+        match self {
+            Precision::Head => Precision::HeadTail1,
+            Precision::HeadTail1 | Precision::Full => Precision::Full,
+        }
+    }
+
+    /// Bytes of value data read per element at this level.
+    pub fn bytes_per_value(self) -> usize {
+        match self {
+            Precision::Head => 2,
+            Precision::HeadTail1 => 4,
+            Precision::Full => 8,
+        }
+    }
+}
+
+/// Which storage format an SpMV / solver variant uses for matrix values.
+/// This is the axis of every comparison figure in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ValueFormat {
+    Fp64,
+    Fp32,
+    Fp16,
+    Bf16,
+    GseSem(Precision),
+}
+
+impl ValueFormat {
+    pub fn label(self) -> &'static str {
+        match self {
+            ValueFormat::Fp64 => "FP64",
+            ValueFormat::Fp32 => "FP32",
+            ValueFormat::Fp16 => "FP16",
+            ValueFormat::Bf16 => "BF16",
+            ValueFormat::GseSem(Precision::Head) => "GSE-SEM(head)",
+            ValueFormat::GseSem(Precision::HeadTail1) => "GSE-SEM(head+t1)",
+            ValueFormat::GseSem(Precision::Full) => "GSE-SEM(full)",
+        }
+    }
+
+    /// Bytes of value data read per non-zero.
+    pub fn bytes_per_value(self) -> usize {
+        match self {
+            ValueFormat::Fp64 => 8,
+            ValueFormat::Fp32 => 4,
+            ValueFormat::Fp16 | ValueFormat::Bf16 => 2,
+            ValueFormat::GseSem(p) => p.bytes_per_value(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_escalates_and_saturates() {
+        assert_eq!(Precision::Head.escalate(), Precision::HeadTail1);
+        assert_eq!(Precision::HeadTail1.escalate(), Precision::Full);
+        assert_eq!(Precision::Full.escalate(), Precision::Full);
+        assert_eq!(Precision::LADDER[0].tag(), 1);
+        assert_eq!(Precision::LADDER[2].tag(), 3);
+    }
+
+    #[test]
+    fn value_format_bytes() {
+        assert_eq!(ValueFormat::Fp64.bytes_per_value(), 8);
+        assert_eq!(ValueFormat::Fp16.bytes_per_value(), 2);
+        assert_eq!(ValueFormat::GseSem(Precision::Head).bytes_per_value(), 2);
+        assert_eq!(ValueFormat::GseSem(Precision::HeadTail1).bytes_per_value(), 4);
+        assert_eq!(ValueFormat::GseSem(Precision::Full).bytes_per_value(), 8);
+    }
+}

@@ -1,0 +1,212 @@
+//! Segmented SoA storage of SEM-encoded vectors (§III-B3, Fig. 3).
+//!
+//! All heads are contiguous, followed by all tail1 segments, then all
+//! tail2 segments — the memory layout that gives coalesced loads on the
+//! GPU and streaming loads on the CPU. A *single* stored copy serves all
+//! three precisions: decoding at `Head` touches only the head array,
+//! `HeadTail1` adds the tail1 array, `Full` adds tail2 (the paper's
+//! storage/computation decoupling).
+
+use super::gse::GseTable;
+use super::sem::{self, SemGeometry, SemLayout};
+use super::{ieee, Precision};
+
+/// A dense f64 vector encoded in GSE-SEM with inline exponent indexes.
+#[derive(Clone, Debug)]
+pub struct SemVector {
+    pub table: GseTable,
+    pub geom: SemGeometry,
+    pub heads: Vec<u16>,
+    pub tail1: Vec<u16>,
+    pub tail2: Vec<u32>,
+}
+
+impl SemVector {
+    /// Encode a vector, extracting a fresh k-entry shared-exponent table
+    /// from the data (Algorithm 1 end-to-end).
+    pub fn encode(xs: &[f64], k: usize) -> Self {
+        let table = GseTable::from_values(xs, k);
+        Self::encode_with_table(xs, table)
+    }
+
+    /// Encode with a pre-extracted table (§III-B1: the group exponent
+    /// setting is reused across calculations without reanalysis).
+    pub fn encode_with_table(xs: &[f64], table: GseTable) -> Self {
+        let geom = SemGeometry::new(SemLayout::Inline, table.ei_bit);
+        let mut heads = Vec::with_capacity(xs.len());
+        let mut tail1 = Vec::with_capacity(xs.len());
+        let mut tail2 = Vec::with_capacity(xs.len());
+        for &x in xs {
+            // By construction the table covers the data's exponent range;
+            // anything unrepresentable (Inf/NaN or data outside the build
+            // set) saturates to the largest shared binade, mirroring how
+            // the GPU kernel would clamp rather than fault.
+            let p = sem::encode(x, &table, &geom).unwrap_or_else(|_| {
+                saturated_parts(x, &table, &geom)
+            });
+            heads.push(p.head);
+            tail1.push(p.tail1);
+            tail2.push(p.tail2);
+        }
+        Self { table, geom, heads, tail1, tail2 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heads.is_empty()
+    }
+
+    /// Decode one element at a precision level.
+    #[inline]
+    pub fn get(&self, i: usize, level: Precision) -> f64 {
+        let parts = sem::SemParts {
+            head: self.heads[i],
+            tail1: if level >= Precision::HeadTail1 { self.tail1[i] } else { 0 },
+            tail2: if level == Precision::Full { self.tail2[i] } else { 0 },
+            exp_idx: sem::inline_exp_idx(self.heads[i], &self.geom),
+        };
+        sem::decode_ldexp(&parts, &self.table, &self.geom, level)
+    }
+
+    /// Decode the whole vector into `out`.
+    pub fn decode_into(&self, level: Precision, out: &mut [f64]) {
+        assert_eq!(out.len(), self.len());
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.get(i, level);
+        }
+    }
+
+    /// Decode to a new Vec.
+    pub fn decode(&self, level: Precision) -> Vec<f64> {
+        let mut out = vec![0.0; self.len()];
+        self.decode_into(level, &mut out);
+        out
+    }
+
+    /// Total bytes resident for this encoding (GSE table + all segments);
+    /// compare with `8 * len` for FP64.
+    pub fn stored_bytes(&self) -> usize {
+        self.table.len() * 4 + self.heads.len() * 2 + self.tail1.len() * 2 + self.tail2.len() * 4
+    }
+
+    /// Bytes *read* when decoding at a level (the traffic that matters
+    /// for the memory-bound SpMV).
+    pub fn read_bytes(&self, level: Precision) -> usize {
+        self.table.len() * 4 + self.len() * level.bytes_per_value()
+    }
+
+    /// Maximum absolute decode error vs the original data at a level.
+    pub fn max_abs_error(&self, original: &[f64], level: Precision) -> f64 {
+        assert_eq!(original.len(), self.len());
+        original
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| (x - self.get(i, level)).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Clamp an unrepresentable value to the largest shared binade, keeping
+/// the sign — the vector-level fallback for out-of-table exponents.
+fn saturated_parts(
+    x: f64,
+    table: &GseTable,
+    geom: &SemGeometry,
+) -> sem::SemParts {
+    let biggest = table
+        .entries
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &e)| e)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    // All-ones mantissa in the largest binade.
+    let stored = table.stored_exp(biggest);
+    let max_val = ieee::ldexp(
+        ((1u64 << 52) - 1) as f64,
+        stored as i32 - 1075,
+    );
+    let v = if x.is_nan() { 0.0 } else { max_val.copysign(x) };
+    sem::encode(v, table, geom).expect("saturated value must encode")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn roundtrip_full_precision_close() {
+        let mut r = Prng::new(1);
+        let xs: Vec<f64> = (0..500).map(|_| r.range_f64(-1000.0, 1000.0)).collect();
+        let v = SemVector::encode(&xs, 8);
+        let back = v.decode(Precision::Full);
+        for (&x, &y) in xs.iter().zip(&back) {
+            if x != 0.0 {
+                assert!(((x - y) / x).abs() < 2f64.powi(-40), "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn storage_sizes() {
+        // 4 distinct binades so the table keeps k = 4 entries
+        let xs: Vec<f64> = (0..100).map(|i| 2f64.powi((i % 4) as i32) * 1.3).collect();
+        let v = SemVector::encode(&xs, 4);
+        assert_eq!(v.table.len(), 4);
+        assert_eq!(v.stored_bytes(), 4 * 4 + 100 * (2 + 2 + 4));
+        assert_eq!(v.read_bytes(Precision::Head), 16 + 200);
+        assert_eq!(v.read_bytes(Precision::HeadTail1), 16 + 400);
+        assert_eq!(v.read_bytes(Precision::Full), 16 + 800);
+    }
+
+    #[test]
+    fn error_decreases_with_level() {
+        let mut r = Prng::new(2);
+        let xs: Vec<f64> = (0..1000).map(|_| r.lognormal(0.0, 3.0)).collect();
+        let v = SemVector::encode(&xs, 8);
+        let e1 = v.max_abs_error(&xs, Precision::Head);
+        let e2 = v.max_abs_error(&xs, Precision::HeadTail1);
+        let e3 = v.max_abs_error(&xs, Precision::Full);
+        assert!(e2 <= e1 && e3 <= e2, "{e1} {e2} {e3}");
+        assert!(e3 < e1 || e1 == 0.0);
+    }
+
+    #[test]
+    fn reused_table_encoding() {
+        let train: Vec<f64> = (0..100).map(|i| (i as f64 + 1.0) * 0.25).collect();
+        let t = GseTable::from_values(&train, 8);
+        let test: Vec<f64> = vec![0.3, 1.7, 12.5];
+        let v = SemVector::encode_with_table(&test, t);
+        let back = v.decode(Precision::Full);
+        for (&x, &y) in test.iter().zip(&back) {
+            assert!(((x - y) / x).abs() < 1e-9, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn saturation_out_of_table() {
+        // Table built on small data; encode a huge value -> clamps to the
+        // largest shared binade instead of panicking.
+        let t = GseTable::from_values(&[1.0, 2.0], 2);
+        let v = SemVector::encode_with_table(&[1e100, -1e100], t);
+        let back = v.decode(Precision::Full);
+        assert!(back[0] > 0.0 && back[0].is_finite());
+        assert_eq!(back[1], -back[0]);
+        assert!(back[0] < 8.0); // clamped into the table's range
+    }
+
+    #[test]
+    fn zeros_roundtrip() {
+        let xs = [0.0, 1.0, 0.0, -2.0];
+        let v = SemVector::encode(&xs, 2);
+        for lvl in Precision::LADDER {
+            let d = v.decode(lvl);
+            assert_eq!(d[0], 0.0);
+            assert_eq!(d[2], 0.0);
+        }
+    }
+}

@@ -1,0 +1,446 @@
+//! SEM encoding — the Sign / Exponent-index / Mantissa half of GSE-SEM
+//! (§III-B2, Algorithm 1) and the three-level decode (Algorithm 2).
+//!
+//! Two head layouts exist in the paper:
+//!
+//! * **Inline** (Alg. 1, used for vectors): the 16-bit head is
+//!   `[sign:1][expIdx:EI_bit][mantissa:15-EI_bit]`.
+//! * **External** (Alg. 2, used for sparse matrices): the 16-bit head is
+//!   `[sign:1][mantissa:15]` and the exponent index travels out-of-band —
+//!   packed into the top `EI_bit` bits of the CSR column index, or in a
+//!   separate byte array when the column count is too large (§III-C1).
+//!
+//! Both layouts store the significand *denormalized*: the full 53-bit
+//! significand (implicit 1 made explicit) is shifted right by
+//! `minDiff = storedExp − exp ≥ 1` into a common 52-bit frame `D`, then
+//! split into head / tail1 / tail2 segments (Fig. 3):
+//!
+//! ```text
+//!  52-bit frame D:   [ head: M_h bits ][ tail1: 16 bits ][ tail2: rest ]
+//!  M_h = 15 − EI_bit (inline)  or  15 (external)
+//! ```
+//!
+//! Decoding at level L reconstructs the prefix of `D` available at that
+//! level and rescales: `value = ±D_L · 2^(storedExp − 1075)`
+//! (1075 = bias 1023 + mantissa width 52; the explicit-one shift is already folded into D).
+
+use super::gse::GseTable;
+use super::ieee;
+use crate::util::bits::{mask64, shr64};
+use super::Precision;
+
+/// Head layout selector (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SemLayout {
+    /// expIdx inside the head word (vectors; Alg. 1).
+    Inline,
+    /// expIdx carried out-of-band (sparse matrices; Alg. 2).
+    External,
+}
+
+/// Derived bit geometry for one (layout, EI_bit) combination.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SemGeometry {
+    pub layout: SemLayout,
+    pub ei_bit: u32,
+    /// mantissa bits held by the head
+    pub m_head: u32,
+    /// right-shift of the 52-bit frame that yields the head mantissa
+    pub s_head: u32,
+    /// right-shift that yields tail1
+    pub s_tail1: u32,
+    /// bit width of tail2
+    pub w_tail2: u32,
+}
+
+impl SemGeometry {
+    pub fn new(layout: SemLayout, ei_bit: u32) -> Self {
+        assert!((1..=6).contains(&ei_bit), "EI_bit must be 1..=6");
+        let m_head = match layout {
+            SemLayout::Inline => 15 - ei_bit,
+            SemLayout::External => 15,
+        };
+        let s_head = 52 - m_head; // 37 + EI_bit (inline) or 37 (external)
+        let s_tail1 = s_head - 16;
+        Self { layout, ei_bit, m_head, s_head, s_tail1, w_tail2: s_tail1 }
+    }
+
+    /// Mantissa bits available at a precision level (excluding the
+    /// explicit leading 1, which is part of the stored bits).
+    pub fn mantissa_bits(&self, level: Precision) -> u32 {
+        match level {
+            Precision::Head => self.m_head,
+            Precision::HeadTail1 => self.m_head + 16,
+            Precision::Full => 52,
+        }
+    }
+}
+
+/// One encoded value: 16-bit head, 16-bit tail1, up-to-27-bit tail2, and
+/// the exponent index (stored in-head for Inline, returned separately for
+/// External).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SemParts {
+    pub head: u16,
+    pub tail1: u16,
+    pub tail2: u32,
+    pub exp_idx: u16,
+}
+
+/// Why a value could not be encoded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EncodeError {
+    /// The value's exponent exceeds every shared exponent; the table was
+    /// built without seeing this magnitude (§III-B2 requires max_exp+1).
+    ExponentTooLarge { biased_exp: u32 },
+    /// Inf or NaN cannot be represented in GSE-SEM.
+    NonFinite,
+}
+
+/// Encode one f64 (Algorithm 1). Zeros and f64-subnormals encode to an
+/// all-zero mantissa (they decode to ±0).
+pub fn encode(x: f64, table: &GseTable, geom: &SemGeometry) -> Result<SemParts, EncodeError> {
+    debug_assert_eq!(geom.ei_bit, table.ei_bit);
+    let p = ieee::split(x);
+    if p.exp == ieee::EXP_SPECIAL {
+        return Err(EncodeError::NonFinite);
+    }
+    if p.exp == 0 {
+        // zero / subnormal -> canonical zero with index 0
+        let head = (p.sign as u16) << 15;
+        return Ok(SemParts { head, tail1: 0, tail2: 0, exp_idx: 0 });
+    }
+    let (idx, min_diff) = table
+        .lookup(p.exp)
+        .ok_or(EncodeError::ExponentTooLarge { biased_exp: p.exp })?;
+
+    // D: explicit-one significand shifted into the common 52-bit frame.
+    let d = shr64((1u64 << 52) | p.mant, min_diff as u32);
+
+    let head_mant = (d >> geom.s_head) as u16;
+    let tail1 = ((d >> geom.s_tail1) & 0xFFFF) as u16;
+    let tail2 = (d & mask64(geom.w_tail2)) as u32;
+
+    let head = match geom.layout {
+        SemLayout::Inline => {
+            ((p.sign as u16) << 15) | (idx << geom.m_head as u16) | head_mant
+        }
+        SemLayout::External => ((p.sign as u16) << 15) | head_mant,
+    };
+    Ok(SemParts { head, tail1, tail2, exp_idx: idx })
+}
+
+/// Reconstruct the frame prefix available at `level`.
+#[inline(always)]
+fn frame_at(parts: &SemParts, geom: &SemGeometry, level: Precision) -> u64 {
+    let head_mant = (parts.head as u64) & mask64(geom.m_head);
+    let mut d = head_mant << geom.s_head;
+    if level >= Precision::HeadTail1 {
+        d |= (parts.tail1 as u64) << geom.s_tail1;
+    }
+    if level == Precision::Full {
+        d |= (parts.tail2 as u64) & mask64(geom.w_tail2);
+    }
+    d
+}
+
+/// Extract the exponent index from an Inline head.
+#[inline(always)]
+pub fn inline_exp_idx(head: u16, geom: &SemGeometry) -> u16 {
+    debug_assert_eq!(geom.layout, SemLayout::Inline);
+    (head >> geom.m_head) & mask64(geom.ei_bit) as u16
+}
+
+/// Sign bit of a head.
+#[inline(always)]
+pub fn head_sign(head: u16) -> bool {
+    head & 0x8000 != 0
+}
+
+/// Fast decode: rescale the reconstructed frame with an exact `ldexp`.
+/// Branch-free in the common case — this is the formulation the Pallas
+/// kernel uses (TPUs have no per-lane bit scan; DESIGN.md §6).
+#[inline]
+pub fn decode_ldexp(
+    parts: &SemParts,
+    table: &GseTable,
+    geom: &SemGeometry,
+    level: Precision,
+) -> f64 {
+    let d = frame_at(parts, geom, level);
+    if d == 0 {
+        return 0.0;
+    }
+    let stored = table.stored_exp(parts.exp_idx as usize) as i32;
+    let v = ieee::ldexp(d as f64, stored - 1075);
+    if head_sign(parts.head) {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Faithful decode replicating Algorithm 2's GPU bit-scan: find the
+/// first set bit scanning down from the head's top mantissa bit,
+/// renormalize, and assemble the IEEE-754 bit pattern directly.
+/// Semantically identical to [`decode_ldexp`] (property-tested); kept as
+/// the reference for the kernel-conversion-cost model.
+pub fn decode_faithful(
+    parts: &SemParts,
+    table: &GseTable,
+    geom: &SemGeometry,
+    level: Precision,
+) -> f64 {
+    let d = frame_at(parts, geom, level);
+    if d == 0 {
+        return 0.0; // Alg. 2 line 16
+    }
+    // Position of the leading 1 in the 52-bit frame.
+    let pos = 63 - d.leading_zeros(); // 0..=51
+    let stored = table.stored_exp(parts.exp_idx as usize) as i64;
+    // minDiff implied by the leading-one position:
+    let min_diff = 52 - pos as i64;
+    let new_exp = stored - min_diff; // == original biased exp when lossless
+    let mant = (d << min_diff) & ieee::MANT_MASK; // renormalized mantissa
+    if new_exp <= 0 {
+        // Underflow into f64-subnormal territory: fall back to the exact
+        // path (cannot assemble a normal bit pattern).
+        return decode_ldexp(parts, table, geom, level);
+    }
+    debug_assert!(new_exp < ieee::EXP_SPECIAL as i64);
+    let sign = (parts.head as u64 >> 15) << 63;
+    f64::from_bits(sign | ((new_exp as u64) << 52) | mant)
+}
+
+/// Worst-case absolute representation error at a level for a value with
+/// stored exponent `stored`: one unit in the last held frame bit.
+pub fn ulp_at(stored_exp: u32, geom: &SemGeometry, level: Precision) -> f64 {
+    let dropped_bits = match level {
+        Precision::Head => geom.s_head,
+        Precision::HeadTail1 => geom.s_tail1,
+        Precision::Full => 0,
+    };
+    ieee::ldexp(1.0, stored_exp as i32 - 1075 + dropped_bits as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck;
+    use crate::util::Prng;
+
+    fn table_for(xs: &[f64], k: usize) -> GseTable {
+        GseTable::from_values(xs, k)
+    }
+
+    #[test]
+    fn golden_values_shared_with_python_oracle() {
+        // Pinned in python/tests/test_ref.py::TestGolden — the spec the
+        // three implementations meet at (DESIGN.md §8).
+        let t = GseTable::from_entries(vec![1024]);
+        let g = SemGeometry::new(SemLayout::External, t.ei_bit);
+        let p = encode(1.5, &t, &g).unwrap();
+        assert_eq!(p.head, 0x6000); // D = 3<<50, head mant = D>>37 = 3<<13
+        assert_eq!((p.tail1, p.tail2, p.exp_idx), (0, 0, 0));
+        assert_eq!(decode_ldexp(&p, &t, &g, Precision::Head), 1.5);
+        let n = encode(-1.5, &t, &g).unwrap();
+        assert_eq!(n.head, 0xE000);
+    }
+
+    #[test]
+    fn geometry_inline_vs_external() {
+        let gi = SemGeometry::new(SemLayout::Inline, 3);
+        assert_eq!((gi.m_head, gi.s_head, gi.s_tail1, gi.w_tail2), (12, 40, 24, 24));
+        let ge = SemGeometry::new(SemLayout::External, 3);
+        assert_eq!((ge.m_head, ge.s_head, ge.s_tail1, ge.w_tail2), (15, 37, 21, 21));
+        assert_eq!(gi.mantissa_bits(Precision::Head), 12);
+        assert_eq!(gi.mantissa_bits(Precision::HeadTail1), 28);
+        assert_eq!(gi.mantissa_bits(Precision::Full), 52);
+    }
+
+    #[test]
+    fn exact_roundtrip_when_mantissa_fits_head() {
+        // 1.5 = 1.1b: with an exact table hit (minDiff=1) the significand
+        // 0b11 fits easily in any head.
+        let xs = [1.5, -1.5];
+        let t = table_for(&xs, 2);
+        let g = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+        for &x in &xs {
+            let p = encode(x, &t, &g).unwrap();
+            assert_eq!(decode_ldexp(&p, &t, &g, Precision::Head), x);
+            assert_eq!(decode_faithful(&p, &t, &g, Precision::Head), x);
+        }
+    }
+
+    #[test]
+    fn zero_encodes_and_decodes_to_zero() {
+        let t = table_for(&[1.0], 1);
+        let g = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+        for x in [0.0, -0.0, 1e-320] {
+            let p = encode(x, &t, &g).unwrap();
+            for lvl in Precision::LADDER {
+                assert_eq!(decode_ldexp(&p, &t, &g, lvl), 0.0);
+                assert_eq!(decode_faithful(&p, &t, &g, lvl), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn nonfinite_rejected() {
+        let t = table_for(&[1.0], 1);
+        let g = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+        assert_eq!(encode(f64::NAN, &t, &g), Err(EncodeError::NonFinite));
+        assert_eq!(encode(f64::INFINITY, &t, &g), Err(EncodeError::NonFinite));
+    }
+
+    #[test]
+    fn exponent_too_large_rejected() {
+        let t = GseTable::from_entries(vec![1024]); // covers exp <= 1023
+        let g = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+        assert!(matches!(
+            encode(4.0, &t, &g), // exp 1025
+            Err(EncodeError::ExponentTooLarge { biased_exp: 1025 })
+        ));
+        assert!(encode(1.9, &t, &g).is_ok());
+    }
+
+    #[test]
+    fn full_level_error_bounded_by_one_dropped_bit() {
+        // With minDiff=1 the only lost bit is mantissa bit 0: error
+        // <= 2^(exp-52).
+        let mut r = Prng::new(42);
+        let xs: Vec<f64> = (0..1000).map(|_| r.range_f64(-8.0, 8.0)).collect();
+        let t = table_for(&xs, 8);
+        let g = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+        for &x in &xs {
+            if x == 0.0 {
+                continue;
+            }
+            let p = encode(x, &t, &g).unwrap();
+            let y = decode_ldexp(&p, &t, &g, Precision::Full);
+            let stored = t.stored_exp(p.exp_idx as usize);
+            let ulp = ulp_at(stored, &g, Precision::Full);
+            assert!((x - y).abs() <= ulp, "x={x} y={y} ulp={ulp}");
+        }
+    }
+
+    #[test]
+    fn precision_levels_monotone() {
+        // more tail segments -> error never grows
+        let mut r = Prng::new(7);
+        let xs: Vec<f64> = (0..2000).map(|_| r.lognormal(0.0, 4.0)).collect();
+        let t = table_for(&xs, 8);
+        let g = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+        for &x in &xs {
+            let p = encode(x, &t, &g).unwrap();
+            let e_h = (decode_ldexp(&p, &t, &g, Precision::Head) - x).abs();
+            let e_t1 = (decode_ldexp(&p, &t, &g, Precision::HeadTail1) - x).abs();
+            let e_f = (decode_ldexp(&p, &t, &g, Precision::Full) - x).abs();
+            assert!(e_t1 <= e_h && e_f <= e_t1, "x={x} {e_h} {e_t1} {e_f}");
+        }
+    }
+
+    #[test]
+    fn head_error_bound_matches_ulp_model() {
+        let mut r = Prng::new(8);
+        let xs: Vec<f64> = (0..2000).map(|_| r.range_f64(-100.0, 100.0)).collect();
+        let t = table_for(&xs, 8);
+        let g = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+        for &x in &xs {
+            let p = encode(x, &t, &g).unwrap();
+            let y = decode_ldexp(&p, &t, &g, Precision::Head);
+            let ulp = ulp_at(t.stored_exp(p.exp_idx as usize), &g, Precision::Head);
+            assert!((x - y).abs() < ulp, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn faithful_equals_ldexp_property() {
+        // The Alg.2 bit-scan decode and the ldexp decode are the same
+        // function — over random magnitudes, layouts, k, and levels.
+        quickcheck::check(
+            2024,
+            4000,
+            |r| {
+                let k = 1 + r.below(16);
+                let n = 4 + r.below(60);
+                let sigma = 0.5 + r.f64() * 6.0;
+                let xs: Vec<f64> = (0..n)
+                    .map(|_| r.lognormal(0.0, sigma) * if r.chance(0.5) { -1.0 } else { 1.0 })
+                    .collect();
+                let layout = if r.chance(0.5) { SemLayout::Inline } else { SemLayout::External };
+                let lvl = Precision::LADDER[r.below(3)];
+                (xs, k, layout, lvl)
+            },
+            |(xs, k, layout, lvl)| {
+                let t = GseTable::from_values(xs, *k);
+                let g = SemGeometry::new(*layout, t.ei_bit);
+                for &x in xs {
+                    let p = encode(x, &t, &g).map_err(|e| format!("{e:?}"))?;
+                    let a = decode_faithful(&p, &t, &g, *lvl);
+                    let b = decode_ldexp(&p, &t, &g, *lvl);
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("x={x} faithful={a} ldexp={b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn denormalized_values_lose_min_diff_bits() {
+        // value with exponent far below the only shared exponent: head
+        // keeps fewer significant bits but magnitude survives.
+        let t = GseTable::from_entries(vec![1024 + 6]); // stored for exp 1029
+        let g = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+        let x = 1.75; // exp 1023, minDiff = 7
+        let p = encode(x, &t, &g).unwrap();
+        let y = decode_ldexp(&p, &t, &g, Precision::Full);
+        // lost 7 low mantissa bits; 1.75 has only 2 significant -> exact
+        assert_eq!(y, x);
+        // now a value needing all 52 bits is truncated but within 2^-45 rel
+        let x2 = 1.0 + (1.0 - 2f64.powi(-52));
+        let p2 = encode(x2, &t, &g).unwrap();
+        let y2 = decode_ldexp(&p2, &t, &g, Precision::Full);
+        assert!(((x2 - y2) / x2).abs() < 2f64.powi(-44));
+    }
+
+    #[test]
+    fn inline_exp_idx_roundtrip() {
+        // Spread entries so every lognormal(0,1) draw is representable
+        // (max entry 1045 covers values up to ~2^22).
+        let entries: Vec<u32> = (0..8).map(|i| 1045 - 3 * i).collect();
+        let t = GseTable::from_entries(entries);
+        let g = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+        let mut r = Prng::new(3);
+        for _ in 0..500 {
+            let x = r.lognormal(0.0, 1.0);
+            let p = encode(x, &t, &g).unwrap();
+            assert_eq!(inline_exp_idx(p.head, &g), p.exp_idx);
+        }
+    }
+
+    #[test]
+    fn external_layout_has_three_more_head_bits() {
+        // Same value, k=8: external head mantissa = 15 bits vs 12 inline;
+        // head-level error must be <= inline's.
+        let mut r = Prng::new(10);
+        let xs: Vec<f64> = (0..500).map(|_| r.lognormal(0.0, 1.0)).collect();
+        let t = GseTable::from_values(&xs, 8);
+        let gi = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+        let ge = SemGeometry::new(SemLayout::External, t.ei_bit);
+        let mut better = 0;
+        for &x in &xs {
+            let pi = encode(x, &t, &gi).unwrap();
+            let pe = encode(x, &t, &ge).unwrap();
+            let ei = (decode_ldexp(&pi, &t, &gi, Precision::Head) - x).abs();
+            let ee = (decode_ldexp(&pe, &t, &ge, Precision::Head) - x).abs();
+            assert!(ee <= ei + 1e-300, "x={x}");
+            if ee < ei {
+                better += 1;
+            }
+        }
+        assert!(better > 100, "external should strictly win often: {better}");
+    }
+}

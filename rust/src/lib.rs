@@ -1,0 +1,42 @@
+//! # gsem — Group-Shared-Exponent mixed-precision iterative solvers
+//!
+//! Reproduction of *"Precision-Aware Iterative Algorithms Based on
+//! Group-Shared Exponents of Floating-Point Numbers"* (Gao, Shen, Zhang,
+//! Ji, Huang — 2024).
+//!
+//! The library is organised bottom-up:
+//!
+//! * [`util`] — PRNG, statistics, timing, bit manipulation, a tiny
+//!   property-testing harness and a bench harness (offline substitutes for
+//!   `rand`/`proptest`/`criterion`, which are not available in this build
+//!   environment).
+//! * [`formats`] — IEEE-754 bit-level tools, software-simulated FP16 /
+//!   BF16 / FP8 / TF32 minifloats, and the paper's contribution: the
+//!   **GSE-SEM** format (group-shared exponents + sign/exponent-index/
+//!   mantissa with segmented head/tail1/tail2 storage).
+//! * [`sparse`] — COO/CSR matrices, MatrixMarket IO, and synthetic matrix
+//!   generators standing in for the SuiteSparse collection.
+//! * [`spmv`] — SpMV operators for every storage format, including the
+//!   three-precision GSE-SEM SpMV, plus a memory-traffic roofline model
+//!   used to translate CPU measurements into the paper's V100 setting.
+//! * [`solvers`] — CG, restarted GMRES, BiCGSTAB, iterative refinement,
+//!   and the paper's **stepped mixed-precision controller**
+//!   (RSD / nDec / relDec switching conditions).
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`).
+//! * [`coordinator`] — thin L3 driver: solve-job queue, worker pool,
+//!   metrics, experiment suite runner.
+
+pub mod util;
+pub mod formats;
+pub mod sparse;
+pub mod spmv;
+pub mod solvers;
+pub mod runtime;
+pub mod coordinator;
+
+pub use formats::gse::GseTable;
+pub use formats::Precision;
+pub use formats::SemVector;
+pub use sparse::csr::Csr;
+pub use spmv::GseCsr;

@@ -1,0 +1,360 @@
+//! `gsem` — leader binary: CLI driver over the coordinator.
+//!
+//! Subcommands:
+//! * `analyze`   — §II motivation stats for a matrix (entropy, top-k).
+//! * `spmv`      — run/compare SpMV formats on a matrix.
+//! * `solve`     — run CG/GMRES/BiCGSTAB in any storage format
+//!                 (including stepped GSE-SEM) and print the outcome.
+//! * `suite`     — run the paper's CG + GMRES test sets end-to-end.
+//! * `kernels`   — list/compile the AOT artifacts (PJRT check).
+//! * `gen`       — write a corpus matrix to a MatrixMarket file.
+
+use gsem::coordinator::cli::Cli;
+use gsem::coordinator::{FormatChoice, SolveRequest, SolverKind, SolverPool};
+use gsem::formats::{Precision, ValueFormat};
+use gsem::solvers::stepped::SteppedParams;
+use gsem::sparse::gen::corpus::{cg_set, gmres_set, spmv_corpus, CorpusSize, NamedMatrix};
+use gsem::sparse::{mm, stats::matrix_stats, Csr};
+use gsem::spmv::{fp64, max_abs_diff, traffic};
+use gsem::util::table::TextTable;
+use gsem::util::Timer;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let cli = match Cli::parse(std::env::args().skip(1)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match cli.command.as_deref() {
+        Some("analyze") => cmd_analyze(&cli),
+        Some("spmv") => cmd_spmv(&cli),
+        Some("solve") => cmd_solve(&cli),
+        Some("suite") => cmd_suite(&cli),
+        Some("kernels") => cmd_kernels(&cli),
+        Some("gen") => cmd_gen(&cli),
+        _ => {
+            print_usage();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "gsem — GSE-SEM mixed-precision iterative solvers (paper reproduction)\n\n\
+         USAGE: gsem <command> [--options]\n\n\
+         COMMANDS:\n\
+           analyze  --matrix <name|path.mtx>            exponent/entropy stats (Fig. 1)\n\
+           spmv     --matrix <name|path.mtx> [--k 8]    compare SpMV formats (Fig. 6)\n\
+           solve    --matrix <name|path.mtx> --solver cg|gmres|bicgstab\n\
+                    --format fp64|fp32|fp16|bf16|gse-head|gse-t1|gse-full|stepped [--k 8]\n\
+           suite    [--solver cg|gmres|both] [--size small|medium|full] [--workers N]\n\
+           kernels                                      PJRT artifact check\n\
+           gen      --matrix <name> --out <path.mtx> | --list\n\n\
+         Matrix names: any corpus entry (see `gen --list`), e.g. poisson2d_48x48."
+    );
+}
+
+/// Resolve a matrix by corpus name or .mtx path.
+fn load_matrix(spec: &str) -> Result<Csr, String> {
+    if spec.ends_with(".mtx") {
+        return mm::read_path(Path::new(spec)).map_err(|e| format!("{e:#}"));
+    }
+    let size = CorpusSize::from_env();
+    let all: Vec<NamedMatrix> = spmv_corpus(size)
+        .into_iter()
+        .chain(cg_set(size))
+        .chain(gmres_set(size))
+        .collect();
+    all.into_iter()
+        .find(|m| m.name == spec)
+        .map(|m| m.a)
+        .ok_or_else(|| format!("unknown matrix '{spec}' (try e.g. poisson2d_48x48 or a .mtx path)"))
+}
+
+fn cmd_analyze(cli: &Cli) -> i32 {
+    let Some(spec) = cli.get("matrix") else {
+        eprintln!("--matrix required");
+        return 2;
+    };
+    let a = match load_matrix(spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let s = matrix_stats(&a);
+    println!("matrix {spec}: {} x {}, nnz {}", s.nrows, s.ncols, s.nnz);
+    println!(
+        "entropy (bits): values {:.3}  exponents {:.3}  mantissas {:.3}",
+        s.entropy.value_bits, s.entropy.exponent_bits, s.entropy.mantissa_bits
+    );
+    println!("distinct exponents: {}", s.num_distinct_exponents);
+    let mut t = TextTable::new(&["top-k", "coverage"]);
+    for (i, &k) in gsem::sparse::stats::TOPK_LEVELS.iter().enumerate() {
+        t.row(&[format!("top-{k}"), format!("{:.4}", s.topk[i])]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_spmv(cli: &Cli) -> i32 {
+    let Some(spec) = cli.get("matrix") else {
+        eprintln!("--matrix required");
+        return 2;
+    };
+    let k = cli.get_usize("k", 8).unwrap_or(8);
+    let reps = cli.get_usize("reps", 100).unwrap_or(100);
+    let a = match load_matrix(spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let x = vec![1.0; a.ncols]; // paper: x = 1 to observe representation error
+    let mut y64 = vec![0.0; a.nrows];
+    fp64::spmv(&a, &x, &mut y64);
+
+    let ops = gsem::spmv::build_operators(&a, k);
+    let mut t = TextTable::new(&[
+        "format",
+        "cpu time/op",
+        "cpu speedup",
+        "V100 model speedup",
+        "maxAbsErr",
+    ]);
+    let mut t64 = 0.0;
+    for op in &ops {
+        let mut y = vec![0.0; a.nrows];
+        let timer = Timer::start();
+        for _ in 0..reps {
+            op.apply(&x, &mut y);
+        }
+        let dt = timer.elapsed_s() / reps as f64;
+        if op.format() == ValueFormat::Fp64 {
+            t64 = dt;
+        }
+        let err = max_abs_diff(&y64, &y);
+        t.row(&[
+            op.format().label().to_string(),
+            format!("{:.3} us", dt * 1e6),
+            if t64 > 0.0 { format!("{:.2}x", t64 / dt) } else { "-".into() },
+            format!("{:.2}x", traffic::V100.speedup_vs_fp64(&a, op.format())),
+            format!("{err:.3E}"),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn parse_format(s: &str) -> Option<FormatChoice> {
+    Some(match s {
+        "fp64" => FormatChoice::Fixed(ValueFormat::Fp64),
+        "fp32" => FormatChoice::Fixed(ValueFormat::Fp32),
+        "fp16" => FormatChoice::Fixed(ValueFormat::Fp16),
+        "bf16" => FormatChoice::Fixed(ValueFormat::Bf16),
+        "gse-head" => FormatChoice::Fixed(ValueFormat::GseSem(Precision::Head)),
+        "gse-t1" => FormatChoice::Fixed(ValueFormat::GseSem(Precision::HeadTail1)),
+        "gse-full" => FormatChoice::Fixed(ValueFormat::GseSem(Precision::Full)),
+        _ => return None,
+    })
+}
+
+fn cmd_solve(cli: &Cli) -> i32 {
+    let Some(spec) = cli.get("matrix") else {
+        eprintln!("--matrix required");
+        return 2;
+    };
+    let solver = match cli.get_or("solver", "cg") {
+        "cg" => SolverKind::Cg,
+        "gmres" => SolverKind::Gmres,
+        "bicgstab" => SolverKind::Bicgstab,
+        other => {
+            eprintln!("unknown solver {other}");
+            return 2;
+        }
+    };
+    let k = cli.get_usize("k", 8).unwrap_or(8);
+    let fmt_str = cli.get_or("format", "stepped");
+    let format = if fmt_str == "stepped" {
+        let base = match solver {
+            SolverKind::Cg | SolverKind::Bicgstab => SteppedParams::cg_paper(),
+            SolverKind::Gmres => SteppedParams::gmres_paper(),
+        };
+        let scale = cli.get_f64("scale", 0.02).unwrap_or(0.02);
+        FormatChoice::Stepped { k, params: base.scaled(scale) }
+    } else {
+        match parse_format(fmt_str) {
+            Some(f) => f,
+            None => {
+                eprintln!("unknown format {fmt_str}");
+                return 2;
+            }
+        }
+    };
+    let a = match load_matrix(spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let mut req = SolveRequest::new(spec, Arc::new(a), solver, format);
+    req.k = k;
+    req.tol = cli.get_f64("tol", 1e-6).unwrap_or(1e-6);
+    let res = gsem::coordinator::jobs::dispatch(&req);
+    println!(
+        "{} [{}] {}: iters={} converged={} relres(solver)={} relres(FP64)={:.3E} time={:.3}s",
+        res.name,
+        res.format_label,
+        match solver {
+            SolverKind::Cg => "CG",
+            SolverKind::Gmres => "GMRES",
+            SolverKind::Bicgstab => "BiCGSTAB",
+        },
+        res.outcome.iters,
+        res.outcome.converged,
+        res.outcome.relres_label(),
+        res.relres_fp64,
+        res.outcome.seconds
+    );
+    if !res.outcome.switches.is_empty() {
+        println!("precision switches: {:?}", res.outcome.switches);
+    }
+    if res.outcome.converged {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_suite(cli: &Cli) -> i32 {
+    let size = match cli.get_or("size", "small") {
+        "small" => CorpusSize::Small,
+        "full" => CorpusSize::Full,
+        _ => CorpusSize::Medium,
+    };
+    let which = cli.get_or("solver", "both");
+    let workers = cli.get_usize("workers", 1).unwrap_or(1);
+    let scale = cli.get_f64("scale", 0.02).unwrap_or(0.02);
+    let pool = SolverPool::new(workers);
+    let formats: Vec<(&str, FormatChoice)> = vec![
+        ("FP64", FormatChoice::Fixed(ValueFormat::Fp64)),
+        ("FP16", FormatChoice::Fixed(ValueFormat::Fp16)),
+        ("BF16", FormatChoice::Fixed(ValueFormat::Bf16)),
+    ];
+    for (solver, set) in
+        [(SolverKind::Cg, cg_set(size)), (SolverKind::Gmres, gmres_set(size))]
+    {
+        if which != "both"
+            && !(which == "cg" && solver == SolverKind::Cg)
+            && !(which == "gmres" && solver == SolverKind::Gmres)
+        {
+            continue;
+        }
+        let stepped_base = match solver {
+            SolverKind::Gmres => SteppedParams::gmres_paper(),
+            _ => SteppedParams::cg_paper(),
+        };
+        println!(
+            "== {} suite ({} matrices) ==",
+            if solver == SolverKind::Cg { "CG" } else { "GMRES" },
+            set.len()
+        );
+        let mut t = TextTable::new(&["matrix", "format", "iters", "relres", "time(s)"]);
+        for m in &set {
+            let a = Arc::new(m.a.clone());
+            let mut reqs: Vec<SolveRequest> = formats
+                .iter()
+                .map(|(_, f)| SolveRequest::new(&m.name, Arc::clone(&a), solver, f.clone()))
+                .collect();
+            reqs.push(SolveRequest::new(
+                &m.name,
+                Arc::clone(&a),
+                solver,
+                FormatChoice::Stepped { k: 8, params: stepped_base.scaled(scale) },
+            ));
+            for r in pool.run_batch(reqs) {
+                t.row(&[
+                    r.name.clone(),
+                    r.format_label.clone(),
+                    r.outcome.iters.to_string(),
+                    r.outcome.relres_label(),
+                    format!("{:.3}", r.outcome.seconds),
+                ]);
+            }
+        }
+        t.print();
+    }
+    0
+}
+
+fn cmd_kernels(_cli: &Cli) -> i32 {
+    match gsem::runtime::Engine::load_default() {
+        Ok(None) => {
+            eprintln!("artifacts/ not built — run `make artifacts` first");
+            1
+        }
+        Err(e) => {
+            eprintln!("engine load failed: {e:#}");
+            1
+        }
+        Ok(Some(mut engine)) => {
+            println!("PJRT platform: {}", engine.platform());
+            let names = engine.kernel_names();
+            for n in &names {
+                match engine.kernel(n) {
+                    Ok(k) => println!(
+                        "  {n}: inputs {:?} dtypes {:?} outputs {}",
+                        k.entry.inputs, k.entry.dtypes, k.entry.outputs
+                    ),
+                    Err(e) => {
+                        eprintln!("  {n}: COMPILE FAILED: {e:#}");
+                        return 1;
+                    }
+                }
+            }
+            0
+        }
+    }
+}
+
+fn cmd_gen(cli: &Cli) -> i32 {
+    if cli.flag("list") {
+        let size = CorpusSize::from_env();
+        for m in spmv_corpus(size).iter().chain(&cg_set(size)).chain(&gmres_set(size)) {
+            println!(
+                "{:<28} {:>9} x {:<9} nnz {:<10} [{}]",
+                m.name,
+                m.a.nrows,
+                m.a.ncols,
+                m.a.nnz(),
+                m.class
+            );
+        }
+        return 0;
+    }
+    let (Some(spec), Some(out)) = (cli.get("matrix"), cli.get("out")) else {
+        eprintln!("--matrix and --out required (or --list)");
+        return 2;
+    };
+    match load_matrix(spec)
+        .and_then(|a| mm::write_path(&a, Path::new(out)).map_err(|e| format!("{e:#}")))
+    {
+        Ok(()) => {
+            println!("wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,414 @@
+//! Artifact manifest: `artifacts/manifest.json` describes every HLO
+//! module the python compile path exported — name, file, input shapes
+//! and dtypes — so the rust side can validate calls before dispatching
+//! to PJRT.
+//!
+//! The manifest is written by `python/compile/aot.py`; the parser here
+//! is deliberately small (flat JSON, no external crates in this offline
+//! build environment).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One exported computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir
+    pub file: String,
+    /// input shapes, row-major
+    pub inputs: Vec<Vec<usize>>,
+    /// input dtypes ("f32"/"f64"/"u16"/"u32"/"i32")
+    pub dtypes: Vec<String>,
+    /// number of outputs in the result tuple
+    pub outputs: usize,
+}
+
+/// The whole artifacts directory.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`. Returns Ok(None) if the directory or
+    /// manifest is missing (artifacts not built — callers degrade
+    /// gracefully, e.g. parity tests skip).
+    pub fn load(dir: &Path) -> Result<Option<Manifest>> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let entries = parse_manifest(&text)?;
+        Ok(Some(Manifest { dir: dir.to_path_buf(), entries }))
+    }
+
+    /// Default artifacts dir: `$GSEM_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GSEM_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            PathBuf::from("artifacts")
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+/// Minimal JSON parsing for the fixed manifest schema:
+/// `{"kernels": [{"name": .., "file": .., "inputs": [[..],..],
+///   "dtypes": [..], "outputs": n}, ...]}`
+fn parse_manifest(text: &str) -> Result<BTreeMap<String, ManifestEntry>> {
+    let mut out = BTreeMap::new();
+    let v = json::parse(text)?;
+    let kernels = v.get("kernels").context("manifest missing 'kernels'")?;
+    let arr = kernels.as_array().context("'kernels' must be an array")?;
+    for k in arr {
+        let name = k
+            .get("name")
+            .and_then(|x| x.as_str())
+            .context("kernel missing name")?
+            .to_string();
+        let file = k
+            .get("file")
+            .and_then(|x| x.as_str())
+            .context("kernel missing file")?
+            .to_string();
+        let inputs: Vec<Vec<usize>> = k
+            .get("inputs")
+            .and_then(|x| x.as_array())
+            .context("kernel missing inputs")?
+            .iter()
+            .map(|shape| {
+                shape
+                    .as_array()
+                    .context("shape must be array")
+                    .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+            })
+            .collect::<Result<_>>()?;
+        let dtypes: Vec<String> = k
+            .get("dtypes")
+            .and_then(|x| x.as_array())
+            .context("kernel missing dtypes")?
+            .iter()
+            .filter_map(|d| d.as_str().map(|s| s.to_string()))
+            .collect();
+        let outputs = k.get("outputs").and_then(|x| x.as_usize()).unwrap_or(1);
+        if dtypes.len() != inputs.len() {
+            bail!("kernel {name}: dtypes/inputs arity mismatch");
+        }
+        out.insert(name.clone(), ManifestEntry { name, file, inputs, dtypes, outputs });
+    }
+    Ok(out)
+}
+
+/// A tiny recursive-descent JSON parser (objects, arrays, strings,
+/// numbers, bools, null) — enough for the manifest, no external crates.
+pub mod json {
+    use anyhow::{bail, Result};
+    use std::collections::BTreeMap;
+
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(BTreeMap<String, Value>),
+    }
+
+    impl Value {
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            match self {
+                Value::Obj(m) => m.get(key),
+                _ => None,
+            }
+        }
+
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        pub fn as_array(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(a) => Some(a),
+                _ => None,
+            }
+        }
+
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Value::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+
+        pub fn as_usize(&self) -> Option<usize> {
+            self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Value> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing characters at {}", p.i);
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+
+    impl<'a> Parser<'a> {
+        fn ws(&mut self) {
+            while self.i < self.b.len() && (self.b[self.i] as char).is_ascii_whitespace() {
+                self.i += 1;
+            }
+        }
+
+        fn peek(&self) -> Option<u8> {
+            self.b.get(self.i).copied()
+        }
+
+        fn eat(&mut self, c: u8) -> Result<()> {
+            if self.peek() == Some(c) {
+                self.i += 1;
+                Ok(())
+            } else {
+                bail!("expected '{}' at {}", c as char, self.i)
+            }
+        }
+
+        fn value(&mut self) -> Result<Value> {
+            self.ws();
+            match self.peek() {
+                Some(b'{') => self.object(),
+                Some(b'[') => self.array(),
+                Some(b'"') => Ok(Value::Str(self.string()?)),
+                Some(b't') => self.lit("true", Value::Bool(true)),
+                Some(b'f') => self.lit("false", Value::Bool(false)),
+                Some(b'n') => self.lit("null", Value::Null),
+                Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+                other => bail!("unexpected {:?} at {}", other.map(|c| c as char), self.i),
+            }
+        }
+
+        fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
+            if self.b[self.i..].starts_with(s.as_bytes()) {
+                self.i += s.len();
+                Ok(v)
+            } else {
+                bail!("bad literal at {}", self.i)
+            }
+        }
+
+        fn object(&mut self) -> Result<Value> {
+            self.eat(b'{')?;
+            let mut m = BTreeMap::new();
+            self.ws();
+            if self.peek() == Some(b'}') {
+                self.i += 1;
+                return Ok(Value::Obj(m));
+            }
+            loop {
+                self.ws();
+                let k = self.string()?;
+                self.ws();
+                self.eat(b':')?;
+                let v = self.value()?;
+                m.insert(k, v);
+                self.ws();
+                match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                    }
+                    Some(b'}') => {
+                        self.i += 1;
+                        break;
+                    }
+                    _ => bail!("expected ',' or '}}' at {}", self.i),
+                }
+            }
+            Ok(Value::Obj(m))
+        }
+
+        fn array(&mut self) -> Result<Value> {
+            self.eat(b'[')?;
+            let mut a = Vec::new();
+            self.ws();
+            if self.peek() == Some(b']') {
+                self.i += 1;
+                return Ok(Value::Arr(a));
+            }
+            loop {
+                a.push(self.value()?);
+                self.ws();
+                match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                    }
+                    Some(b']') => {
+                        self.i += 1;
+                        break;
+                    }
+                    _ => bail!("expected ',' or ']' at {}", self.i),
+                }
+            }
+            Ok(Value::Arr(a))
+        }
+
+        fn string(&mut self) -> Result<String> {
+            self.eat(b'"')?;
+            let mut s = String::new();
+            loop {
+                match self.peek() {
+                    Some(b'"') => {
+                        self.i += 1;
+                        break;
+                    }
+                    Some(b'\\') => {
+                        self.i += 1;
+                        match self.peek() {
+                            Some(b'n') => s.push('\n'),
+                            Some(b't') => s.push('\t'),
+                            Some(b'"') => s.push('"'),
+                            Some(b'\\') => s.push('\\'),
+                            Some(b'/') => s.push('/'),
+                            Some(b'u') => {
+                                // \uXXXX
+                                let hex = std::str::from_utf8(
+                                    &self.b[self.i + 1..self.i + 5],
+                                )?;
+                                let cp = u32::from_str_radix(hex, 16)?;
+                                s.push(char::from_u32(cp).unwrap_or('?'));
+                                self.i += 4;
+                            }
+                            other => bail!("bad escape {other:?}"),
+                        }
+                        self.i += 1;
+                    }
+                    Some(c) => {
+                        // copy raw utf8 bytes
+                        let start = self.i;
+                        let len = utf8_len(c);
+                        s.push_str(std::str::from_utf8(&self.b[start..start + len])?);
+                        self.i += len;
+                    }
+                    None => bail!("unterminated string"),
+                }
+            }
+            Ok(s)
+        }
+
+        fn number(&mut self) -> Result<Value> {
+            let start = self.i;
+            if self.peek() == Some(b'-') {
+                self.i += 1;
+            }
+            while let Some(c) = self.peek() {
+                if c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-'
+                {
+                    self.i += 1;
+                } else {
+                    break;
+                }
+            }
+            let s = std::str::from_utf8(&self.b[start..self.i])?;
+            Ok(Value::Num(s.parse()?))
+        }
+    }
+
+    fn utf8_len(first: u8) -> usize {
+        match first {
+            0x00..=0x7F => 1,
+            0xC0..=0xDF => 2,
+            0xE0..=0xEF => 3,
+            _ => 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "kernels": [
+        {"name": "decode_head", "file": "decode_head.hlo.txt",
+         "inputs": [[1024], [64]], "dtypes": ["u16", "f64"], "outputs": 1},
+        {"name": "spmv_ell", "file": "spmv_ell.hlo.txt",
+         "inputs": [[256, 16], [256, 16], [64], [256]],
+         "dtypes": ["u16", "u32", "f64", "f64"], "outputs": 2}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let d = &m["decode_head"];
+        assert_eq!(d.inputs, vec![vec![1024], vec![64]]);
+        assert_eq!(d.dtypes, vec!["u16", "f64"]);
+        assert_eq!(d.outputs, 1);
+        assert_eq!(m["spmv_ell"].outputs, 2);
+    }
+
+    #[test]
+    fn missing_manifest_is_none() {
+        let m = Manifest::load(Path::new("/nonexistent/dir")).unwrap();
+        assert!(m.is_none());
+    }
+
+    #[test]
+    fn load_from_disk_roundtrip() {
+        let dir = std::env::temp_dir().join("gsem_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap().unwrap();
+        assert!(m.get("decode_head").is_some());
+        assert!(m.get("nope").is_none());
+        assert!(m.hlo_path(m.get("spmv_ell").unwrap()).ends_with("spmv_ell.hlo.txt"));
+    }
+
+    #[test]
+    fn json_parser_handles_nesting_and_escapes() {
+        let v = json::parse(r#"{"a": [1, 2.5, "x\ny", true, null], "b": {"c": -3}}"#).unwrap();
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_f64(), Some(-3.0));
+        let arr = v.get("a").unwrap().as_array().unwrap();
+        assert_eq!(arr[2].as_str(), Some("x\ny"));
+        assert_eq!(arr[0].as_usize(), Some(1));
+        assert_eq!(arr[1].as_usize(), None); // 2.5 is not usize
+    }
+
+    #[test]
+    fn json_parser_rejects_garbage() {
+        assert!(json::parse("{").is_err());
+        assert!(json::parse("[1,]").is_err());
+        assert!(json::parse("hello").is_err());
+        assert!(json::parse("{} extra").is_err());
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let bad = r#"{"kernels": [{"name":"x","file":"f","inputs":[[1]],"dtypes":["f32","f64"],"outputs":1}]}"#;
+        assert!(parse_manifest(bad).is_err());
+    }
+}

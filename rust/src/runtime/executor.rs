@@ -1,0 +1,208 @@
+//! PJRT executor: compile HLO-text artifacts once, cache the loaded
+//! executables, execute with concrete buffers from the solver hot path.
+//!
+//! The published `xla` crate exposes Literal constructors for
+//! i32/i64/u32/u64/f32/f64 — u16 head planes are widened to u32 on the
+//! boundary (the kernels mask back to 16 bits). This path exists for
+//! cross-layer parity and the end-to-end demo, not for peak traffic.
+
+use super::artifacts::{Manifest, ManifestEntry};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A host-side argument for a kernel call.
+pub enum Arg<'a> {
+    F64(&'a [f64]),
+    F32(&'a [f32]),
+    U32(&'a [u32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> Arg<'a> {
+    fn dtype(&self) -> &'static str {
+        match self {
+            Arg::F64(_) => "f64",
+            Arg::F32(_) => "f32",
+            Arg::U32(_) => "u32",
+            Arg::I32(_) => "i32",
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Arg::F64(x) => x.len(),
+            Arg::F32(x) => x.len(),
+            Arg::U32(x) => x.len(),
+            Arg::I32(x) => x.len(),
+        }
+    }
+
+    fn to_literal(&self, dims: &[usize]) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Arg::F64(x) => xla::Literal::vec1(x),
+            Arg::F32(x) => xla::Literal::vec1(x),
+            Arg::U32(x) => xla::Literal::vec1(x),
+            Arg::I32(x) => xla::Literal::vec1(x),
+        };
+        Ok(lit.reshape(&dims_i64)?)
+    }
+}
+
+/// A compiled, ready-to-run artifact.
+pub struct LoadedKernel {
+    pub entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedKernel {
+    /// Execute with validated arguments; returns the output tuple as
+    /// f64 vectors (all exported kernels produce f64 outputs).
+    pub fn run_f64(&self, args: &[Arg]) -> Result<Vec<Vec<f64>>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "kernel {}: expected {} args, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            let want: usize = self.entry.inputs[i].iter().product();
+            if a.len() != want {
+                bail!(
+                    "kernel {} arg {i}: expected {} elements ({:?}), got {}",
+                    self.entry.name,
+                    want,
+                    self.entry.inputs[i],
+                    a.len()
+                );
+            }
+            if a.dtype() != self.entry.dtypes[i] {
+                bail!(
+                    "kernel {} arg {i}: expected dtype {}, got {}",
+                    self.entry.name,
+                    self.entry.dtypes[i],
+                    a.dtype()
+                );
+            }
+            literals.push(a.to_literal(&self.entry.inputs[i])?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // jax lowers with return_tuple=True: unwrap the tuple.
+        let outs = result.to_tuple()?;
+        let mut vecs = Vec::with_capacity(outs.len());
+        for o in outs {
+            vecs.push(o.to_vec::<f64>()?);
+        }
+        Ok(vecs)
+    }
+}
+
+/// The PJRT engine: one CPU client + compiled-kernel cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, LoadedKernel>,
+}
+
+impl Engine {
+    /// Load from an artifacts dir. `Ok(None)` when artifacts are absent
+    /// (not built yet) so callers can skip gracefully.
+    pub fn load(dir: &Path) -> Result<Option<Engine>> {
+        let Some(manifest) = Manifest::load(dir)? else {
+            return Ok(None);
+        };
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Some(Engine { manifest, client, cache: HashMap::new() }))
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> Result<Option<Engine>> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return a kernel by manifest name.
+    pub fn kernel(&mut self, name: &str) -> Result<&LoadedKernel> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .get(name)
+                .with_context(|| format!("kernel '{name}' not in manifest"))?
+                .clone();
+            let path = self.manifest.hlo_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of '{name}'"))?;
+            self.cache.insert(name.to_string(), LoadedKernel { entry, exe });
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Names of every artifact available.
+    pub fn kernel_names(&self) -> Vec<String> {
+        self.manifest.entries.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests require `make artifacts` to have run; they skip (and
+    /// say so) otherwise, so `cargo test` stays green pre-build.
+    fn engine() -> Option<Engine> {
+        match Engine::load(&Manifest::default_dir()) {
+            Ok(e) => e,
+            Err(err) => panic!("artifact load failed: {err:#}"),
+        }
+    }
+
+    #[test]
+    fn arg_metadata() {
+        let xs = [1.0f64, 2.0];
+        let a = Arg::F64(&xs);
+        assert_eq!(a.dtype(), "f64");
+        assert_eq!(a.len(), 2);
+        let u = [1u32];
+        assert_eq!(Arg::U32(&u).dtype(), "u32");
+    }
+
+    #[test]
+    fn engine_loads_and_lists_kernels() {
+        let Some(mut e) = engine() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        assert_eq!(e.platform(), "cpu");
+        let names = e.kernel_names();
+        assert!(!names.is_empty());
+        // every manifest entry must compile
+        for n in names {
+            e.kernel(&n).unwrap_or_else(|err| panic!("{n}: {err:#}"));
+        }
+    }
+
+    #[test]
+    fn run_rejects_bad_arity_and_shapes() {
+        let Some(mut e) = engine() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let names = e.kernel_names();
+        let k = e.kernel(&names[0]).unwrap();
+        assert!(k.run_f64(&[]).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and runs
+//! them on the XLA CPU client from the rust hot path. Python is never on
+//! the request path: after `make artifacts` the binary is self-contained.
+//!
+//! Interchange is HLO *text*, not serialized protos — jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{Manifest, ManifestEntry};
+pub use executor::{Engine, LoadedKernel};

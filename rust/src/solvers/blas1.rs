@@ -1,0 +1,88 @@
+//! Dense vector kernels (the cuBLAS calls of the paper, §IV-A: "all
+//! vector operations in the iterative algorithms are performed by
+//! calling APIs in the NVIDIA cuBLAS library" — always FP64).
+
+/// dot(x, y)
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        s += a * b;
+    }
+    s
+}
+
+/// ‖x‖₂
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// y ← a·x + y
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// x ← a·x
+#[inline]
+pub fn scal(a: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// y ← x
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// y ← x + b·y  (the CG "p = r + beta p" update)
+#[inline]
+pub fn xpby(x: &[f64], b: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = xi + b * *yi;
+    }
+}
+
+/// Any non-finite component?
+#[inline]
+pub fn has_nonfinite(x: &[f64]) -> bool {
+    x.iter().any(|v| !v.is_finite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(nrm2(&[3.0, 4.0]), 5.0);
+        assert_eq!(nrm2(&[]), 0.0);
+    }
+
+    #[test]
+    fn axpy_scal_xpby() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+        scal(0.5, &mut y);
+        assert_eq!(y, vec![3.5, 4.5]);
+        xpby(&[1.0, 1.0], 2.0, &mut y);
+        assert_eq!(y, vec![8.0, 10.0]);
+    }
+
+    #[test]
+    fn nonfinite_detection() {
+        assert!(!has_nonfinite(&[1.0, -2.0]));
+        assert!(has_nonfinite(&[1.0, f64::NAN]));
+        assert!(has_nonfinite(&[f64::INFINITY]));
+    }
+}

@@ -1,0 +1,127 @@
+//! Iterative solvers and the paper's stepped mixed-precision controller
+//! (§III-D).
+//!
+//! * [`blas1`] — the dense vector kernels (dot/axpy/norm); the paper
+//!   calls cuBLAS for these, always in FP64 — so do we.
+//! * [`cg`] — conjugate gradients (Table IV / Fig. 9 solver).
+//! * [`gmres`] — restarted GMRES with MGS-Arnoldi + Givens rotations
+//!   (Table III / Fig. 8 solver).
+//! * [`bicgstab`] — BiCGSTAB (related-work extension [21]).
+//! * [`stepped`] — the residual-monitoring precision controller
+//!   (RSD / nDec / relDec, Conditions 1–3) and the switchable operator
+//!   it drives (Algorithm 3).
+//! * [`precond`] — Jacobi preconditioning (extension).
+//! * [`ir`] — mixed-precision iterative refinement baseline (related
+//!   work [11]).
+
+pub mod blas1;
+pub mod cg;
+pub mod gmres;
+pub mod bicgstab;
+pub mod stepped;
+pub mod precond;
+pub mod ir;
+
+pub use cg::{cg_solve, CgOpts};
+pub use gmres::{gmres_solve, GmresOpts};
+pub use stepped::{PrecisionController, SteppedParams, SwitchableOp};
+
+use crate::spmv::SpmvOp;
+
+/// What the per-iteration monitor tells the solver. The stepped
+/// controller returns [`MonitorCmd::Restart`] when it escalates the
+/// operator's precision: the Krylov recurrences were built with the old
+/// operator and must be re-anchored (CG recomputes r/p; GMRES ends the
+/// inner cycle; BiCGSTAB re-initializes its shadow residual) — Alg. 3's
+/// tag switch applied soundly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MonitorCmd {
+    #[default]
+    Continue,
+    /// The operator changed: restart the solver's recurrence at the
+    /// current iterate.
+    Restart,
+}
+
+/// Shared outcome record for every solver run — exactly the data the
+/// paper's Tables III/IV and Figs. 7/8/9 report.
+#[derive(Clone, Debug)]
+pub struct SolveOutcome {
+    /// converged under the solver's internal criterion
+    pub converged: bool,
+    /// total iterations executed (inner iterations for GMRES)
+    pub iters: usize,
+    /// final *true* relative residual ‖b − Ax‖/‖b‖, computed with the
+    /// operator handed to the solver
+    pub relres: f64,
+    /// per-iteration (estimated) residual norms
+    pub history: Vec<f64>,
+    /// iterations at which the stepped controller escalated precision,
+    /// with the new tag (Alg. 3's `tag`)
+    pub switches: Vec<(usize, u8)>,
+    /// wall time of the solve
+    pub seconds: f64,
+    /// solution vector
+    pub x: Vec<f64>,
+    /// a non-finite value appeared (the paper's "/" rows: FP16 overflow)
+    pub broke_down: bool,
+}
+
+impl SolveOutcome {
+    /// The paper prints "/" when the run overflowed.
+    pub fn relres_label(&self) -> String {
+        if self.broke_down {
+            "/".to_string()
+        } else {
+            format!("{:.1E}", self.relres)
+        }
+    }
+}
+
+/// True relative residual ‖b − A·x‖₂ / ‖b‖₂ using the given operator.
+pub fn true_relres(op: &dyn SpmvOp, x: &[f64], b: &[f64]) -> f64 {
+    let mut ax = vec![0.0; op.nrows()];
+    op.apply(x, &mut ax);
+    let mut num = 0.0;
+    for i in 0..b.len() {
+        let d = b[i] - ax[i];
+        num += d * d;
+    }
+    let den: f64 = b.iter().map(|v| v * v).sum();
+    if den == 0.0 {
+        num.sqrt()
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::csr::Csr;
+    use crate::spmv::fp64::Fp64Csr;
+
+    #[test]
+    fn true_relres_zero_for_exact_solution() {
+        let op = Fp64Csr::new(Csr::identity(4));
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(true_relres(&op, &b, &b), 0.0);
+        let x0 = vec![0.0; 4];
+        assert!((true_relres(&op, &x0, &b) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn relres_label_overflow() {
+        let o = SolveOutcome {
+            converged: false,
+            iters: 1,
+            relres: f64::NAN,
+            history: vec![],
+            switches: vec![],
+            seconds: 0.0,
+            x: vec![],
+            broke_down: true,
+        };
+        assert_eq!(o.relres_label(), "/");
+    }
+}

@@ -1,0 +1,443 @@
+//! The stepped mixed-precision controller (§III-D, Algorithm 3).
+//!
+//! The solver starts with the head-only SpMV (tag 1), monitors the
+//! residual history, and escalates to head+tail1 (tag 2) then full
+//! (tag 3) when progress stalls. Every `m` iterations — after an initial
+//! window of `l` low-precision iterations — three metrics over the last
+//! `t` residuals decide:
+//!
+//! * `RSD`   — relative standard deviation (Eq. 3)
+//! * `nDec`  — number of decreases (Eqs. 4–5)
+//! * `relDec`— relative decrease over the window (Eq. 6)
+//!
+//! **Condition 1**: `RSD > RSD_limit && nDec < nDec_limit` — residuals
+//!   fluctuate without progress.
+//! **Condition 2**: `nDec ≥ nDec_limit && relDec < relDec_limit` —
+//!   steady but slow decrease.
+//! **Condition 3**: `nDec == 0` — no decrease at all.
+//!
+//! Any of the three triggers one escalation step.
+
+use crate::formats::Precision;
+use crate::spmv::gse::GseCsr;
+use crate::spmv::SpmvOp;
+use crate::formats::ValueFormat;
+use crate::util::stats;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Controller parameters (paper §IV-D1 values via [`SteppedParams::gmres_paper`]
+/// / [`SteppedParams::cg_paper`]; [`SteppedParams::scaled`] shrinks the
+/// schedule proportionally for the scaled-down test sets).
+#[derive(Clone, Copy, Debug)]
+pub struct SteppedParams {
+    /// initial low-precision iterations before any check
+    pub l: usize,
+    /// residual-history window length
+    pub t: usize,
+    /// check period after the first `l` iterations
+    pub m: usize,
+    pub rsd_limit: f64,
+    /// threshold on nDec (the paper's conditions use t/2; its §IV-D1
+    /// calibration sets an explicit value — both are supported)
+    pub ndec_limit: usize,
+    pub reldec_limit: f64,
+    /// safety valve beyond the paper's three conditions: escalate
+    /// immediately when the residual exceeds `divergence_factor ×` the
+    /// best residual seen — catches the indefinite-head case (zeroed
+    /// diagonals) where CG blows up long before a window fills.
+    pub divergence_factor: f64,
+}
+
+impl SteppedParams {
+    /// Paper values for GMRES: l=9000, t=300, m=1500,
+    /// RSD_limit=0.03, nDec_limit=80, relDec_limit=0.08.
+    pub fn gmres_paper() -> Self {
+        Self {
+            l: 9000,
+            t: 300,
+            m: 1500,
+            rsd_limit: 0.03,
+            ndec_limit: 80,
+            reldec_limit: 0.08,
+            divergence_factor: 100.0,
+        }
+    }
+
+    /// Paper values for CG: l=3000, t=250, m=500,
+    /// RSD_limit=0.50, nDec_limit=130, relDec_limit=0.45.
+    pub fn cg_paper() -> Self {
+        Self {
+            l: 3000,
+            t: 250,
+            m: 500,
+            rsd_limit: 0.50,
+            ndec_limit: 130,
+            reldec_limit: 0.45,
+            divergence_factor: 100.0,
+        }
+    }
+
+    /// Shrink the iteration schedule by `factor` (thresholds unchanged,
+    /// window floors keep the statistics meaningful). Used because the
+    /// scaled-down matrices converge in far fewer iterations than the
+    /// paper's 5000/15000 budgets.
+    pub fn scaled(self, factor: f64) -> Self {
+        let sc = |v: usize, lo: usize| (((v as f64) * factor).round() as usize).max(lo);
+        Self {
+            l: sc(self.l, 10),
+            t: sc(self.t, 8),
+            m: sc(self.m, 5),
+            ndec_limit: sc(self.ndec_limit, 2),
+            ..self
+        }
+    }
+}
+
+/// Which of the paper's three conditions fired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchReason {
+    Fluctuating,  // Condition 1
+    SlowDecrease, // Condition 2
+    NoDecrease,   // Condition 3
+    /// Safety valve (ours): residual exploded past divergence_factor ×
+    /// the best seen — the low-precision operator is unusable (e.g.
+    /// indefinite because small diagonals truncated to zero).
+    Diverged,
+}
+
+/// Metrics of Eqs. 3–6 over a residual window.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowMetrics {
+    pub rsd: f64,
+    pub ndec: usize,
+    pub reldec: f64,
+}
+
+/// Compute RSD / nDec / relDec over the last `t` residuals
+/// (`window.len() == t`, oldest first).
+pub fn window_metrics(window: &[f64]) -> WindowMetrics {
+    let rsd = stats::rsd(window);
+    let mut ndec = 0usize;
+    for w in window.windows(2) {
+        if w[0] > w[1] {
+            ndec += 1;
+        }
+    }
+    let first = window.first().copied().unwrap_or(0.0);
+    let last = window.last().copied().unwrap_or(0.0);
+    let reldec = if first != 0.0 { (first - last) / first } else { 0.0 };
+    WindowMetrics { rsd, ndec, reldec }
+}
+
+/// The residual-monitoring precision controller.
+#[derive(Clone, Debug)]
+pub struct PrecisionController {
+    pub params: SteppedParams,
+    pub tag: Precision,
+    window: Vec<f64>,
+    last_check: usize,
+    best_resid: f64,
+    /// (iteration, new tag) escalation log
+    pub switches: Vec<(usize, u8)>,
+    /// reasons matching `switches`
+    pub reasons: Vec<SwitchReason>,
+}
+
+impl PrecisionController {
+    pub fn new(params: SteppedParams) -> Self {
+        Self {
+            params,
+            tag: Precision::Head,
+            window: Vec::with_capacity(params.t),
+            last_check: 0,
+            best_resid: f64::INFINITY,
+            switches: Vec::new(),
+            reasons: Vec::new(),
+        }
+    }
+
+    /// Evaluate conditions 1–3 on a full window.
+    pub fn check_conditions(&self, m: &WindowMetrics) -> Option<SwitchReason> {
+        let p = &self.params;
+        if m.ndec == 0 {
+            return Some(SwitchReason::NoDecrease); // Condition 3
+        }
+        if m.rsd > p.rsd_limit && m.ndec < p.ndec_limit {
+            return Some(SwitchReason::Fluctuating); // Condition 1
+        }
+        if m.ndec >= p.ndec_limit && m.reldec < p.reldec_limit {
+            return Some(SwitchReason::SlowDecrease); // Condition 2
+        }
+        None
+    }
+
+    /// Feed one residual observation; returns the new precision if the
+    /// controller escalated at this iteration.
+    pub fn observe(&mut self, iter: usize, resid: f64) -> Option<Precision> {
+        if self.window.len() == self.params.t {
+            self.window.remove(0);
+        }
+        self.window.push(resid);
+        if self.tag == Precision::Full {
+            return None;
+        }
+        // divergence safety valve fires regardless of the l/m schedule
+        if resid.is_finite() && self.best_resid.is_finite() {
+            if resid > self.params.divergence_factor * self.best_resid {
+                self.best_resid = self.best_resid.min(resid);
+                self.tag = self.tag.escalate();
+                self.switches.push((iter, self.tag.tag()));
+                self.reasons.push(SwitchReason::Diverged);
+                self.window.clear();
+                self.last_check = iter;
+                return Some(self.tag);
+            }
+        }
+        self.best_resid = self.best_resid.min(resid);
+        if iter < self.params.l.max(self.params.t) {
+            return None;
+        }
+        if iter - self.last_check < self.params.m {
+            return None;
+        }
+        if self.window.len() < self.params.t {
+            return None;
+        }
+        self.last_check = iter;
+        let metrics = window_metrics(&self.window);
+        if let Some(reason) = self.check_conditions(&metrics) {
+            self.tag = self.tag.escalate();
+            self.switches.push((iter, self.tag.tag()));
+            self.reasons.push(reason);
+            // restart the window so the next decision sees post-switch data
+            self.window.clear();
+            return Some(self.tag);
+        }
+        None
+    }
+}
+
+/// An [`SpmvOp`] whose precision level can be raised mid-solve — the
+/// `A_1/A_2/A_3` of Algorithm 3 over a *single* GSE-SEM storage.
+pub struct SwitchableOp {
+    pub m: GseCsr,
+    level: AtomicU8,
+}
+
+impl SwitchableOp {
+    pub fn new(m: GseCsr) -> Self {
+        Self { m, level: AtomicU8::new(1) }
+    }
+
+    pub fn level(&self) -> Precision {
+        match self.level.load(Ordering::Relaxed) {
+            1 => Precision::Head,
+            2 => Precision::HeadTail1,
+            _ => Precision::Full,
+        }
+    }
+
+    pub fn set_level(&self, p: Precision) {
+        self.level.store(p.tag(), Ordering::Relaxed);
+    }
+}
+
+impl SpmvOp for SwitchableOp {
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.m.spmv(x, y, self.level());
+    }
+
+    fn nrows(&self) -> usize {
+        self.m.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.m.ncols
+    }
+
+    fn format(&self) -> ValueFormat {
+        ValueFormat::GseSem(self.level())
+    }
+
+    fn matrix_bytes(&self) -> usize {
+        self.m.bytes_at(self.level())
+    }
+}
+
+/// Run a solver with the stepped controller attached (Algorithm 3's
+/// outer wiring). The `solve` closure receives the switchable operator
+/// and the monitor callback to install; shared by the CG and GMRES
+/// stepped entry points.
+pub fn run_stepped<F>(
+    m: GseCsr,
+    params: SteppedParams,
+    solve: F,
+) -> (crate::solvers::SolveOutcome, Vec<SwitchReason>, Vec<Precision>)
+where
+    F: FnOnce(
+        &SwitchableOp,
+        &mut dyn FnMut(usize, f64) -> crate::solvers::MonitorCmd,
+    ) -> crate::solvers::SolveOutcome,
+{
+    let op = SwitchableOp::new(m);
+    let mut ctrl = PrecisionController::new(params);
+    let mut levels_seen = vec![Precision::Head];
+    let mut out = {
+        let opref = &op;
+        let ctrlref = &mut ctrl;
+        let levels = &mut levels_seen;
+        let mut monitor = move |iter: usize, resid: f64| {
+            if let Some(new_level) = ctrlref.observe(iter, resid) {
+                opref.set_level(new_level);
+                levels.push(new_level);
+                // the Krylov recurrence was built with the old operator
+                crate::solvers::MonitorCmd::Restart
+            } else {
+                crate::solvers::MonitorCmd::Continue
+            }
+        };
+        solve(&op, &mut monitor)
+    };
+    out.switches = ctrl.switches.clone();
+    (out, ctrl.reasons, levels_seen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson::poisson2d;
+
+    #[test]
+    fn metrics_match_paper_equations() {
+        // strictly decreasing window: nDec = t-1, relDec = (r0-rN)/r0
+        let w: Vec<f64> = (0..10).map(|i| 10.0 - i as f64).collect();
+        let m = window_metrics(&w);
+        assert_eq!(m.ndec, 9);
+        assert!((m.reldec - 0.9).abs() < 1e-12);
+        // constant window: nDec = 0, RSD = 0
+        let m = window_metrics(&[5.0; 10]);
+        assert_eq!(m.ndec, 0);
+        assert_eq!(m.rsd, 0.0);
+        assert_eq!(m.reldec, 0.0);
+    }
+
+    #[test]
+    fn condition3_fires_on_stagnation() {
+        let p = SteppedParams { l: 5, t: 4, m: 2, rsd_limit: 0.5, ndec_limit: 2, reldec_limit: 0.1, divergence_factor: 100.0 };
+        let mut c = PrecisionController::new(p);
+        let mut switched_at = None;
+        for i in 1..50 {
+            if let Some(lvl) = c.observe(i, 1.0) {
+                switched_at = Some((i, lvl));
+                break;
+            }
+        }
+        let (i, lvl) = switched_at.expect("must escalate on constant residuals");
+        assert_eq!(lvl, Precision::HeadTail1);
+        assert!(i >= 5);
+        assert_eq!(c.reasons[0], SwitchReason::NoDecrease);
+    }
+
+    #[test]
+    fn no_switch_while_converging_fast() {
+        let p = SteppedParams { l: 5, t: 4, m: 2, rsd_limit: 10.0, ndec_limit: 2, reldec_limit: 0.01, divergence_factor: 100.0 };
+        let mut c = PrecisionController::new(p);
+        for i in 1..100 {
+            // residual halves every iteration: healthy convergence
+            assert!(c.observe(i, 2f64.powi(-(i as i32))).is_none(), "switched at {i}");
+        }
+        assert_eq!(c.tag, Precision::Head);
+    }
+
+    #[test]
+    fn escalates_through_full_ladder_and_stops() {
+        let p = SteppedParams { l: 2, t: 3, m: 1, rsd_limit: 0.5, ndec_limit: 2, reldec_limit: 0.1, divergence_factor: 100.0 };
+        let mut c = PrecisionController::new(p);
+        let mut seen = Vec::new();
+        for i in 1..200 {
+            if let Some(lvl) = c.observe(i, 1.0) {
+                seen.push(lvl);
+            }
+        }
+        assert_eq!(seen, vec![Precision::HeadTail1, Precision::Full]);
+        assert_eq!(c.switches.len(), 2);
+        assert_eq!(c.switches[0].1, 2);
+        assert_eq!(c.switches[1].1, 3);
+    }
+
+    #[test]
+    fn respects_initial_l_window() {
+        let p = SteppedParams { l: 50, t: 4, m: 1, rsd_limit: 0.5, ndec_limit: 2, reldec_limit: 0.1, divergence_factor: 100.0 };
+        let mut c = PrecisionController::new(p);
+        for i in 1..50 {
+            assert!(c.observe(i, 1.0).is_none());
+        }
+    }
+
+    #[test]
+    fn condition1_fluctuation() {
+        let p =
+            SteppedParams { l: 4, t: 8, m: 1, rsd_limit: 0.05, ndec_limit: 6, reldec_limit: 1e-9, divergence_factor: 100.0 };
+        let mut c = PrecisionController::new(p);
+        // oscillating residuals: half the steps decrease -> ndec ~ t/2 < 6,
+        // rsd large
+        let mut fired = None;
+        for i in 1..100 {
+            let r = if i % 2 == 0 { 1.0 } else { 2.0 };
+            if let Some(_) = c.observe(i, r) {
+                fired = Some(i);
+                break;
+            }
+        }
+        assert!(fired.is_some());
+        assert_eq!(c.reasons[0], SwitchReason::Fluctuating);
+    }
+
+    #[test]
+    fn condition2_slow_decrease() {
+        let p = SteppedParams {
+            l: 4,
+            t: 8,
+            m: 1,
+            rsd_limit: 1e9, // condition 1 can't fire
+            ndec_limit: 4,
+            reldec_limit: 0.5, // require 50% decrease per window
+            divergence_factor: 100.0,
+        };
+        let mut c = PrecisionController::new(p);
+        let mut fired = None;
+        for i in 1..100 {
+            // strictly decreasing but only 0.1% per step
+            let r = 1.0 * (1.0 - 0.001f64).powi(i as i32);
+            if c.observe(i, r).is_some() {
+                fired = Some(i);
+                break;
+            }
+        }
+        assert!(fired.is_some());
+        assert_eq!(c.reasons[0], SwitchReason::SlowDecrease);
+    }
+
+    #[test]
+    fn switchable_op_levels() {
+        let a = poisson2d(6, 6);
+        let g = crate::spmv::GseCsr::from_csr(&a, 8);
+        let op = SwitchableOp::new(g);
+        assert_eq!(op.level(), Precision::Head);
+        assert_eq!(op.format(), ValueFormat::GseSem(Precision::Head));
+        let b_head = op.matrix_bytes();
+        op.set_level(Precision::Full);
+        assert_eq!(op.level(), Precision::Full);
+        assert!(op.matrix_bytes() > b_head);
+    }
+
+    #[test]
+    fn scaled_params_preserve_floors() {
+        let p = SteppedParams::cg_paper().scaled(0.001);
+        assert!(p.l >= 10 && p.t >= 8 && p.m >= 5 && p.ndec_limit >= 2);
+        let q = SteppedParams::gmres_paper().scaled(0.1);
+        assert_eq!(q.l, 900);
+        assert_eq!(q.t, 30);
+        assert_eq!(q.m, 150);
+    }
+}

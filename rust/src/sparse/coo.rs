@@ -1,0 +1,173 @@
+//! Coordinate-format sparse matrix builder.
+
+use super::csr::Csr;
+
+/// COO triplet accumulator; duplicates are summed on conversion.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        assert!(nrows < u32::MAX as usize && ncols < u32::MAX as usize);
+        Self { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        let mut c = Self::new(nrows, ncols);
+        c.rows.reserve(cap);
+        c.cols.reserve(cap);
+        c.vals.reserve(cap);
+        c
+    }
+
+    /// Add one entry. Zero values are kept (callers may rely on explicit
+    /// zeros); use [`Coo::prune_zeros`] to drop them.
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.nrows && c < self.ncols, "entry out of bounds");
+        self.rows.push(r as u32);
+        self.cols.push(c as u32);
+        self.vals.push(v);
+    }
+
+    /// Add both (r,c,v) and (c,r,v) (symmetric off-diagonal expansion).
+    #[inline]
+    pub fn push_sym(&mut self, r: usize, c: usize, v: f64) {
+        self.push(r, c, v);
+        if r != c {
+            self.push(c, r, v);
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn prune_zeros(&mut self) {
+        let mut keep = 0usize;
+        for i in 0..self.vals.len() {
+            if self.vals[i] != 0.0 {
+                self.rows[keep] = self.rows[i];
+                self.cols[keep] = self.cols[i];
+                self.vals[keep] = self.vals[i];
+                keep += 1;
+            }
+        }
+        self.rows.truncate(keep);
+        self.cols.truncate(keep);
+        self.vals.truncate(keep);
+    }
+
+    /// Convert to CSR, summing duplicate entries, columns sorted per row.
+    pub fn to_csr(&self) -> Csr {
+        let nnz = self.nnz();
+        // Counting sort by row.
+        let mut rowptr = vec![0usize; self.nrows + 1];
+        for &r in &self.rows {
+            rowptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let mut colidx = vec![0u32; nnz];
+        let mut vals = vec![0f64; nnz];
+        let mut next = rowptr.clone();
+        for i in 0..nnz {
+            let r = self.rows[i] as usize;
+            let slot = next[r];
+            next[r] += 1;
+            colidx[slot] = self.cols[i];
+            vals[slot] = self.vals[i];
+        }
+        // Sort each row by column and merge duplicates.
+        let mut out_colidx = Vec::with_capacity(nnz);
+        let mut out_vals = Vec::with_capacity(nnz);
+        let mut out_rowptr = vec![0usize; self.nrows + 1];
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for r in 0..self.nrows {
+            scratch.clear();
+            scratch.extend(
+                colidx[rowptr[r]..rowptr[r + 1]]
+                    .iter()
+                    .copied()
+                    .zip(vals[rowptr[r]..rowptr[r + 1]].iter().copied()),
+            );
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (c, mut v) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                out_colidx.push(c);
+                out_vals.push(v);
+                i = j;
+            }
+            out_rowptr[r + 1] = out_colidx.len();
+        }
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            rowptr: out_rowptr,
+            colidx: out_colidx,
+            vals: out_vals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csr_sorts_and_sums_duplicates() {
+        let mut c = Coo::new(2, 3);
+        c.push(1, 2, 5.0);
+        c.push(0, 1, 1.0);
+        c.push(0, 0, 2.0);
+        c.push(0, 1, 3.0); // duplicate -> summed
+        let a = c.to_csr();
+        assert_eq!(a.rowptr, vec![0, 2, 3]);
+        assert_eq!(a.colidx, vec![0, 1, 2]);
+        assert_eq!(a.vals, vec![2.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn prune_zeros_removes_only_zeros() {
+        let mut c = Coo::new(1, 4);
+        c.push(0, 0, 1.0);
+        c.push(0, 1, 0.0);
+        c.push(0, 2, -2.0);
+        c.prune_zeros();
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.vals, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn push_sym_mirrors_offdiagonal() {
+        let mut c = Coo::new(3, 3);
+        c.push_sym(0, 1, 2.0);
+        c.push_sym(2, 2, 1.0);
+        assert_eq!(c.nnz(), 3);
+        let a = c.to_csr();
+        assert_eq!(a.get(0, 1), 2.0);
+        assert_eq!(a.get(1, 0), 2.0);
+        assert_eq!(a.get(2, 2), 1.0);
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        let mut c = Coo::new(4, 4);
+        c.push(3, 0, 1.0);
+        let a = c.to_csr();
+        assert_eq!(a.rowptr, vec![0, 0, 0, 0, 1]);
+    }
+}

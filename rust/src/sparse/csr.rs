@@ -1,0 +1,295 @@
+//! Compressed Sparse Row matrices — the storage format of every SpMV in
+//! the paper (§III-C1): `rowptr`, `colidx` (u32, whose spare top bits the
+//! GSE-SEM format borrows for exponent indexes), and `vals`.
+
+/// CSR sparse matrix over f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// `rowptr[i]..rowptr[i+1]` indexes row i's entries.
+    pub rowptr: Vec<usize>,
+    /// Column of each non-zero (u32, like CUSP / the paper).
+    pub colidx: Vec<u32>,
+    /// Value of each non-zero.
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// An empty matrix with no entries.
+    pub fn empty(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, rowptr: vec![0; nrows + 1], colidx: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        Self {
+            nrows: n,
+            ncols: n,
+            rowptr: (0..=n).collect(),
+            colidx: (0..n as u32).collect(),
+            vals: vec![1.0; n],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Column indexes and values of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.rowptr[i], self.rowptr[i + 1]);
+        (&self.colidx[a..b], &self.vals[a..b])
+    }
+
+    /// Entry (r, c), 0 if not stored. O(log nnz(row)).
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (cols, vals) = self.row(r);
+        match cols.binary_search(&(c as u32)) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Structural + numerical validation; used by generators and IO.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowptr.len() != self.nrows + 1 {
+            return Err("rowptr length".into());
+        }
+        if *self.rowptr.first().unwrap_or(&0) != 0 || *self.rowptr.last().unwrap() != self.nnz() {
+            return Err("rowptr endpoints".into());
+        }
+        if self.colidx.len() != self.vals.len() {
+            return Err("colidx/vals length mismatch".into());
+        }
+        for i in 0..self.nrows {
+            if self.rowptr[i] > self.rowptr[i + 1] {
+                return Err(format!("rowptr not monotone at {i}"));
+            }
+            let (cols, _) = self.row(i);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {i} columns not strictly sorted"));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c as usize >= self.ncols {
+                    return Err(format!("row {i} column out of range"));
+                }
+            }
+        }
+        if self.vals.iter().any(|v| !v.is_finite()) {
+            return Err("non-finite value".into());
+        }
+        Ok(())
+    }
+
+    /// Transpose (also converts CSR<->CSC views).
+    pub fn transpose(&self) -> Csr {
+        let nnz = self.nnz();
+        let mut rowptr = vec![0usize; self.ncols + 1];
+        for &c in &self.colidx {
+            rowptr[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let mut colidx = vec![0u32; nnz];
+        let mut vals = vec![0f64; nnz];
+        let mut next = rowptr.clone();
+        for r in 0..self.nrows {
+            let (cols, vs) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vs) {
+                let slot = next[c as usize];
+                next[c as usize] += 1;
+                colidx[slot] = r as u32;
+                vals[slot] = v;
+            }
+        }
+        Csr { nrows: self.ncols, ncols: self.nrows, rowptr, colidx, vals }
+    }
+
+    /// Is the matrix numerically symmetric (within `tol` relative)?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let t = self.transpose();
+        if t.rowptr != self.rowptr || t.colidx != self.colidx {
+            return false;
+        }
+        self.vals
+            .iter()
+            .zip(&t.vals)
+            .all(|(&a, &b)| (a - b).abs() <= tol * a.abs().max(b.abs()).max(1e-300))
+    }
+
+    /// Main diagonal as a dense vector.
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.nrows.min(self.ncols)).map(|i| self.get(i, i)).collect()
+    }
+
+    /// Strict diagonal dominance factor: min_i |a_ii| / sum_{j!=i}|a_ij|
+    /// (+inf for rows with empty off-diagonal). > 1 implies dominance.
+    pub fn diag_dominance(&self) -> f64 {
+        let mut worst = f64::INFINITY;
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let mut diag = 0.0;
+            let mut off = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c as usize == i {
+                    diag = v.abs();
+                } else {
+                    off += v.abs();
+                }
+            }
+            let f = if off == 0.0 { f64::INFINITY } else { diag / off };
+            worst = worst.min(f);
+        }
+        worst
+    }
+
+    /// Scale rows and columns symmetrically by `d^-1/2` (Jacobi scaling).
+    pub fn sym_diag_scale(&self) -> (Csr, Vec<f64>) {
+        let d: Vec<f64> =
+            self.diag().iter().map(|&x| if x > 0.0 { x.sqrt().recip() } else { 1.0 }).collect();
+        let mut out = self.clone();
+        for r in 0..self.nrows {
+            let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+            for k in a..b {
+                let c = self.colidx[k] as usize;
+                out.vals[k] = self.vals[k] * d[r] * d[c];
+            }
+        }
+        (out, d)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.vals.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Dense representation (tests only; guards against large n).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        assert!(self.nrows * self.ncols <= 1 << 20, "to_dense is for small matrices");
+        let mut m = vec![vec![0.0; self.ncols]; self.nrows];
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                m[r][c as usize] = v;
+            }
+        }
+        m
+    }
+
+    /// Replace values (same sparsity) — used to build perturbed variants.
+    pub fn with_values(&self, vals: Vec<f64>) -> Csr {
+        assert_eq!(vals.len(), self.nnz());
+        Csr { vals, ..self.clone() }
+    }
+
+    /// Average non-zeros per row.
+    pub fn avg_row_nnz(&self) -> f64 {
+        if self.nrows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.nrows as f64
+        }
+    }
+
+    /// Maximum non-zeros in any row (ELL width).
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.nrows).map(|i| self.rowptr[i + 1] - self.rowptr[i]).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn sample() -> Csr {
+        // [ 2 1 0 ]
+        // [ 0 3 0 ]
+        // [ 4 0 5 ]
+        let mut c = Coo::new(3, 3);
+        for (r, cc, v) in [(0, 0, 2.0), (0, 1, 1.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)] {
+            c.push(r, cc, v);
+        }
+        c.to_csr()
+    }
+
+    #[test]
+    fn validate_ok_and_get() {
+        let a = sample();
+        a.validate().unwrap();
+        assert_eq!(a.get(0, 1), 1.0);
+        assert_eq!(a.get(1, 0), 0.0);
+        assert_eq!(a.nnz(), 5);
+    }
+
+    #[test]
+    fn validate_catches_bad_columns() {
+        let mut a = sample();
+        a.colidx[0] = 7; // out of range + unsorted
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = sample();
+        let t = a.transpose();
+        assert_eq!(t.get(1, 0), 1.0);
+        assert_eq!(t.get(0, 2), 4.0);
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn symmetry_checks() {
+        let mut c = Coo::new(2, 2);
+        c.push_sym(0, 1, 3.0);
+        c.push(0, 0, 1.0);
+        c.push(1, 1, 1.0);
+        let a = c.to_csr();
+        assert!(a.is_symmetric(0.0));
+        assert!(!sample().is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn diag_and_dominance() {
+        let a = sample();
+        assert_eq!(a.diag(), vec![2.0, 3.0, 5.0]);
+        // row0: 2/1=2, row1: inf, row2: 5/4
+        assert_eq!(a.diag_dominance(), 1.25);
+    }
+
+    #[test]
+    fn identity_properties() {
+        let i = Csr::identity(4);
+        i.validate().unwrap();
+        assert_eq!(i.nnz(), 4);
+        assert!(i.is_symmetric(0.0));
+        assert_eq!(i.diag(), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn sym_diag_scale_unitizes_diagonal() {
+        let mut c = Coo::new(2, 2);
+        c.push(0, 0, 4.0);
+        c.push(1, 1, 9.0);
+        c.push_sym(0, 1, 1.0);
+        let (s, _) = c.to_csr().sym_diag_scale();
+        assert!((s.get(0, 0) - 1.0).abs() < 1e-15);
+        assert!((s.get(1, 1) - 1.0).abs() < 1e-15);
+        assert!((s.get(0, 1) - 1.0 / 6.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ell_width_and_avg() {
+        let a = sample();
+        assert_eq!(a.max_row_nnz(), 2);
+        assert!((a.avg_row_nnz() - 5.0 / 3.0).abs() < 1e-15);
+    }
+}

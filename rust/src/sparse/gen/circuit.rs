@@ -1,0 +1,130 @@
+//! Circuit-simulation style matrices — stand-ins for the adder_dcop /
+//! init_adder / add32 / Pd family in the GMRES test set. Modified nodal
+//! analysis produces asymmetric, ill-scaled matrices whose conductances
+//! span many binades (resistors in ohms..megaohms), i.e. the *wide*
+//! end of the exponent-distribution spectrum.
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::util::Prng;
+
+/// Random conductance network with `n` nodes and ~`avg_deg` neighbors
+/// per node. `sigma_ln` controls the conductance magnitude spread;
+/// `asym` in [0,1] injects controlled-source asymmetry (0 = symmetric).
+/// Diagonally dominant, hence nonsingular.
+pub fn conductance_network(n: usize, avg_deg: usize, sigma_ln: f64, asym: f64, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * (avg_deg + 1));
+    let mut diag = vec![0f64; n];
+    // ring backbone guarantees irreducibility
+    for i in 0..n {
+        let j = (i + 1) % n;
+        if n > 1 {
+            let g = rng.lognormal(0.0, sigma_ln);
+            let skew = 1.0 + asym * rng.range_f64(-0.5, 0.5);
+            coo.push(i, j, -g * skew);
+            coo.push(j, i, -g / skew);
+            diag[i] += g * skew;
+            diag[j] += g / skew;
+        }
+    }
+    // random chords
+    let extra = n * avg_deg.saturating_sub(2) / 2;
+    for _ in 0..extra {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i == j {
+            continue;
+        }
+        let g = rng.lognormal(0.0, sigma_ln);
+        let skew = 1.0 + asym * rng.range_f64(-0.5, 0.5);
+        coo.push(i, j, -g * skew);
+        coo.push(j, i, -g / skew);
+        diag[i] += g * skew;
+        diag[j] += g / skew;
+    }
+    // grounded capacitor / source stamp on every node: strict dominance
+    for (i, &d) in diag.iter().enumerate() {
+        coo.push(i, i, d * 1.02 + 1e-3);
+    }
+    coo.to_csr()
+}
+
+/// DC operating-point style matrix (adder_dcop analog): a conductance
+/// network plus a handful of dense-ish rows/cols from voltage sources,
+/// giving the characteristic arrow pattern and wildly mixed scales.
+pub fn dcop(n: usize, nsrc: usize, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let base = conductance_network(n, 4, 4.0, 0.3, seed ^ 0xD15EA5E);
+    let mut coo = Coo::with_capacity(n + nsrc, n + nsrc, base.nnz() + 4 * nsrc * 3);
+    for r in 0..n {
+        let (cols, vals) = base.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            coo.push(r, c as usize, v);
+        }
+    }
+    // voltage-source rows: +-1 incidence entries and tiny regularization
+    for s in 0..nsrc {
+        let row = n + s;
+        let a = rng.below(n);
+        let mut b = rng.below(n);
+        if b == a {
+            b = (b + 1) % n;
+        }
+        coo.push(row, a, 1.0);
+        coo.push(row, b, -1.0);
+        coo.push(a, row, 1.0);
+        coo.push(b, row, -1.0);
+        coo.push(row, row, 1e-9); // near-zero pivot, the dcop nastiness
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats::matrix_stats;
+
+    #[test]
+    fn network_valid_and_dominant() {
+        let a = conductance_network(200, 4, 3.0, 0.0, 42);
+        a.validate().unwrap();
+        assert!(a.diag_dominance() > 1.0);
+        assert!(a.is_symmetric(1e-12)); // asym = 0
+    }
+
+    #[test]
+    fn asymmetry_knob() {
+        let a = conductance_network(100, 4, 2.0, 0.5, 7);
+        a.validate().unwrap();
+        assert!(!a.is_symmetric(1e-9));
+        assert!(a.diag_dominance() > 1.0); // still dominant
+    }
+
+    #[test]
+    fn wide_exponent_spread() {
+        let s = matrix_stats(&conductance_network(500, 6, 5.0, 0.2, 3));
+        assert!(s.num_distinct_exponents > 10, "{}", s.num_distinct_exponents);
+        // top-8 should NOT cover everything for sigma=5
+        assert!(s.topk[3] < 0.999);
+    }
+
+    #[test]
+    fn dcop_shape_and_sources() {
+        let a = dcop(100, 5, 9);
+        a.validate().unwrap();
+        assert_eq!(a.nrows, 105);
+        // source row has the incidence pair + pivot
+        let (cols, _) = a.row(100);
+        assert!(cols.len() >= 3);
+        assert!(!a.is_symmetric(1e-9));
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(
+            conductance_network(50, 4, 2.0, 0.1, 5),
+            conductance_network(50, 4, 2.0, 0.1, 5)
+        );
+    }
+}

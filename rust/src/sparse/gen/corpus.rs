@@ -1,0 +1,319 @@
+//! Named matrix corpora — the experiment workloads standing in for the
+//! paper's SuiteSparse selections (DESIGN.md §5):
+//!
+//! * [`spmv_corpus`] — ~300 matrices across classes, sizes, and exponent
+//!   distributions (the ">300 sparse matrices" of Fig. 4/5/6).
+//! * [`cg_set`] — 15 SPD systems matched in spirit to Table II's CG set.
+//! * [`gmres_set`] — 15 asymmetric systems matched to Table II's GMRES
+//!   set.
+//!
+//! Sizes are scaled down from the paper's (which go up to 3×10⁸ nnz on a
+//! V100) to what a single CPU core exercises in reasonable time; the
+//! `CorpusSize` knob (env `GSEM_CORPUS=small|medium|full`) restores
+//! larger instances for the full benchmark runs.
+
+use super::circuit::{conductance_network, dcop};
+use super::convdiff::{convdiff2d, convdiff2d_recirc, device1d};
+use super::fem::{diffusion2d, mass1d, shell2d, stiffness1d};
+use super::poisson::{poisson2d, poisson2d_aniso, poisson3d};
+use super::randmat::{exp_controlled, exp_controlled_spd, ExpLaw};
+use crate::sparse::csr::Csr;
+
+/// A corpus entry: generator-derived matrix plus identification.
+#[derive(Clone, Debug)]
+pub struct NamedMatrix {
+    pub name: String,
+    pub class: &'static str,
+    pub a: Csr,
+}
+
+impl NamedMatrix {
+    fn new(name: impl Into<String>, class: &'static str, a: Csr) -> Self {
+        Self { name: name.into(), class, a }
+    }
+}
+
+/// Corpus scale selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusSize {
+    /// CI / `make test`: ~60 matrices, ≤ ~3e4 nnz.
+    Small,
+    /// default bench: ~300 matrices, ≤ ~2e5 nnz.
+    Medium,
+    /// full runs: ~300 matrices, ≤ ~2e6 nnz.
+    Full,
+}
+
+impl CorpusSize {
+    /// Resolve from the `GSEM_CORPUS` env var (default Medium).
+    pub fn from_env() -> Self {
+        match std::env::var("GSEM_CORPUS").as_deref() {
+            Ok("small") => CorpusSize::Small,
+            Ok("full") => CorpusSize::Full,
+            _ => CorpusSize::Medium,
+        }
+    }
+
+    fn grid_sizes(self) -> &'static [usize] {
+        match self {
+            CorpusSize::Small => &[8, 16, 32],
+            CorpusSize::Medium => &[12, 24, 48, 96, 160],
+            CorpusSize::Full => &[16, 32, 64, 128, 256, 512],
+        }
+    }
+
+    fn n_sizes(self) -> &'static [usize] {
+        match self {
+            CorpusSize::Small => &[64, 256, 1024],
+            CorpusSize::Medium => &[128, 512, 2048, 8192, 24000],
+            CorpusSize::Full => &[256, 1024, 4096, 16384, 65536, 262144],
+        }
+    }
+}
+
+/// The SpMV evaluation corpus (Fig. 1 / 4 / 5 / 6 workload): matrices of
+/// every class crossed with sizes and exponent-distribution laws.
+pub fn spmv_corpus(size: CorpusSize) -> Vec<NamedMatrix> {
+    let mut out = Vec::new();
+    // -- structured PDE matrices (tight exponent clustering) --
+    for &g in size.grid_sizes() {
+        out.push(NamedMatrix::new(format!("poisson2d_{g}x{g}"), "pde", poisson2d(g, g)));
+        out.push(NamedMatrix::new(
+            format!("aniso2d_{g}x{g}"),
+            "pde",
+            poisson2d_aniso(g, g, 1e-2),
+        ));
+        let g3 = (g as f64).powf(2.0 / 3.0).round() as usize;
+        out.push(NamedMatrix::new(format!("poisson3d_{g3}"), "pde", poisson3d(g3.max(3))));
+        for pe in [4.0, 64.0] {
+            out.push(NamedMatrix::new(
+                format!("convdiff_{g}x{g}_pe{pe}"),
+                "cfd",
+                convdiff2d(g, g, pe, pe / 3.0),
+            ));
+        }
+        out.push(NamedMatrix::new(
+            format!("recirc_{g}x{g}"),
+            "cfd",
+            convdiff2d_recirc(g, g, 16.0),
+        ));
+    }
+    // -- FEM with material contrast (medium spread) --
+    for (i, &g) in size.grid_sizes().iter().enumerate() {
+        for contrast in [2.0, 10.0] {
+            out.push(NamedMatrix::new(
+                format!("diffusion_{g}x{g}_c{contrast}"),
+                "fem",
+                diffusion2d(g, g, contrast, 100 + i as u64),
+            ));
+        }
+        out.push(NamedMatrix::new(format!("shell_{g}x{g}"), "fem", shell2d(g, g, 200 + i as u64)));
+    }
+    for (i, &n) in size.n_sizes().iter().enumerate() {
+        out.push(NamedMatrix::new(
+            format!("stiffness1d_{n}"),
+            "fem",
+            stiffness1d(n, 2.0, 300 + i as u64),
+        ));
+        out.push(NamedMatrix::new(format!("mass1d_{n}"), "fem", mass1d(n, 350 + i as u64)));
+    }
+    // -- circuits (wide spread) --
+    for (i, &n) in size.n_sizes().iter().enumerate() {
+        out.push(NamedMatrix::new(
+            format!("circuit_{n}"),
+            "circuit",
+            conductance_network(n, 5, 4.0, 0.25, 400 + i as u64),
+        ));
+        out.push(NamedMatrix::new(
+            format!("dcop_{n}"),
+            "circuit",
+            dcop(n.saturating_sub(n / 20).max(8), (n / 20).max(2), 450 + i as u64),
+        ));
+        out.push(NamedMatrix::new(
+            format!("device1d_{n}"),
+            "circuit",
+            device1d(n, 3, 500 + i as u64),
+        ));
+    }
+    // -- exponent-law sweep (the Fig. 1(b-h) coverage spectrum) --
+    let laws: [(&str, ExpLaw); 6] = [
+        ("single", ExpLaw::Single { e: 0 }),
+        ("zipf_s25", ExpLaw::Zipf { e0: -4, count: 16, s: 2.5 }),
+        ("zipf_s10", ExpLaw::Zipf { e0: -8, count: 32, s: 1.0 }),
+        ("zipf_s02", ExpLaw::Zipf { e0: -16, count: 64, s: 0.2 }),
+        ("bimodal", ExpLaw::Bimodal { e0: -2, gap: 12, p: 0.7 }),
+        ("gauss_s6", ExpLaw::Gaussian { e0: 0, sigma: 6.0 }),
+    ];
+    for (i, &n) in size.n_sizes().iter().enumerate() {
+        for (lname, law) in laws {
+            out.push(NamedMatrix::new(
+                format!("rand_{lname}_{n}"),
+                "random",
+                exp_controlled(n, n, 8, law, 600 + i as u64),
+            ));
+        }
+    }
+    out
+}
+
+/// The 15-system CG test set (Table II left, scaled): SPD matrices
+/// ordered by size like the paper's (bcsstk09 .. Queen_4147).
+pub fn cg_set(size: CorpusSize) -> Vec<NamedMatrix> {
+    let s = match size {
+        CorpusSize::Small => 1usize,
+        CorpusSize::Medium => 2,
+        CorpusSize::Full => 4,
+    };
+    let mut v = Vec::new();
+    // paper analog                         paper matrix (rows, nnz)
+    v.push(NamedMatrix::new("cg01_stiff_small", "fem", stiffness1d(540 * s, 1.0, 9001))); // bcsstk09 1,083
+    v.push(NamedMatrix::new("cg02_mass_diag", "fem", mass1d(1780 * s, 9002))); // bcsstm24 3,562
+    v.push(NamedMatrix::new("cg03_shell_dense", "fem", shell2d(36 * s, 36 * s, 9003))); // bundle1 10,581
+    v.push(NamedMatrix::new(
+        "cg04_diffusion_mild",
+        "fem",
+        diffusion2d(51 * s, 51 * s, 4.0, 9004),
+    )); // ted_B 10,605
+    v.push(NamedMatrix::new(
+        "cg05_spd_bimodal",
+        "random",
+        exp_controlled_spd(3500 * s, 6, ExpLaw::Bimodal { e0: -1, gap: 8, p: 0.75 }, 9005),
+    )); // cvxbqp1 50,000
+    v.push(NamedMatrix::new("cg06_shell_big", "fem", shell2d(64 * s, 64 * s, 9006))); // consph 83,334
+    v.push(NamedMatrix::new("cg07_poisson3d", "pde", poisson3d(14 * s))); // m_t1 97,578
+    v.push(NamedMatrix::new(
+        "cg08_diffusion_contrast",
+        "fem",
+        diffusion2d(64 * s, 64 * s, 10.0, 9008),
+    )); // Dubcova3 146,689
+    v.push(NamedMatrix::new("cg09_poisson2d_a", "pde", poisson2d(96 * s, 96 * s))); // af_0_k101 503,625
+    v.push(NamedMatrix::new("cg10_aniso", "pde", poisson2d_aniso(96 * s, 96 * s, 1e-2))); // af_1_k101
+    v.push(NamedMatrix::new(
+        "cg11_spd_zipf",
+        "random",
+        exp_controlled_spd(9000 * s, 7, ExpLaw::Zipf { e0: -6, count: 16, s: 1.5 }, 9011),
+    )); // af_shell4 504,855
+    v.push(NamedMatrix::new(
+        "cg12_fault_contrast",
+        "fem",
+        diffusion2d(80 * s, 80 * s, 16.0, 9012),
+    )); // Fault_639 638,802 (extreme contrast = hard)
+    v.push(NamedMatrix::new("cg13_shell_fine", "fem", shell2d(90 * s, 90 * s, 9013))); // bone010 986,703
+    v.push(NamedMatrix::new(
+        "cg14_thermal",
+        "fem",
+        diffusion2d(110 * s, 110 * s, 6.0, 9014),
+    )); // thermal2 1,228,045
+    v.push(NamedMatrix::new("cg15_queen_big", "pde", poisson2d(140 * s, 140 * s))); // Queen_4147 4,147,110
+    v
+}
+
+/// The 15-system GMRES test set (Table II right, scaled): asymmetric
+/// matrices ordered by size like the paper's (iprob .. ML_Geer).
+pub fn gmres_set(size: CorpusSize) -> Vec<NamedMatrix> {
+    let s = match size {
+        CorpusSize::Small => 1usize,
+        CorpusSize::Medium => 2,
+        CorpusSize::Full => 4,
+    };
+    let mut v = Vec::new();
+    v.push(NamedMatrix::new(
+        "gm01_iprob",
+        "random",
+        exp_controlled(1500 * s, 1500 * s, 3, ExpLaw::Single { e: 0 }, 8001),
+    )); // iprob 3,001
+    v.push(NamedMatrix::new("gm02_dw_a", "circuit", device1d(1024 * s, 2, 8002))); // dw1024
+    v.push(NamedMatrix::new("gm03_dw_b", "circuit", device1d(1024 * s, 2, 8003))); // dw2048
+    v.push(NamedMatrix::new("gm04_dcop_a", "circuit", dcop(880 * s, 25, 8004))); // adder_dcop_01
+    v.push(NamedMatrix::new("gm05_dcop_b", "circuit", dcop(880 * s, 25, 8005))); // init_adder1
+    v.push(NamedMatrix::new("gm06_dcop_c", "circuit", dcop(880 * s, 28, 8006))); // adder_dcop_39
+    v.push(NamedMatrix::new(
+        "gm07_pd",
+        "random",
+        exp_controlled(4000 * s, 4000 * s, 3, ExpLaw::Zipf { e0: -10, count: 24, s: 0.8 }, 8007),
+    )); // Pd 8,081
+    v.push(NamedMatrix::new(
+        "gm08_add32",
+        "circuit",
+        conductance_network(2480 * s, 4, 3.0, 0.3, 8008),
+    )); // add32 4,960
+    v.push(NamedMatrix::new(
+        "gm09_ts",
+        "random",
+        exp_controlled(1070 * s, 1070 * s, 21, ExpLaw::Gaussian { e0: 0, sigma: 8.0 }, 8009),
+    )); // TS 2,142 (dense-ish rows)
+    v.push(NamedMatrix::new("gm10_epb", "cfd", convdiff2d(112 * s, 112 * s, 8.0, 3.0))); // epb2 25,228
+    v.push(NamedMatrix::new("gm11_wang", "cfd", convdiff2d_recirc(114 * s, 114 * s, 24.0))); // wang3 26,064
+    v.push(NamedMatrix::new(
+        "gm12_tetra",
+        "cfd",
+        convdiff2d(120 * s, 120 * s, 48.0, 16.0),
+    )); // 3D_28984_Tetra
+    v.push(NamedMatrix::new(
+        "gm13_raefsky",
+        "random",
+        exp_controlled(1275 * s, 1275 * s, 90, ExpLaw::Zipf { e0: -3, count: 8, s: 2.0 }, 8013),
+    )); // raefsky1 3,242 x 293,409 nnz (dense rows)
+    v.push(NamedMatrix::new("gm14_atmos", "cfd", convdiff2d_recirc(170 * s, 170 * s, 6.0))); // atmosmodl
+    v.push(NamedMatrix::new("gm15_geer", "cfd", convdiff2d(200 * s, 200 * s, 12.0, 12.0))); // ML_Geer
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_corpus_valid_and_named_uniquely() {
+        let c = spmv_corpus(CorpusSize::Small);
+        assert!(c.len() >= 50, "corpus size {}", c.len());
+        let mut names: Vec<&str> = c.iter().map(|m| m.name.as_str()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len(), "duplicate names");
+        for m in &c {
+            m.a.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        }
+    }
+
+    #[test]
+    fn corpus_spans_coverage_spectrum() {
+        let c = spmv_corpus(CorpusSize::Small);
+        let covers: Vec<f64> = c
+            .iter()
+            .map(|m| crate::sparse::stats::matrix_stats(&m.a).topk[3]) // top-8
+            .collect();
+        let min = covers.iter().cloned().fold(1.0, f64::min);
+        let max = covers.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 0.999, "max top-8 coverage {max}");
+        assert!(min < 0.7, "min top-8 coverage {min}");
+    }
+
+    #[test]
+    fn cg_set_is_spd_shaped() {
+        for m in cg_set(CorpusSize::Small) {
+            m.a.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert!(m.a.is_symmetric(1e-12), "{} not symmetric", m.name);
+            assert!(m.a.diag().iter().all(|&d| d > 0.0), "{} diag", m.name);
+        }
+    }
+
+    #[test]
+    fn gmres_set_mostly_asymmetric() {
+        let set = gmres_set(CorpusSize::Small);
+        assert_eq!(set.len(), 15);
+        let asym = set.iter().filter(|m| !m.a.is_symmetric(1e-12)).count();
+        assert!(asym >= 12, "only {asym} asymmetric");
+        for m in &set {
+            m.a.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        }
+    }
+
+    #[test]
+    fn sizes_ordered_like_table2() {
+        let set = cg_set(CorpusSize::Small);
+        // first should be much smaller than last, mirroring Table II
+        assert!(set[0].a.nnz() * 4 < set[14].a.nnz());
+    }
+}

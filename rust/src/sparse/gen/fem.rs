@@ -1,0 +1,189 @@
+//! FEM-style SPD matrices with heterogeneous material coefficients —
+//! stand-ins for the structural matrices of the CG test set (bcsstk*,
+//! consph, af_shell, bone010, ...). The lognormal coefficient field
+//! spreads non-zero magnitudes over several binades, and the coefficient
+//! contrast controls the condition number (large contrast = the hard,
+//! slow-converging systems where low-precision storage stalls CG).
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::util::Prng;
+
+/// 1D P1 stiffness matrix with elementwise coefficients `a_e`:
+/// tridiagonal SPD, `A[i][i] = a_i + a_{i+1}`, `A[i][i+1] = -a_{i+1}`.
+/// `sigma` is the lognormal spread of the coefficients (in natural log).
+pub fn stiffness1d(n: usize, sigma: f64, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let coeff: Vec<f64> = (0..=n).map(|_| rng.lognormal(0.0, sigma)).collect();
+    let mut coo = Coo::with_capacity(n, n, 3 * n);
+    for i in 0..n {
+        coo.push(i, i, coeff[i] + coeff[i + 1]);
+        if i + 1 < n {
+            coo.push(i, i + 1, -coeff[i + 1]);
+            coo.push(i + 1, i, -coeff[i + 1]);
+        }
+    }
+    coo.to_csr()
+}
+
+/// 2D 5-point variable-coefficient diffusion on `nx × ny`:
+/// `-div(a(x) grad u)` with harmonic-mean face coefficients. SPD.
+/// `contrast_log2` sets the coefficient field's spread in binades.
+pub fn diffusion2d(nx: usize, ny: usize, contrast_log2: f64, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let sigma = contrast_log2 * std::f64::consts::LN_2 / 2.0;
+    // cell coefficients
+    let cell: Vec<f64> = (0..nx * ny).map(|_| rng.lognormal(0.0, sigma)).collect();
+    let at = |i: usize, j: usize| cell[i * ny + j];
+    let face = |a: f64, b: f64| 2.0 * a * b / (a + b); // harmonic mean
+    let n = nx * ny;
+    let idx = |i: usize, j: usize| i * ny + j;
+    let mut coo = Coo::with_capacity(n, n, 5 * n);
+    for i in 0..nx {
+        for j in 0..ny {
+            let r = idx(i, j);
+            let mut diag = 0.0;
+            let mut push_face = |coo: &mut Coo, c: usize, f: f64| {
+                coo.push(r, c, -f);
+                diag += f;
+            };
+            if i > 0 {
+                let f = face(at(i, j), at(i - 1, j));
+                push_face(&mut coo, idx(i - 1, j), f);
+            }
+            if i + 1 < nx {
+                let f = face(at(i, j), at(i + 1, j));
+                push_face(&mut coo, idx(i + 1, j), f);
+            }
+            if j > 0 {
+                let f = face(at(i, j), at(i, j - 1));
+                push_face(&mut coo, idx(i, j - 1), f);
+            }
+            if j + 1 < ny {
+                let f = face(at(i, j), at(i, j + 1));
+                push_face(&mut coo, idx(i, j + 1), f);
+            }
+            // Dirichlet boundary contribution keeps A nonsingular.
+            let boundary_faces = [(i == 0), (i + 1 == nx), (j == 0), (j + 1 == ny)]
+                .iter()
+                .filter(|&&b| b)
+                .count();
+            diag += boundary_faces as f64 * at(i, j);
+            coo.push(r, r, diag);
+        }
+    }
+    coo.to_csr()
+}
+
+/// Shell/plate-like SPD matrix: 9-point (Moore neighborhood) stencil with
+/// smoothly varying thickness — denser rows (≤ 9 nnz) akin to consph /
+/// af_shell. SPD by diagonal dominance.
+pub fn shell2d(nx: usize, ny: usize, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let n = nx * ny;
+    let idx = |i: usize, j: usize| i * ny + j;
+    // smooth thickness field: random low-frequency cosine mix
+    let (a1, a2) = (rng.range_f64(0.5, 2.0), rng.range_f64(0.5, 2.0));
+    let (p1, p2) = (rng.range_f64(0.0, 6.28), rng.range_f64(0.0, 6.28));
+    let thick = |i: usize, j: usize| {
+        let x = i as f64 / nx as f64;
+        let y = j as f64 / ny as f64;
+        (2.0 + (a1 * (3.0 * x * std::f64::consts::TAU + p1).cos())
+            + (a2 * (2.0 * y * std::f64::consts::TAU + p2).sin()))
+        .exp()
+    };
+    let mut coo = Coo::with_capacity(n, n, 9 * n);
+    for i in 0..nx {
+        for j in 0..ny {
+            let r = idx(i, j);
+            let t0 = thick(i, j);
+            let mut diag = 0.0;
+            for di in -1i64..=1 {
+                for dj in -1i64..=1 {
+                    if di == 0 && dj == 0 {
+                        continue;
+                    }
+                    let (ii, jj) = (i as i64 + di, j as i64 + dj);
+                    if ii < 0 || jj < 0 || ii >= nx as i64 || jj >= ny as i64 {
+                        continue;
+                    }
+                    let w = (t0 * thick(ii as usize, jj as usize)).sqrt()
+                        / ((di * di + dj * dj) as f64);
+                    coo.push(r, idx(ii as usize, jj as usize), -w);
+                    diag += w;
+                }
+            }
+            coo.push(r, r, diag * 1.05 + t0); // strictly dominant
+        }
+    }
+    let a = coo.to_csr();
+    // Symmetrize exactly (floating-point thick() is symmetric already,
+    // but keep the guarantee under future edits).
+    let t = a.transpose();
+    let vals: Vec<f64> = a.vals.iter().zip(&t.vals).map(|(&x, &y)| 0.5 * (x + y)).collect();
+    a.with_values(vals)
+}
+
+/// Mass-like matrix: well-conditioned SPD companion (bcsstm24-style,
+/// diagonal-heavy).
+pub fn mass1d(n: usize, seed: u64) -> Csr {
+    let mut rng = Prng::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n);
+    for i in 0..n {
+        coo.push(i, i, rng.lognormal(0.0, 2.0));
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stiffness1d_spd_shape() {
+        let a = stiffness1d(50, 1.0, 3);
+        a.validate().unwrap();
+        assert!(a.is_symmetric(1e-15));
+        assert!(a.diag().iter().all(|&d| d > 0.0));
+        assert_eq!(a.nnz(), 50 + 2 * 49);
+    }
+
+    #[test]
+    fn diffusion2d_spd_and_dominant() {
+        let a = diffusion2d(10, 10, 8.0, 7);
+        a.validate().unwrap();
+        assert!(a.is_symmetric(1e-12));
+        // interior rows are weakly dominant (ratio exactly 1 up to
+        // summation-order rounding); boundary rows strictly dominant
+        assert!(a.diag_dominance() >= 1.0 - 1e-9, "dominance {}", a.diag_dominance());
+    }
+
+    #[test]
+    fn diffusion_contrast_spreads_exponents() {
+        let lo = crate::sparse::stats::matrix_stats(&diffusion2d(16, 16, 1.0, 5));
+        let hi = crate::sparse::stats::matrix_stats(&diffusion2d(16, 16, 16.0, 5));
+        assert!(hi.num_distinct_exponents > lo.num_distinct_exponents);
+    }
+
+    #[test]
+    fn shell2d_symmetric_dominant() {
+        let a = shell2d(12, 12, 11);
+        a.validate().unwrap();
+        assert!(a.is_symmetric(1e-12));
+        assert!(a.diag_dominance() > 1.0);
+        assert_eq!(a.max_row_nnz(), 9);
+    }
+
+    #[test]
+    fn mass1d_diagonal() {
+        let a = mass1d(20, 1);
+        assert_eq!(a.nnz(), 20);
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(stiffness1d(30, 1.0, 9), stiffness1d(30, 1.0, 9));
+        assert_ne!(stiffness1d(30, 1.0, 9), stiffness1d(30, 1.0, 10));
+    }
+}

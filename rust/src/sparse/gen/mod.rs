@@ -1,0 +1,16 @@
+//! Synthetic matrix generators — the SuiteSparse Matrix Collection
+//! stand-in (DESIGN.md §5). Each generator targets one of the matrix
+//! classes the paper's test sets draw from (circuit simulation, CFD /
+//! convection–diffusion, structural FEM, linear programming-ish general
+//! matrices), with explicit control over the properties the GSE-SEM
+//! format is sensitive to: exponent clustering (top-k coverage), value
+//! magnitude spread, symmetry/definiteness, and sparsity pattern.
+
+pub mod poisson;
+pub mod fem;
+pub mod circuit;
+pub mod convdiff;
+pub mod randmat;
+pub mod corpus;
+
+pub use corpus::{cg_set, gmres_set, spmv_corpus, CorpusSize, NamedMatrix};

@@ -1,0 +1,145 @@
+//! Finite-difference Poisson (Laplacian) matrices: the canonical SPD
+//! iterative-solver workload. Values concentrate on two exponents
+//! ({4,-1} / {6,-1}), the extreme-clustering end of the Fig. 1 spectrum.
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+
+/// 2D 5-point Laplacian on an `nx × ny` grid (Dirichlet boundaries).
+/// SPD, `n = nx*ny`, ≤ 5 nnz/row.
+pub fn poisson2d(nx: usize, ny: usize) -> Csr {
+    let n = nx * ny;
+    let mut coo = Coo::with_capacity(n, n, 5 * n);
+    let idx = |i: usize, j: usize| i * ny + j;
+    for i in 0..nx {
+        for j in 0..ny {
+            let r = idx(i, j);
+            coo.push(r, r, 4.0);
+            if i > 0 {
+                coo.push(r, idx(i - 1, j), -1.0);
+            }
+            if i + 1 < nx {
+                coo.push(r, idx(i + 1, j), -1.0);
+            }
+            if j > 0 {
+                coo.push(r, idx(i, j - 1), -1.0);
+            }
+            if j + 1 < ny {
+                coo.push(r, idx(i, j + 1), -1.0);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 3D 7-point Laplacian on an `n³` grid. SPD.
+pub fn poisson3d(n: usize) -> Csr {
+    let total = n * n * n;
+    let mut coo = Coo::with_capacity(total, total, 7 * total);
+    let idx = |i: usize, j: usize, k: usize| (i * n + j) * n + k;
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let r = idx(i, j, k);
+                coo.push(r, r, 6.0);
+                if i > 0 {
+                    coo.push(r, idx(i - 1, j, k), -1.0);
+                }
+                if i + 1 < n {
+                    coo.push(r, idx(i + 1, j, k), -1.0);
+                }
+                if j > 0 {
+                    coo.push(r, idx(i, j - 1, k), -1.0);
+                }
+                if j + 1 < n {
+                    coo.push(r, idx(i, j + 1, k), -1.0);
+                }
+                if k > 0 {
+                    coo.push(r, idx(i, j, k - 1), -1.0);
+                }
+                if k + 1 < n {
+                    coo.push(r, idx(i, j, k + 1), -1.0);
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Anisotropic 2D Laplacian: `-eps * u_xx - u_yy`, spreading the value
+/// set over more exponents as `eps` departs from 1.
+pub fn poisson2d_aniso(nx: usize, ny: usize, eps: f64) -> Csr {
+    let n = nx * ny;
+    let mut coo = Coo::with_capacity(n, n, 5 * n);
+    let idx = |i: usize, j: usize| i * ny + j;
+    for i in 0..nx {
+        for j in 0..ny {
+            let r = idx(i, j);
+            coo.push(r, r, 2.0 * eps + 2.0);
+            if i > 0 {
+                coo.push(r, idx(i - 1, j), -eps);
+            }
+            if i + 1 < nx {
+                coo.push(r, idx(i + 1, j), -eps);
+            }
+            if j > 0 {
+                coo.push(r, idx(i, j - 1), -1.0);
+            }
+            if j + 1 < ny {
+                coo.push(r, idx(i, j + 1), -1.0);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson2d_structure() {
+        let a = poisson2d(4, 5);
+        a.validate().unwrap();
+        assert_eq!(a.nrows, 20);
+        assert!(a.is_symmetric(0.0));
+        assert_eq!(a.get(0, 0), 4.0);
+        assert_eq!(a.max_row_nnz(), 5);
+        // interior row has exactly 5 entries
+        let (cols, _) = a.row(6);
+        assert_eq!(cols.len(), 5);
+    }
+
+    #[test]
+    fn poisson2d_is_positive_definite_via_dominance() {
+        // weak diagonal dominance + irreducibility => PD; check dominance >= 4/4
+        let a = poisson2d(6, 6);
+        assert!(a.diag_dominance() >= 1.0);
+    }
+
+    #[test]
+    fn poisson3d_structure() {
+        let a = poisson3d(4);
+        a.validate().unwrap();
+        assert_eq!(a.nrows, 64);
+        assert!(a.is_symmetric(0.0));
+        assert_eq!(a.get(0, 0), 6.0);
+        assert_eq!(a.max_row_nnz(), 7);
+    }
+
+    #[test]
+    fn poisson_two_distinct_exponents() {
+        let s = crate::sparse::stats::matrix_stats(&poisson2d(8, 8));
+        assert_eq!(s.num_distinct_exponents, 2);
+        assert_eq!(s.topk[1], 1.0); // top-2 covers everything
+    }
+
+    #[test]
+    fn aniso_spreads_exponents() {
+        let a = poisson2d_aniso(8, 8, 1e-3);
+        a.validate().unwrap();
+        assert!(a.is_symmetric(0.0));
+        let s = crate::sparse::stats::matrix_stats(&a);
+        assert!(s.num_distinct_exponents >= 3);
+    }
+}

@@ -1,0 +1,177 @@
+//! General random sparse matrices with *controlled exponent
+//! distributions* — the knob the whole paper turns on. The Fig. 1 / Fig. 4
+//! sweeps need matrices spanning the top-k coverage spectrum from "one
+//! shared exponent covers 99%" to "exponents everywhere"; these
+//! generators place each non-zero's exponent by an explicit discrete
+//! distribution so the sweep covers that spectrum by construction.
+
+use crate::formats::ieee;
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::util::Prng;
+
+/// Exponent-placement law for [`exp_controlled`].
+#[derive(Clone, Copy, Debug)]
+pub enum ExpLaw {
+    /// All non-zeros share one binade (`2^e .. 2^{e+1}`).
+    Single { e: i32 },
+    /// Zipf(s) over `count` consecutive binades starting at `e0` —
+    /// s large = heavy clustering (high top-1 coverage), s→0 = uniform.
+    Zipf { e0: i32, count: usize, s: f64 },
+    /// Two clusters separated by `gap` binades with mixing ratio `p`.
+    Bimodal { e0: i32, gap: i32, p: f64 },
+    /// Normal over binades with stddev `sigma` centered at `e0`.
+    Gaussian { e0: i32, sigma: f64 },
+}
+
+/// Draw a value whose exponent follows `law` (mantissa uniform in
+/// [1, 2)) with a random sign unless `positive`.
+pub fn draw_value(rng: &mut Prng, law: ExpLaw, positive: bool) -> f64 {
+    let e = match law {
+        ExpLaw::Single { e } => e,
+        ExpLaw::Zipf { e0, count, s } => {
+            let weights: Vec<f64> =
+                (1..=count).map(|r| 1.0 / (r as f64).powf(s)).collect();
+            e0 + rng.weighted(&weights) as i32
+        }
+        ExpLaw::Bimodal { e0, gap, p } => {
+            if rng.chance(p) {
+                e0
+            } else {
+                e0 + gap
+            }
+        }
+        ExpLaw::Gaussian { e0, sigma } => e0 + (rng.normal() * sigma).round() as i32,
+    };
+    let mant = 1.0 + rng.f64();
+    let sign = if positive || rng.chance(0.5) { 1.0 } else { -1.0 };
+    sign * ieee::ldexp(mant, e.clamp(-1000, 1000))
+}
+
+/// Random sparse matrix: `nrows × ncols`, about `row_nnz` entries per row
+/// (plus a guaranteed diagonal when square), values drawn by `law`.
+/// Square matrices are made strictly diagonally dominant so both CG
+/// (after symmetrization) and GMRES workloads built on top are solvable.
+pub fn exp_controlled(
+    nrows: usize,
+    ncols: usize,
+    row_nnz: usize,
+    law: ExpLaw,
+    seed: u64,
+) -> Csr {
+    let mut rng = Prng::new(seed);
+    let mut coo = Coo::with_capacity(nrows, ncols, nrows * (row_nnz + 1));
+    for r in 0..nrows {
+        let offdiag = rng.sample_indices(ncols, row_nnz.min(ncols));
+        let mut rowsum = 0.0;
+        for c in offdiag {
+            if nrows == ncols && c == r {
+                continue;
+            }
+            let v = draw_value(&mut rng, law, false);
+            rowsum += v.abs();
+            coo.push(r, c, v);
+        }
+        if nrows == ncols {
+            // strict dominance; diagonal inherits the row's scale so the
+            // exponent distribution is not distorted much
+            coo.push(r, r, rowsum * 1.05 + draw_value(&mut rng, law, true).abs());
+        }
+    }
+    coo.to_csr()
+}
+
+/// Symmetric positive-definite variant: symmetrize the off-diagonal part
+/// then re-dominate the diagonal.
+pub fn exp_controlled_spd(n: usize, row_nnz: usize, law: ExpLaw, seed: u64) -> Csr {
+    let a = exp_controlled(n, n, row_nnz, law, seed);
+    let t = a.transpose();
+    // B = (A + A^T)/2 off-diagonal, then strict dominance on the diagonal
+    let mut coo = Coo::with_capacity(n, n, a.nnz() * 2);
+    let mut rowsum = vec![0f64; n];
+    for r in 0..n {
+        for (m, half) in [(&a, 0.5), (&t, 0.5)] {
+            let (cols, vals) = m.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c as usize != r {
+                    coo.push(r, c as usize, half * v);
+                    rowsum[r] += (half * v).abs();
+                }
+            }
+        }
+    }
+    for (r, &s) in rowsum.iter().enumerate() {
+        coo.push(r, r, s * 1.1 + 1e-6);
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::gse::ExpHistogram;
+    use crate::sparse::stats::matrix_stats;
+
+    #[test]
+    fn single_law_one_exponent() {
+        let mut rng = Prng::new(1);
+        let mut h = ExpHistogram::new();
+        for _ in 0..1000 {
+            h.push(draw_value(&mut rng, ExpLaw::Single { e: 3 }, false));
+        }
+        assert_eq!(h.num_distinct(), 1);
+        assert_eq!(h.topk_coverage(1), 1.0);
+    }
+
+    #[test]
+    fn zipf_concentration_follows_s() {
+        let mk = |s: f64| {
+            let mut rng = Prng::new(2);
+            let mut h = ExpHistogram::new();
+            for _ in 0..20_000 {
+                h.push(draw_value(&mut rng, ExpLaw::Zipf { e0: -5, count: 32, s }, false));
+            }
+            h.topk_coverage(1)
+        };
+        let heavy = mk(2.5);
+        let flat = mk(0.1);
+        assert!(heavy > 0.7, "heavy={heavy}");
+        assert!(flat < 0.15, "flat={flat}");
+    }
+
+    #[test]
+    fn bimodal_two_exponents() {
+        let mut rng = Prng::new(3);
+        let mut h = ExpHistogram::new();
+        for _ in 0..5000 {
+            h.push(draw_value(&mut rng, ExpLaw::Bimodal { e0: 0, gap: 10, p: 0.8 }, false));
+        }
+        assert_eq!(h.num_distinct(), 2);
+        let c1 = h.topk_coverage(1);
+        assert!((c1 - 0.8).abs() < 0.03, "c1={c1}");
+    }
+
+    #[test]
+    fn matrix_valid_dominant_and_law_respected() {
+        let a = exp_controlled(300, 300, 6, ExpLaw::Zipf { e0: -2, count: 8, s: 1.5 }, 4);
+        a.validate().unwrap();
+        assert!(a.diag_dominance() > 1.0);
+        let s = matrix_stats(&a);
+        assert!(s.topk[3] > 0.95); // top-8 covers nearly everything
+    }
+
+    #[test]
+    fn spd_variant_symmetric_dominant() {
+        let a = exp_controlled_spd(150, 5, ExpLaw::Gaussian { e0: 0, sigma: 3.0 }, 5);
+        a.validate().unwrap();
+        assert!(a.is_symmetric(1e-12));
+        assert!(a.diag_dominance() > 1.0);
+    }
+
+    #[test]
+    fn rectangular_supported() {
+        let a = exp_controlled(40, 80, 5, ExpLaw::Single { e: 0 }, 6);
+        a.validate().unwrap();
+        assert_eq!((a.nrows, a.ncols), (40, 80));
+    }
+}

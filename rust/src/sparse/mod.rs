@@ -1,0 +1,13 @@
+//! Sparse-matrix substrate: COO/CSR storage, MatrixMarket IO, numerical
+//! statistics (Fig. 1 analyses), and the synthetic matrix generators that
+//! stand in for the SuiteSparse collection (DESIGN.md §5).
+
+pub mod coo;
+pub mod csr;
+pub mod mm;
+pub mod stats;
+pub mod gen;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use stats::MatrixStats;

@@ -1,0 +1,94 @@
+//! Per-matrix numerical statistics backing the §II motivation study:
+//! entropy of value/exponent/mantissa populations and the top-k shared-
+//! exponent coverage of Eq. 2 (Fig. 1).
+
+use super::csr::Csr;
+use crate::formats::entropy::{analyze, EntropyReport};
+use crate::formats::gse::ExpHistogram;
+
+/// The k values reported in Fig. 1(b)-(h).
+pub const TOPK_LEVELS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Full §II statistics for one matrix.
+#[derive(Clone, Debug)]
+pub struct MatrixStats {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub nnz: usize,
+    pub entropy: EntropyReport,
+    /// coverage at each of [`TOPK_LEVELS`]
+    pub topk: [f64; 7],
+    pub num_distinct_exponents: usize,
+    /// fraction of nnz whose value is exactly representable in bf16
+    /// (useful context for the baseline-error figures)
+    pub avg_abs: f64,
+    pub max_abs: f64,
+    pub min_abs_nonzero: f64,
+}
+
+/// Compute [`MatrixStats`] for a matrix's non-zeros.
+pub fn matrix_stats(m: &Csr) -> MatrixStats {
+    let mut hist = ExpHistogram::new();
+    hist.push_all(&m.vals);
+    let mut topk = [0f64; 7];
+    for (i, &k) in TOPK_LEVELS.iter().enumerate() {
+        topk[i] = hist.topk_coverage(k);
+    }
+    let mut sum_abs = 0f64;
+    let mut max_abs = 0f64;
+    let mut min_abs = f64::INFINITY;
+    for &v in &m.vals {
+        let a = v.abs();
+        sum_abs += a;
+        max_abs = max_abs.max(a);
+        if a > 0.0 {
+            min_abs = min_abs.min(a);
+        }
+    }
+    MatrixStats {
+        nrows: m.nrows,
+        ncols: m.ncols,
+        nnz: m.nnz(),
+        entropy: analyze(&m.vals),
+        topk,
+        num_distinct_exponents: hist.num_distinct(),
+        avg_abs: if m.nnz() == 0 { 0.0 } else { sum_abs / m.nnz() as f64 },
+        max_abs,
+        min_abs_nonzero: if min_abs.is_finite() { min_abs } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    #[test]
+    fn stats_on_single_binade_matrix() {
+        let mut c = Coo::new(2, 2);
+        c.push(0, 0, 1.0);
+        c.push(0, 1, 1.5);
+        c.push(1, 1, 1.25);
+        let s = matrix_stats(&c.to_csr());
+        assert_eq!(s.nnz, 3);
+        assert_eq!(s.num_distinct_exponents, 1);
+        assert_eq!(s.topk[0], 1.0); // top-1 covers everything
+        assert_eq!(s.entropy.exponent_bits, 0.0);
+        assert_eq!(s.max_abs, 1.5);
+        assert_eq!(s.min_abs_nonzero, 1.0);
+    }
+
+    #[test]
+    fn topk_monotone_nondecreasing() {
+        let mut c = Coo::new(1, 64);
+        for j in 0..64usize {
+            c.push(0, j, 2f64.powi((j % 13) as i32));
+        }
+        let s = matrix_stats(&c.to_csr());
+        for w in s.topk.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!((s.topk[6] - 1.0).abs() < 1e-12); // top-64 covers all
+        assert_eq!(s.num_distinct_exponents, 13);
+    }
+}

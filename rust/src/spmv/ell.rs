@@ -1,0 +1,193 @@
+//! Padded-ELL blocks: the static-shape matrix view consumed by the
+//! Pallas SpMV kernel (L1). Pallas/XLA require fixed shapes, so the CSR
+//! matrix is re-laid-out as `nrows × width` index/value planes padded
+//! with zero-entries; rows longer than `width` spill into additional
+//! *slabs* (row splitting), whose partial sums the caller adds — the
+//! TPU-side analog of CSR-vector's multiple-threads-per-row
+//! (DESIGN.md §6 Hardware-Adaptation).
+
+use crate::formats::Precision;
+use crate::sparse::csr::Csr;
+use crate::spmv::gse::GseCsr;
+
+/// One fixed-shape slab of an ELL-converted matrix.
+#[derive(Clone, Debug)]
+pub struct EllSlab {
+    pub nrows: usize,
+    pub width: usize,
+    /// row-major `nrows × width` column indexes (padding points at 0)
+    pub cols: Vec<u32>,
+    /// row-major `nrows × width` values (padding is exactly 0.0)
+    pub vals: Vec<f64>,
+    /// packed GSE-SEM planes mirroring `vals` (heads plane etc.)
+    pub heads: Vec<u16>,
+    pub tail1: Vec<u16>,
+    pub tail2: Vec<u32>,
+    /// exponent index plane (u32 for the kernel's convenience)
+    pub exp_idx: Vec<u32>,
+}
+
+/// ELL view of a matrix: one or more slabs; `y = Σ_s slab_s · x`.
+#[derive(Clone, Debug)]
+pub struct EllBlocks {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub width: usize,
+    pub slabs: Vec<EllSlab>,
+}
+
+/// Convert a GSE-SEM CSR to padded ELL slabs of the given width.
+pub fn to_ell(g: &GseCsr, original: &Csr, width: usize) -> EllBlocks {
+    assert!(width >= 1);
+    let nslabs = g
+        .rowptr
+        .windows(2)
+        .map(|w| (w[1] - w[0]).div_ceil(width))
+        .max()
+        .unwrap_or(0)
+        .max(1);
+    let mut slabs = Vec::with_capacity(nslabs);
+    for s in 0..nslabs {
+        let mut slab = EllSlab {
+            nrows: g.nrows,
+            width,
+            cols: vec![0; g.nrows * width],
+            vals: vec![0.0; g.nrows * width],
+            heads: vec![0; g.nrows * width],
+            tail1: vec![0; g.nrows * width],
+            tail2: vec![0; g.nrows * width],
+            exp_idx: vec![0; g.nrows * width],
+        };
+        for r in 0..g.nrows {
+            let (a, b) = (g.rowptr[r], g.rowptr[r + 1]);
+            let lo = a + s * width;
+            let hi = (lo + width).min(b);
+            if lo >= hi {
+                continue;
+            }
+            for (slot, j) in (lo..hi).enumerate() {
+                let (col, idx) = g.col_and_idx(j);
+                let o = r * width + slot;
+                slab.cols[o] = col as u32;
+                slab.vals[o] = original.vals[j];
+                slab.heads[o] = g.heads[j];
+                slab.tail1[o] = g.tail1[j];
+                slab.tail2[o] = g.tail2[j];
+                slab.exp_idx[o] = idx as u32;
+            }
+        }
+        slabs.push(slab);
+    }
+    EllBlocks { nrows: g.nrows, ncols: g.ncols, width, slabs }
+}
+
+impl EllBlocks {
+    /// Reference SpMV over the ELL planes, decoding GSE-SEM at `level`
+    /// with the given table — mirrors what the Pallas kernel computes,
+    /// used by the runtime parity tests.
+    pub fn spmv_decoded(&self, g: &GseCsr, x: &[f64], level: Precision) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows];
+        for slab in &self.slabs {
+            for r in 0..self.nrows {
+                let mut sum = 0.0;
+                for c in 0..self.width {
+                    let o = r * self.width + c;
+                    let parts = crate::formats::sem::SemParts {
+                        head: slab.heads[o],
+                        tail1: if level >= Precision::HeadTail1 { slab.tail1[o] } else { 0 },
+                        tail2: if level == Precision::Full { slab.tail2[o] } else { 0 },
+                        exp_idx: slab.exp_idx[o] as u16,
+                    };
+                    let v =
+                        crate::formats::sem::decode_ldexp(&parts, &g.table, &g.geom, level);
+                    sum += v * x[slab.cols[o] as usize];
+                }
+                y[r] += sum;
+            }
+        }
+        y
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.slabs.len() * self.nrows * self.width
+    }
+
+    /// Padding overhead ratio: slots / nnz.
+    pub fn padding_ratio(&self, nnz: usize) -> f64 {
+        if nnz == 0 {
+            0.0
+        } else {
+            self.total_slots() as f64 / nnz as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson::poisson2d;
+    use crate::sparse::gen::randmat::{exp_controlled, ExpLaw};
+    use crate::spmv::fp64;
+    use crate::spmv::max_abs_diff;
+    use crate::util::Prng;
+
+    #[test]
+    fn single_slab_when_width_covers_rows() {
+        let a = poisson2d(6, 6);
+        let g = GseCsr::from_csr(&a, 8);
+        let e = to_ell(&g, &a, 5);
+        assert_eq!(e.slabs.len(), 1);
+        assert_eq!(e.total_slots(), 36 * 5);
+    }
+
+    #[test]
+    fn row_splitting_spills_to_slabs() {
+        let a = poisson2d(6, 6); // max 5 nnz/row
+        let g = GseCsr::from_csr(&a, 8);
+        let e = to_ell(&g, &a, 2);
+        assert_eq!(e.slabs.len(), 3); // ceil(5/2)
+    }
+
+    #[test]
+    fn ell_spmv_matches_csr_spmv() {
+        let a = exp_controlled(40, 40, 7, ExpLaw::Gaussian { e0: 0, sigma: 3.0 }, 8);
+        let g = GseCsr::from_csr(&a, 8);
+        let mut r = Prng::new(2);
+        let x: Vec<f64> = (0..a.ncols).map(|_| r.range_f64(-1.0, 1.0)).collect();
+        for width in [3, 8, 16] {
+            let e = to_ell(&g, &a, width);
+            for lvl in Precision::LADDER {
+                let mut y_csr = vec![0.0; a.nrows];
+                g.spmv(&x, &mut y_csr, lvl);
+                let y_ell = e.spmv_decoded(&g, &x, lvl);
+                // identical decode + different summation order: allow tiny fp drift
+                let scale = y_csr.iter().fold(1.0f64, |m, &v| m.max(v.abs()));
+                assert!(
+                    max_abs_diff(&y_csr, &y_ell) <= 1e-12 * scale,
+                    "width={width} {lvl:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn padding_vals_are_zero_and_fp64_parity() {
+        let a = poisson2d(5, 5);
+        let g = GseCsr::from_csr(&a, 8);
+        let e = to_ell(&g, &a, a.max_row_nnz());
+        // fp64 plane parity: dense ELL spmv with vals plane == csr fp64 spmv
+        let x = vec![1.0; a.ncols];
+        let mut y = vec![0.0; a.nrows];
+        fp64::spmv(&a, &x, &mut y);
+        let mut y_ell = vec![0.0; a.nrows];
+        for slab in &e.slabs {
+            for r in 0..a.nrows {
+                for c in 0..e.width {
+                    let o = r * e.width + c;
+                    y_ell[r] += slab.vals[o] * x[slab.cols[o] as usize];
+                }
+            }
+        }
+        assert_eq!(y, y_ell);
+    }
+}

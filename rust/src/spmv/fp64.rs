@@ -1,0 +1,178 @@
+//! FP64 CSR SpMV — the baseline every figure normalizes against.
+//!
+//! The serial kernel mirrors CUSP's CSR-vector algorithm collapsed onto
+//! one lane; the parallel variant partitions rows into contiguous chunks
+//! of roughly equal nnz (the CPU analog of the threads-per-row decision
+//! tree the paper cites [19]).
+
+use super::SpmvOp;
+use crate::formats::ValueFormat;
+use crate::sparse::csr::Csr;
+
+/// FP64-stored CSR operator.
+pub struct Fp64Csr {
+    pub a: Csr,
+    pub threads: usize,
+}
+
+impl Fp64Csr {
+    pub fn new(a: Csr) -> Self {
+        Self { a, threads: 1 }
+    }
+
+    pub fn with_threads(a: Csr, threads: usize) -> Self {
+        Self { a, threads: threads.max(1) }
+    }
+}
+
+/// Serial FP64 SpMV: `y = A x`.
+pub fn spmv(a: &Csr, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), a.ncols);
+    debug_assert_eq!(y.len(), a.nrows);
+    for r in 0..a.nrows {
+        let (cols, vals) = a.row(r);
+        let mut sum = 0.0;
+        for (&c, &v) in cols.iter().zip(vals) {
+            sum += v * x[c as usize];
+        }
+        y[r] = sum;
+    }
+}
+
+/// Partition rows into `parts` contiguous chunks balancing nnz.
+pub fn balance_rows(a: &Csr, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1).min(a.nrows.max(1));
+    let target = a.nnz().div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for r in 0..a.nrows {
+        acc += a.rowptr[r + 1] - a.rowptr[r];
+        if acc >= target && out.len() + 1 < parts {
+            out.push(start..r + 1);
+            start = r + 1;
+            acc = 0;
+        }
+    }
+    out.push(start..a.nrows);
+    out
+}
+
+/// Chunk-parallel FP64 SpMV using scoped threads.
+pub fn spmv_par(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
+    if threads <= 1 || a.nrows < 1024 {
+        return spmv(a, x, y);
+    }
+    let chunks = balance_rows(a, threads);
+    // Split y into per-chunk mutable slices.
+    let mut slices: Vec<&mut [f64]> = Vec::with_capacity(chunks.len());
+    let mut rest = y;
+    let mut cursor = 0usize;
+    for ch in &chunks {
+        let (head, tail) = rest.split_at_mut(ch.end - cursor);
+        cursor = ch.end;
+        slices.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        for (ch, ys) in chunks.iter().zip(slices) {
+            let ch = ch.clone();
+            s.spawn(move || {
+                for (i, r) in ch.clone().enumerate() {
+                    let (cols, vals) = a.row(r);
+                    let mut sum = 0.0;
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        sum += v * x[c as usize];
+                    }
+                    ys[i] = sum;
+                }
+            });
+        }
+    });
+}
+
+impl SpmvOp for Fp64Csr {
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        spmv_par(&self.a, x, y, self.threads);
+    }
+
+    fn nrows(&self) -> usize {
+        self.a.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.a.ncols
+    }
+
+    fn format(&self) -> ValueFormat {
+        ValueFormat::Fp64
+    }
+
+    fn matrix_bytes(&self) -> usize {
+        self.a.nnz() * (8 + 4) + (self.a.nrows + 1) * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::gen::poisson::poisson2d;
+    use crate::util::Prng;
+
+    #[test]
+    fn spmv_matches_dense() {
+        let mut c = Coo::new(3, 3);
+        for (r, cc, v) in [(0, 0, 2.0), (0, 1, 1.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)] {
+            c.push(r, cc, v);
+        }
+        let a = c.to_csr();
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![0.0; 3];
+        spmv(&a, &x, &mut y);
+        assert_eq!(y, vec![4.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let a = Csr::identity(10);
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut y = vec![0.0; 10];
+        spmv(&a, &x, &mut y);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn balance_rows_covers_everything() {
+        let a = poisson2d(20, 20);
+        for parts in [1, 2, 3, 7] {
+            let ch = balance_rows(&a, parts);
+            assert_eq!(ch.len(), parts);
+            assert_eq!(ch[0].start, 0);
+            assert_eq!(ch.last().unwrap().end, a.nrows);
+            for w in ch.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let a = poisson2d(40, 40);
+        let mut rng = Prng::new(6);
+        let x: Vec<f64> = (0..a.ncols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let mut y1 = vec![0.0; a.nrows];
+        let mut y2 = vec![0.0; a.nrows];
+        spmv(&a, &x, &mut y1);
+        spmv_par(&a, &x, &mut y2, 4);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn op_trait_surface() {
+        let op = Fp64Csr::new(poisson2d(5, 5));
+        assert_eq!(op.nrows(), 25);
+        assert_eq!(op.format(), ValueFormat::Fp64);
+        assert!(op.matrix_bytes() > 25 * 12);
+    }
+}

@@ -1,0 +1,582 @@
+//! GSE-SEM sparse matrices and the paper's three-precision SpMV
+//! (§III-C, Algorithm 2).
+//!
+//! Storage layout (Fig. 3 applied to CSR):
+//! * `heads`, `tail1`, `tail2` — contiguous segmented value storage; the
+//!   head is `[sign:1][mantissa:15]` (External layout — the exponent
+//!   index does NOT live in the head for matrices).
+//! * `cols` — u32 column indexes. When the column count allows, the
+//!   exponent index is packed into the top `EI_bit` bits (`col >> 29`
+//!   for k=8, exactly Alg. 2 lines 3-5); otherwise a separate byte array
+//!   `ext_idx` carries it (§III-C1's fallback, which the paper puts in
+//!   the value array — out-of-band bytes are the CPU equivalent).
+//!
+//! The SpMV reads only the segments its precision level needs; the
+//! decode-to-FP64 conversion is the kernel-overhead the paper measures
+//! (GSE-SEM vs GSE-SEM*), so three decode strategies are provided and
+//! ablated in `benches/ablation_decode.rs`.
+
+use super::SpmvOp;
+use crate::formats::gse::GseTable;
+use crate::formats::sem::{self, SemGeometry, SemLayout};
+use crate::formats::{ieee, Precision, ValueFormat};
+use crate::sparse::csr::Csr;
+
+/// How the SpMV inner loop converts SEM words to f64.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeStrategy {
+    /// Faithful Algorithm 2: per-element bit scan for the leading one,
+    /// renormalization, IEEE bit assembly (the GPU `__fns` path).
+    BitScan,
+    /// Branch-free: reconstruct the frame integer and rescale with an
+    /// exact ldexp.
+    Ldexp,
+    /// Fastest: per-exponent-index precomputed power-of-two scale;
+    /// decode = frame × scale[idx] (one int->fp convert + one multiply).
+    ScaleLut,
+}
+
+/// A CSR matrix stored in GSE-SEM format.
+#[derive(Clone, Debug)]
+pub struct GseCsr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rowptr: Vec<usize>,
+    /// Column indexes (exponent index packed in the top bits iff
+    /// `packed`).
+    pub cols: Vec<u32>,
+    pub heads: Vec<u16>,
+    pub tail1: Vec<u16>,
+    pub tail2: Vec<u32>,
+    /// Out-of-band exponent indexes when not packed.
+    pub ext_idx: Option<Vec<u8>>,
+    pub table: GseTable,
+    pub geom: SemGeometry,
+    pub packed: bool,
+    pub strategy: DecodeStrategy,
+    /// 2^(storedExp − 1075) per table entry (ScaleLut path).
+    scales: Vec<f64>,
+    /// scale multiply is exact (scale normal & results in range)
+    scale_exact: Vec<bool>,
+}
+
+impl GseCsr {
+    /// Encode a CSR matrix with a k-entry shared exponent table
+    /// extracted from its non-zeros.
+    pub fn from_csr(a: &Csr, k: usize) -> Self {
+        let table = GseTable::from_values(&a.vals, k);
+        Self::from_csr_with_table(a, table)
+    }
+
+    /// Encode with a caller-provided table (reuse across matrices /
+    /// sampled extraction).
+    ///
+    /// Panics on structurally invalid input (unsorted rowptr or
+    /// out-of-range columns) — the hot SpMV kernels elide bounds checks
+    /// and rely on this validation.
+    pub fn from_csr_with_table(a: &Csr, table: GseTable) -> Self {
+        assert_eq!(a.rowptr.len(), a.nrows + 1);
+        assert_eq!(*a.rowptr.last().unwrap(), a.nnz());
+        assert!(a.rowptr.windows(2).all(|w| w[0] <= w[1]), "rowptr not monotone");
+        assert!(
+            a.colidx.iter().all(|&c| (c as usize) < a.ncols),
+            "column index out of range"
+        );
+        let geom = SemGeometry::new(SemLayout::External, table.ei_bit);
+        let shift = 32 - table.ei_bit;
+        let packed = (a.ncols as u64) <= (1u64 << shift);
+        let nnz = a.nnz();
+        let mut heads = Vec::with_capacity(nnz);
+        let mut tail1 = Vec::with_capacity(nnz);
+        let mut tail2 = Vec::with_capacity(nnz);
+        let mut cols = Vec::with_capacity(nnz);
+        let mut ext = if packed { None } else { Some(Vec::with_capacity(nnz)) };
+        for (&c, &v) in a.colidx.iter().zip(&a.vals) {
+            let p = sem::encode(v, &table, &geom)
+                .unwrap_or_else(|_| saturate(v, &table, &geom));
+            heads.push(p.head);
+            tail1.push(p.tail1);
+            tail2.push(p.tail2);
+            if packed {
+                cols.push(c | ((p.exp_idx as u32) << shift));
+            } else {
+                cols.push(c);
+                ext.as_mut().unwrap().push(p.exp_idx as u8);
+            }
+        }
+        let scales: Vec<f64> =
+            table.entries.iter().map(|&e| ieee::ldexp(1.0, e as i32 - 1075)).collect();
+        let scale_exact: Vec<bool> = scales
+            .iter()
+            .map(|&s| s.is_normal() && s > 0.0)
+            .collect();
+        Self {
+            nrows: a.nrows,
+            ncols: a.ncols,
+            rowptr: a.rowptr.clone(),
+            cols,
+            heads,
+            tail1,
+            tail2,
+            ext_idx: ext,
+            table,
+            geom,
+            packed,
+            strategy: DecodeStrategy::ScaleLut,
+            scales,
+            scale_exact,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn with_strategy(mut self, s: DecodeStrategy) -> Self {
+        self.strategy = s;
+        self
+    }
+
+    /// Wrap as an [`SpmvOp`] at a fixed precision level.
+    pub fn at_level(self, level: Precision) -> GseSpmv {
+        GseSpmv { m: self, level }
+    }
+
+    /// Column index and exponent index of non-zero `j`.
+    #[inline(always)]
+    pub fn col_and_idx(&self, j: usize) -> (usize, usize) {
+        if self.packed {
+            let shift = 32 - self.table.ei_bit;
+            let cw = self.cols[j];
+            (((cw << self.table.ei_bit) >> self.table.ei_bit) as usize, (cw >> shift) as usize)
+        } else {
+            (self.cols[j] as usize, self.ext_idx.as_ref().unwrap()[j] as usize)
+        }
+    }
+
+    /// Frame integer (52-bit denormalized significand prefix) of
+    /// non-zero `j` at `level`.
+    #[inline(always)]
+    fn frame(&self, j: usize, level: Precision) -> u64 {
+        let mut d = ((self.heads[j] & 0x7FFF) as u64) << self.geom.s_head;
+        if level >= Precision::HeadTail1 {
+            d |= (self.tail1[j] as u64) << self.geom.s_tail1;
+        }
+        if level == Precision::Full {
+            d |= self.tail2[j] as u64;
+        }
+        d
+    }
+
+    /// Decode non-zero `j` to f64 at `level` using `strategy`.
+    #[inline(always)]
+    pub fn decode(&self, j: usize, level: Precision) -> f64 {
+        let (_, idx) = self.col_and_idx(j);
+        self.decode_with_idx(j, idx, level)
+    }
+
+    #[inline(always)]
+    fn decode_with_idx(&self, j: usize, idx: usize, level: Precision) -> f64 {
+        match self.strategy {
+            DecodeStrategy::ScaleLut => {
+                let d = self.frame(j, level);
+                if self.scale_exact[idx] {
+                    let v = d as f64 * self.scales[idx];
+                    if self.heads[j] & 0x8000 != 0 {
+                        -v
+                    } else {
+                        v
+                    }
+                } else {
+                    self.decode_ldexp_path(j, idx, level)
+                }
+            }
+            DecodeStrategy::Ldexp => self.decode_ldexp_path(j, idx, level),
+            DecodeStrategy::BitScan => {
+                let parts = sem::SemParts {
+                    head: self.heads[j],
+                    tail1: if level >= Precision::HeadTail1 { self.tail1[j] } else { 0 },
+                    tail2: if level == Precision::Full { self.tail2[j] } else { 0 },
+                    exp_idx: idx as u16,
+                };
+                sem::decode_faithful(&parts, &self.table, &self.geom, level)
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn decode_ldexp_path(&self, j: usize, idx: usize, level: Precision) -> f64 {
+        let d = self.frame(j, level);
+        if d == 0 {
+            return 0.0;
+        }
+        let stored = self.table.stored_exp(idx) as i32;
+        let v = ieee::ldexp(d as f64, stored - 1075);
+        if self.heads[j] & 0x8000 != 0 {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Three-precision SpMV (Algorithm 2 generalized to all levels).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64], level: Precision) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        match (self.strategy, self.packed, level) {
+            // Hot paths: fully inlined packed ScaleLut kernels.
+            (DecodeStrategy::ScaleLut, true, Precision::Head) => {
+                self.spmv_head_packed_lut(x, y)
+            }
+            (DecodeStrategy::ScaleLut, true, lvl) => self.spmv_tails_packed_lut(x, y, lvl),
+            _ => self.spmv_generic(x, y, level),
+        }
+    }
+
+    /// Packed ScaleLut kernel for the head+tail1 / full levels: the
+    /// 52-bit frame is assembled from the segments and scaled by the
+    /// signed per-index power of two (same structure as the head kernel,
+    /// one u64→f64 convert instead of a u16 widen).
+    fn spmv_tails_packed_lut(&self, x: &[f64], y: &mut [f64], level: Precision) {
+        let shift = 32 - self.table.ei_bit;
+        let col_mask = (1u32 << shift) - 1;
+        if !self.scale_exact.iter().all(|&e| e) {
+            return self.spmv_generic(x, y, level);
+        }
+        let mut sscale = [0f64; 2 * 64];
+        for (i, &e) in self.table.entries.iter().enumerate() {
+            let s = ieee::ldexp(1.0, e as i32 - 1075);
+            sscale[2 * i] = s;
+            sscale[2 * i + 1] = -s;
+        }
+        let full = level == Precision::Full;
+        let (s_head, s_tail1) = (self.geom.s_head, self.geom.s_tail1);
+        let heads = &self.heads[..];
+        let tail1 = &self.tail1[..];
+        let tail2 = &self.tail2[..];
+        let cols = &self.cols[..];
+        for r in 0..self.nrows {
+            let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+            let mut sum = 0.0;
+            for j in a..b {
+                // SAFETY: validated at construction (see from_csr_with_table)
+                let (cw, h, t1) = unsafe {
+                    (*cols.get_unchecked(j), *heads.get_unchecked(j), *tail1.get_unchecked(j))
+                };
+                let mut d = (((h & 0x7FFF) as u64) << s_head) | ((t1 as u64) << s_tail1);
+                if full {
+                    d |= unsafe { *tail2.get_unchecked(j) } as u64;
+                }
+                let scale = unsafe {
+                    *sscale.get_unchecked(2 * (cw >> shift) as usize + (h >> 15) as usize)
+                };
+                let xv = unsafe { *x.get_unchecked((cw & col_mask) as usize) };
+                sum += d as f64 * scale * xv;
+            }
+            y[r] = sum;
+        }
+    }
+
+    fn spmv_generic(&self, x: &[f64], y: &mut [f64], level: Precision) {
+        for r in 0..self.nrows {
+            let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+            let mut sum = 0.0;
+            for j in a..b {
+                let (col, idx) = self.col_and_idx(j);
+                sum += self.decode_with_idx(j, idx, level) * x[col];
+            }
+            y[r] = sum;
+        }
+    }
+
+    /// Specialized kernel: packed indexes + ScaleLut + head segment only
+    /// — the configuration every headline number uses (k=8, head SpMV).
+    ///
+    /// Optimizations over the generic path (EXPERIMENTS.md §Perf):
+    /// * the frame shift `<< s_head` is folded into the per-index scale
+    ///   (`2^(stored − 1075 + s_head)`), so the int→fp convert is a
+    ///   cheap u16 widen instead of a u64;
+    /// * the sign is applied branchlessly through a (idx, sign)-indexed
+    ///   signed-scale table (±scale), removing the unpredictable branch;
+    /// * gathers are bounds-check-free (`cols`/rowptr validated at
+    ///   construction).
+    fn spmv_head_packed_lut(&self, x: &[f64], y: &mut [f64]) {
+        let shift = 32 - self.table.ei_bit;
+        let col_mask = (1u32 << shift) - 1;
+        let all_exact = self.scale_exact.iter().all(|&e| e);
+        if !all_exact {
+            return self.spmv_generic(x, y, Precision::Head);
+        }
+        // signed, shift-folded scale table: [idx*2 + sign]
+        let mut sscale = [0f64; 2 * 64];
+        for (i, &e) in self.table.entries.iter().enumerate() {
+            let s = ieee::ldexp(1.0, e as i32 - 1075 + self.geom.s_head as i32);
+            sscale[2 * i] = s;
+            sscale[2 * i + 1] = -s;
+        }
+        let heads = &self.heads[..];
+        let cols = &self.cols[..];
+        for r in 0..self.nrows {
+            let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+            let mut sum = 0.0;
+            for j in a..b {
+                // SAFETY: rowptr/cols validated against heads len and
+                // ncols at construction (from_csr over a validated Csr).
+                let (cw, h) = unsafe { (*cols.get_unchecked(j), *heads.get_unchecked(j)) };
+                let mant = (h & 0x7FFF) as f64;
+                let scale = unsafe {
+                    *sscale.get_unchecked(2 * (cw >> shift) as usize + (h >> 15) as usize)
+                };
+                let xv = unsafe { *x.get_unchecked((cw & col_mask) as usize) };
+                sum += mant * scale * xv;
+            }
+            y[r] = sum;
+        }
+    }
+
+    /// Materialize the decoded matrix at a level (tests / analyses).
+    pub fn decode_csr(&self, level: Precision) -> Csr {
+        let vals: Vec<f64> = (0..self.nnz()).map(|j| self.decode(j, level)).collect();
+        let cols: Vec<u32> = (0..self.nnz()).map(|j| self.col_and_idx(j).0 as u32).collect();
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            rowptr: self.rowptr.clone(),
+            colidx: cols,
+            vals,
+        }
+    }
+
+    /// Max |A_orig − A_level| over stored entries.
+    pub fn max_abs_error(&self, original: &Csr, level: Precision) -> f64 {
+        debug_assert_eq!(original.nnz(), self.nnz());
+        original
+            .vals
+            .iter()
+            .enumerate()
+            .map(|(j, &v)| (v - self.decode(j, level)).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Matrix bytes read per SpMV at `level` (the traffic model input).
+    pub fn bytes_at(&self, level: Precision) -> usize {
+        let idx_bytes = if self.packed { 0 } else { self.nnz() };
+        self.nnz() * (4 + level.bytes_per_value())
+            + idx_bytes
+            + (self.nrows + 1) * 8
+            + self.table.len() * 4
+    }
+}
+
+/// Clamp out-of-table values to the largest shared binade (same policy
+/// as `SemVector`).
+fn saturate(x: f64, table: &GseTable, geom: &SemGeometry) -> sem::SemParts {
+    let (bi, _) = table
+        .entries
+        .iter()
+        .enumerate()
+        .map(|(i, &e)| (i, e))
+        .max_by_key(|&(_, e)| e)
+        .unwrap();
+    let stored = table.stored_exp(bi);
+    let max_val = ieee::ldexp(((1u64 << 52) - 1) as f64, stored as i32 - 1075);
+    let v = if x.is_nan() { 0.0 } else { max_val.copysign(x) };
+    sem::encode(v, table, geom).expect("saturated value must encode")
+}
+
+/// [`SpmvOp`] adapter fixing the precision level.
+#[derive(Clone)]
+pub struct GseSpmv {
+    pub m: GseCsr,
+    pub level: Precision,
+}
+
+impl SpmvOp for GseSpmv {
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.m.spmv(x, y, self.level);
+    }
+
+    fn nrows(&self) -> usize {
+        self.m.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.m.ncols
+    }
+
+    fn format(&self) -> ValueFormat {
+        ValueFormat::GseSem(self.level)
+    }
+
+    fn matrix_bytes(&self) -> usize {
+        self.m.bytes_at(self.level)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson::poisson2d;
+    use crate::sparse::gen::randmat::{exp_controlled, ExpLaw};
+    use crate::spmv::{fp64, max_abs_diff};
+    use crate::util::quickcheck;
+    use crate::util::Prng;
+
+    fn rand_x(n: usize, seed: u64) -> Vec<f64> {
+        let mut r = Prng::new(seed);
+        (0..n).map(|_| r.range_f64(-2.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn exact_on_poisson_all_levels_all_strategies() {
+        let a = poisson2d(12, 12);
+        let x = rand_x(a.ncols, 1);
+        let mut y64 = vec![0.0; a.nrows];
+        fp64::spmv(&a, &x, &mut y64);
+        for strat in [DecodeStrategy::BitScan, DecodeStrategy::Ldexp, DecodeStrategy::ScaleLut] {
+            let g = GseCsr::from_csr(&a, 8).with_strategy(strat);
+            for lvl in Precision::LADDER {
+                let mut y = vec![0.0; a.nrows];
+                g.spmv(&x, &mut y, lvl);
+                assert_eq!(max_abs_diff(&y64, &y), 0.0, "{strat:?} {lvl:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_bit_layout_matches_paper_alg2() {
+        // k=8 -> EI_bit=3 -> expIdx = col >> 29, col &= MAX_29
+        let a = exp_controlled(50, 50, 5, ExpLaw::Zipf { e0: 0, count: 10, s: 1.0 }, 2);
+        let g = GseCsr::from_csr(&a, 8);
+        assert!(g.packed);
+        assert_eq!(g.table.ei_bit, 3);
+        for j in 0..g.nnz() {
+            let cw = g.cols[j];
+            let (col, idx) = g.col_and_idx(j);
+            assert_eq!(idx, (cw >> 29) as usize);
+            assert_eq!(col, (cw & ((1 << 29) - 1)) as usize);
+            assert_eq!(col as u32, a.colidx[j]);
+            assert!(idx < g.table.len());
+        }
+    }
+
+    #[test]
+    fn unpacked_fallback_when_columns_huge() {
+        // Force the fallback by constructing a matrix with huge ncols.
+        let mut a = poisson2d(4, 4);
+        a.ncols = (1 << 31) + 1; // exceeds 2^(32-ei_bit) for every ei_bit
+        let g = GseCsr::from_csr(&a, 8);
+        assert!(!g.packed);
+        assert!(g.ext_idx.is_some());
+        // decode parity instead of spmv (an x of 2^30 doubles would be absurd)
+        let d = g.decode_csr(Precision::Full);
+        for (j, &v) in a.vals.iter().enumerate() {
+            assert_eq!(d.vals[j], v);
+        }
+    }
+
+    #[test]
+    fn strategies_agree_bitwise() {
+        quickcheck::check(
+            77,
+            60,
+            |r| {
+                let n = 10 + r.below(40);
+                let law = match r.below(3) {
+                    0 => ExpLaw::Zipf { e0: -6, count: 16, s: 1.2 },
+                    1 => ExpLaw::Gaussian { e0: 2, sigma: 5.0 },
+                    _ => ExpLaw::Bimodal { e0: -3, gap: 9, p: 0.8 },
+                };
+                let k = [2usize, 4, 8, 16, 32, 64][r.below(6)];
+                (exp_controlled(n, n, 4, law, r.next_u64()), k)
+            },
+            |(a, k)| {
+                let x = rand_x(a.ncols, 5);
+                let base = GseCsr::from_csr(a, *k);
+                for lvl in Precision::LADDER {
+                    let mut ys: Vec<Vec<f64>> = Vec::new();
+                    for strat in
+                        [DecodeStrategy::BitScan, DecodeStrategy::Ldexp, DecodeStrategy::ScaleLut]
+                    {
+                        let g = base.clone().with_strategy(strat);
+                        let mut y = vec![0.0; a.nrows];
+                        g.spmv(&x, &mut y, lvl);
+                        ys.push(y);
+                    }
+                    for y in &ys[1..] {
+                        if ys[0] != *y {
+                            return Err(format!("strategy mismatch at {lvl:?}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn error_decreases_with_level_and_k() {
+        let a = exp_controlled(200, 200, 6, ExpLaw::Gaussian { e0: 0, sigma: 4.0 }, 3);
+        let x = vec![1.0; a.ncols]; // paper sets x = 1 to observe errors
+        let mut y64 = vec![0.0; a.nrows];
+        fp64::spmv(&a, &x, &mut y64);
+        let errs_k: Vec<f64> = [2usize, 8, 64]
+            .iter()
+            .map(|&k| {
+                let g = GseCsr::from_csr(&a, k);
+                let mut y = vec![0.0; a.nrows];
+                g.spmv(&x, &mut y, Precision::Head);
+                max_abs_diff(&y64, &y)
+            })
+            .collect();
+        assert!(errs_k[0] >= errs_k[1] && errs_k[1] >= errs_k[2], "{errs_k:?}");
+
+        let g = GseCsr::from_csr(&a, 8);
+        let levels: Vec<f64> = Precision::LADDER
+            .iter()
+            .map(|&lvl| {
+                let mut y = vec![0.0; a.nrows];
+                g.spmv(&x, &mut y, lvl);
+                max_abs_diff(&y64, &y)
+            })
+            .collect();
+        assert!(levels[0] >= levels[1] && levels[1] >= levels[2], "{levels:?}");
+        assert!(levels[2] < levels[0]);
+    }
+
+    #[test]
+    fn bytes_at_accounts_segments() {
+        let a = poisson2d(10, 10);
+        let g = GseCsr::from_csr(&a, 8);
+        let h = g.bytes_at(Precision::Head);
+        let t1 = g.bytes_at(Precision::HeadTail1);
+        let f = g.bytes_at(Precision::Full);
+        assert_eq!(t1 - h, g.nnz() * 2);
+        assert_eq!(f - t1, g.nnz() * 4);
+    }
+
+    #[test]
+    fn decode_csr_error_bounds() {
+        let a = exp_controlled(100, 100, 5, ExpLaw::Zipf { e0: -2, count: 8, s: 1.5 }, 9);
+        let g = GseCsr::from_csr(&a, 8);
+        // head: 15 mantissa bits minus denormalization loss; full: near-lossless
+        let e_full = g.max_abs_error(&a, Precision::Full);
+        let e_head = g.max_abs_error(&a, Precision::Head);
+        let amax = a.vals.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        assert!(e_full <= amax * 2f64.powi(-44), "full err {e_full}");
+        assert!(e_head <= amax * 2f64.powi(-4), "head err {e_head}");
+        assert!(e_head > e_full);
+    }
+
+    #[test]
+    fn spmv_op_adapter() {
+        let a = poisson2d(6, 6);
+        let op = GseCsr::from_csr(&a, 8).at_level(Precision::Head);
+        assert_eq!(op.format(), ValueFormat::GseSem(Precision::Head));
+        assert_eq!(op.nrows(), 36);
+        let x = vec![1.0; 36];
+        let mut y = vec![0.0; 36];
+        op.apply(&x, &mut y);
+        assert!(y.iter().any(|&v| v != 0.0));
+    }
+}

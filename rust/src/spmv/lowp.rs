@@ -1,0 +1,177 @@
+//! Low-precision-stored SpMV baselines (FP16-SpMV / BF16-SpMV / FP32):
+//! "all non-zero elements are stored and loaded in FP16 or BF16 format,
+//! then converted to FP64 and multiplied by the double-precision vector.
+//! All intermediate results are accumulated in double precision" (§IV-C).
+
+use super::SpmvOp;
+use crate::formats::{Bf16, Fp16, ValueFormat};
+use crate::sparse::csr::Csr;
+
+/// A value type that can stand in for the matrix values of an SpMV.
+pub trait StoredValue: Copy + Send + Sync + 'static {
+    const FORMAT: ValueFormat;
+    const BYTES: usize;
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+impl StoredValue for Fp16 {
+    const FORMAT: ValueFormat = ValueFormat::Fp16;
+    const BYTES: usize = 2;
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        Fp16::from_f64(x)
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        Fp16::to_f64(self)
+    }
+}
+
+impl StoredValue for Bf16 {
+    const FORMAT: ValueFormat = ValueFormat::Bf16;
+    const BYTES: usize = 2;
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        Bf16::from_f64(x)
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        Bf16::to_f64(self)
+    }
+}
+
+impl StoredValue for f32 {
+    const FORMAT: ValueFormat = ValueFormat::Fp32;
+    const BYTES: usize = 4;
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+/// CSR matrix whose values are stored in a reduced-precision format.
+pub struct LowpCsr<T: StoredValue> {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rowptr: Vec<usize>,
+    pub colidx: Vec<u32>,
+    pub vals: Vec<T>,
+    /// true if any finite value overflowed to ±Inf in conversion (the
+    /// paper's "/" rows in Tables III/IV)
+    pub overflowed: bool,
+}
+
+impl<T: StoredValue> LowpCsr<T> {
+    pub fn from_csr(a: &Csr) -> Self {
+        let vals: Vec<T> = a.vals.iter().map(|&v| T::from_f64(v)).collect();
+        let overflowed = a
+            .vals
+            .iter()
+            .zip(&vals)
+            .any(|(&orig, lv)| orig.is_finite() && !lv.to_f64().is_finite());
+        Self {
+            nrows: a.nrows,
+            ncols: a.ncols,
+            rowptr: a.rowptr.clone(),
+            colidx: a.colidx.clone(),
+            vals,
+            overflowed,
+        }
+    }
+
+    /// Serial SpMV with f64 accumulation.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        for r in 0..self.nrows {
+            let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+            let mut sum = 0.0;
+            for k in a..b {
+                sum += self.vals[k].to_f64() * x[self.colidx[k] as usize];
+            }
+            y[r] = sum;
+        }
+    }
+}
+
+impl<T: StoredValue> SpmvOp for LowpCsr<T> {
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv(x, y);
+    }
+
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    fn format(&self) -> ValueFormat {
+        T::FORMAT
+    }
+
+    fn matrix_bytes(&self) -> usize {
+        self.vals.len() * (T::BYTES + 4) + (self.nrows + 1) * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson::poisson2d;
+    use crate::sparse::gen::randmat::{exp_controlled, ExpLaw};
+    use crate::spmv::fp64;
+    use crate::util::Prng;
+
+    #[test]
+    fn exact_on_representable_values() {
+        let a = poisson2d(10, 10);
+        let mut rng = Prng::new(9);
+        let x: Vec<f64> = (0..a.ncols).map(|_| (rng.below(64) as f64) - 32.0).collect();
+        let mut y64 = vec![0.0; a.nrows];
+        fp64::spmv(&a, &x, &mut y64);
+        let h = LowpCsr::<Fp16>::from_csr(&a);
+        let b = LowpCsr::<Bf16>::from_csr(&a);
+        let s = LowpCsr::<f32>::from_csr(&a);
+        for op in [&h as &dyn SpmvOp, &b, &s] {
+            let mut y = vec![0.0; a.nrows];
+            op.apply(&x, &mut y);
+            assert_eq!(y, y64, "{:?}", op.format());
+        }
+    }
+
+    #[test]
+    fn error_ordering_fp16_worst() {
+        // wide-magnitude values: fp16 error >= bf16 storage has fewer
+        // mantissa bits but fp16 saturates range; use in-range values so
+        // pure mantissa precision shows: bf16 (8 bits) < fp16 (11 bits).
+        let a = exp_controlled(100, 100, 6, ExpLaw::Gaussian { e0: 0, sigma: 2.0 }, 10);
+        let x = vec![1.0; 100];
+        let mut y64 = vec![0.0; 100];
+        fp64::spmv(&a, &x, &mut y64);
+        let mut yh = vec![0.0; 100];
+        LowpCsr::<Fp16>::from_csr(&a).spmv(&x, &mut yh);
+        let mut yb = vec![0.0; 100];
+        LowpCsr::<Bf16>::from_csr(&a).spmv(&x, &mut yb);
+        let eh = crate::spmv::max_abs_diff(&y64, &yh);
+        let eb = crate::spmv::max_abs_diff(&y64, &yb);
+        // fp16 has 11-bit mantissa vs bf16's 8: fp16 closer in-range
+        assert!(eh < eb, "fp16 err {eh} vs bf16 err {eb}");
+        assert!(eh > 0.0);
+    }
+
+    #[test]
+    fn overflow_flag_set() {
+        let mut a = poisson2d(3, 3);
+        a.vals[0] = 1e10; // overflows fp16, fine in bf16
+        assert!(LowpCsr::<Fp16>::from_csr(&a).overflowed);
+        assert!(!LowpCsr::<Bf16>::from_csr(&a).overflowed);
+        assert!(!LowpCsr::<f32>::from_csr(&a).overflowed);
+    }
+}

@@ -1,0 +1,88 @@
+//! SpMV operators over every storage format the paper compares
+//! (§III-C, §IV-C):
+//!
+//! * [`fp64`] — the FP64 baseline (CUSP CSR-vector analog), serial and
+//!   chunk-parallel.
+//! * [`lowp`] — FP32 / FP16 / BF16-stored SpMV: values live in the low
+//!   precision format, are widened to f64 on load, and all arithmetic is
+//!   f64 (exactly the paper's baseline kernels).
+//! * [`gse`] — the GSE-SEM CSR matrix and its three-precision SpMV
+//!   (Algorithm 2), with the exponent index packed into column-index
+//!   high bits or an out-of-band array (§III-C1).
+//! * [`ell`] — padded-ELL blocks, the static-shape view consumed by the
+//!   Pallas kernel (L1) and its parity tests.
+//! * [`traffic`] — the memory-traffic/roofline model that translates
+//!   bytes-moved into modeled V100 kernel time (DESIGN.md §5).
+
+pub mod fp64;
+pub mod lowp;
+pub mod gse;
+pub mod ell;
+pub mod msplit;
+pub mod traffic;
+
+pub use gse::{DecodeStrategy, GseCsr};
+pub use lowp::LowpCsr;
+
+use crate::formats::{Precision, ValueFormat};
+use crate::sparse::csr::Csr;
+
+/// A type-erased "y = A·x" operator — what the solvers are generic over.
+pub trait SpmvOp: Sync {
+    /// `y` must have length `nrows`; `x` length `ncols`.
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+    /// Storage format (for traffic accounting / labels).
+    fn format(&self) -> ValueFormat;
+    /// Bytes read from matrix storage per apply (traffic model input).
+    fn matrix_bytes(&self) -> usize;
+}
+
+/// Build the paper's full comparison set of operators for one matrix.
+/// `k` is the shared-exponent count for the GSE-SEM entries.
+pub fn build_operators(a: &Csr, k: usize) -> Vec<Box<dyn SpmvOp>> {
+    let gse = GseCsr::from_csr(a, k);
+    vec![
+        Box::new(fp64::Fp64Csr::new(a.clone())),
+        Box::new(LowpCsr::<crate::formats::Fp16>::from_csr(a)),
+        Box::new(LowpCsr::<crate::formats::Bf16>::from_csr(a)),
+        Box::new(gse.clone().at_level(Precision::Head)),
+        Box::new(gse.clone().at_level(Precision::HeadTail1)),
+        Box::new(gse.at_level(Precision::Full)),
+    ]
+}
+
+/// Maximum absolute difference between two result vectors — the error
+/// metric of Fig. 4(b)/6(b).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson::poisson2d;
+
+    #[test]
+    fn operator_set_is_consistent() {
+        let a = poisson2d(8, 8);
+        let ops = build_operators(&a, 8);
+        assert_eq!(ops.len(), 6);
+        let x = vec![1.0; a.ncols];
+        let mut y0 = vec![0.0; a.nrows];
+        ops[0].apply(&x, &mut y0);
+        for op in &ops[1..] {
+            let mut y = vec![0.0; a.nrows];
+            op.apply(&x, &mut y);
+            // Poisson values are exactly representable in every format.
+            assert_eq!(max_abs_diff(&y0, &y), 0.0, "{}", op.format().label());
+        }
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! SpMV over the mantissa-segmentation format of Grützmacher et al.
+//! [17] (DESIGN.md / paper §V-A) — head = top 32 bits of each FP64
+//! non-zero, tail = low 32 bits. The related-work baseline the
+//! `ablation_msplit` bench compares against GSE-SEM: no shared-exponent
+//! table and 20 head mantissa bits, but twice the head traffic.
+
+use super::SpmvOp;
+use crate::formats::msplit::{join, split, SplitLevel};
+use crate::formats::{Precision, ValueFormat};
+use crate::sparse::csr::Csr;
+
+/// CSR matrix stored as 32-bit head/tail planes.
+#[derive(Clone, Debug)]
+pub struct SplitCsr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rowptr: Vec<usize>,
+    pub colidx: Vec<u32>,
+    pub head: Vec<u32>,
+    pub tail: Vec<u32>,
+}
+
+impl SplitCsr {
+    pub fn from_csr(a: &Csr) -> Self {
+        let mut head = Vec::with_capacity(a.nnz());
+        let mut tail = Vec::with_capacity(a.nnz());
+        for &v in &a.vals {
+            let (h, t) = split(v);
+            head.push(h);
+            tail.push(t);
+        }
+        Self {
+            nrows: a.nrows,
+            ncols: a.ncols,
+            rowptr: a.rowptr.clone(),
+            colidx: a.colidx.clone(),
+            head,
+            tail,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.head.len()
+    }
+
+    /// Two-precision SpMV: head-only reads 4 B/nnz, full reads 8 B/nnz.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64], level: SplitLevel) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        match level {
+            SplitLevel::Head => {
+                for r in 0..self.nrows {
+                    let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+                    let mut sum = 0.0;
+                    for j in a..b {
+                        let v = f64::from_bits((self.head[j] as u64) << 32);
+                        sum += v * x[self.colidx[j] as usize];
+                    }
+                    y[r] = sum;
+                }
+            }
+            SplitLevel::Full => {
+                for r in 0..self.nrows {
+                    let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+                    let mut sum = 0.0;
+                    for j in a..b {
+                        let v = join(self.head[j], self.tail[j], SplitLevel::Full);
+                        sum += v * x[self.colidx[j] as usize];
+                    }
+                    y[r] = sum;
+                }
+            }
+        }
+    }
+
+    pub fn bytes_at(&self, level: SplitLevel) -> usize {
+        self.nnz() * (4 + level.bytes_per_value()) + (self.nrows + 1) * 8
+    }
+
+    /// Wrap as an [`SpmvOp`] at a fixed level.
+    pub fn at_level(self, level: SplitLevel) -> SplitSpmv {
+        SplitSpmv { m: self, level }
+    }
+}
+
+/// [`SpmvOp`] adapter. `format()` reports the closest `ValueFormat`
+/// analog for labeling (FP32-sized head reads / FP64 full reads).
+pub struct SplitSpmv {
+    pub m: SplitCsr,
+    pub level: SplitLevel,
+}
+
+impl SpmvOp for SplitSpmv {
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.m.spmv(x, y, self.level);
+    }
+
+    fn nrows(&self) -> usize {
+        self.m.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.m.ncols
+    }
+
+    fn format(&self) -> ValueFormat {
+        match self.level {
+            SplitLevel::Head => ValueFormat::Fp32,
+            SplitLevel::Full => ValueFormat::Fp64,
+        }
+    }
+
+    fn matrix_bytes(&self) -> usize {
+        self.m.bytes_at(self.level)
+    }
+}
+
+/// Equivalent GSE-SEM precision by traffic (for apples-to-apples rows in
+/// the ablation): split head (4 B) ≈ GSE head+tail1 (4 B).
+pub fn traffic_equivalent_gse_level(level: SplitLevel) -> Precision {
+    match level {
+        SplitLevel::Head => Precision::HeadTail1,
+        SplitLevel::Full => Precision::Full,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson::poisson2d;
+    use crate::sparse::gen::randmat::{exp_controlled, ExpLaw};
+    use crate::spmv::{fp64, max_abs_diff};
+
+    #[test]
+    fn full_level_is_bit_exact() {
+        let a = exp_controlled(50, 50, 5, ExpLaw::Gaussian { e0: 0, sigma: 6.0 }, 7);
+        let s = SplitCsr::from_csr(&a);
+        let x = vec![1.0; 50];
+        let mut y64 = vec![0.0; 50];
+        fp64::spmv(&a, &x, &mut y64);
+        let mut y = vec![0.0; 50];
+        s.spmv(&x, &mut y, SplitLevel::Full);
+        assert_eq!(y, y64);
+    }
+
+    #[test]
+    fn head_error_bounded_by_20_bits() {
+        let a = exp_controlled(80, 80, 6, ExpLaw::Zipf { e0: -4, count: 12, s: 1.0 }, 9);
+        let s = SplitCsr::from_csr(&a);
+        let x = vec![1.0; 80];
+        let mut y64 = vec![0.0; 80];
+        fp64::spmv(&a, &x, &mut y64);
+        let mut y = vec![0.0; 80];
+        s.spmv(&x, &mut y, SplitLevel::Head);
+        let err = max_abs_diff(&y64, &y);
+        let scale: f64 = y64.iter().fold(0.0, |m, v| m.max(v.abs()));
+        // each term truncated at 2^-20 relative; row sums accumulate
+        assert!(err <= scale.max(1.0) * 6.0 * 2f64.powi(-20) * 10.0, "err={err}");
+        assert!(err > 0.0);
+    }
+
+    #[test]
+    fn exact_on_poisson_head() {
+        // {4, -1} need 3 mantissa bits: head-exact
+        let a = poisson2d(8, 8);
+        let s = SplitCsr::from_csr(&a);
+        let x = vec![1.0; 64];
+        let mut y64 = vec![0.0; 64];
+        fp64::spmv(&a, &x, &mut y64);
+        let mut y = vec![0.0; 64];
+        s.spmv(&x, &mut y, SplitLevel::Head);
+        assert_eq!(y, y64);
+    }
+
+    #[test]
+    fn op_adapter_and_traffic() {
+        let a = poisson2d(6, 6);
+        let s = SplitCsr::from_csr(&a);
+        assert_eq!(s.bytes_at(SplitLevel::Full) - s.bytes_at(SplitLevel::Head), a.nnz() * 4);
+        let op = s.at_level(SplitLevel::Head);
+        assert_eq!(op.nrows(), 36);
+    }
+}

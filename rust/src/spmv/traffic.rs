@@ -1,0 +1,160 @@
+//! Memory-traffic / roofline model (DESIGN.md §5 substitution).
+//!
+//! The paper's SpMV numbers come from a V100 (898 GB/s HBM2). SpMV is
+//! memory-bound on both the V100 and this CPU, so the *shape* of every
+//! speedup figure is a traffic ratio modulated by decode overhead. This
+//! model converts bytes-moved into modeled kernel time so benches can
+//! report the paper's setting alongside measured CPU time:
+//!
+//! `t_model = bytes / BW + nnz · decode_ns(format)`
+//!
+//! with the decode cost per non-zero calibrated from the GPU ratios the
+//! paper reports (GSE-SEM slower than FP16/BF16 "because they have
+//! almost the same memory access overhead [but] higher kernel execution
+//! overhead", §IV-C).
+
+use crate::formats::{Precision, ValueFormat};
+use crate::sparse::csr::Csr;
+
+/// Device model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    /// main-memory bandwidth in bytes/s
+    pub bw: f64,
+    /// extra per-nonzero decode cost (seconds) for GSE-SEM conversion
+    pub gse_decode_ns: f64,
+    /// per-nonzero cost of the trivial FP16/BF16->FP64 widening
+    pub widen_ns: f64,
+}
+
+/// The paper's evaluation device (Table I). The decode/widen costs are
+/// calibrated so the modeled format ordering and speedup magnitudes
+/// match §IV-C: GSE-SEM(head) ≈ 1.2–1.4× over FP64 (Fig. 5 peak at k=8),
+/// FP16/BF16 strictly faster kernels than GSE-SEM (Fig. 6a) because the
+/// widening conversion is much cheaper than the SEM renormalization.
+pub const V100: Device =
+    Device { name: "V100-SXM2", bw: 898e9, gse_decode_ns: 0.0022, widen_ns: 0.0005 };
+
+impl Device {
+    /// Bytes moved by one SpMV for a matrix stored in `fmt`.
+    /// Counts matrix values + column indexes + rowptr + input gather +
+    /// output write (input gather modeled as one 8-byte load per nnz,
+    /// the worst case the CSR-vector kernel approaches for scattered
+    /// columns; caches only improve both sides equally).
+    pub fn spmv_bytes(&self, nnz: usize, nrows: usize, fmt: ValueFormat) -> f64 {
+        let value_bytes = fmt.bytes_per_value();
+        let gse_table = match fmt {
+            ValueFormat::GseSem(_) => 64 * 4,
+            _ => 0,
+        };
+        (nnz * (value_bytes + 4 + 8) + (nrows + 1) * 8 + nrows * 8 + gse_table) as f64
+    }
+
+    /// Modeled kernel time for one SpMV.
+    pub fn spmv_time(&self, nnz: usize, nrows: usize, fmt: ValueFormat) -> f64 {
+        let mem = self.spmv_bytes(nnz, nrows, fmt) / self.bw;
+        let decode = match fmt {
+            ValueFormat::GseSem(_) => nnz as f64 * self.gse_decode_ns * 1e-9,
+            ValueFormat::Fp16 | ValueFormat::Bf16 | ValueFormat::Fp32 => {
+                nnz as f64 * self.widen_ns * 1e-9
+            }
+            ValueFormat::Fp64 => 0.0,
+        };
+        mem + decode
+    }
+
+    /// Modeled speedup of `fmt` over FP64 storage.
+    pub fn speedup_vs_fp64(&self, a: &Csr, fmt: ValueFormat) -> f64 {
+        self.spmv_time(a.nnz(), a.nrows, ValueFormat::Fp64)
+            / self.spmv_time(a.nnz(), a.nrows, fmt)
+    }
+
+    /// Modeled GFLOPS (2 flops per nnz, the paper's Fig. 6(a) metric).
+    pub fn spmv_gflops(&self, a: &Csr, fmt: ValueFormat) -> f64 {
+        2.0 * a.nnz() as f64 / self.spmv_time(a.nnz(), a.nrows, fmt) / 1e9
+    }
+}
+
+/// Extra shared-exponent traffic for a k-entry table per SpMV — used by
+/// the Fig. 4/5 "speedup first rises then falls with k" explanation
+/// (shared-memory staging + register loads on the GPU).
+pub fn k_overhead_time(dev: &Device, k: usize, nnz: usize) -> f64 {
+    // staging cost ~ k, per-nnz register pressure cost grows mildly with k
+    let staging = k as f64 * 16.0 / dev.bw;
+    let per_nnz = (k as f64).log2().max(0.0) * 2e-13;
+    staging + nnz as f64 * per_nnz
+}
+
+/// Modeled GSE-SEM(head) time at a given k, including the k-dependent
+/// cost and the miss-ratio-dependent bit-scan cost: values whose
+/// exponent is NOT an exact table hit pay a longer renormalization path
+/// (Alg. 2's "finding cost is relatively low" fast path discussion).
+pub fn gse_head_time_at_k(
+    dev: &Device,
+    a: &Csr,
+    k: usize,
+    exact_hit_ratio: f64,
+) -> f64 {
+    let base = dev.spmv_time(a.nnz(), a.nrows, ValueFormat::GseSem(Precision::Head));
+    let miss = (1.0 - exact_hit_ratio).max(0.0);
+    base + k_overhead_time(dev, k, a.nnz()) + a.nnz() as f64 * miss * 0.004e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson::poisson2d;
+
+    #[test]
+    fn fp64_moves_most_bytes() {
+        let d = V100;
+        let b64 = d.spmv_bytes(1000, 100, ValueFormat::Fp64);
+        let bh = d.spmv_bytes(1000, 100, ValueFormat::GseSem(Precision::Head));
+        let bf = d.spmv_bytes(1000, 100, ValueFormat::Fp16);
+        assert!(b64 > bh && bh > bf - 300.0);
+        assert!((b64 - bh) as f64 >= 1000.0 * 6.0 - 300.0);
+    }
+
+    #[test]
+    fn modeled_ordering_matches_paper() {
+        // Fig. 6: FP16/BF16 fastest, GSE-SEM(head) next, FP64 slowest.
+        let a = poisson2d(64, 64);
+        let d = V100;
+        let t16 = d.spmv_time(a.nnz(), a.nrows, ValueFormat::Fp16);
+        let tg = d.spmv_time(a.nnz(), a.nrows, ValueFormat::GseSem(Precision::Head));
+        let t64 = d.spmv_time(a.nnz(), a.nrows, ValueFormat::Fp64);
+        assert!(t16 < tg && tg < t64, "{t16} {tg} {t64}");
+        // and the speedup over fp64 is > 1 (paper: avg 1.1-1.4x)
+        let s = d.speedup_vs_fp64(&a, ValueFormat::GseSem(Precision::Head));
+        assert!(s > 1.0 && s < 2.0, "s={s}");
+    }
+
+    #[test]
+    fn k_sweep_has_interior_optimum() {
+        // Fig. 5: speedup rises then falls with k. With a fixed hit-ratio
+        // improvement schedule the model must produce an interior max.
+        let a = poisson2d(96, 96);
+        let d = V100;
+        // mimic a matrix where hit ratio saturates by k=8
+        let hit = |k: usize| (1.0 - 0.5 / k as f64).min(1.0);
+        let times: Vec<f64> =
+            [2usize, 4, 8, 16, 32, 64].iter().map(|&k| gse_head_time_at_k(&d, &a, k, hit(k))).collect();
+        let best = times
+            .iter()
+            .enumerate()
+            .min_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(best > 0 && best < 5, "best index {best}, times {times:?}");
+    }
+
+    #[test]
+    fn gflops_metric_consistent() {
+        let a = poisson2d(32, 32);
+        let g64 = V100.spmv_gflops(&a, ValueFormat::Fp64);
+        let gh = V100.spmv_gflops(&a, ValueFormat::GseSem(Precision::Head));
+        assert!(gh > g64);
+        assert!(g64 > 1.0); // V100-scale numbers, not CPU-scale
+    }
+}

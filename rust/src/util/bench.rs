@@ -1,0 +1,183 @@
+//! Minimal benchmark harness (criterion substitute — see DESIGN.md §5).
+//!
+//! Each `[[bench]]` target with `harness = false` builds a `BenchSuite`,
+//! registers closures, and calls `run()`. The harness does warmup, picks
+//! an iteration count targeting a fixed measurement window, and reports
+//! median / p5 / p95 wall time. Results can also be dumped as CSV into
+//! `results/` so EXPERIMENTS.md can reference them.
+
+use super::stats::{median, percentile};
+use super::timer::Timer;
+
+/// One measured sample set for a named benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration: median, p5, p95.
+    pub median_s: f64,
+    pub p5_s: f64,
+    pub p95_s: f64,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+}
+
+/// Options controlling the measurement loop.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// Warmup time budget in seconds.
+    pub warmup_s: f64,
+    /// Measurement time budget in seconds.
+    pub measure_s: f64,
+    /// Number of samples to split the measurement budget into.
+    pub samples: usize,
+    /// Hard cap on iterations per sample (for very fast bodies).
+    pub max_iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { warmup_s: 0.3, measure_s: 1.0, samples: 12, max_iters: 1 << 22 }
+    }
+}
+
+/// Fast-mode override used by CI / `make test`: honors GSEM_BENCH_FAST to
+/// shrink budgets so every bench binary still exercises its full code
+/// path quickly.
+pub fn default_opts() -> BenchOpts {
+    if std::env::var("GSEM_BENCH_FAST").is_ok() {
+        BenchOpts { warmup_s: 0.02, measure_s: 0.08, samples: 4, max_iters: 1 << 18 }
+    } else {
+        BenchOpts::default()
+    }
+}
+
+/// Measure a closure under the given options. The closure should return
+/// some value dependent on its work; it is passed through `black_box` to
+/// keep the optimizer honest.
+pub fn measure<T>(opts: &BenchOpts, mut body: impl FnMut() -> T) -> (f64, f64, f64, usize, usize) {
+    // Warmup + calibration: figure out iterations per sample.
+    let t = Timer::start();
+    let mut calib_iters = 0usize;
+    while t.elapsed_s() < opts.warmup_s {
+        std::hint::black_box(body());
+        calib_iters += 1;
+        if calib_iters >= opts.max_iters {
+            break;
+        }
+    }
+    let per_iter = (t.elapsed_s() / calib_iters.max(1) as f64).max(1e-9);
+    let budget_per_sample = opts.measure_s / opts.samples as f64;
+    let iters = ((budget_per_sample / per_iter).ceil() as usize).clamp(1, opts.max_iters);
+
+    let mut samples = Vec::with_capacity(opts.samples);
+    for _ in 0..opts.samples {
+        let st = Timer::start();
+        for _ in 0..iters {
+            std::hint::black_box(body());
+        }
+        samples.push(st.elapsed_s() / iters as f64);
+    }
+    (
+        median(&samples),
+        percentile(&samples, 5.0),
+        percentile(&samples, 95.0),
+        opts.samples,
+        iters,
+    )
+}
+
+/// Named collection of benchmarks with shared options.
+pub struct BenchSuite {
+    pub title: String,
+    pub opts: BenchOpts,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), opts: default_opts(), results: Vec::new() }
+    }
+
+    /// Run one benchmark and record + print its result.
+    pub fn bench<T>(&mut self, name: &str, body: impl FnMut() -> T) -> BenchResult {
+        let (med, p5, p95, samples, iters) = measure(&self.opts, body);
+        let r = BenchResult {
+            name: name.to_string(),
+            median_s: med,
+            p5_s: p5,
+            p95_s: p95,
+            samples,
+            iters_per_sample: iters,
+        };
+        eprintln!(
+            "  {:<44} {:>12} [{} .. {}]  ({} samples x {} iters)",
+            r.name,
+            fmt_time(r.median_s),
+            fmt_time(r.p5_s),
+            fmt_time(r.p95_s),
+            samples,
+            iters
+        );
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Look up a previous result by name.
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+}
+
+/// Human-readable time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_positive_time() {
+        let opts = BenchOpts { warmup_s: 0.01, measure_s: 0.02, samples: 3, max_iters: 1000 };
+        let mut acc = 0u64;
+        let (med, p5, p95, samples, iters) = measure(&opts, || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert!(med > 0.0 && p5 > 0.0 && p95 >= p5);
+        assert_eq!(samples, 3);
+        assert!(iters >= 1);
+    }
+
+    #[test]
+    fn suite_records_results() {
+        let mut s = BenchSuite::new("t");
+        s.opts = BenchOpts { warmup_s: 0.005, measure_s: 0.01, samples: 2, max_iters: 100 };
+        s.bench("a", || 1 + 1);
+        assert!(s.get("a").is_some());
+        assert!(s.get("b").is_none());
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

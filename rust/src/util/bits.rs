@@ -1,0 +1,139 @@
+//! Bit-manipulation helpers used by the floating-point format code.
+//!
+//! All shifts here are *safe* for shift amounts >= the bit width (they
+//! saturate to 0), which the SEM encoder relies on when the exponent
+//! difference exceeds the mantissa width (very small values round to 0).
+
+/// `x >> n`, returning 0 when `n >= 64` instead of UB.
+#[inline(always)]
+pub fn shr64(x: u64, n: u32) -> u64 {
+    if n >= 64 {
+        0
+    } else {
+        x >> n
+    }
+}
+
+/// `x << n`, returning 0 when `n >= 64` instead of UB.
+#[inline(always)]
+pub fn shl64(x: u64, n: u32) -> u64 {
+    if n >= 64 {
+        0
+    } else {
+        x << n
+    }
+}
+
+/// Mask with the least-significant `n` bits set (`n <= 64`).
+#[inline(always)]
+pub fn mask64(n: u32) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+/// Position (0-based from LSB) of the most significant set bit, or `None`
+/// for zero. `msb(1) == Some(0)`, `msb(0b100) == Some(2)`.
+#[inline(always)]
+pub fn msb(x: u64) -> Option<u32> {
+    if x == 0 {
+        None
+    } else {
+        Some(63 - x.leading_zeros())
+    }
+}
+
+/// CUDA `__fns(mask, base, -1)` analog restricted to how Algorithm 2 of
+/// the paper uses it: scan from bit `base` *downward* and return the bit
+/// position of the first set bit, or `None` if no set bit at or below
+/// `base`. (The paper scans the 15 value bits of the 16-bit head from
+/// MSB-1 downward.)
+#[inline(always)]
+pub fn fns_down(x: u64, base: u32) -> Option<u32> {
+    let masked = x & mask64(base + 1);
+    msb(masked)
+}
+
+/// Round-to-nearest-even truncation of a `w`-bit unsigned integer to its
+/// top `keep` bits; returns the rounded value **and** a carry flag set
+/// when rounding overflowed out of the `keep`-bit field.
+#[inline]
+pub fn round_ties_even(x: u64, w: u32, keep: u32) -> (u64, bool) {
+    debug_assert!(keep <= w && w <= 64);
+    if keep >= w {
+        return (x, false);
+    }
+    let drop = w - keep;
+    let head = shr64(x, drop);
+    let rem = x & mask64(drop);
+    let half = shl64(1, drop - 1);
+    let round_up = rem > half || (rem == half && head & 1 == 1);
+    if round_up {
+        let r = head + 1;
+        if r >> keep != 0 {
+            (r >> 1, true) // carried into a new leading bit
+        } else {
+            (r, false)
+        }
+    } else {
+        (head, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shr_saturates() {
+        assert_eq!(shr64(u64::MAX, 64), 0);
+        assert_eq!(shr64(u64::MAX, 100), 0);
+        assert_eq!(shr64(0b100, 2), 1);
+    }
+
+    #[test]
+    fn shl_saturates() {
+        assert_eq!(shl64(1, 64), 0);
+        assert_eq!(shl64(1, 63), 1 << 63);
+    }
+
+    #[test]
+    fn mask_widths() {
+        assert_eq!(mask64(0), 0);
+        assert_eq!(mask64(1), 1);
+        assert_eq!(mask64(52), (1u64 << 52) - 1);
+        assert_eq!(mask64(64), u64::MAX);
+    }
+
+    #[test]
+    fn msb_positions() {
+        assert_eq!(msb(0), None);
+        assert_eq!(msb(1), Some(0));
+        assert_eq!(msb(0b1010), Some(3));
+        assert_eq!(msb(u64::MAX), Some(63));
+    }
+
+    #[test]
+    fn fns_down_matches_paper_usage() {
+        // head value bits: scan from bit 14 downward.
+        assert_eq!(fns_down(0b0100_0000_0000_0000, 14), Some(14));
+        assert_eq!(fns_down(0b0000_0000_0000_0001, 14), Some(0));
+        assert_eq!(fns_down(0, 14), None);
+        // A sign bit above `base` must not be found.
+        assert_eq!(fns_down(0b1000_0000_0000_0000, 14), None);
+    }
+
+    #[test]
+    fn round_ties_even_basics() {
+        // 0b1011 (11) keep 2 of 4 bits: head=0b10, rem=0b11>0b10 -> up -> 0b11
+        assert_eq!(round_ties_even(0b1011, 4, 2), (0b11, false));
+        // tie rounds to even: 0b1010 keep 2: head=0b10 even, rem==half -> stay
+        assert_eq!(round_ties_even(0b1010, 4, 2), (0b10, false));
+        // tie with odd head rounds up: 0b1110 keep 2: head=0b11, rem==half -> 0b100 carries
+        assert_eq!(round_ties_even(0b1110, 4, 2), (0b10, true));
+        // keep >= w is identity
+        assert_eq!(round_ties_even(0b1011, 4, 4), (0b1011, false));
+    }
+}

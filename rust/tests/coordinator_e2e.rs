@@ -1,0 +1,87 @@
+//! Coordinator end-to-end: batch suites through the worker pool, CLI
+//! parsing, corpus IO round-trips — the L3 surface a downstream user
+//! touches.
+
+use gsem::coordinator::cli::Cli;
+use gsem::coordinator::{FormatChoice, SolveRequest, SolverKind, SolverPool};
+use gsem::formats::ValueFormat;
+use gsem::solvers::stepped::SteppedParams;
+use gsem::sparse::gen::corpus::{cg_set, gmres_set, CorpusSize};
+use gsem::sparse::mm;
+use std::sync::Arc;
+
+#[test]
+fn mini_suite_runs_all_formats_on_first_cg_matrices() {
+    let set = cg_set(CorpusSize::Small);
+    let pool = SolverPool::new(2);
+    let mut reqs = Vec::new();
+    for m in set.iter().take(3) {
+        let a = Arc::new(m.a.clone());
+        for fmt in [
+            FormatChoice::Fixed(ValueFormat::Fp64),
+            FormatChoice::Fixed(ValueFormat::Bf16),
+            FormatChoice::Stepped { k: 8, params: SteppedParams::cg_paper().scaled(0.01) },
+        ] {
+            reqs.push(SolveRequest::new(&m.name, Arc::clone(&a), SolverKind::Cg, fmt));
+        }
+    }
+    let res = pool.run_batch(reqs);
+    assert_eq!(res.len(), 9);
+    // every FP64 run on the small CG set must converge
+    for r in res.iter().filter(|r| r.format_label == "FP64") {
+        assert!(r.outcome.converged, "{} failed: {}", r.name, r.relres_fp64);
+    }
+    // no NaNs anywhere except flagged breakdowns
+    for r in &res {
+        if !r.outcome.broke_down {
+            assert!(r.relres_fp64.is_finite(), "{} {}", r.name, r.format_label);
+        }
+    }
+}
+
+#[test]
+fn gmres_small_suite_first_entries() {
+    let set = gmres_set(CorpusSize::Small);
+    let pool = SolverPool::new(2);
+    let reqs: Vec<SolveRequest> = set
+        .iter()
+        .take(2)
+        .map(|m| {
+            SolveRequest::new(
+                &m.name,
+                Arc::new(m.a.clone()),
+                SolverKind::Gmres,
+                FormatChoice::Fixed(ValueFormat::Fp64),
+            )
+        })
+        .collect();
+    for r in pool.run_batch(reqs) {
+        assert!(r.outcome.iters > 0);
+        assert!(r.relres_fp64.is_finite());
+    }
+}
+
+#[test]
+fn cli_surface_matches_docs() {
+    let c = Cli::parse(
+        "solve --matrix poisson2d_16x16 --solver cg --format stepped --k 8 --scale 0.05"
+            .split_whitespace()
+            .map(String::from),
+    )
+    .unwrap();
+    assert_eq!(c.command.as_deref(), Some("solve"));
+    assert_eq!(c.get("format"), Some("stepped"));
+    assert_eq!(c.get_usize("k", 0).unwrap(), 8);
+    assert_eq!(c.get_f64("scale", 0.0).unwrap(), 0.05);
+}
+
+#[test]
+fn corpus_matrix_roundtrips_through_matrixmarket() {
+    let set = cg_set(CorpusSize::Small);
+    let dir = std::env::temp_dir().join("gsem_e2e_mm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("m.mtx");
+    mm::write_path(&set[0].a, &p).unwrap();
+    let back = mm::read_path(&p).unwrap();
+    assert_eq!(back, set[0].a);
+}

@@ -1,0 +1,244 @@
+//! Randomized property suite on the GSE-SEM format invariants —
+//! the deeper contracts the unit tests don't pin down.
+
+use gsem::formats::gse::GseTable;
+use gsem::formats::sem::{self, SemGeometry, SemLayout};
+use gsem::formats::{Precision, SemVector};
+use gsem::spmv::GseCsr;
+use gsem::util::quickcheck::check;
+use gsem::util::Prng;
+
+fn random_values(r: &mut Prng, n: usize, sigma: f64) -> Vec<f64> {
+    (0..n)
+        .map(|_| r.lognormal(0.0, sigma) * if r.chance(0.5) { -1.0 } else { 1.0 })
+        .collect()
+}
+
+#[test]
+fn sign_symmetry_only_flips_sign_bit() {
+    check(
+        11,
+        2000,
+        |r| (r.lognormal(0.0, 4.0), 1 + r.below(32)),
+        |(x, k)| {
+            let t = GseTable::from_values(&[*x, -*x], *k);
+            let g = SemGeometry::new(SemLayout::External, t.ei_bit);
+            let p = sem::encode(*x, &t, &g).map_err(|e| format!("{e:?}"))?;
+            let n = sem::encode(-*x, &t, &g).map_err(|e| format!("{e:?}"))?;
+            if p.head ^ n.head != 0x8000 || p.tail1 != n.tail1 || p.tail2 != n.tail2 {
+                return Err(format!("sign asymmetry at x={x}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn decode_is_monotone_within_a_binade() {
+    // truncation is order-preserving for values sharing one exponent
+    // (same expIdx/minDiff): x <= y  =>  dec(x) <= dec(y). Across
+    // binades the per-binade minDiff differs, so global order is NOT
+    // preserved — that is inherent to denormalized storage, not a bug.
+    check(
+        13,
+        300,
+        |r| {
+            let e = r.range_i64(-20, 20) as i32;
+            let mut xs: Vec<f64> =
+                (0..64).map(|_| gsem::formats::ieee::ldexp(1.0 + r.f64(), e)).collect();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (xs, 1 + r.below(16))
+        },
+        |(xs, k)| {
+            let enc = SemVector::encode(xs, *k);
+            for lvl in Precision::LADDER {
+                let dec = enc.decode(lvl);
+                for w in dec.windows(2) {
+                    if w[0] > w[1] {
+                        return Err(format!("order violated at {lvl:?}: {} > {}", w[0], w[1]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn decode_never_overshoots_magnitude() {
+    // |decode(x)| <= |x| always (pure truncation, no rounding up)
+    check(
+        17,
+        500,
+        |r| (random_values(r, 50, 5.0), 1 + r.below(64)),
+        |(xs, k)| {
+            let enc = SemVector::encode(xs, *k);
+            for lvl in Precision::LADDER {
+                let dec = enc.decode(lvl);
+                for (x, d) in xs.iter().zip(&dec) {
+                    if d.abs() > x.abs() {
+                        return Err(format!("overshoot {d} vs {x} at {lvl:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn inline_and_external_layouts_agree_at_full_precision_bits() {
+    // the two layouts share tails geometry differences but decode the
+    // same values when the mantissa fits both heads
+    check(
+        19,
+        400,
+        |r| {
+            // small mantissas: values with <= 9 significant bits
+            let xs: Vec<f64> = (0..20)
+                .map(|_| (1 + r.below(511)) as f64 * 2f64.powi(r.range_i64(-8, 8) as i32))
+                .collect();
+            (xs, 2 + r.below(7))
+        },
+        |(xs, k)| {
+            let t = GseTable::from_values(xs, *k);
+            let gi = SemGeometry::new(SemLayout::Inline, t.ei_bit);
+            let ge = SemGeometry::new(SemLayout::External, t.ei_bit);
+            for &x in xs {
+                let pi = sem::encode(x, &t, &gi).map_err(|e| format!("{e:?}"))?;
+                let pe = sem::encode(x, &t, &ge).map_err(|e| format!("{e:?}"))?;
+                let di = sem::decode_ldexp(&pi, &t, &gi, Precision::Full);
+                let de = sem::decode_ldexp(&pe, &t, &ge, Precision::Full);
+                if di.to_bits() != de.to_bits() {
+                    return Err(format!("layouts disagree: {di} vs {de} for {x}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gse_csr_packed_and_unpacked_agree() {
+    check(
+        23,
+        60,
+        |r| {
+            let n = 16 + r.below(48);
+            let a = gsem::sparse::gen::randmat::exp_controlled(
+                n,
+                n,
+                4,
+                gsem::sparse::gen::randmat::ExpLaw::Gaussian { e0: 0, sigma: 4.0 },
+                r.next_u64(),
+            );
+            let x: Vec<f64> = (0..n).map(|_| r.range_f64(-1.0, 1.0)).collect();
+            (a, x)
+        },
+        |(a, x)| {
+            let packed = GseCsr::from_csr(a, 8);
+            if !packed.packed {
+                return Err("expected packed".into());
+            }
+            // force the unpacked path by faking a huge column count
+            let mut wide = a.clone();
+            wide.ncols = (1usize << 31) + 1;
+            let unpacked = GseCsr::from_csr(&wide, 8);
+            if unpacked.packed {
+                return Err("expected unpacked".into());
+            }
+            for lvl in Precision::LADDER {
+                for j in 0..packed.nnz() {
+                    let dp = packed.decode(j, lvl);
+                    let du = unpacked.decode(j, lvl);
+                    if dp.to_bits() != du.to_bits() {
+                        return Err(format!("packed/unpacked mismatch nnz {j} {lvl:?}"));
+                    }
+                }
+            }
+            let mut y = vec![0.0; a.nrows];
+            packed.spmv(x, &mut y, Precision::Head);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn table_reuse_is_stable_across_perturbed_data() {
+    // §III-B1: "the group exponent setting can be reused in subsequent
+    // calculations" — a table from data D encodes data D' drawn from the
+    // same distribution with bounded extra error.
+    check(
+        29,
+        100,
+        |r| {
+            let seed = r.next_u64();
+            (seed, 1.0 + r.f64() * 3.0)
+        },
+        |(seed, sigma)| {
+            let mut r1 = Prng::new(*seed);
+            let mut r2 = Prng::new(seed ^ 0xABCD);
+            let train = random_values(&mut r1, 500, *sigma);
+            let test = random_values(&mut r2, 500, *sigma);
+            let t = GseTable::from_values(&train, 8);
+            let enc = SemVector::encode_with_table(&test, t);
+            let dec = enc.decode(Precision::Full);
+            for (x, d) in test.iter().zip(&dec) {
+                // either well represented, or clamped/zeroed only when the
+                // test value's magnitude is outside the train range
+                let rel = ((x - d) / x).abs();
+                let train_max = train.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+                if *x != 0.0 && x.abs() <= train_max && rel > 1e-6 && d.abs() > 0.0 {
+                    // values far below the table's smallest exponent lose
+                    // bits proportional to the distance; accept if tiny
+                    if x.abs() > train_max * 1e-12 {
+                        return Err(format!("reuse error x={x} d={d} rel={rel}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn spmv_linearity_in_x() {
+    // A(a·x + y) = a·Ax + Ay holds exactly for the decoded operator up
+    // to f64 rounding of the vector ops
+    check(
+        31,
+        80,
+        |r| {
+            let n = 20 + r.below(40);
+            let a = gsem::sparse::gen::fem::diffusion2d(
+                (n as f64).sqrt().ceil() as usize + 2,
+                (n as f64).sqrt().ceil() as usize + 2,
+                6.0,
+                r.next_u64(),
+            );
+            let nn = a.nrows;
+            let x: Vec<f64> = (0..nn).map(|_| r.range_f64(-1.0, 1.0)).collect();
+            let y: Vec<f64> = (0..nn).map(|_| r.range_f64(-1.0, 1.0)).collect();
+            (a, x, y, r.range_f64(-2.0, 2.0))
+        },
+        |(a, x, y, alpha)| {
+            let g = GseCsr::from_csr(a, 8);
+            let n = a.nrows;
+            let mut ax = vec![0.0; n];
+            let mut ay = vec![0.0; n];
+            let mut axy = vec![0.0; n];
+            g.spmv(x, &mut ax, Precision::Head);
+            g.spmv(y, &mut ay, Precision::Head);
+            let comb: Vec<f64> = x.iter().zip(y).map(|(xi, yi)| alpha * xi + yi).collect();
+            g.spmv(&comb, &mut axy, Precision::Head);
+            for i in 0..n {
+                let want = alpha * ax[i] + ay[i];
+                let scale = want.abs().max(1.0);
+                if (axy[i] - want).abs() > 1e-10 * scale {
+                    return Err(format!("nonlinearity row {i}: {} vs {want}", axy[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
