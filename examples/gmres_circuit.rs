@@ -14,7 +14,7 @@ use gsem::util::table::TextTable;
 use std::sync::Arc;
 
 fn main() {
-    let systems = vec![
+    let systems = [
         ("add32-like", conductance_network(2480, 4, 3.0, 0.3, 8008)),
         ("dcop-like", dcop(880, 25, 8004)),
         ("widegap", conductance_network(1200, 6, 5.0, 0.2, 77)),

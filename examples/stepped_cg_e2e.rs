@@ -26,7 +26,7 @@ fn main() {
     );
     let arc = Arc::new(a.clone());
 
-    let formats: Vec<(&str, FormatChoice)> = vec![
+    let formats: [(&str, FormatChoice); 6] = [
         ("FP64", FormatChoice::Fixed(ValueFormat::Fp64)),
         ("FP16", FormatChoice::Fixed(ValueFormat::Fp16)),
         ("BF16", FormatChoice::Fixed(ValueFormat::Bf16)),
@@ -38,7 +38,8 @@ fn main() {
         ),
     ];
 
-    let mut table = TextTable::new(&["format", "iters", "converged", "relres(FP64)", "time(s)", "switches"]);
+    let mut table =
+        TextTable::new(&["format", "iters", "converged", "relres(FP64)", "time(s)", "switches"]);
     let mut curves: Vec<(String, Vec<f64>)> = Vec::new();
     for (label, fmt) in formats {
         let mut req = SolveRequest::new(label, Arc::clone(&arc), SolverKind::Cg, fmt);
@@ -77,6 +78,9 @@ fn main() {
 
     // --- the AOT layer: run the Pallas CG artifact on a 256-dof slice ---
     match gsem::runtime::Engine::load_default() {
+        Ok(Some(engine)) if !engine.backend_available() => {
+            println!("\n(no PJRT backend in this build; artifacts validated but not executed)")
+        }
         Ok(Some(mut engine)) => {
             let small = diffusion2d(16, 16, 8.0, 21);
             let g = GseCsr::from_csr(&small, 8);

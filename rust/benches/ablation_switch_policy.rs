@@ -24,7 +24,11 @@ struct Policy {
     label: &'static str,
 }
 
-fn run_policy(a: &gsem::sparse::Csr, params: SteppedParams, pol: Policy) -> (usize, f64, Vec<usize>) {
+fn run_policy(
+    a: &gsem::sparse::Csr,
+    params: SteppedParams,
+    pol: Policy,
+) -> (usize, f64, Vec<usize>) {
     let g = GseCsr::from_csr(a, 8);
     let op = SwitchableOp::new(g);
     let mut ctrl = PrecisionController::new(params);
@@ -39,7 +43,11 @@ fn run_policy(a: &gsem::sparse::Csr, params: SteppedParams, pol: Policy) -> (usi
         cg_solve(
             opref,
             &b,
-            &CgOpts { tol: 1e-6, max_iters: if common::fast() { 1200 } else { 4000 }, inv_diag: None },
+            &CgOpts {
+                tol: 1e-6,
+                max_iters: if common::fast() { 1200 } else { 4000 },
+                inv_diag: None,
+            },
             move |iter, resid| {
                 // replicate PrecisionController::observe but with
                 // conditions masked by the policy
@@ -102,7 +110,7 @@ fn observe_masked(
 }
 
 fn main() {
-    let systems = vec![
+    let systems = [
         ("contrast14", diffusion2d(28, 28, 14.0, 31)),
         ("contrast18", diffusion2d(24, 24, 18.0, 77)),
     ];

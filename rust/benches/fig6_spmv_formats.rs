@@ -108,7 +108,8 @@ fn main() {
     );
 
     println!("Fig. 6(a) — geomean SpMV GFLOPS (CPU measured | V100 modeled)");
-    let mut t = TextTable::new(&["format", "cpu geomean GFLOPS", "V100 modeled GFLOPS (median mtx)"]);
+    let mut t =
+        TextTable::new(&["format", "cpu geomean GFLOPS", "V100 modeled GFLOPS (median mtx)"]);
     let mid = &corpus[corpus.len() / 2].a;
     for (i, (label, vf)) in [
         ("FP64", ValueFormat::Fp64),

@@ -25,13 +25,21 @@ fn trace(name: &str, solver: SolverKind, a: &gsem::sparse::Csr, t_window: usize,
         SolverKind::Cg => cg_solve(
             &op,
             &b,
-            &CgOpts { tol: 1e-10, max_iters: if common::fast() { 400 } else { 3000 }, inv_diag: None },
+            &CgOpts {
+                tol: 1e-10,
+                max_iters: if common::fast() { 400 } else { 3000 },
+                inv_diag: None,
+            },
             |_, _| gsem::solvers::MonitorCmd::Continue,
         ),
         _ => gmres_solve(
             &op,
             &b,
-            &GmresOpts { tol: 1e-10, restart: 30, max_outer: if common::fast() { 20 } else { 200 } },
+            &GmresOpts {
+                tol: 1e-10,
+                restart: 30,
+                max_outer: if common::fast() { 20 } else { 200 },
+            },
             |_, _| gsem::solvers::MonitorCmd::Continue,
         ),
     };

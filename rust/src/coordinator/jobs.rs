@@ -14,9 +14,9 @@ use crate::sparse::csr::Csr;
 use crate::spmv::fp64::Fp64Csr;
 use crate::spmv::lowp::LowpCsr;
 use crate::spmv::{GseCsr, SpmvOp};
+use crate::util::parallel;
 use crate::util::Prng;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Which solver to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -157,7 +157,13 @@ pub fn dispatch(req: &SolveRequest) -> SolveResult {
     // the paper's reported residual: against the FP64 matrix
     let fp64_op = Fp64Csr::new(a.clone());
     let relres_fp64 = crate::solvers::true_relres(&fp64_op, &outcome.x, &b);
-    SolveResult { name: req.name.clone(), solver: req.solver, format_label: label, outcome, relres_fp64 }
+    SolveResult {
+        name: req.name.clone(),
+        solver: req.solver,
+        format_label: label,
+        outcome,
+        relres_fp64,
+    }
 }
 
 fn run_solver(req: &SolveRequest, op: &dyn SpmvOp, b: &[f64]) -> SolveOutcome {
@@ -183,8 +189,8 @@ fn run_solver(req: &SolveRequest, op: &dyn SpmvOp, b: &[f64]) -> SolveOutcome {
     }
 }
 
-/// Fixed-size worker pool over OS threads; jobs go down an mpsc channel,
-/// results come back tagged with their submission index.
+/// Fixed-size worker pool over the shared [`parallel::run_queue`]
+/// machinery; results come back in submission order.
 pub struct SolverPool {
     workers: usize,
 }
@@ -194,40 +200,14 @@ impl SolverPool {
         Self { workers: workers.max(1) }
     }
 
+    /// Worker pool sized from `GSEM_WORKERS` / the machine's parallelism.
+    pub fn with_default_workers() -> Self {
+        Self::new(parallel::default_workers())
+    }
+
     /// Run a batch, preserving input order.
     pub fn run_batch(&self, reqs: Vec<SolveRequest>) -> Vec<SolveResult> {
-        let n = reqs.len();
-        if n == 0 {
-            return Vec::new();
-        }
-        let queue = Arc::new(Mutex::new(
-            reqs.into_iter().enumerate().collect::<Vec<(usize, SolveRequest)>>(),
-        ));
-        let (tx, rx) = mpsc::channel::<(usize, SolveResult)>();
-        std::thread::scope(|s| {
-            for _ in 0..self.workers.min(n) {
-                let queue = Arc::clone(&queue);
-                let tx = tx.clone();
-                s.spawn(move || loop {
-                    let job = queue.lock().unwrap().pop();
-                    match job {
-                        Some((idx, req)) => {
-                            let res = dispatch(&req);
-                            if tx.send((idx, res)).is_err() {
-                                break;
-                            }
-                        }
-                        None => break,
-                    }
-                });
-            }
-            drop(tx);
-            let mut out: Vec<Option<SolveResult>> = (0..n).map(|_| None).collect();
-            for (idx, res) in rx {
-                out[idx] = Some(res);
-            }
-            out.into_iter().map(|r| r.expect("worker died with job")).collect()
-        })
+        parallel::run_queue(self.workers, reqs, |req| dispatch(&req))
     }
 }
 

@@ -90,13 +90,9 @@ mod tests {
     #[test]
     fn concurrent_updates() {
         let m = Metrics::new();
-        std::thread::scope(|s| {
-            for _ in 0..4 {
-                s.spawn(|| {
-                    for _ in 0..1000 {
-                        m.incr("x");
-                    }
-                });
+        crate::util::parallel::broadcast(4, |_| {
+            for _ in 0..1000 {
+                m.incr("x");
             }
         });
         assert_eq!(m.counter("x"), 4000);

@@ -228,7 +228,14 @@ impl GseTable {
         let mut best: Option<(u16, u16)> = None;
         for (i, &e) in self.entries.iter().enumerate() {
             let diff = e as i64 - biased_exp as i64;
-            if diff > 0 && best.map_or(true, |(_, d)| (diff as u16) < d) {
+            if diff <= 0 {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, d)) => (diff as u16) < d,
+            };
+            if better {
                 best = Some((i as u16, diff as u16));
             }
         }

@@ -97,8 +97,9 @@ mod tests {
     #[test]
     fn full_roundtrip_is_exact() {
         let mut r = Prng::new(3);
-        let xs: Vec<f64> =
-            (0..1000).map(|_| r.lognormal(0.0, 10.0) * if r.chance(0.5) { -1.0 } else { 1.0 }).collect();
+        let xs: Vec<f64> = (0..1000)
+            .map(|_| r.lognormal(0.0, 10.0) * if r.chance(0.5) { -1.0 } else { 1.0 })
+            .collect();
         let v = SplitF64Vector::encode(&xs);
         for (i, &x) in xs.iter().enumerate() {
             assert_eq!(v.get(i, SplitLevel::Full).to_bits(), x.to_bits());

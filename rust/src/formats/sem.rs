@@ -26,8 +26,8 @@
 
 use super::gse::GseTable;
 use super::ieee;
-use crate::util::bits::{mask64, shr64};
 use super::Precision;
+use crate::util::bits::{mask64, shr64};
 
 /// Head layout selector (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

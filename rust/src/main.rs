@@ -50,10 +50,11 @@ fn print_usage() {
          USAGE: gsem <command> [--options]\n\n\
          COMMANDS:\n\
            analyze  --matrix <name|path.mtx>            exponent/entropy stats (Fig. 1)\n\
-           spmv     --matrix <name|path.mtx> [--k 8]    compare SpMV formats (Fig. 6)\n\
+           spmv     --matrix <name|path.mtx> [--k 8] [--threads N]\n\
+                    compare SpMV formats (Fig. 6)\n\
            solve    --matrix <name|path.mtx> --solver cg|gmres|bicgstab\n\
                     --format fp64|fp32|fp16|bf16|gse-head|gse-t1|gse-full|stepped [--k 8]\n\
-           suite    [--solver cg|gmres|both] [--size small|medium|full] [--workers N]\n\
+           suite    [--solver cg|gmres|both] [--size small|medium|full] [--workers N] (0 = auto)\n\
            kernels                                      PJRT artifact check\n\
            gen      --matrix <name> --out <path.mtx> | --list\n\n\
          Matrix names: any corpus entry (see `gen --list`), e.g. poisson2d_48x48."
@@ -111,6 +112,11 @@ fn cmd_spmv(cli: &Cli) -> i32 {
     };
     let k = cli.get_usize("k", 8).unwrap_or(8);
     let reps = cli.get_usize("reps", 100).unwrap_or(100);
+    // --threads 0 = auto (machine parallelism / GSEM_WORKERS)
+    let threads = match cli.get_usize("threads", 1).unwrap_or(1) {
+        0 => gsem::util::parallel::default_workers(),
+        n => n,
+    };
     let a = match load_matrix(spec) {
         Ok(a) => a,
         Err(e) => {
@@ -122,7 +128,7 @@ fn cmd_spmv(cli: &Cli) -> i32 {
     let mut y64 = vec![0.0; a.nrows];
     fp64::spmv(&a, &x, &mut y64);
 
-    let ops = gsem::spmv::build_operators(&a, k);
+    let ops = gsem::spmv::build_operators_par(&a, k, threads);
     let mut t = TextTable::new(&[
         "format",
         "cpu time/op",
@@ -242,10 +248,13 @@ fn cmd_suite(cli: &Cli) -> i32 {
         _ => CorpusSize::Medium,
     };
     let which = cli.get_or("solver", "both");
-    let workers = cli.get_usize("workers", 1).unwrap_or(1);
     let scale = cli.get_f64("scale", 0.02).unwrap_or(0.02);
-    let pool = SolverPool::new(workers);
-    let formats: Vec<(&str, FormatChoice)> = vec![
+    // --workers 0 = auto (machine parallelism / GSEM_WORKERS)
+    let pool = match cli.get_usize("workers", 1).unwrap_or(1) {
+        0 => SolverPool::with_default_workers(),
+        n => SolverPool::new(n),
+    };
+    let formats: [(&str, FormatChoice); 3] = [
         ("FP64", FormatChoice::Fixed(ValueFormat::Fp64)),
         ("FP16", FormatChoice::Fixed(ValueFormat::Fp16)),
         ("BF16", FormatChoice::Fixed(ValueFormat::Bf16)),

@@ -7,7 +7,7 @@
 //! is deliberately small (flat JSON, no external crates in this offline
 //! build environment).
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -114,7 +114,7 @@ fn parse_manifest(text: &str) -> Result<BTreeMap<String, ManifestEntry>> {
 /// A tiny recursive-descent JSON parser (objects, arrays, strings,
 /// numbers, bools, null) — enough for the manifest, no external crates.
 pub mod json {
-    use anyhow::{bail, Result};
+    use crate::util::error::{bail, Result};
     use std::collections::BTreeMap;
 
     #[derive(Clone, Debug, PartialEq)]
@@ -324,8 +324,7 @@ pub mod json {
                 self.i += 1;
             }
             while let Some(c) = self.peek() {
-                if c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-'
-                {
+                if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
                     self.i += 1;
                 } else {
                     break;

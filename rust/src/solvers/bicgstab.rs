@@ -166,7 +166,7 @@ mod tests {
     fn converges_on_spd() {
         let op = Fp64Csr::new(poisson2d(14, 14));
         let b = rhs_for_ones(&op);
-        let out = bicgstab_solve(&op, &b, &BicgstabOpts::default(), |_, _| crate::solvers::MonitorCmd::Continue);
+        let out = bicgstab_solve(&op, &b, &BicgstabOpts::default(), |_, _| MonitorCmd::Continue);
         assert!(out.converged, "relres {}", out.relres);
         assert!(out.relres < 1e-5);
     }
@@ -175,7 +175,7 @@ mod tests {
     fn converges_on_asymmetric() {
         let op = Fp64Csr::new(convdiff2d(14, 14, 12.0, 4.0));
         let b = rhs_for_ones(&op);
-        let out = bicgstab_solve(&op, &b, &BicgstabOpts::default(), |_, _| crate::solvers::MonitorCmd::Continue);
+        let out = bicgstab_solve(&op, &b, &BicgstabOpts::default(), |_, _| MonitorCmd::Continue);
         assert!(out.converged, "relres {}", out.relres);
         for &xi in &out.x {
             assert!((xi - 1.0).abs() < 1e-3);
@@ -190,7 +190,7 @@ mod tests {
             &op,
             &b,
             &BicgstabOpts { tol: 1e-15, max_iters: 2 },
-            |_, _| crate::solvers::MonitorCmd::Continue,
+            |_, _| MonitorCmd::Continue,
         );
         assert!(out.iters <= 2);
     }

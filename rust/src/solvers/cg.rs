@@ -164,7 +164,7 @@ mod tests {
     fn converges_on_poisson() {
         let op = Fp64Csr::new(poisson2d(20, 20));
         let b = rhs_for_ones(&op);
-        let out = cg_solve(&op, &b, &CgOpts::default(), |_, _| crate::solvers::MonitorCmd::Continue);
+        let out = cg_solve(&op, &b, &CgOpts::default(), |_, _| MonitorCmd::Continue);
         assert!(out.converged, "relres {}", out.relres);
         assert!(out.relres < 1e-6);
         assert!(out.iters < 200);
@@ -179,7 +179,10 @@ mod tests {
         let op = Fp64Csr::new(poisson2d(10, 10));
         let b = rhs_for_ones(&op);
         let mut calls = 0;
-        let out = cg_solve(&op, &b, &CgOpts::default(), |_, _| { calls += 1; crate::solvers::MonitorCmd::Continue });
+        let out = cg_solve(&op, &b, &CgOpts::default(), |_, _| {
+            calls += 1;
+            MonitorCmd::Continue
+        });
         assert_eq!(out.history.len(), out.iters);
         assert_eq!(calls, out.iters);
         // residual decreases overall
@@ -196,13 +199,13 @@ mod tests {
             &op,
             &b,
             &CgOpts { max_iters: 20000, ..Default::default() },
-            |_, _| crate::solvers::MonitorCmd::Continue,
+            |_, _| MonitorCmd::Continue,
         );
         let pre = cg_solve(
             &op,
             &b,
             &CgOpts { max_iters: 20000, inv_diag: Some(inv), ..Default::default() },
-            |_, _| crate::solvers::MonitorCmd::Continue,
+            |_, _| MonitorCmd::Continue,
         );
         assert!(pre.converged);
         assert!(
@@ -216,7 +219,7 @@ mod tests {
     #[test]
     fn zero_rhs_trivial() {
         let op = Fp64Csr::new(poisson2d(5, 5));
-        let out = cg_solve(&op, &vec![0.0; 25], &CgOpts::default(), |_, _| crate::solvers::MonitorCmd::Continue);
+        let out = cg_solve(&op, &[0.0; 25], &CgOpts::default(), |_, _| MonitorCmd::Continue);
         assert!(out.converged);
         assert_eq!(out.iters, 0);
         assert!(out.x.iter().all(|&v| v == 0.0));
@@ -226,8 +229,9 @@ mod tests {
     fn respects_max_iters() {
         let op = Fp64Csr::new(poisson2d(30, 30));
         let b = rhs_for_ones(&op);
-        let out =
-            cg_solve(&op, &b, &CgOpts { max_iters: 3, ..Default::default() }, |_, _| crate::solvers::MonitorCmd::Continue);
+        let out = cg_solve(&op, &b, &CgOpts { max_iters: 3, ..Default::default() }, |_, _| {
+            MonitorCmd::Continue
+        });
         assert!(!out.converged);
         assert_eq!(out.iters, 3);
     }
@@ -243,7 +247,7 @@ mod tests {
         );
         let op = Fp64Csr::new(a);
         let b: Vec<f64> = (0..120).map(|_| rng.range_f64(-1.0, 1.0)).collect();
-        let out = cg_solve(&op, &b, &CgOpts::default(), |_, _| crate::solvers::MonitorCmd::Continue);
+        let out = cg_solve(&op, &b, &CgOpts::default(), |_, _| MonitorCmd::Continue);
         assert!(out.converged, "relres={}", out.relres);
         assert!(out.relres < 1e-5);
     }

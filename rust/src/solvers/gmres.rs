@@ -215,7 +215,7 @@ mod tests {
     fn converges_on_asymmetric_convdiff() {
         let op = Fp64Csr::new(convdiff2d(16, 16, 8.0, 4.0));
         let b = rhs_for_ones(&op);
-        let out = gmres_solve(&op, &b, &GmresOpts::default(), |_, _| crate::solvers::MonitorCmd::Continue);
+        let out = gmres_solve(&op, &b, &GmresOpts::default(), |_, _| MonitorCmd::Continue);
         assert!(out.converged, "relres {}", out.relres);
         assert!(out.relres < 1e-5);
         for &xi in &out.x {
@@ -228,7 +228,7 @@ mod tests {
         for a in [conductance_network(300, 4, 3.0, 0.3, 1), device1d(256, 3, 2)] {
             let op = Fp64Csr::new(a);
             let b = rhs_for_ones(&op);
-            let out = gmres_solve(&op, &b, &GmresOpts::default(), |_, _| crate::solvers::MonitorCmd::Continue);
+            let out = gmres_solve(&op, &b, &GmresOpts::default(), |_, _| MonitorCmd::Continue);
             assert!(out.converged, "relres {}", out.relres);
         }
     }
@@ -238,9 +238,13 @@ mod tests {
         // at convergence the Givens estimate and the true residual agree
         let op = Fp64Csr::new(convdiff2d(12, 12, 4.0, 0.0));
         let b = rhs_for_ones(&op);
-        let out = gmres_solve(&op, &b, &GmresOpts::default(), |_, _| crate::solvers::MonitorCmd::Continue);
+        let out = gmres_solve(&op, &b, &GmresOpts::default(), |_, _| MonitorCmd::Continue);
         let est = *out.history.last().unwrap();
-        assert!((est - out.relres).abs() <= 1e-6 + 0.5 * out.relres.max(est), "est={est} true={}", out.relres);
+        assert!(
+            (est - out.relres).abs() <= 1e-6 + 0.5 * out.relres.max(est),
+            "est={est} true={}",
+            out.relres
+        );
     }
 
     #[test]
@@ -248,7 +252,10 @@ mod tests {
         let op = Fp64Csr::new(poisson2d(12, 12));
         let b = rhs_for_ones(&op);
         let mut calls = 0usize;
-        let out = gmres_solve(&op, &b, &GmresOpts::default(), |_, _| { calls += 1; crate::solvers::MonitorCmd::Continue });
+        let out = gmres_solve(&op, &b, &GmresOpts::default(), |_, _| {
+            calls += 1;
+            MonitorCmd::Continue
+        });
         assert_eq!(out.history.len(), out.iters);
         assert_eq!(calls, out.iters);
     }
@@ -262,7 +269,7 @@ mod tests {
             &op,
             &b,
             &GmresOpts { restart: 5, max_outer: 500, tol: 1e-8 },
-            |_, _| crate::solvers::MonitorCmd::Continue,
+            |_, _| MonitorCmd::Continue,
         );
         assert!(out.converged, "relres={}", out.relres);
         assert!(out.iters > 5, "should need more than one cycle");
@@ -276,7 +283,7 @@ mod tests {
             &op,
             &b,
             &GmresOpts { restart: 3, max_outer: 2, tol: 1e-14 },
-            |_, _| crate::solvers::MonitorCmd::Continue,
+            |_, _| MonitorCmd::Continue,
         );
         assert!(out.iters <= 6);
         assert!(!out.converged);

@@ -19,9 +19,9 @@
 //! Any of the three triggers one escalation step.
 
 use crate::formats::Precision;
+use crate::formats::ValueFormat;
 use crate::spmv::gse::GseCsr;
 use crate::spmv::SpmvOp;
-use crate::formats::ValueFormat;
 use crate::util::stats;
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -182,16 +182,17 @@ impl PrecisionController {
             return None;
         }
         // divergence safety valve fires regardless of the l/m schedule
-        if resid.is_finite() && self.best_resid.is_finite() {
-            if resid > self.params.divergence_factor * self.best_resid {
-                self.best_resid = self.best_resid.min(resid);
-                self.tag = self.tag.escalate();
-                self.switches.push((iter, self.tag.tag()));
-                self.reasons.push(SwitchReason::Diverged);
-                self.window.clear();
-                self.last_check = iter;
-                return Some(self.tag);
-            }
+        if resid.is_finite()
+            && self.best_resid.is_finite()
+            && resid > self.params.divergence_factor * self.best_resid
+        {
+            self.best_resid = self.best_resid.min(resid);
+            self.tag = self.tag.escalate();
+            self.switches.push((iter, self.tag.tag()));
+            self.reasons.push(SwitchReason::Diverged);
+            self.window.clear();
+            self.last_check = iter;
+            return Some(self.tag);
         }
         self.best_resid = self.best_resid.min(resid);
         if iter < self.params.l.max(self.params.t) {
@@ -323,7 +324,15 @@ mod tests {
 
     #[test]
     fn condition3_fires_on_stagnation() {
-        let p = SteppedParams { l: 5, t: 4, m: 2, rsd_limit: 0.5, ndec_limit: 2, reldec_limit: 0.1, divergence_factor: 100.0 };
+        let p = SteppedParams {
+            l: 5,
+            t: 4,
+            m: 2,
+            rsd_limit: 0.5,
+            ndec_limit: 2,
+            reldec_limit: 0.1,
+            divergence_factor: 100.0,
+        };
         let mut c = PrecisionController::new(p);
         let mut switched_at = None;
         for i in 1..50 {
@@ -340,7 +349,15 @@ mod tests {
 
     #[test]
     fn no_switch_while_converging_fast() {
-        let p = SteppedParams { l: 5, t: 4, m: 2, rsd_limit: 10.0, ndec_limit: 2, reldec_limit: 0.01, divergence_factor: 100.0 };
+        let p = SteppedParams {
+            l: 5,
+            t: 4,
+            m: 2,
+            rsd_limit: 10.0,
+            ndec_limit: 2,
+            reldec_limit: 0.01,
+            divergence_factor: 100.0,
+        };
         let mut c = PrecisionController::new(p);
         for i in 1..100 {
             // residual halves every iteration: healthy convergence
@@ -351,7 +368,15 @@ mod tests {
 
     #[test]
     fn escalates_through_full_ladder_and_stops() {
-        let p = SteppedParams { l: 2, t: 3, m: 1, rsd_limit: 0.5, ndec_limit: 2, reldec_limit: 0.1, divergence_factor: 100.0 };
+        let p = SteppedParams {
+            l: 2,
+            t: 3,
+            m: 1,
+            rsd_limit: 0.5,
+            ndec_limit: 2,
+            reldec_limit: 0.1,
+            divergence_factor: 100.0,
+        };
         let mut c = PrecisionController::new(p);
         let mut seen = Vec::new();
         for i in 1..200 {
@@ -367,7 +392,15 @@ mod tests {
 
     #[test]
     fn respects_initial_l_window() {
-        let p = SteppedParams { l: 50, t: 4, m: 1, rsd_limit: 0.5, ndec_limit: 2, reldec_limit: 0.1, divergence_factor: 100.0 };
+        let p = SteppedParams {
+            l: 50,
+            t: 4,
+            m: 1,
+            rsd_limit: 0.5,
+            ndec_limit: 2,
+            reldec_limit: 0.1,
+            divergence_factor: 100.0,
+        };
         let mut c = PrecisionController::new(p);
         for i in 1..50 {
             assert!(c.observe(i, 1.0).is_none());
@@ -376,15 +409,22 @@ mod tests {
 
     #[test]
     fn condition1_fluctuation() {
-        let p =
-            SteppedParams { l: 4, t: 8, m: 1, rsd_limit: 0.05, ndec_limit: 6, reldec_limit: 1e-9, divergence_factor: 100.0 };
+        let p = SteppedParams {
+            l: 4,
+            t: 8,
+            m: 1,
+            rsd_limit: 0.05,
+            ndec_limit: 6,
+            reldec_limit: 1e-9,
+            divergence_factor: 100.0,
+        };
         let mut c = PrecisionController::new(p);
         // oscillating residuals: half the steps decrease -> ndec ~ t/2 < 6,
         // rsd large
         let mut fired = None;
         for i in 1..100 {
             let r = if i % 2 == 0 { 1.0 } else { 2.0 };
-            if let Some(_) = c.observe(i, r) {
+            if c.observe(i, r).is_some() {
                 fired = Some(i);
                 break;
             }

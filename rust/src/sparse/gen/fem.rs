@@ -84,7 +84,8 @@ pub fn shell2d(nx: usize, ny: usize, seed: u64) -> Csr {
     let idx = |i: usize, j: usize| i * ny + j;
     // smooth thickness field: random low-frequency cosine mix
     let (a1, a2) = (rng.range_f64(0.5, 2.0), rng.range_f64(0.5, 2.0));
-    let (p1, p2) = (rng.range_f64(0.0, 6.28), rng.range_f64(0.0, 6.28));
+    let tau = std::f64::consts::TAU;
+    let (p1, p2) = (rng.range_f64(0.0, tau), rng.range_f64(0.0, tau));
     let thick = |i: usize, j: usize| {
         let x = i as f64 / nx as f64;
         let y = j as f64 / ny as f64;

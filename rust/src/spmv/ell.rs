@@ -8,7 +8,9 @@
 
 use crate::formats::Precision;
 use crate::sparse::csr::Csr;
+use crate::spmv::fp64::PAR_MIN_ROWS;
 use crate::spmv::gse::GseCsr;
+use crate::util::parallel;
 
 /// One fixed-shape slab of an ELL-converted matrix.
 #[derive(Clone, Debug)]
@@ -86,25 +88,48 @@ impl EllBlocks {
     /// with the given table — mirrors what the Pallas kernel computes,
     /// used by the runtime parity tests.
     pub fn spmv_decoded(&self, g: &GseCsr, x: &[f64], level: Precision) -> Vec<f64> {
+        self.spmv_decoded_par(g, x, level, 1)
+    }
+
+    /// Chunk-parallel variant over nnz-balanced row ranges (the shared
+    /// [`parallel`] hot path). Per row, slab partial sums are added in
+    /// slab order, so the result is bit-for-bit identical to the serial
+    /// path for every thread count.
+    pub fn spmv_decoded_par(
+        &self,
+        g: &GseCsr,
+        x: &[f64],
+        level: Precision,
+        threads: usize,
+    ) -> Vec<f64> {
         let mut y = vec![0.0; self.nrows];
-        for slab in &self.slabs {
-            for r in 0..self.nrows {
-                let mut sum = 0.0;
-                for c in 0..self.width {
-                    let o = r * self.width + c;
-                    let parts = crate::formats::sem::SemParts {
-                        head: slab.heads[o],
-                        tail1: if level >= Precision::HeadTail1 { slab.tail1[o] } else { 0 },
-                        tail2: if level == Precision::Full { slab.tail2[o] } else { 0 },
-                        exp_idx: slab.exp_idx[o] as u16,
-                    };
-                    let v =
-                        crate::formats::sem::decode_ldexp(&parts, &g.table, &g.geom, level);
-                    sum += v * x[slab.cols[o] as usize];
+        let chunks = if threads <= 1 || self.nrows < PAR_MIN_ROWS {
+            vec![0..self.nrows]
+        } else {
+            parallel::balance_by_weight(self.nrows, threads, |_| 1)
+        };
+        parallel::for_each_disjoint(&mut y, &chunks, |rows, ys| {
+            for (i, r) in rows.enumerate() {
+                let mut total = 0.0;
+                for slab in &self.slabs {
+                    let mut sum = 0.0;
+                    for c in 0..self.width {
+                        let o = r * self.width + c;
+                        let parts = crate::formats::sem::SemParts {
+                            head: slab.heads[o],
+                            tail1: if level >= Precision::HeadTail1 { slab.tail1[o] } else { 0 },
+                            tail2: if level == Precision::Full { slab.tail2[o] } else { 0 },
+                            exp_idx: slab.exp_idx[o] as u16,
+                        };
+                        let v =
+                            crate::formats::sem::decode_ldexp(&parts, &g.table, &g.geom, level);
+                        sum += v * x[slab.cols[o] as usize];
+                    }
+                    total += sum;
                 }
-                y[r] += sum;
+                ys[i] = total;
             }
-        }
+        });
         y
     }
 
@@ -166,6 +191,22 @@ mod tests {
                     max_abs_diff(&y_csr, &y_ell) <= 1e-12 * scale,
                     "width={width} {lvl:?}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_ell_spmv_bit_exact_vs_serial() {
+        let a = exp_controlled(1200, 1200, 5, ExpLaw::Zipf { e0: -4, count: 8, s: 1.2 }, 6);
+        let g = GseCsr::from_csr(&a, 8);
+        let e = to_ell(&g, &a, 3);
+        let mut r = Prng::new(11);
+        let x: Vec<f64> = (0..a.ncols).map(|_| r.range_f64(-1.0, 1.0)).collect();
+        for lvl in Precision::LADDER {
+            let serial = e.spmv_decoded(&g, &x, lvl);
+            for threads in [1usize, 2, 5] {
+                let par = e.spmv_decoded_par(&g, &x, lvl, threads);
+                assert_eq!(serial, par, "threads={threads} {lvl:?}");
             }
         }
     }

@@ -8,6 +8,11 @@
 use super::SpmvOp;
 use crate::formats::ValueFormat;
 use crate::sparse::csr::Csr;
+use crate::util::parallel;
+
+/// Row count below which the parallel paths fall back to serial — the
+/// spawn cost dwarfs the work on tiny systems.
+pub(crate) const PAR_MIN_ROWS: usize = 1024;
 
 /// FP64-stored CSR operator.
 pub struct Fp64Csr {
@@ -39,54 +44,28 @@ pub fn spmv(a: &Csr, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// Partition rows into `parts` contiguous chunks balancing nnz.
+/// Partition rows into `parts` contiguous chunks balancing nnz — thin
+/// wrapper over [`parallel::balance_by_weight`] keyed on row lengths.
 pub fn balance_rows(a: &Csr, parts: usize) -> Vec<std::ops::Range<usize>> {
-    let parts = parts.max(1).min(a.nrows.max(1));
-    let target = a.nnz().div_ceil(parts);
-    let mut out = Vec::with_capacity(parts);
-    let mut start = 0usize;
-    let mut acc = 0usize;
-    for r in 0..a.nrows {
-        acc += a.rowptr[r + 1] - a.rowptr[r];
-        if acc >= target && out.len() + 1 < parts {
-            out.push(start..r + 1);
-            start = r + 1;
-            acc = 0;
-        }
-    }
-    out.push(start..a.nrows);
-    out
+    parallel::balance_by_weight(a.nrows, parts, |r| a.rowptr[r + 1] - a.rowptr[r])
 }
 
-/// Chunk-parallel FP64 SpMV using scoped threads.
+/// Chunk-parallel FP64 SpMV over the shared [`parallel`] machinery.
+/// Bit-for-bit identical to [`spmv`] for every thread count (each row is
+/// accumulated by one thread in serial order).
 pub fn spmv_par(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
-    if threads <= 1 || a.nrows < 1024 {
+    if threads <= 1 || a.nrows < PAR_MIN_ROWS {
         return spmv(a, x, y);
     }
     let chunks = balance_rows(a, threads);
-    // Split y into per-chunk mutable slices.
-    let mut slices: Vec<&mut [f64]> = Vec::with_capacity(chunks.len());
-    let mut rest = y;
-    let mut cursor = 0usize;
-    for ch in &chunks {
-        let (head, tail) = rest.split_at_mut(ch.end - cursor);
-        cursor = ch.end;
-        slices.push(head);
-        rest = tail;
-    }
-    std::thread::scope(|s| {
-        for (ch, ys) in chunks.iter().zip(slices) {
-            let ch = ch.clone();
-            s.spawn(move || {
-                for (i, r) in ch.clone().enumerate() {
-                    let (cols, vals) = a.row(r);
-                    let mut sum = 0.0;
-                    for (&c, &v) in cols.iter().zip(vals) {
-                        sum += v * x[c as usize];
-                    }
-                    ys[i] = sum;
-                }
-            });
+    parallel::for_each_disjoint(y, &chunks, |ch, ys| {
+        for (i, r) in ch.enumerate() {
+            let (cols, vals) = a.row(r);
+            let mut sum = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                sum += v * x[c as usize];
+            }
+            ys[i] = sum;
         }
     });
 }

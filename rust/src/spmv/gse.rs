@@ -16,11 +16,14 @@
 //! (GSE-SEM vs GSE-SEM*), so three decode strategies are provided and
 //! ablated in `benches/ablation_decode.rs`.
 
+use super::fp64::PAR_MIN_ROWS;
 use super::SpmvOp;
 use crate::formats::gse::GseTable;
 use crate::formats::sem::{self, SemGeometry, SemLayout};
 use crate::formats::{ieee, Precision, ValueFormat};
 use crate::sparse::csr::Csr;
+use crate::util::parallel;
+use std::ops::Range;
 
 /// How the SpMV inner loop converts SEM words to f64.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,10 +57,19 @@ pub struct GseCsr {
     pub geom: SemGeometry,
     pub packed: bool,
     pub strategy: DecodeStrategy,
+    /// Worker threads for the SpMV (1 = serial; see [`crate::util::parallel`]).
+    pub threads: usize,
     /// 2^(storedExp − 1075) per table entry (ScaleLut path).
     scales: Vec<f64>,
     /// scale multiply is exact (scale normal & results in range)
     scale_exact: Vec<bool>,
+    /// every entry's scale is exact — gates the packed-LUT kernels
+    all_exact: bool,
+    /// signed scales `[idx*2 + sign] = ±2^(stored − 1075)`, padded to
+    /// the 64-entry table maximum (tails kernel)
+    sscale: Vec<f64>,
+    /// signed, `s_head`-folded scales for the head-only kernel
+    sscale_head: Vec<f64>,
 }
 
 impl GseCsr {
@@ -110,6 +122,20 @@ impl GseCsr {
             .iter()
             .map(|&s| s.is_normal() && s > 0.0)
             .collect();
+        // Signed per-index scale tables, built once here instead of per
+        // SpMV chunk (the packed-LUT kernels index them unchecked, so
+        // they are padded to the MAX_SHARED_EXPONENTS=64 table bound).
+        let all_exact = scale_exact.iter().all(|&e| e);
+        let mut sscale = vec![0f64; 2 * 64];
+        let mut sscale_head = vec![0f64; 2 * 64];
+        for (i, &e) in table.entries.iter().enumerate() {
+            let s = ieee::ldexp(1.0, e as i32 - 1075);
+            sscale[2 * i] = s;
+            sscale[2 * i + 1] = -s;
+            let sh = ieee::ldexp(1.0, e as i32 - 1075 + geom.s_head as i32);
+            sscale_head[2 * i] = sh;
+            sscale_head[2 * i + 1] = -sh;
+        }
         Self {
             nrows: a.nrows,
             ncols: a.ncols,
@@ -123,8 +149,12 @@ impl GseCsr {
             geom,
             packed,
             strategy: DecodeStrategy::ScaleLut,
+            threads: 1,
             scales,
             scale_exact,
+            all_exact,
+            sscale,
+            sscale_head,
         }
     }
 
@@ -134,6 +164,13 @@ impl GseCsr {
 
     pub fn with_strategy(mut self, s: DecodeStrategy) -> Self {
         self.strategy = s;
+        self
+    }
+
+    /// Set the SpMV worker count (1 = serial). Any count produces
+    /// bit-for-bit the serial result — rows never split across threads.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
         self
     }
 
@@ -220,16 +257,29 @@ impl GseCsr {
     }
 
     /// Three-precision SpMV (Algorithm 2 generalized to all levels).
+    /// Runs chunk-parallel over nnz-balanced row ranges when `threads`
+    /// > 1 (the same shared hot path as the FP64 baseline).
     pub fn spmv(&self, x: &[f64], y: &mut [f64], level: Precision) {
         debug_assert_eq!(x.len(), self.ncols);
         debug_assert_eq!(y.len(), self.nrows);
+        if self.threads <= 1 || self.nrows < PAR_MIN_ROWS {
+            return self.spmv_range(x, 0..self.nrows, y, level);
+        }
+        let chunks = parallel::balance_by_weight(self.nrows, self.threads, |r| {
+            self.rowptr[r + 1] - self.rowptr[r]
+        });
+        parallel::for_each_disjoint(y, &chunks, |ch, ys| self.spmv_range(x, ch, ys, level));
+    }
+
+    /// One row-range of the SpMV; `y[i]` receives row `rows.start + i`.
+    fn spmv_range(&self, x: &[f64], rows: Range<usize>, y: &mut [f64], level: Precision) {
         match (self.strategy, self.packed, level) {
             // Hot paths: fully inlined packed ScaleLut kernels.
             (DecodeStrategy::ScaleLut, true, Precision::Head) => {
-                self.spmv_head_packed_lut(x, y)
+                self.spmv_head_packed_lut(x, rows, y)
             }
-            (DecodeStrategy::ScaleLut, true, lvl) => self.spmv_tails_packed_lut(x, y, lvl),
-            _ => self.spmv_generic(x, y, level),
+            (DecodeStrategy::ScaleLut, true, lvl) => self.spmv_tails_packed_lut(x, rows, y, lvl),
+            _ => self.spmv_generic(x, rows, y, level),
         }
     }
 
@@ -237,25 +287,26 @@ impl GseCsr {
     /// 52-bit frame is assembled from the segments and scaled by the
     /// signed per-index power of two (same structure as the head kernel,
     /// one u64→f64 convert instead of a u16 widen).
-    fn spmv_tails_packed_lut(&self, x: &[f64], y: &mut [f64], level: Precision) {
+    fn spmv_tails_packed_lut(
+        &self,
+        x: &[f64],
+        rows: Range<usize>,
+        y: &mut [f64],
+        level: Precision,
+    ) {
         let shift = 32 - self.table.ei_bit;
         let col_mask = (1u32 << shift) - 1;
-        if !self.scale_exact.iter().all(|&e| e) {
-            return self.spmv_generic(x, y, level);
+        if !self.all_exact {
+            return self.spmv_generic(x, rows, y, level);
         }
-        let mut sscale = [0f64; 2 * 64];
-        for (i, &e) in self.table.entries.iter().enumerate() {
-            let s = ieee::ldexp(1.0, e as i32 - 1075);
-            sscale[2 * i] = s;
-            sscale[2 * i + 1] = -s;
-        }
+        let sscale = &self.sscale[..];
         let full = level == Precision::Full;
         let (s_head, s_tail1) = (self.geom.s_head, self.geom.s_tail1);
         let heads = &self.heads[..];
         let tail1 = &self.tail1[..];
         let tail2 = &self.tail2[..];
         let cols = &self.cols[..];
-        for r in 0..self.nrows {
+        for (i, r) in rows.enumerate() {
             let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
             let mut sum = 0.0;
             for j in a..b {
@@ -273,19 +324,19 @@ impl GseCsr {
                 let xv = unsafe { *x.get_unchecked((cw & col_mask) as usize) };
                 sum += d as f64 * scale * xv;
             }
-            y[r] = sum;
+            y[i] = sum;
         }
     }
 
-    fn spmv_generic(&self, x: &[f64], y: &mut [f64], level: Precision) {
-        for r in 0..self.nrows {
+    fn spmv_generic(&self, x: &[f64], rows: Range<usize>, y: &mut [f64], level: Precision) {
+        for (i, r) in rows.enumerate() {
             let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
             let mut sum = 0.0;
             for j in a..b {
                 let (col, idx) = self.col_and_idx(j);
                 sum += self.decode_with_idx(j, idx, level) * x[col];
             }
-            y[r] = sum;
+            y[i] = sum;
         }
     }
 
@@ -300,23 +351,17 @@ impl GseCsr {
     ///   signed-scale table (±scale), removing the unpredictable branch;
     /// * gathers are bounds-check-free (`cols`/rowptr validated at
     ///   construction).
-    fn spmv_head_packed_lut(&self, x: &[f64], y: &mut [f64]) {
+    fn spmv_head_packed_lut(&self, x: &[f64], rows: Range<usize>, y: &mut [f64]) {
         let shift = 32 - self.table.ei_bit;
         let col_mask = (1u32 << shift) - 1;
-        let all_exact = self.scale_exact.iter().all(|&e| e);
-        if !all_exact {
-            return self.spmv_generic(x, y, Precision::Head);
+        if !self.all_exact {
+            return self.spmv_generic(x, rows, y, Precision::Head);
         }
         // signed, shift-folded scale table: [idx*2 + sign]
-        let mut sscale = [0f64; 2 * 64];
-        for (i, &e) in self.table.entries.iter().enumerate() {
-            let s = ieee::ldexp(1.0, e as i32 - 1075 + self.geom.s_head as i32);
-            sscale[2 * i] = s;
-            sscale[2 * i + 1] = -s;
-        }
+        let sscale = &self.sscale_head[..];
         let heads = &self.heads[..];
         let cols = &self.cols[..];
-        for r in 0..self.nrows {
+        for (i, r) in rows.enumerate() {
             let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
             let mut sum = 0.0;
             for j in a..b {
@@ -330,7 +375,7 @@ impl GseCsr {
                 let xv = unsafe { *x.get_unchecked((cw & col_mask) as usize) };
                 sum += mant * scale * xv;
             }
-            y[r] = sum;
+            y[i] = sum;
         }
     }
 
@@ -542,6 +587,24 @@ mod tests {
             .collect();
         assert!(levels[0] >= levels[1] && levels[1] >= levels[2], "{levels:?}");
         assert!(levels[2] < levels[0]);
+    }
+
+    #[test]
+    fn parallel_spmv_bit_exact_vs_serial() {
+        // large enough to clear the PAR_MIN_ROWS fallback
+        let a = exp_controlled(1500, 1500, 6, ExpLaw::Gaussian { e0: 0, sigma: 3.0 }, 12);
+        let x = rand_x(a.ncols, 9);
+        let serial = GseCsr::from_csr(&a, 8);
+        for lvl in Precision::LADDER {
+            let mut y1 = vec![0.0; a.nrows];
+            serial.spmv(&x, &mut y1, lvl);
+            for threads in [1usize, 2, 4, 7] {
+                let par = serial.clone().with_threads(threads);
+                let mut y2 = vec![0.0; a.nrows];
+                par.spmv(&x, &mut y2, lvl);
+                assert_eq!(y1, y2, "threads={threads} {lvl:?}");
+            }
+        }
     }
 
     #[test]

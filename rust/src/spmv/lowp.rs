@@ -3,9 +3,12 @@
 //! then converted to FP64 and multiplied by the double-precision vector.
 //! All intermediate results are accumulated in double precision" (§IV-C).
 
+use super::fp64::PAR_MIN_ROWS;
 use super::SpmvOp;
 use crate::formats::{Bf16, Fp16, ValueFormat};
 use crate::sparse::csr::Csr;
+use crate::util::parallel;
+use std::ops::Range;
 
 /// A value type that can stand in for the matrix values of an SpMV.
 pub trait StoredValue: Copy + Send + Sync + 'static {
@@ -64,6 +67,8 @@ pub struct LowpCsr<T: StoredValue> {
     /// true if any finite value overflowed to ±Inf in conversion (the
     /// paper's "/" rows in Tables III/IV)
     pub overflowed: bool,
+    /// Worker threads for the SpMV (1 = serial; see [`crate::util::parallel`]).
+    pub threads: usize,
 }
 
 impl<T: StoredValue> LowpCsr<T> {
@@ -81,20 +86,40 @@ impl<T: StoredValue> LowpCsr<T> {
             colidx: a.colidx.clone(),
             vals,
             overflowed,
+            threads: 1,
         }
     }
 
-    /// Serial SpMV with f64 accumulation.
+    /// Set the SpMV worker count (1 = serial). Any count produces
+    /// bit-for-bit the serial result — rows never split across threads.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// SpMV with f64 accumulation; chunk-parallel over nnz-balanced row
+    /// ranges when `threads` > 1 (the shared [`parallel`] hot path).
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         debug_assert_eq!(x.len(), self.ncols);
         debug_assert_eq!(y.len(), self.nrows);
-        for r in 0..self.nrows {
+        if self.threads <= 1 || self.nrows < PAR_MIN_ROWS {
+            return self.spmv_range(x, 0..self.nrows, y);
+        }
+        let chunks = parallel::balance_by_weight(self.nrows, self.threads, |r| {
+            self.rowptr[r + 1] - self.rowptr[r]
+        });
+        parallel::for_each_disjoint(y, &chunks, |ch, ys| self.spmv_range(x, ch, ys));
+    }
+
+    /// One row-range of the SpMV; `y[i]` receives row `rows.start + i`.
+    fn spmv_range(&self, x: &[f64], rows: Range<usize>, y: &mut [f64]) {
+        for (i, r) in rows.enumerate() {
             let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
             let mut sum = 0.0;
             for k in a..b {
                 sum += self.vals[k].to_f64() * x[self.colidx[k] as usize];
             }
-            y[r] = sum;
+            y[i] = sum;
         }
     }
 }
@@ -164,6 +189,22 @@ mod tests {
         // fp16 has 11-bit mantissa vs bf16's 8: fp16 closer in-range
         assert!(eh < eb, "fp16 err {eh} vs bf16 err {eb}");
         assert!(eh > 0.0);
+    }
+
+    #[test]
+    fn parallel_spmv_bit_exact_vs_serial() {
+        let a = exp_controlled(1400, 1400, 5, ExpLaw::Gaussian { e0: 0, sigma: 2.0 }, 3);
+        let mut rng = Prng::new(4);
+        let x: Vec<f64> = (0..a.ncols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let serial = LowpCsr::<Bf16>::from_csr(&a);
+        let mut y1 = vec![0.0; a.nrows];
+        serial.spmv(&x, &mut y1);
+        for threads in [1usize, 3, 6] {
+            let par = LowpCsr::<Bf16>::from_csr(&a).with_threads(threads);
+            let mut y2 = vec![0.0; a.nrows];
+            par.spmv(&x, &mut y2);
+            assert_eq!(y1, y2, "threads={threads}");
+        }
     }
 
     #[test]

@@ -42,11 +42,18 @@ pub trait SpmvOp: Sync {
 /// Build the paper's full comparison set of operators for one matrix.
 /// `k` is the shared-exponent count for the GSE-SEM entries.
 pub fn build_operators(a: &Csr, k: usize) -> Vec<Box<dyn SpmvOp>> {
-    let gse = GseCsr::from_csr(a, k);
+    build_operators_par(a, k, 1)
+}
+
+/// Same comparison set with every operator — FP64 baseline, the 16-bit
+/// baselines, and all three GSE-SEM levels — sharing the chunk-parallel
+/// hot path ([`crate::util::parallel`]) at the given worker count.
+pub fn build_operators_par(a: &Csr, k: usize, threads: usize) -> Vec<Box<dyn SpmvOp>> {
+    let gse = GseCsr::from_csr(a, k).with_threads(threads);
     vec![
-        Box::new(fp64::Fp64Csr::new(a.clone())),
-        Box::new(LowpCsr::<crate::formats::Fp16>::from_csr(a)),
-        Box::new(LowpCsr::<crate::formats::Bf16>::from_csr(a)),
+        Box::new(fp64::Fp64Csr::with_threads(a.clone(), threads)),
+        Box::new(LowpCsr::<crate::formats::Fp16>::from_csr(a).with_threads(threads)),
+        Box::new(LowpCsr::<crate::formats::Bf16>::from_csr(a).with_threads(threads)),
         Box::new(gse.clone().at_level(Precision::Head)),
         Box::new(gse.clone().at_level(Precision::HeadTail1)),
         Box::new(gse.at_level(Precision::Full)),

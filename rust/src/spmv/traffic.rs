@@ -113,7 +113,7 @@ mod tests {
         let bh = d.spmv_bytes(1000, 100, ValueFormat::GseSem(Precision::Head));
         let bf = d.spmv_bytes(1000, 100, ValueFormat::Fp16);
         assert!(b64 > bh && bh > bf - 300.0);
-        assert!((b64 - bh) as f64 >= 1000.0 * 6.0 - 300.0);
+        assert!(b64 - bh >= 1000.0 * 6.0 - 300.0);
     }
 
     #[test]
@@ -138,8 +138,10 @@ mod tests {
         let d = V100;
         // mimic a matrix where hit ratio saturates by k=8
         let hit = |k: usize| (1.0 - 0.5 / k as f64).min(1.0);
-        let times: Vec<f64> =
-            [2usize, 4, 8, 16, 32, 64].iter().map(|&k| gse_head_time_at_k(&d, &a, k, hit(k))).collect();
+        let times: Vec<f64> = [2usize, 4, 8, 16, 32, 64]
+            .iter()
+            .map(|&k| gse_head_time_at_k(&d, &a, k, hit(k)))
+            .collect();
         let best = times
             .iter()
             .enumerate()

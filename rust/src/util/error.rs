@@ -1,0 +1,163 @@
+//! Minimal error-context type (anyhow substitute — the offline build
+//! environment carries no external crates, see DESIGN.md §5).
+//!
+//! Provides the slice of `anyhow` this crate actually uses:
+//! * [`Error`] — a message chain; `{e}` prints the outermost context,
+//!   `{e:#}` prints the whole chain joined with `": "`.
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both
+//!   `Result` and `Option`.
+//! * [`bail!`](crate::bail) — early-return with a formatted message.
+
+use std::fmt;
+
+/// A chain of context messages, outermost first.
+#[derive(Debug, Clone)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { chain: vec![m.to_string()] }
+    }
+
+    /// Prepend a context message (what `.context(..)` does).
+    pub fn wrap(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` with [`Error`] as the default error type (anyhow-style).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+macro_rules! impl_from {
+    ($($t:ty),* $(,)?) => {
+        $(impl From<$t> for Error {
+            fn from(e: $t) -> Self {
+                Error::msg(e)
+            }
+        })*
+    };
+}
+
+impl_from!(
+    std::io::Error,
+    std::num::ParseIntError,
+    std::num::ParseFloatError,
+    std::str::Utf8Error,
+    String,
+    &str,
+);
+
+/// Attach context to fallible values (`Result` and `Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($t)*)))
+    };
+}
+
+pub use crate::bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(Error::msg("root cause"))
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(Some(1).context("missing").unwrap(), 1);
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let mut called = false;
+        let r: Result<u32> = Ok(7);
+        let out = r.with_context(|| {
+            called = true;
+            "never"
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert!(!called);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f(x: i32) -> Result<()> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(format!("{}", f(-2).unwrap_err()), "negative: -2");
+    }
+}

@@ -1,7 +1,9 @@
-//! Infrastructure substrate: PRNG, statistics, timing, bit helpers, and
-//! the in-repo substitutes for `criterion` (bench harness) and `proptest`
-//! (randomized property harness) — neither crate is available in this
-//! offline build environment (see DESIGN.md §5).
+//! Infrastructure substrate: PRNG, statistics, timing, bit helpers,
+//! shared chunk-parallelism ([`parallel`]), an error-context type
+//! ([`error`], the `anyhow` substitute), and the in-repo substitutes for
+//! `criterion` (bench harness) and `proptest` (randomized property
+//! harness) — none of those crates are available in this offline build
+//! environment (see DESIGN.md §5).
 
 pub mod prng;
 pub mod stats;
@@ -11,6 +13,8 @@ pub mod bench;
 pub mod quickcheck;
 pub mod table;
 pub mod csv;
+pub mod error;
+pub mod parallel;
 
 pub use prng::Prng;
 pub use stats::{geomean, mean, median, percentile, stddev};

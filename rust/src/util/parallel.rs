@@ -1,0 +1,231 @@
+//! Shared chunk-parallel execution helpers.
+//!
+//! Every parallel hot path in the crate used to hand-roll the same
+//! `std::thread::scope` pattern (the FP64 SpMV, the coordinator's worker
+//! pool, the metrics stress test). This module is the single home for
+//! that machinery:
+//!
+//! * [`default_workers`] — the configurable worker count
+//!   (`GSEM_WORKERS` env override, else the machine's parallelism);
+//! * [`balance_by_weight`] — partition `0..n` into contiguous ranges of
+//!   roughly equal total weight (nnz-balanced row chunks for SpMV);
+//! * [`for_each_disjoint`] — run per-chunk work over disjoint mutable
+//!   slices of one output buffer on scoped threads;
+//! * [`run_queue`] — a fixed-size worker pool draining a job queue,
+//!   results returned in submission order;
+//! * [`broadcast`] — run a closure once per worker (stress tests).
+//!
+//! Determinism contract: chunk workers compute each output element with
+//! exactly the serial per-element code, so results are **bit-for-bit
+//! identical** to the serial path for every worker count (each row's
+//! dot product is accumulated by a single thread in the serial order).
+
+use std::ops::Range;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// Worker count: `GSEM_WORKERS` if set (>= 1), else
+/// `std::thread::available_parallelism()`, else 1.
+pub fn default_workers() -> usize {
+    let env = std::env::var("GSEM_WORKERS").ok().and_then(|v| v.parse::<usize>().ok());
+    if let Some(n) = env {
+        return n.max(1);
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Partition `0..n` into at most `parts` contiguous ranges whose total
+/// `weight(i)` is roughly balanced. Every index is covered exactly once;
+/// ranges are returned in ascending order. `parts` is clamped to
+/// `[1, max(n, 1)]`.
+pub fn balance_by_weight(
+    n: usize,
+    parts: usize,
+    weight: impl Fn(usize) -> usize,
+) -> Vec<Range<usize>> {
+    let parts = parts.max(1).min(n.max(1));
+    let total: usize = (0..n).map(&weight).sum();
+    let target = total.div_ceil(parts).max(1);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for i in 0..n {
+        acc += weight(i);
+        if acc >= target && out.len() + 1 < parts {
+            out.push(start..i + 1);
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    out.push(start..n);
+    out
+}
+
+/// Split `out` along `chunks` (contiguous, ascending, starting at 0 and
+/// covering `out.len()`) and run `work(chunk, sub_slice)` for each chunk
+/// on scoped threads. With a single chunk the work runs on the calling
+/// thread — the serial fast path.
+pub fn for_each_disjoint<T, F>(out: &mut [T], chunks: &[Range<usize>], work: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    debug_assert!(chunks.first().map(|c| c.start == 0).unwrap_or(true));
+    debug_assert!(chunks.windows(2).all(|w| w[0].end == w[1].start));
+    if chunks.len() <= 1 {
+        if let Some(ch) = chunks.first() {
+            work(ch.clone(), out);
+        }
+        return;
+    }
+    let mut slices: Vec<(Range<usize>, &mut [T])> = Vec::with_capacity(chunks.len());
+    let mut rest = out;
+    let mut cursor = 0usize;
+    for ch in chunks {
+        // mem::take sidesteps E0506: the loan on `*rest` must outlive
+        // the pushed sub-slice, which would forbid reassigning `rest`.
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(ch.end - cursor);
+        cursor = ch.end;
+        slices.push((ch.clone(), head));
+        rest = tail;
+    }
+    let work = &work;
+    std::thread::scope(|s| {
+        for (ch, ys) in slices {
+            s.spawn(move || work(ch, ys));
+        }
+    });
+}
+
+/// Drain `jobs` through `workers` scoped threads, returning `f(job)`
+/// results in submission order. `workers` is clamped to the job count;
+/// 0/1 workers degrade to an in-thread loop.
+pub fn run_queue<J, R, F>(workers: usize, jobs: Vec<J>, f: F) -> Vec<R>
+where
+    J: Send,
+    R: Send,
+    F: Fn(J) -> R + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return jobs.into_iter().map(f).collect();
+    }
+    let queue = Mutex::new(jobs.into_iter().enumerate().collect::<Vec<(usize, J)>>());
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let queue = &queue;
+    let f = &f;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((idx, j)) => {
+                        if tx.send((idx, f(j))).is_err() {
+                            break;
+                        }
+                    }
+                    None => break,
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (idx, res) in rx {
+            out[idx] = Some(res);
+        }
+        out.into_iter().map(|r| r.expect("worker died with job")).collect()
+    })
+}
+
+/// Run `f(worker_index)` once on each of `n` scoped threads.
+pub fn broadcast<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let f = &f;
+    std::thread::scope(|s| {
+        for i in 0..n.max(1) {
+            s.spawn(move || f(i));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn default_workers_at_least_one_and_env_override() {
+        assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn balance_covers_everything_contiguously() {
+        for (n, parts) in [(10usize, 3usize), (1, 4), (100, 7), (5, 5), (0, 2)] {
+            let ch = balance_by_weight(n, parts, |_| 1);
+            assert_eq!(ch.first().map(|c| c.start), Some(0));
+            assert_eq!(ch.last().unwrap().end, n);
+            for w in ch.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            assert!(ch.len() <= parts.max(1));
+        }
+    }
+
+    #[test]
+    fn balance_weights_skewed() {
+        // one heavy item at the front: it gets its own chunk
+        let ch = balance_by_weight(10, 3, |i| if i == 0 { 100 } else { 1 });
+        assert_eq!(ch[0], 0..1);
+        assert_eq!(ch.last().unwrap().end, 10);
+    }
+
+    #[test]
+    fn disjoint_chunks_write_every_slot() {
+        let mut out = vec![0usize; 57];
+        let chunks = balance_by_weight(out.len(), 4, |_| 1);
+        for_each_disjoint(&mut out, &chunks, |ch, ys| {
+            for (k, slot) in ys.iter_mut().enumerate() {
+                *slot = ch.start + k + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i + 1);
+        }
+    }
+
+    #[test]
+    fn single_chunk_runs_inline() {
+        let mut out = vec![0u8; 8];
+        for_each_disjoint(&mut out, &[0..8], |_, ys| ys.fill(7));
+        assert_eq!(out, vec![7; 8]);
+        // empty chunk list is a no-op
+        let mut empty: Vec<u8> = Vec::new();
+        for_each_disjoint(&mut empty, &[], |_, _| unreachable!());
+    }
+
+    #[test]
+    fn queue_preserves_order_for_any_worker_count() {
+        for workers in [1usize, 2, 3, 8] {
+            let jobs: Vec<usize> = (0..17).collect();
+            let out = run_queue(workers, jobs, |j| j * 2);
+            assert_eq!(out, (0..17).map(|j| j * 2).collect::<Vec<_>>(), "workers={workers}");
+        }
+        assert!(run_queue(4, Vec::<u32>::new(), |j| j).is_empty());
+    }
+
+    #[test]
+    fn broadcast_runs_once_per_worker() {
+        let hits = AtomicUsize::new(0);
+        broadcast(6, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 6);
+    }
+}
