@@ -33,10 +33,10 @@ fn main() {
         let arc = Arc::new(a);
         let mut t = TextTable::new(&["format", "iters", "relres", "time(s)"]);
         for (label, fmt) in [
-            ("FP64", FormatChoice::Fixed(ValueFormat::Fp64)),
-            ("FP16", FormatChoice::Fixed(ValueFormat::Fp16)),
-            ("BF16", FormatChoice::Fixed(ValueFormat::Bf16)),
-            ("GSE-head", FormatChoice::Fixed(ValueFormat::GseSem(Precision::Head))),
+            ("FP64", FormatChoice::fixed(ValueFormat::Fp64)),
+            ("FP16", FormatChoice::fixed(ValueFormat::Fp16)),
+            ("BF16", FormatChoice::fixed(ValueFormat::Bf16)),
+            ("GSE-head", FormatChoice::fixed(ValueFormat::GseSem(Precision::Head))),
             (
                 "GSE-stepped",
                 FormatChoice::Stepped {

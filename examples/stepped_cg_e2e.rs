@@ -26,15 +26,19 @@ fn main() {
     );
     let arc = Arc::new(a.clone());
 
-    let formats: [(&str, FormatChoice); 6] = [
-        ("FP64", FormatChoice::Fixed(ValueFormat::Fp64)),
-        ("FP16", FormatChoice::Fixed(ValueFormat::Fp16)),
-        ("BF16", FormatChoice::Fixed(ValueFormat::Bf16)),
-        ("GSE-head", FormatChoice::Fixed(ValueFormat::GseSem(Precision::Head))),
-        ("GSE-full", FormatChoice::Fixed(ValueFormat::GseSem(Precision::Full))),
+    let formats: [(&str, FormatChoice); 7] = [
+        ("FP64", FormatChoice::fixed(ValueFormat::Fp64)),
+        ("FP16", FormatChoice::fixed(ValueFormat::Fp16)),
+        ("BF16", FormatChoice::fixed(ValueFormat::Bf16)),
+        ("GSE-head", FormatChoice::fixed(ValueFormat::GseSem(Precision::Head))),
+        ("GSE-full", FormatChoice::fixed(ValueFormat::GseSem(Precision::Full))),
         (
             "GSE-stepped",
             FormatChoice::Stepped { k: 8, params: SteppedParams::cg_paper().scaled(0.05) },
+        ),
+        (
+            "FP32->FP64",
+            FormatChoice::SteppedCopy { params: SteppedParams::cg_paper().scaled(0.05) },
         ),
     ];
 

@@ -1,0 +1,86 @@
+//! Ablation — batched multi-RHS SpMV throughput (the §III-C traffic
+//! argument applied to batching): SpMV is memory-bound and the matrix
+//! bytes dominate, so a fused `apply_multi` that decodes each matrix
+//! row **once** and streams it across all right-hand sides should beat
+//! `nrhs` looped single-RHS applies on per-RHS wall time — most of all
+//! for the decode-heavy GSE-SEM levels. This bench measures exactly
+//! that, per storage format and batch width, against the looped
+//! baseline (`apply_multi_looped`).
+
+#[path = "common.rs"]
+mod common;
+
+use gsem::formats::{Precision, ValueFormat};
+use gsem::sparse::gen::corpus::{spmv_corpus, NamedMatrix};
+use gsem::spmv::{apply_multi_looped, build_operators, SpmvOp};
+use gsem::util::csv::write_csv;
+use gsem::util::stats::geomean;
+use gsem::util::table::TextTable;
+
+fn main() {
+    let mut corpus = spmv_corpus(common::bench_corpus_size());
+    corpus.sort_by_key(|m| m.a.nnz());
+    // the largest few matrices give the stablest per-RHS timings
+    let picks: Vec<&NamedMatrix> = corpus.iter().rev().take(3).collect();
+    eprintln!("ablation_batch: {} matrices", picks.len());
+    let budget = common::cell_budget();
+    let widths = [1usize, 2, 4, 8];
+
+    let header = ["matrix", "format", "nrhs", "looped/rhs", "fused/rhs", "speedup"];
+    let mut t = TextTable::new(&header);
+    let mut rows = Vec::new();
+    // (looped, fused) per-RHS seconds at nrhs=8 for the GSE head level
+    let mut head8: Vec<(f64, f64)> = Vec::new();
+    for m in &picks {
+        let a = &m.a;
+        let ops: Vec<Box<dyn SpmvOp>> = build_operators(a, 8);
+        for op in &ops {
+            for &nrhs in &widths {
+                let x: Vec<f64> = (0..a.ncols * nrhs).map(|i| ((i % 9) as f64) - 4.0).collect();
+                let mut y = vec![0.0; a.nrows * nrhs];
+                let t_loop = common::quick_time(budget, || {
+                    apply_multi_looped(op.as_ref(), &x, &mut y, nrhs);
+                });
+                let t_fused = common::quick_time(budget, || {
+                    op.apply_multi(&x, &mut y, nrhs);
+                });
+                let (lp, fp) = (t_loop / nrhs as f64, t_fused / nrhs as f64);
+                if op.format() == ValueFormat::GseSem(Precision::Head) && nrhs == 8 {
+                    head8.push((lp, fp));
+                }
+                t.row(&[
+                    m.name.clone(),
+                    op.format().label().to_string(),
+                    nrhs.to_string(),
+                    format!("{:.3}us", lp * 1e6),
+                    format!("{:.3}us", fp * 1e6),
+                    format!("{:.2}x", lp / fp),
+                ]);
+                rows.push(vec![
+                    m.name.clone(),
+                    op.format().label().to_string(),
+                    nrhs.to_string(),
+                    format!("{lp:.4e}"),
+                    format!("{fp:.4e}"),
+                ]);
+            }
+        }
+    }
+    println!("Ablation — per-RHS SpMV time, fused apply_multi vs looped single applies");
+    t.print();
+    let _ = write_csv(
+        "ablation_batch",
+        &["matrix", "format", "nrhs", "t_looped_per_rhs", "t_fused_per_rhs"],
+        &rows,
+    );
+
+    let speedups: Vec<f64> = head8.iter().map(|&(l, f)| l / f).collect();
+    let wins = head8.iter().filter(|&&(l, f)| f < l).count();
+    println!(
+        "\nGSE-SEM(head) @ nrhs=8: fused beats 8x looped on {}/{} matrices \
+         (geomean per-RHS speedup {:.2}x)",
+        wins,
+        head8.len(),
+        geomean(&speedups)
+    );
+}

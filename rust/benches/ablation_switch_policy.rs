@@ -9,6 +9,7 @@ mod common;
 
 use gsem::formats::Precision;
 use gsem::solvers::cg::{cg_solve, CgOpts};
+use gsem::solvers::ladder::PrecisionSwitchable;
 use gsem::solvers::stepped::{PrecisionController, SteppedParams, SwitchableOp};
 use gsem::sparse::gen::fem::diffusion2d;
 use gsem::spmv::GseCsr;
@@ -51,8 +52,8 @@ fn run_policy(
             move |iter, resid| {
                 // replicate PrecisionController::observe but with
                 // conditions masked by the policy
-                if let Some(_lvl) = observe_masked(ctrl, iter, resid, pol) {
-                    opref.set_level(ctrl.tag);
+                if let Some(_tag) = observe_masked(ctrl, iter, resid, pol) {
+                    opref.set_tag(ctrl.tag);
                     sw.push(iter);
                     gsem::solvers::MonitorCmd::Restart
                 } else {
@@ -62,7 +63,7 @@ fn run_policy(
         )
     };
     // residual against the full-precision operator
-    let full = op.m.clone().at_level(Precision::Full);
+    let full = op.m.as_ref().clone().at_level(Precision::Full);
     let rel = gsem::solvers::true_relres(&full, &out.x, &b);
     (out.iters, rel, switch_iters)
 }
@@ -73,13 +74,13 @@ fn observe_masked(
     iter: usize,
     resid: f64,
     pol: Policy,
-) -> Option<Precision> {
+) -> Option<u8> {
     use gsem::solvers::stepped::window_metrics;
     // maintain the window manually (mirror of the real controller)
     let got = c.observe(iter, resid);
     match got {
         None => None,
-        Some(lvl) => {
+        Some(tag) => {
             // the real controller switched; check whether the masked
             // policy would have: recompute on the pre-clear state is not
             // possible, so approximate by re-deriving from the reason.
@@ -93,14 +94,10 @@ fn observe_masked(
             };
             let _ = window_metrics; // metrics derived inside observe
             if allowed {
-                Some(lvl)
+                Some(tag)
             } else {
                 // undo the escalation the unmasked controller performed
-                c.tag = match c.tag {
-                    Precision::HeadTail1 => Precision::Head,
-                    Precision::Full => Precision::HeadTail1,
-                    p => p,
-                };
+                c.tag = c.tag.saturating_sub(1).max(1);
                 c.switches.pop();
                 c.reasons.pop();
                 None

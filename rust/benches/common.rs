@@ -57,9 +57,9 @@ pub fn solver_formats(solver: SolverKind) -> Vec<(&'static str, FormatChoice)> {
     }
     .scaled(if fast() { 0.005 } else { 0.02 });
     vec![
-        ("FP64", FormatChoice::Fixed(ValueFormat::Fp64)),
-        ("FP16", FormatChoice::Fixed(ValueFormat::Fp16)),
-        ("BF16", FormatChoice::Fixed(ValueFormat::Bf16)),
+        ("FP64", FormatChoice::fixed(ValueFormat::Fp64)),
+        ("FP16", FormatChoice::fixed(ValueFormat::Fp16)),
+        ("BF16", FormatChoice::fixed(ValueFormat::Bf16)),
         ("GSE-SEM", FormatChoice::Stepped { k: 8, params: stepped }),
     ]
 }

@@ -1,0 +1,230 @@
+//! Coordinator-level operator cache.
+//!
+//! Every solve job used to re-encode its matrix from scratch —
+//! `GseCsr::from_csr` per stepped request, a throwaway `Fp64Csr` clone
+//! per residual check. Under the batch/suite workloads the same handful
+//! of matrices are requested over and over, so the encode work is pure
+//! waste. [`OperatorCache`] memoizes built operators keyed by **matrix
+//! identity** (the `Arc<Csr>` pointer — entries keep the `Arc` alive so
+//! a key can never be recycled while cached), storage format, and the
+//! GSE shared-exponent count `k`.
+//!
+//! Cache outcomes surface in [`Metrics`] as `cache.hits` /
+//! `cache.misses` counters and the `cache.encode_saved` timing series
+//! (seconds of encode work a hit avoided); the same numbers are
+//! available without a metrics sink via [`OperatorCache::stats`].
+//!
+//! Operators are built serially (the build runs under the cache lock so
+//! concurrent pool workers never duplicate an encode) and with one SpMV
+//! worker thread, matching the per-job dispatch behavior.
+
+use crate::coordinator::metrics::Metrics;
+use crate::formats::ValueFormat;
+use crate::sparse::csr::Csr;
+use crate::spmv::fp64::Fp64Csr;
+use crate::spmv::gse::GseSpmv;
+use crate::spmv::lowp::LowpCsr;
+use crate::spmv::{GseCsr, SpmvOp};
+use crate::util::Timer;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Cache key: matrix identity + format (+ GSE `k`, 0 for non-GSE).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct Key {
+    matrix: usize,
+    format: ValueFormat,
+    k: usize,
+}
+
+struct OpEntry {
+    op: Arc<dyn SpmvOp>,
+    /// seconds the build took — credited as "saved" on every hit
+    build_s: f64,
+    /// keeps the matrix alive so the pointer key stays unique
+    _matrix: Arc<Csr>,
+}
+
+struct GseEntry {
+    m: Arc<GseCsr>,
+    build_s: f64,
+    _matrix: Arc<Csr>,
+}
+
+/// Build a fixed-format operator from scratch (no memoization) — the
+/// single construction point shared by the cache miss path and
+/// uncached one-shot dispatch. `k` is the GSE shared-exponent count
+/// (ignored by the non-GSE formats).
+pub(crate) fn build_fixed_operator(a: &Csr, format: ValueFormat, k: usize) -> Arc<dyn SpmvOp> {
+    match format {
+        ValueFormat::Fp64 => Arc::new(Fp64Csr::new(a.clone())),
+        ValueFormat::Fp32 => Arc::new(LowpCsr::<f32>::from_csr(a)),
+        ValueFormat::Fp16 => Arc::new(LowpCsr::<crate::formats::Fp16>::from_csr(a)),
+        ValueFormat::Bf16 => Arc::new(LowpCsr::<crate::formats::Bf16>::from_csr(a)),
+        ValueFormat::GseSem(level) => Arc::new(GseCsr::from_csr(a, k).at_level(level)),
+    }
+}
+
+/// Aggregate cache outcomes (also exported to [`Metrics`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// total encode/build seconds that hits avoided re-spending
+    pub encode_saved_s: f64,
+}
+
+/// Memoized operator builds for the coordinator (see module docs).
+#[derive(Default)]
+pub struct OperatorCache {
+    ops: Mutex<HashMap<Key, OpEntry>>,
+    gse: Mutex<HashMap<(usize, usize), GseEntry>>,
+    stats: Mutex<CacheStats>,
+}
+
+impl OperatorCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The encoded GSE-SEM matrix for `(a, k)`, building it on a miss.
+    /// Shared by the fixed-level operators (all three levels view one
+    /// encode) and the stepped ladder.
+    pub fn gse(&self, a: &Arc<Csr>, k: usize, metrics: Option<&Metrics>) -> Arc<GseCsr> {
+        let key = (Arc::as_ptr(a) as usize, k);
+        let mut map = self.gse.lock().unwrap();
+        if let Some(e) = map.get(&key) {
+            self.credit_hit(e.build_s, metrics);
+            return Arc::clone(&e.m);
+        }
+        let t = Timer::start();
+        let m = Arc::new(GseCsr::from_csr(a, k));
+        let build_s = t.elapsed_s();
+        self.credit_miss(build_s, metrics);
+        map.insert(key, GseEntry { m: Arc::clone(&m), build_s, _matrix: Arc::clone(a) });
+        m
+    }
+
+    /// A type-erased fixed-format operator for `(a, format, k)`,
+    /// building it on a miss. GSE levels wrap the shared
+    /// [`OperatorCache::gse`] encode (the wrapper itself is a cheap
+    /// `Arc` view, so only the encode is memoized).
+    pub fn operator(
+        &self,
+        a: &Arc<Csr>,
+        format: ValueFormat,
+        k: usize,
+        metrics: Option<&Metrics>,
+    ) -> Arc<dyn SpmvOp> {
+        if let ValueFormat::GseSem(level) = format {
+            let g = self.gse(a, k, metrics);
+            return Arc::new(GseSpmv::new(g, level));
+        }
+        let key = Key { matrix: Arc::as_ptr(a) as usize, format, k: 0 };
+        let mut map = self.ops.lock().unwrap();
+        if let Some(e) = map.get(&key) {
+            self.credit_hit(e.build_s, metrics);
+            return Arc::clone(&e.op);
+        }
+        let t = Timer::start();
+        let op = build_fixed_operator(a, format, k);
+        let build_s = t.elapsed_s();
+        self.credit_miss(build_s, metrics);
+        map.insert(key, OpEntry { op: Arc::clone(&op), build_s, _matrix: Arc::clone(a) });
+        op
+    }
+
+    /// Aggregate hit/miss/saved-seconds counters.
+    pub fn stats(&self) -> CacheStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Number of cached builds (operators + GSE encodes).
+    pub fn len(&self) -> usize {
+        self.ops.lock().unwrap().len() + self.gse.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn credit_hit(&self, saved_s: f64, metrics: Option<&Metrics>) {
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.hits += 1;
+            st.encode_saved_s += saved_s;
+        }
+        if let Some(m) = metrics {
+            m.incr("cache.hits");
+            m.time("cache.encode_saved", saved_s);
+        }
+    }
+
+    fn credit_miss(&self, build_s: f64, metrics: Option<&Metrics>) {
+        self.stats.lock().unwrap().misses += 1;
+        if let Some(m) = metrics {
+            m.incr("cache.misses");
+            m.time("cache.encode", build_s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Precision;
+    use crate::sparse::gen::poisson::poisson2d;
+
+    #[test]
+    fn same_matrix_hits_distinct_matrices_miss() {
+        let cache = OperatorCache::new();
+        let a = Arc::new(poisson2d(8, 8));
+        let b = Arc::new(poisson2d(8, 8)); // equal content, distinct identity
+        let op1 = cache.operator(&a, ValueFormat::Fp64, 0, None);
+        let op2 = cache.operator(&a, ValueFormat::Fp64, 0, None);
+        assert!(Arc::ptr_eq(&op1, &op2));
+        let _op3 = cache.operator(&b, ValueFormat::Fp64, 0, None);
+        let st = cache.stats();
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.misses, 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn gse_levels_share_one_encode() {
+        let cache = OperatorCache::new();
+        let a = Arc::new(poisson2d(8, 8));
+        let head = cache.operator(&a, ValueFormat::GseSem(Precision::Head), 8, None);
+        let full = cache.operator(&a, ValueFormat::GseSem(Precision::Full), 8, None);
+        assert_eq!(head.format(), ValueFormat::GseSem(Precision::Head));
+        assert_eq!(full.format(), ValueFormat::GseSem(Precision::Full));
+        // one encode miss, one hit; a different k encodes again
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        let _k2 = cache.gse(&a, 2, None);
+        assert_eq!(cache.stats().misses, 2);
+        // cached operators compute the same product as fresh ones
+        let x = vec![1.0; a.ncols];
+        let mut y1 = vec![0.0; a.nrows];
+        head.apply(&x, &mut y1);
+        let mut y2 = vec![0.0; a.nrows];
+        GseCsr::from_csr(&a, 8).at_level(Precision::Head).apply(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn metrics_surface_hits_and_saved_seconds() {
+        let cache = OperatorCache::new();
+        let m = Metrics::new();
+        let a = Arc::new(poisson2d(10, 10));
+        let _ = cache.gse(&a, 8, Some(&m));
+        let _ = cache.gse(&a, 8, Some(&m));
+        assert_eq!(m.counter("cache.misses"), 1);
+        assert_eq!(m.counter("cache.hits"), 1);
+        let (n, total, _) = m.timing("cache.encode_saved");
+        assert_eq!(n, 1);
+        assert!(total >= 0.0);
+        assert!(cache.stats().encode_saved_s >= 0.0);
+        assert!(!cache.is_empty());
+    }
+}

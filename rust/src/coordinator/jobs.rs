@@ -1,22 +1,32 @@
 //! Solve-job model and worker pool.
 //!
 //! A [`SolveRequest`] names a matrix, a right-hand side, a solver and a
-//! storage format (including the stepped GSE-SEM mode); [`dispatch`]
-//! runs it; [`SolverPool`] fans a batch out over OS threads with an
+//! storage format (including both stepped ladders); [`dispatch`] runs
+//! it; [`SolverPool`] fans a batch out over OS threads with an
 //! mpsc-based queue (the offline substitute for a tokio runtime —
-//! DESIGN.md §5).
+//! DESIGN.md §5), reusing encodes through an [`OperatorCache`] and
+//! merging same-matrix CG requests into multi-RHS block solves
+//! ([`crate::solvers::cg::cg_solve_multi`]).
 
+use crate::coordinator::cache::{build_fixed_operator, OperatorCache};
+use crate::coordinator::metrics::Metrics;
 use crate::formats::ValueFormat;
 use crate::solvers::bicgstab::{bicgstab_solve, BicgstabOpts};
-use crate::solvers::stepped::{run_stepped, SteppedParams};
-use crate::solvers::{cg_solve, gmres_solve, CgOpts, GmresOpts, SolveOutcome};
+use crate::solvers::cg::cg_solve_multi;
+use crate::solvers::ladder::CopyLadderOp;
+use crate::solvers::stepped::{run_stepped, run_stepped_with, SteppedParams};
+use crate::solvers::{cg_solve, gmres_solve, CgOpts, GmresOpts, MonitorCmd, SolveOutcome};
 use crate::sparse::csr::Csr;
 use crate::spmv::fp64::Fp64Csr;
-use crate::spmv::lowp::LowpCsr;
 use crate::spmv::{GseCsr, SpmvOp};
 use crate::util::parallel;
 use crate::util::Prng;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 use std::sync::Arc;
+
+/// Default GSE shared-exponent count (the paper's headline k).
+pub const DEFAULT_K: usize = 8;
 
 /// Which solver to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,13 +65,36 @@ impl RhsSpec {
     }
 }
 
-/// Storage format under test — the paper's comparison axis, plus the
-/// stepped mode (Algorithm 3).
+/// Storage format under test — the paper's comparison axis plus the two
+/// stepped ladders (Algorithm 3 over GSE-SEM, and the copy-based
+/// related-work baseline). The GSE shared-exponent count `k` lives
+/// here, and only here: `FormatChoice` is the single source of truth
+/// (`SolveRequest` no longer carries a duplicate).
 #[derive(Clone, Debug)]
 pub enum FormatChoice {
-    Fixed(ValueFormat),
+    /// Fixed storage format; `k` is the GSE-SEM shared-exponent count
+    /// (ignored by non-GSE formats).
+    Fixed { format: ValueFormat, k: usize },
     /// GSE-SEM with the stepped controller; k shared exponents.
     Stepped { k: usize, params: SteppedParams },
+    /// Copy-based fp32→fp64 stepped ladder (related-work baseline).
+    SteppedCopy { params: SteppedParams },
+}
+
+impl FormatChoice {
+    /// Fixed format with the default `k` = [`DEFAULT_K`].
+    pub fn fixed(format: ValueFormat) -> Self {
+        FormatChoice::Fixed { format, k: DEFAULT_K }
+    }
+
+    /// The GSE shared-exponent count, if this choice encodes one.
+    pub fn k(&self) -> Option<usize> {
+        match self {
+            FormatChoice::Fixed { format: ValueFormat::GseSem(_), k } => Some(*k),
+            FormatChoice::Stepped { k, .. } => Some(*k),
+            FormatChoice::Fixed { .. } | FormatChoice::SteppedCopy { .. } => None,
+        }
+    }
 }
 
 /// One solve job.
@@ -74,8 +107,6 @@ pub struct SolveRequest {
     pub format: FormatChoice,
     pub tol: f64,
     pub max_iters: usize,
-    /// GSE-SEM shared exponent count for Fixed(GseSem) formats
-    pub k: usize,
 }
 
 impl SolveRequest {
@@ -91,7 +122,6 @@ impl SolveRequest {
                 SolverKind::Cg | SolverKind::Bicgstab => 5000,
                 SolverKind::Gmres => 15000,
             },
-            k: 8,
         }
     }
 }
@@ -108,55 +138,63 @@ pub struct SolveResult {
     pub relres_fp64: f64,
 }
 
-/// Run one request synchronously.
+/// Run one request synchronously, without operator reuse.
 pub fn dispatch(req: &SolveRequest) -> SolveResult {
+    dispatch_cached(req, None, None)
+}
+
+/// Run one request, reusing encoded operators from `cache` (when given)
+/// and reporting cache/solve counters into `metrics` (when given). The
+/// pool routes everything through here.
+pub fn dispatch_cached(
+    req: &SolveRequest,
+    cache: Option<&OperatorCache>,
+    metrics: Option<&Metrics>,
+) -> SolveResult {
     let a = req.a.as_ref();
     let b = req.rhs.build(a);
     let (outcome, label) = match &req.format {
-        FormatChoice::Fixed(fmt) => {
-            let op: Box<dyn SpmvOp> = match fmt {
-                ValueFormat::Fp64 => Box::new(Fp64Csr::new(a.clone())),
-                ValueFormat::Fp32 => Box::new(LowpCsr::<f32>::from_csr(a)),
-                ValueFormat::Fp16 => Box::new(LowpCsr::<crate::formats::Fp16>::from_csr(a)),
-                ValueFormat::Bf16 => Box::new(LowpCsr::<crate::formats::Bf16>::from_csr(a)),
-                ValueFormat::GseSem(level) => {
-                    Box::new(GseCsr::from_csr(a, req.k).at_level(*level))
-                }
+        FormatChoice::Fixed { format, k } => {
+            let op: Arc<dyn SpmvOp> = match cache {
+                Some(c) => c.operator(&req.a, *format, *k, metrics),
+                None => build_fixed_operator(a, *format, *k),
             };
-            (run_solver(req, op.as_ref(), &b), fmt.label().to_string())
+            let mut noop = |_: usize, _: f64| MonitorCmd::Continue;
+            let out = run_solver_monitored(req, op.as_ref(), &b, &mut noop);
+            (out, format.label().to_string())
         }
         FormatChoice::Stepped { k, params } => {
-            let g = GseCsr::from_csr(a, *k);
-            let (out, _, _) = run_stepped(g, *params, |op, monitor| match req.solver {
-                SolverKind::Cg => cg_solve(
-                    op,
-                    &b,
-                    &CgOpts { tol: req.tol, max_iters: req.max_iters, inv_diag: None },
-                    monitor,
-                ),
-                SolverKind::Gmres => gmres_solve(
-                    op,
-                    &b,
-                    &GmresOpts {
-                        tol: req.tol,
-                        restart: 30,
-                        max_outer: req.max_iters.div_ceil(30),
-                    },
-                    monitor,
-                ),
-                SolverKind::Bicgstab => bicgstab_solve(
-                    op,
-                    &b,
-                    &BicgstabOpts { tol: req.tol, max_iters: req.max_iters },
-                    monitor,
-                ),
+            let g: Arc<GseCsr> = match cache {
+                Some(c) => c.gse(&req.a, *k, metrics),
+                None => Arc::new(GseCsr::from_csr(a, *k)),
+            };
+            let (out, _, _) = run_stepped(g, *params, |op, monitor| {
+                run_solver_monitored(req, op, &b, monitor)
             });
             (out, "GSE-SEM".to_string())
         }
+        FormatChoice::SteppedCopy { params } => {
+            // both rungs come from the cache so repeated jobs share the
+            // fp32/fp64 copies; only the tag state is per-solve
+            let op = match cache {
+                Some(c) => CopyLadderOp::new(
+                    c.operator(&req.a, ValueFormat::Fp32, 0, metrics),
+                    c.operator(&req.a, ValueFormat::Fp64, 0, metrics),
+                ),
+                None => CopyLadderOp::from_csr(a),
+            };
+            let (out, _, _) = run_stepped_with(&op, *params, |op, monitor| {
+                run_solver_monitored(req, op, &b, monitor)
+            });
+            (out, "FP32->FP64".to_string())
+        }
     };
     // the paper's reported residual: against the FP64 matrix
-    let fp64_op = Fp64Csr::new(a.clone());
-    let relres_fp64 = crate::solvers::true_relres(&fp64_op, &outcome.x, &b);
+    let fp64_op: Arc<dyn SpmvOp> = match cache {
+        Some(c) => c.operator(&req.a, ValueFormat::Fp64, 0, metrics),
+        None => Arc::new(Fp64Csr::new(a.clone())),
+    };
+    let relres_fp64 = crate::solvers::true_relres(fp64_op.as_ref(), &outcome.x, &b);
     SolveResult {
         name: req.name.clone(),
         solver: req.solver,
@@ -166,38 +204,85 @@ pub fn dispatch(req: &SolveRequest) -> SolveResult {
     }
 }
 
-fn run_solver(req: &SolveRequest, op: &dyn SpmvOp, b: &[f64]) -> SolveOutcome {
+/// One solver invocation with an installed monitor — the plumbing every
+/// format path (fixed, GSE stepped, copy stepped) shares. The monitor
+/// is what the stepped controllers hook; plain solves pass a no-op.
+fn run_solver_monitored(
+    req: &SolveRequest,
+    op: &dyn SpmvOp,
+    b: &[f64],
+    monitor: &mut dyn FnMut(usize, f64) -> MonitorCmd,
+) -> SolveOutcome {
     match req.solver {
         SolverKind::Cg => cg_solve(
             op,
             b,
             &CgOpts { tol: req.tol, max_iters: req.max_iters, inv_diag: None },
-            |_, _| crate::solvers::MonitorCmd::Continue,
+            monitor,
         ),
         SolverKind::Gmres => gmres_solve(
             op,
             b,
             &GmresOpts { tol: req.tol, restart: 30, max_outer: req.max_iters.div_ceil(30) },
-            |_, _| crate::solvers::MonitorCmd::Continue,
+            monitor,
         ),
         SolverKind::Bicgstab => bicgstab_solve(
             op,
             b,
             &BicgstabOpts { tol: req.tol, max_iters: req.max_iters },
-            |_, _| crate::solvers::MonitorCmd::Continue,
+            monitor,
         ),
     }
 }
 
+/// Batch-grouping key: CG requests on the same matrix with identical
+/// fixed format and solve caps merge into one multi-RHS block solve.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct GroupKey {
+    matrix: usize,
+    format: ValueFormat,
+    k: usize,
+    tol_bits: u64,
+    max_iters: usize,
+}
+
+fn group_key(req: &SolveRequest) -> Option<GroupKey> {
+    match (&req.format, req.solver) {
+        (FormatChoice::Fixed { format, k }, SolverKind::Cg) => {
+            // k only affects GSE storage — normalize it away for the
+            // other formats so numerically identical requests batch
+            let k = match format {
+                ValueFormat::GseSem(_) => *k,
+                _ => 0,
+            };
+            Some(GroupKey {
+                matrix: Arc::as_ptr(&req.a) as usize,
+                format: *format,
+                k,
+                tol_bits: req.tol.to_bits(),
+                max_iters: req.max_iters,
+            })
+        }
+        _ => None,
+    }
+}
+
 /// Fixed-size worker pool over the shared [`parallel::run_queue`]
-/// machinery; results come back in submission order.
+/// machinery; results come back in submission order. Every job runs
+/// against a pool-wide [`OperatorCache`] (one encode per matrix ×
+/// format × k) and same-matrix CG requests are solved as one multi-RHS
+/// block — per-column results are bit-for-bit what individual dispatch
+/// would produce, but the matrix is decoded once per iteration instead
+/// of once per request.
 pub struct SolverPool {
     workers: usize,
+    cache: OperatorCache,
+    metrics: Metrics,
 }
 
 impl SolverPool {
     pub fn new(workers: usize) -> Self {
-        Self { workers: workers.max(1) }
+        Self { workers: workers.max(1), cache: OperatorCache::new(), metrics: Metrics::new() }
     }
 
     /// Worker pool sized from `GSEM_WORKERS` / the machine's parallelism.
@@ -205,9 +290,84 @@ impl SolverPool {
         Self::new(parallel::default_workers())
     }
 
+    /// Pool-lifetime counters: cache hits/misses, encode seconds saved,
+    /// multi-RHS groups formed.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The pool's operator cache (shared across batches).
+    pub fn cache(&self) -> &OperatorCache {
+        &self.cache
+    }
+
     /// Run a batch, preserving input order.
     pub fn run_batch(&self, reqs: Vec<SolveRequest>) -> Vec<SolveResult> {
-        parallel::run_queue(self.workers, reqs, |req| dispatch(&req))
+        let n = reqs.len();
+        let mut groups: Vec<Vec<(usize, SolveRequest)>> = Vec::new();
+        let mut by_key: HashMap<GroupKey, usize> = HashMap::new();
+        for (i, req) in reqs.into_iter().enumerate() {
+            match group_key(&req) {
+                Some(key) => match by_key.entry(key) {
+                    Entry::Occupied(e) => groups[*e.get()].push((i, req)),
+                    Entry::Vacant(v) => {
+                        v.insert(groups.len());
+                        groups.push(vec![(i, req)]);
+                    }
+                },
+                None => groups.push(vec![(i, req)]),
+            }
+        }
+        let done = parallel::run_queue(self.workers, groups, |g| self.run_group(g));
+        let mut out: Vec<Option<SolveResult>> = (0..n).map(|_| None).collect();
+        for (i, r) in done.into_iter().flatten() {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("every request yields a result")).collect()
+    }
+
+    /// Solve one group: singletons dispatch normally; larger groups run
+    /// as one multi-RHS CG block over the cached operator.
+    fn run_group(&self, group: Vec<(usize, SolveRequest)>) -> Vec<(usize, SolveResult)> {
+        if group.len() == 1 {
+            let (i, req) = group.into_iter().next().unwrap();
+            let res = dispatch_cached(&req, Some(&self.cache), Some(&self.metrics));
+            return vec![(i, res)];
+        }
+        let (format, k) = match &group[0].1.format {
+            FormatChoice::Fixed { format, k } => (*format, *k),
+            _ => unreachable!("grouping only collects fixed formats"),
+        };
+        let (tol, max_iters) = (group[0].1.tol, group[0].1.max_iters);
+        let a = Arc::clone(&group[0].1.a);
+        let op = self.cache.operator(&a, format, k, Some(&self.metrics));
+        let fp64 = self.cache.operator(&a, ValueFormat::Fp64, 0, Some(&self.metrics));
+        let nrhs = group.len();
+        let n = a.nrows;
+        let mut bs = vec![0.0; n * nrhs];
+        for (j, (_, req)) in group.iter().enumerate() {
+            bs[j * n..(j + 1) * n].copy_from_slice(&req.rhs.build(&a));
+        }
+        self.metrics.incr("pool.batched_groups");
+        self.metrics.add("pool.batched_rhs", nrhs as u64);
+        let opts = CgOpts { tol, max_iters, inv_diag: None };
+        let outs = cg_solve_multi(op.as_ref(), &bs, nrhs, &opts);
+        let mut results = Vec::with_capacity(nrhs);
+        for (j, ((i, req), outcome)) in group.into_iter().zip(outs).enumerate() {
+            let b = &bs[j * n..(j + 1) * n];
+            let relres_fp64 = crate::solvers::true_relres(fp64.as_ref(), &outcome.x, b);
+            results.push((
+                i,
+                SolveResult {
+                    name: req.name,
+                    solver: req.solver,
+                    format_label: format.label().to_string(),
+                    outcome,
+                    relres_fp64,
+                },
+            ));
+        }
+        results
     }
 }
 
@@ -221,7 +381,8 @@ mod tests {
     #[test]
     fn dispatch_cg_fp64() {
         let a = Arc::new(poisson2d(10, 10));
-        let req = SolveRequest::new("p", a, SolverKind::Cg, FormatChoice::Fixed(ValueFormat::Fp64));
+        let fmt = FormatChoice::fixed(ValueFormat::Fp64);
+        let req = SolveRequest::new("p", a, SolverKind::Cg, fmt);
         let res = dispatch(&req);
         assert!(res.outcome.converged);
         assert!(res.relres_fp64 < 1e-6);
@@ -235,7 +396,7 @@ mod tests {
             "c",
             a,
             SolverKind::Gmres,
-            FormatChoice::Fixed(ValueFormat::GseSem(Precision::Head)),
+            FormatChoice::fixed(ValueFormat::GseSem(Precision::Head)),
         );
         let res = dispatch(&req);
         // head-only decode still converges on this well-conditioned system
@@ -257,16 +418,69 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_stepped_copy_ladder() {
+        let a = Arc::new(poisson2d(8, 8));
+        let req = SolveRequest::new(
+            "sc",
+            a,
+            SolverKind::Cg,
+            FormatChoice::SteppedCopy { params: SteppedParams::cg_paper().scaled(0.01) },
+        );
+        let res = dispatch(&req);
+        assert_eq!(res.format_label, "FP32->FP64");
+        assert!(res.outcome.converged, "relres={}", res.relres_fp64);
+    }
+
+    #[test]
+    fn stepped_copy_jobs_share_cached_rungs() {
+        let a = Arc::new(poisson2d(8, 8));
+        let params = SteppedParams::cg_paper().scaled(0.01);
+        let reqs: Vec<SolveRequest> = (0..2)
+            .map(|i| {
+                let mut r = SolveRequest::new(
+                    &format!("c{i}"),
+                    Arc::clone(&a),
+                    SolverKind::Cg,
+                    FormatChoice::SteppedCopy { params },
+                );
+                r.rhs = RhsSpec::Random(i as u64);
+                r
+            })
+            .collect();
+        let pool = SolverPool::new(2);
+        let res = pool.run_batch(reqs);
+        assert!(res.iter().all(|r| r.outcome.converged));
+        // fp32 + fp64 copies built once; the second job hits both, and
+        // the fp64 residual operator is shared by every job
+        let st = pool.cache().stats();
+        assert_eq!(st.misses, 2);
+        assert!(st.hits >= 4, "hits={}", st.hits);
+    }
+
+    #[test]
+    fn format_choice_owns_k() {
+        assert_eq!(FormatChoice::fixed(ValueFormat::Fp64).k(), None);
+        let g = FormatChoice::Fixed { format: ValueFormat::GseSem(Precision::Head), k: 16 };
+        assert_eq!(g.k(), Some(16));
+        let s = FormatChoice::Stepped { k: 4, params: SteppedParams::cg_paper() };
+        assert_eq!(s.k(), Some(4));
+        let c = FormatChoice::SteppedCopy { params: SteppedParams::cg_paper() };
+        assert_eq!(c.k(), None);
+    }
+
+    #[test]
     fn pool_preserves_order_and_completes() {
         let a = Arc::new(poisson2d(8, 8));
         let reqs: Vec<SolveRequest> = (0..6)
             .map(|i| {
-                SolveRequest::new(
+                let mut r = SolveRequest::new(
                     &format!("job{i}"),
                     Arc::clone(&a),
                     SolverKind::Cg,
-                    FormatChoice::Fixed(ValueFormat::Fp64),
-                )
+                    FormatChoice::fixed(ValueFormat::Fp64),
+                );
+                r.rhs = RhsSpec::Random(i as u64);
+                r
             })
             .collect();
         let pool = SolverPool::new(3);
@@ -276,6 +490,54 @@ mod tests {
             assert_eq!(r.name, format!("job{i}"));
             assert!(r.outcome.converged);
         }
+        // all six shared one matrix+format: one multi-RHS group
+        assert_eq!(pool.metrics().counter("pool.batched_groups"), 1);
+        assert_eq!(pool.metrics().counter("pool.batched_rhs"), 6);
+    }
+
+    #[test]
+    fn batched_group_matches_individual_dispatch_bitwise() {
+        let a = Arc::new(poisson2d(9, 9));
+        let mk = |seed: u64| {
+            let mut r = SolveRequest::new(
+                "b",
+                Arc::clone(&a),
+                SolverKind::Cg,
+                FormatChoice::fixed(ValueFormat::Fp64),
+            );
+            r.rhs = RhsSpec::Random(seed);
+            r
+        };
+        let pool = SolverPool::new(2);
+        let batched = pool.run_batch(vec![mk(1), mk(2), mk(3)]);
+        for (seed, br) in (1u64..=3).zip(&batched) {
+            let single = dispatch(&mk(seed));
+            assert_eq!(br.outcome.iters, single.outcome.iters, "seed {seed}");
+            assert_eq!(br.outcome.x, single.outcome.x, "seed {seed}");
+            assert_eq!(br.relres_fp64.to_bits(), single.relres_fp64.to_bits(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn pool_cache_reuses_encodes_across_formats() {
+        let a = Arc::new(poisson2d(8, 8));
+        let mut reqs = Vec::new();
+        for level in Precision::LADDER {
+            reqs.push(SolveRequest::new(
+                "g",
+                Arc::clone(&a),
+                SolverKind::Cg,
+                FormatChoice::fixed(ValueFormat::GseSem(level)),
+            ));
+        }
+        let pool = SolverPool::new(1);
+        let res = pool.run_batch(reqs);
+        assert_eq!(res.len(), 3);
+        // one GSE encode + one FP64 residual operator; everything else hits
+        let st = pool.cache().stats();
+        assert_eq!(st.misses, 2, "hits={} misses={}", st.hits, st.misses);
+        assert!(st.hits >= 3);
+        assert!(pool.metrics().counter("cache.hits") >= 3);
     }
 
     #[test]

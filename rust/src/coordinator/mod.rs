@@ -1,11 +1,14 @@
 //! Thin L3 coordinator (DESIGN.md §2): the paper's contribution is the
 //! numeric format + solver policy (L1/L2), so L3 is a driver — a solve-
-//! job model, a worker pool, a metrics registry, and the CLI plumbing
-//! that runs the experiment suite. No request-path python anywhere.
+//! job model, a worker pool with same-matrix multi-RHS batching, an
+//! operator cache, a metrics registry, and the CLI plumbing that runs
+//! the experiment suite. No request-path python anywhere.
 
+pub mod cache;
 pub mod jobs;
 pub mod metrics;
 pub mod cli;
 
+pub use cache::{CacheStats, OperatorCache};
 pub use jobs::{FormatChoice, RhsSpec, SolveRequest, SolveResult, SolverKind, SolverPool};
 pub use metrics::Metrics;

@@ -50,6 +50,16 @@ impl Precision {
         }
     }
 
+    /// Inverse of [`Precision::tag`], clamping out-of-range tags to the
+    /// nearest rung (0 → Head, ≥3 → Full).
+    pub fn from_tag(tag: u8) -> Precision {
+        match tag {
+            0 | 1 => Precision::Head,
+            2 => Precision::HeadTail1,
+            _ => Precision::Full,
+        }
+    }
+
     /// Next level up the ladder, saturating at `Full`.
     pub fn escalate(self) -> Precision {
         match self {
@@ -114,6 +124,15 @@ mod tests {
         assert_eq!(Precision::Full.escalate(), Precision::Full);
         assert_eq!(Precision::LADDER[0].tag(), 1);
         assert_eq!(Precision::LADDER[2].tag(), 3);
+    }
+
+    #[test]
+    fn tag_roundtrip_and_clamping() {
+        for p in Precision::LADDER {
+            assert_eq!(Precision::from_tag(p.tag()), p);
+        }
+        assert_eq!(Precision::from_tag(0), Precision::Head);
+        assert_eq!(Precision::from_tag(9), Precision::Full);
     }
 
     #[test]

@@ -19,13 +19,16 @@
 //! * [`spmv`] — SpMV operators for every storage format, including the
 //!   three-precision GSE-SEM SpMV, plus a memory-traffic roofline model
 //!   used to translate CPU measurements into the paper's V100 setting.
-//! * [`solvers`] — CG, restarted GMRES, BiCGSTAB, iterative refinement,
-//!   and the paper's **stepped mixed-precision controller**
-//!   (RSD / nDec / relDec switching conditions).
+//! * [`solvers`] — CG (single- and multi-RHS), restarted GMRES,
+//!   BiCGSTAB, iterative refinement, and the paper's **stepped
+//!   mixed-precision controller** (RSD / nDec / relDec switching
+//!   conditions), generic over precision ladders (zero-copy GSE-SEM
+//!   tags or the copy-based fp32→fp64 baseline).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`).
-//! * [`coordinator`] — thin L3 driver: solve-job queue, worker pool,
-//!   metrics, experiment suite runner.
+//! * [`coordinator`] — thin L3 driver: solve-job queue, worker pool
+//!   with same-matrix multi-RHS batching, operator cache, metrics,
+//!   experiment suite runner.
 
 pub mod util;
 pub mod formats;

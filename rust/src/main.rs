@@ -53,7 +53,9 @@ fn print_usage() {
            spmv     --matrix <name|path.mtx> [--k 8] [--threads N]\n\
                     compare SpMV formats (Fig. 6)\n\
            solve    --matrix <name|path.mtx> --solver cg|gmres|bicgstab\n\
-                    --format fp64|fp32|fp16|bf16|gse-head|gse-t1|gse-full|stepped [--k 8]\n\
+                    --format fp64|fp32|fp16|bf16|gse-head|gse-t1|gse-full|stepped|stepped-copy\n\
+                    [--k 8] [--nrhs N]  (N > 1 pools N random RHS; fixed-format CG\n\
+                    merges them into one multi-RHS block solve)\n\
            suite    [--solver cg|gmres|both] [--size small|medium|full] [--workers N] (0 = auto)\n\
            kernels                                      PJRT artifact check\n\
            gen      --matrix <name> --out <path.mtx> | --list\n\n\
@@ -160,17 +162,18 @@ fn cmd_spmv(cli: &Cli) -> i32 {
     0
 }
 
-fn parse_format(s: &str) -> Option<FormatChoice> {
-    Some(match s {
-        "fp64" => FormatChoice::Fixed(ValueFormat::Fp64),
-        "fp32" => FormatChoice::Fixed(ValueFormat::Fp32),
-        "fp16" => FormatChoice::Fixed(ValueFormat::Fp16),
-        "bf16" => FormatChoice::Fixed(ValueFormat::Bf16),
-        "gse-head" => FormatChoice::Fixed(ValueFormat::GseSem(Precision::Head)),
-        "gse-t1" => FormatChoice::Fixed(ValueFormat::GseSem(Precision::HeadTail1)),
-        "gse-full" => FormatChoice::Fixed(ValueFormat::GseSem(Precision::Full)),
+fn parse_format(s: &str, k: usize) -> Option<FormatChoice> {
+    let format = match s {
+        "fp64" => ValueFormat::Fp64,
+        "fp32" => ValueFormat::Fp32,
+        "fp16" => ValueFormat::Fp16,
+        "bf16" => ValueFormat::Bf16,
+        "gse-head" => ValueFormat::GseSem(Precision::Head),
+        "gse-t1" => ValueFormat::GseSem(Precision::HeadTail1),
+        "gse-full" => ValueFormat::GseSem(Precision::Full),
         _ => return None,
-    })
+    };
+    Some(FormatChoice::Fixed { format, k })
 }
 
 fn cmd_solve(cli: &Cli) -> i32 {
@@ -189,21 +192,21 @@ fn cmd_solve(cli: &Cli) -> i32 {
     };
     let k = cli.get_usize("k", 8).unwrap_or(8);
     let fmt_str = cli.get_or("format", "stepped");
-    let format = if fmt_str == "stepped" {
-        let base = match solver {
-            SolverKind::Cg | SolverKind::Bicgstab => SteppedParams::cg_paper(),
-            SolverKind::Gmres => SteppedParams::gmres_paper(),
-        };
-        let scale = cli.get_f64("scale", 0.02).unwrap_or(0.02);
-        FormatChoice::Stepped { k, params: base.scaled(scale) }
-    } else {
-        match parse_format(fmt_str) {
+    let stepped_base = match solver {
+        SolverKind::Cg | SolverKind::Bicgstab => SteppedParams::cg_paper(),
+        SolverKind::Gmres => SteppedParams::gmres_paper(),
+    };
+    let scale = cli.get_f64("scale", 0.02).unwrap_or(0.02);
+    let format = match fmt_str {
+        "stepped" => FormatChoice::Stepped { k, params: stepped_base.scaled(scale) },
+        "stepped-copy" => FormatChoice::SteppedCopy { params: stepped_base.scaled(scale) },
+        other => match parse_format(other, k) {
             Some(f) => f,
             None => {
-                eprintln!("unknown format {fmt_str}");
+                eprintln!("unknown format {other}");
                 return 2;
             }
-        }
+        },
     };
     let a = match load_matrix(spec) {
         Ok(a) => a,
@@ -212,19 +215,18 @@ fn cmd_solve(cli: &Cli) -> i32 {
             return 1;
         }
     };
+    let nrhs = cli.get_usize("nrhs", 1).unwrap_or(1).max(1);
     let mut req = SolveRequest::new(spec, Arc::new(a), solver, format);
-    req.k = k;
     req.tol = cli.get_f64("tol", 1e-6).unwrap_or(1e-6);
+    if nrhs > 1 {
+        return solve_multi_rhs(req, nrhs, solver);
+    }
     let res = gsem::coordinator::jobs::dispatch(&req);
     println!(
         "{} [{}] {}: iters={} converged={} relres(solver)={} relres(FP64)={:.3E} time={:.3}s",
         res.name,
         res.format_label,
-        match solver {
-            SolverKind::Cg => "CG",
-            SolverKind::Gmres => "GMRES",
-            SolverKind::Bicgstab => "BiCGSTAB",
-        },
+        solver_name(solver),
         res.outcome.iters,
         res.outcome.converged,
         res.outcome.relres_label(),
@@ -235,6 +237,53 @@ fn cmd_solve(cli: &Cli) -> i32 {
         println!("precision switches: {:?}", res.outcome.switches);
     }
     if res.outcome.converged {
+        0
+    } else {
+        1
+    }
+}
+
+fn solver_name(solver: SolverKind) -> &'static str {
+    match solver {
+        SolverKind::Cg => "CG",
+        SolverKind::Gmres => "GMRES",
+        SolverKind::Bicgstab => "BiCGSTAB",
+    }
+}
+
+/// `solve --nrhs N`: N independent random right-hand sides on one
+/// matrix, run through the pool. Fixed-format CG requests merge into a
+/// single multi-RHS block solve over the cached operator; the stepped /
+/// non-CG modes run as N pooled solves that still share the cached
+/// encodes (see the `pool.batched_*` and `cache.*` counters printed at
+/// the end).
+fn solve_multi_rhs(req: SolveRequest, nrhs: usize, solver: SolverKind) -> i32 {
+    let reqs: Vec<SolveRequest> = (0..nrhs)
+        .map(|j| {
+            let mut r = req.clone();
+            r.name = format!("{}#{j}", req.name);
+            r.rhs = gsem::coordinator::RhsSpec::Random(1000 + j as u64);
+            r
+        })
+        .collect();
+    let pool = SolverPool::new(1);
+    let results = pool.run_batch(reqs);
+    let mut t = TextTable::new(&["rhs", "format", "iters", "relres(FP64)", "time(s)"]);
+    let mut all_ok = true;
+    for r in &results {
+        all_ok &= r.outcome.converged;
+        t.row(&[
+            r.name.clone(),
+            r.format_label.clone(),
+            r.outcome.iters.to_string(),
+            format!("{:.3E}", r.relres_fp64),
+            format!("{:.3}", r.outcome.seconds),
+        ]);
+    }
+    println!("{} x{nrhs} RHS (pool-batched where possible)", solver_name(solver));
+    t.print();
+    print!("{}", pool.metrics().report());
+    if all_ok {
         0
     } else {
         1
@@ -255,9 +304,9 @@ fn cmd_suite(cli: &Cli) -> i32 {
         n => SolverPool::new(n),
     };
     let formats: [(&str, FormatChoice); 3] = [
-        ("FP64", FormatChoice::Fixed(ValueFormat::Fp64)),
-        ("FP16", FormatChoice::Fixed(ValueFormat::Fp16)),
-        ("BF16", FormatChoice::Fixed(ValueFormat::Bf16)),
+        ("FP64", FormatChoice::fixed(ValueFormat::Fp64)),
+        ("FP16", FormatChoice::fixed(ValueFormat::Fp16)),
+        ("BF16", FormatChoice::fixed(ValueFormat::Bf16)),
     ];
     for (solver, set) in
         [(SolverKind::Cg, cg_set(size)), (SolverKind::Gmres, gmres_set(size))]
@@ -302,6 +351,8 @@ fn cmd_suite(cli: &Cli) -> i32 {
         }
         t.print();
     }
+    // operator-cache + batching counters accumulated across the suite
+    print!("{}", pool.metrics().report());
     0
 }
 

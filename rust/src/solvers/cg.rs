@@ -144,6 +144,147 @@ pub fn cg_solve(
     }
 }
 
+/// Solve `A X = B` for `nrhs` right-hand sides packed column-major in
+/// `bs` (`bs[j*n..(j+1)*n]` is RHS `j`), running `nrhs` independent CG
+/// recurrences in lockstep so each iteration makes exactly **one** pass
+/// over the matrix ([`SpmvOp::apply_multi`]) — the multi-RHS batching
+/// lever of the coordinator's [`crate::coordinator::SolverPool`].
+///
+/// Each column follows the identical arithmetic sequence as a standalone
+/// [`cg_solve`] on that RHS (bit-for-bit, since every in-tree
+/// `apply_multi` is bit-identical to looped single applies), so the
+/// per-column outcomes — iterates, iteration counts, residuals — match
+/// the unbatched solver. Columns that converge or break down are frozen
+/// (their search direction is zeroed) while the rest continue.
+/// `seconds` in each outcome is the shared wall time of the block solve.
+pub fn cg_solve_multi(
+    op: &dyn SpmvOp,
+    bs: &[f64],
+    nrhs: usize,
+    opts: &CgOpts,
+) -> Vec<SolveOutcome> {
+    let n = op.nrows();
+    assert_eq!(op.ncols(), n, "multi-RHS CG requires a square operator");
+    assert_eq!(bs.len(), n * nrhs);
+    if nrhs == 0 {
+        return Vec::new();
+    }
+    let timer = Timer::start();
+    let apply_pre = |r: &[f64], z: &mut [f64]| {
+        if let Some(d) = &opts.inv_diag {
+            for i in 0..r.len() {
+                z[i] = r[i] * d[i];
+            }
+        } else {
+            z.copy_from_slice(r);
+        }
+    };
+
+    // column-major packed per-RHS state: xs[j*n..(j+1)*n] is column j
+    let mut xs = vec![0.0; n * nrhs];
+    let mut rs = bs.to_vec();
+    let mut zs = vec![0.0; n * nrhs];
+    let mut ps = vec![0.0; n * nrhs];
+    let mut aps = vec![0.0; n * nrhs];
+    let mut best_xs = vec![0.0; n * nrhs];
+    let mut bnorm = vec![0.0; nrhs];
+    let mut rz = vec![0.0; nrhs];
+    let mut best_rel = vec![f64::INFINITY; nrhs];
+    let mut history: Vec<Vec<f64>> = vec![Vec::new(); nrhs];
+    let mut iters = vec![0usize; nrhs];
+    let mut converged = vec![false; nrhs];
+    let mut broke_down = vec![false; nrhs];
+    let mut active = vec![true; nrhs];
+
+    for j in 0..nrhs {
+        let c = j * n..(j + 1) * n;
+        bnorm[j] = nrm2(&bs[c.clone()]);
+        if bnorm[j] == 0.0 {
+            converged[j] = true;
+            active[j] = false;
+            continue;
+        }
+        apply_pre(&rs[c.clone()], &mut zs[c.clone()]);
+        ps[c.clone()].copy_from_slice(&zs[c.clone()]);
+        rz[j] = dot(&rs[c.clone()], &zs[c]);
+    }
+
+    for k in 0..opts.max_iters {
+        if !active.iter().any(|&a| a) {
+            break;
+        }
+        // one pass over the matrix for every still-active column
+        op.apply_multi(&ps, &mut aps, nrhs);
+        for j in 0..nrhs {
+            if !active[j] {
+                continue;
+            }
+            let c = j * n..(j + 1) * n;
+            let pap = dot(&ps[c.clone()], &aps[c.clone()]);
+            if pap == 0.0 || !pap.is_finite() {
+                broke_down[j] = !pap.is_finite();
+                active[j] = false;
+                ps[c].fill(0.0);
+                continue;
+            }
+            let alpha = rz[j] / pap;
+            axpy(alpha, &ps[c.clone()], &mut xs[c.clone()]);
+            axpy(-alpha, &aps[c.clone()], &mut rs[c.clone()]);
+            let rel = nrm2(&rs[c.clone()]) / bnorm[j];
+            history[j].push(rel);
+            iters[j] = k + 1;
+            if !rel.is_finite() || has_nonfinite(&xs[c.clone()]) {
+                broke_down[j] = true;
+                active[j] = false;
+                ps[c].fill(0.0);
+                continue;
+            }
+            if rel < best_rel[j] {
+                best_rel[j] = rel;
+                best_xs[c.clone()].copy_from_slice(&xs[c.clone()]);
+            }
+            if rel <= opts.tol {
+                converged[j] = true;
+                active[j] = false;
+                ps[c].fill(0.0);
+                continue;
+            }
+            apply_pre(&rs[c.clone()], &mut zs[c.clone()]);
+            let rz_new = dot(&rs[c.clone()], &zs[c.clone()]);
+            let beta = rz_new / rz[j];
+            rz[j] = rz_new;
+            xpby(&zs[c.clone()], beta, &mut ps[c]);
+        }
+    }
+
+    let seconds = timer.elapsed_s();
+    let mut out = Vec::with_capacity(nrhs);
+    for j in 0..nrhs {
+        let c = j * n..(j + 1) * n;
+        let b = &bs[c.clone()];
+        // a diverged tail must not beat the checkpoint (as in cg_solve)
+        if !broke_down[j] && best_rel[j].is_finite() {
+            let final_rel = super::true_relres(op, &xs[c.clone()], b);
+            if best_rel[j] < final_rel {
+                xs[c.clone()].copy_from_slice(&best_xs[c.clone()]);
+            }
+        }
+        let x = xs[c].to_vec();
+        let relres = super::true_relres(op, &x, b);
+        out.push(SolveOutcome {
+            converged: converged[j],
+            iters: iters[j],
+            relres,
+            history: std::mem::take(&mut history[j]),
+            switches: vec![],
+            seconds,
+            x,
+            broke_down: broke_down[j],
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +375,53 @@ mod tests {
         });
         assert!(!out.converged);
         assert_eq!(out.iters, 3);
+    }
+
+    #[test]
+    fn multi_rhs_matches_single_solves_bitwise() {
+        let op = Fp64Csr::new(poisson2d(14, 14));
+        let n = op.nrows();
+        let nrhs = 3usize;
+        let mut rng = Prng::new(8);
+        let mut bs = vec![0.0; n * nrhs];
+        // mix of shapes: b = A·1, random, zero
+        bs[0..n].copy_from_slice(&rhs_for_ones(&op));
+        for v in bs[n..2 * n].iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+        let outs = cg_solve_multi(&op, &bs, nrhs, &CgOpts::default());
+        assert_eq!(outs.len(), nrhs);
+        for (j, multi) in outs.iter().enumerate() {
+            let b = &bs[j * n..(j + 1) * n];
+            let single = cg_solve(&op, b, &CgOpts::default(), |_, _| MonitorCmd::Continue);
+            assert_eq!(multi.converged, single.converged, "rhs {j}");
+            assert_eq!(multi.iters, single.iters, "rhs {j}");
+            assert_eq!(multi.x, single.x, "rhs {j}");
+            assert_eq!(multi.history, single.history, "rhs {j}");
+            assert_eq!(multi.relres.to_bits(), single.relres.to_bits(), "rhs {j}");
+        }
+        // the zero column is the trivial solve
+        assert!(outs[2].converged);
+        assert_eq!(outs[2].iters, 0);
+        assert!(outs[2].x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn multi_rhs_respects_max_iters_per_column() {
+        let op = Fp64Csr::new(poisson2d(24, 24));
+        let n = op.nrows();
+        let b = rhs_for_ones(&op);
+        let mut bs = vec![0.0; n * 2];
+        bs[0..n].copy_from_slice(&b);
+        for (i, v) in bs[n..2 * n].iter_mut().enumerate() {
+            *v = (i % 5) as f64 - 2.0;
+        }
+        let opts = CgOpts { max_iters: 4, ..Default::default() };
+        let outs = cg_solve_multi(&op, &bs, 2, &opts);
+        for out in &outs {
+            assert!(!out.converged);
+            assert_eq!(out.iters, 4);
+        }
     }
 
     #[test]

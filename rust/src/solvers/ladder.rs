@@ -1,0 +1,263 @@
+//! Format-agnostic precision ladders for the stepped controller.
+//!
+//! The paper's Algorithm 3 escalates through the GSE-SEM segment levels
+//! of a *single* storage, but the stepped controller itself only needs
+//! "an operator with numbered precision rungs" — the framing Loe et al.
+//! (arXiv:2109.01232) and Carson–Khan (arXiv:2307.03914) use for
+//! copy-based mixed-precision ladders. [`PrecisionSwitchable`] captures
+//! that contract so `run_stepped_with` (and everything above it: the
+//! CG/GMRES/BiCGSTAB monitor plumbing, the job model, the benches) is
+//! generic over the ladder:
+//!
+//! * [`SwitchableOp`] — the paper's zero-copy GSE-SEM tag ladder
+//!   (tags 1/2/3 read more segments of one encoded matrix);
+//! * [`CopyLadderOp`] — the related-work baseline: two full copies of
+//!   the matrix, fp32 (tag 1) → fp64 (tag 2), switching by re-pointing
+//!   rather than re-reading.
+
+use crate::formats::{Precision, ValueFormat};
+use crate::sparse::csr::Csr;
+use crate::spmv::fp64::Fp64Csr;
+use crate::spmv::gse::GseCsr;
+use crate::spmv::lowp::LowpCsr;
+use crate::spmv::SpmvOp;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+
+/// An [`SpmvOp`] whose storage precision forms a ladder of 1-based
+/// "rungs" (the paper's `tag`), raisable mid-solve through a shared
+/// reference (interior mutability) so the controller can escalate from
+/// inside a solver's monitor callback.
+pub trait PrecisionSwitchable: SpmvOp {
+    /// Number of rungs (3 for the GSE ladder, 2 for fp32→fp64).
+    fn num_tags(&self) -> u8;
+    /// Current rung.
+    fn tag(&self) -> u8;
+    /// Jump to `tag`, clamped to `[1, num_tags]`.
+    fn set_tag(&self, tag: u8);
+    /// Human-readable label of rung `tag` (reports / metrics).
+    fn tag_label(&self, tag: u8) -> String;
+}
+
+/// An [`SpmvOp`] whose precision level can be raised mid-solve — the
+/// `A_1/A_2/A_3` of Algorithm 3 over a *single* GSE-SEM storage.
+pub struct SwitchableOp {
+    pub m: Arc<GseCsr>,
+    level: AtomicU8,
+}
+
+impl SwitchableOp {
+    pub fn new(m: impl Into<Arc<GseCsr>>) -> Self {
+        Self { m: m.into(), level: AtomicU8::new(1) }
+    }
+
+    pub fn level(&self) -> Precision {
+        Precision::from_tag(self.level.load(Ordering::Relaxed))
+    }
+
+    pub fn set_level(&self, p: Precision) {
+        self.level.store(p.tag(), Ordering::Relaxed);
+    }
+}
+
+impl SpmvOp for SwitchableOp {
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.m.spmv(x, y, self.level());
+    }
+
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
+        self.m.spmv_multi(x, y, nrhs, self.level());
+    }
+
+    fn nrows(&self) -> usize {
+        self.m.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.m.ncols
+    }
+
+    fn format(&self) -> ValueFormat {
+        ValueFormat::GseSem(self.level())
+    }
+
+    fn matrix_bytes(&self) -> usize {
+        self.m.bytes_at(self.level())
+    }
+}
+
+impl PrecisionSwitchable for SwitchableOp {
+    fn num_tags(&self) -> u8 {
+        Precision::LADDER.len() as u8
+    }
+
+    fn tag(&self) -> u8 {
+        self.level.load(Ordering::Relaxed)
+    }
+
+    fn set_tag(&self, tag: u8) {
+        self.set_level(Precision::from_tag(tag));
+    }
+
+    fn tag_label(&self, tag: u8) -> String {
+        ValueFormat::GseSem(Precision::from_tag(tag)).label().to_string()
+    }
+}
+
+/// Copy-based fp32→fp64 ladder — the related-work mixed-precision
+/// baseline. Keeps **two full copies** of the matrix (the storage cost
+/// GSE-SEM avoids): tag 1 applies the FP32 copy, tag 2 the FP64 copy.
+/// The rungs are `Arc`-shared operators, so the coordinator cache can
+/// hand the same copies to many stepped-copy jobs; only the tag is
+/// per-solve. Both copies run the shared chunk-parallel SpMV paths, so
+/// stepped solves over this ladder are an apples-to-apples contrast
+/// with [`SwitchableOp`].
+pub struct CopyLadderOp {
+    pub lo: Arc<dyn SpmvOp>,
+    pub hi: Arc<dyn SpmvOp>,
+    tag: AtomicU8,
+}
+
+impl CopyLadderOp {
+    /// Wrap two prebuilt rungs (e.g. cache-shared operators): `lo` is
+    /// tag 1, `hi` tag 2. Dimensions must agree.
+    pub fn new(lo: Arc<dyn SpmvOp>, hi: Arc<dyn SpmvOp>) -> Self {
+        assert_eq!((lo.nrows(), lo.ncols()), (hi.nrows(), hi.ncols()));
+        Self { lo, hi, tag: AtomicU8::new(1) }
+    }
+
+    /// Build both copies from scratch (the uncached one-shot path).
+    pub fn from_csr(a: &Csr) -> Self {
+        Self::with_threads(a, 1)
+    }
+
+    pub fn with_threads(a: &Csr, threads: usize) -> Self {
+        Self::new(
+            Arc::new(LowpCsr::<f32>::from_csr(a).with_threads(threads)),
+            Arc::new(Fp64Csr::with_threads(a.clone(), threads)),
+        )
+    }
+
+    fn active(&self) -> &dyn SpmvOp {
+        if self.tag.load(Ordering::Relaxed) <= 1 {
+            self.lo.as_ref()
+        } else {
+            self.hi.as_ref()
+        }
+    }
+}
+
+impl SpmvOp for CopyLadderOp {
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.active().apply(x, y);
+    }
+
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
+        self.active().apply_multi(x, y, nrhs);
+    }
+
+    fn nrows(&self) -> usize {
+        self.hi.nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.hi.ncols()
+    }
+
+    fn format(&self) -> ValueFormat {
+        self.active().format()
+    }
+
+    fn matrix_bytes(&self) -> usize {
+        self.active().matrix_bytes()
+    }
+}
+
+impl PrecisionSwitchable for CopyLadderOp {
+    fn num_tags(&self) -> u8 {
+        2
+    }
+
+    fn tag(&self) -> u8 {
+        self.tag.load(Ordering::Relaxed)
+    }
+
+    fn set_tag(&self, tag: u8) {
+        self.tag.store(tag.clamp(1, 2), Ordering::Relaxed);
+    }
+
+    fn tag_label(&self, tag: u8) -> String {
+        let rung = if tag <= 1 { &self.lo } else { &self.hi };
+        rung.format().label().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::fem::diffusion2d;
+    use crate::sparse::gen::poisson::poisson2d;
+    use crate::spmv::max_abs_diff;
+
+    #[test]
+    fn switchable_op_levels() {
+        let a = poisson2d(6, 6);
+        let g = GseCsr::from_csr(&a, 8);
+        let op = SwitchableOp::new(g);
+        assert_eq!(op.level(), Precision::Head);
+        assert_eq!(op.format(), ValueFormat::GseSem(Precision::Head));
+        assert_eq!(op.num_tags(), 3);
+        let b_head = op.matrix_bytes();
+        op.set_level(Precision::Full);
+        assert_eq!(op.level(), Precision::Full);
+        assert_eq!(op.tag(), 3);
+        assert!(op.matrix_bytes() > b_head);
+        assert_eq!(op.tag_label(1), "GSE-SEM(head)");
+    }
+
+    #[test]
+    fn copy_ladder_switches_matrices() {
+        // values that truncate in fp32 so the rungs differ numerically
+        let a = diffusion2d(10, 10, 9.0, 4);
+        let op = CopyLadderOp::from_csr(&a);
+        assert_eq!(op.tag(), 1);
+        assert_eq!(op.format(), ValueFormat::Fp32);
+        assert_eq!(op.num_tags(), 2);
+        let x = vec![1.0; a.ncols];
+        let mut y32 = vec![0.0; a.nrows];
+        op.apply(&x, &mut y32);
+        let b32 = op.matrix_bytes();
+        op.set_tag(2);
+        assert_eq!(op.format(), ValueFormat::Fp64);
+        assert!(op.matrix_bytes() > b32);
+        let mut y64 = vec![0.0; a.nrows];
+        op.apply(&x, &mut y64);
+        let mut y_ref = vec![0.0; a.nrows];
+        crate::spmv::fp64::spmv(&a, &x, &mut y_ref);
+        assert_eq!(y64, y_ref);
+        assert!(max_abs_diff(&y32, &y_ref) > 0.0, "fp32 rung must differ");
+        // clamped on both ends
+        op.set_tag(9);
+        assert_eq!(op.tag(), 2);
+        op.set_tag(0);
+        assert_eq!(op.tag(), 1);
+        assert_eq!(op.tag_label(1), "FP32");
+        assert_eq!(op.tag_label(2), "FP64");
+    }
+
+    #[test]
+    fn copy_ladder_multi_matches_looped() {
+        let a = diffusion2d(12, 12, 8.0, 7);
+        let op = CopyLadderOp::from_csr(&a);
+        let nrhs = 3usize;
+        let x: Vec<f64> = (0..a.ncols * nrhs).map(|i| ((i % 11) as f64) - 5.0).collect();
+        for tag in [1u8, 2] {
+            op.set_tag(tag);
+            let mut y = vec![0.0; a.nrows * nrhs];
+            op.apply_multi(&x, &mut y, nrhs);
+            let mut y_loop = vec![0.0; a.nrows * nrhs];
+            crate::spmv::apply_multi_looped(&op, &x, &mut y_loop, nrhs);
+            assert_eq!(y, y_loop, "tag={tag}");
+        }
+    }
+}

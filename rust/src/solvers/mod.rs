@@ -8,8 +8,11 @@
 //!   (Table III / Fig. 8 solver).
 //! * [`bicgstab`] — BiCGSTAB (related-work extension [21]).
 //! * [`stepped`] — the residual-monitoring precision controller
-//!   (RSD / nDec / relDec, Conditions 1–3) and the switchable operator
-//!   it drives (Algorithm 3).
+//!   (RSD / nDec / relDec, Conditions 1–3) and the Algorithm-3 wiring,
+//!   generic over any precision ladder.
+//! * [`ladder`] — the [`ladder::PrecisionSwitchable`] ladder trait with
+//!   the zero-copy GSE-SEM tag ladder ([`SwitchableOp`]) and the
+//!   copy-based fp32→fp64 baseline ([`ladder::CopyLadderOp`]).
 //! * [`precond`] — Jacobi preconditioning (extension).
 //! * [`ir`] — mixed-precision iterative refinement baseline (related
 //!   work [11]).
@@ -18,13 +21,15 @@ pub mod blas1;
 pub mod cg;
 pub mod gmres;
 pub mod bicgstab;
+pub mod ladder;
 pub mod stepped;
 pub mod precond;
 pub mod ir;
 
-pub use cg::{cg_solve, CgOpts};
+pub use cg::{cg_solve, cg_solve_multi, CgOpts};
 pub use gmres::{gmres_solve, GmresOpts};
-pub use stepped::{PrecisionController, SteppedParams, SwitchableOp};
+pub use ladder::{CopyLadderOp, PrecisionSwitchable, SwitchableOp};
+pub use stepped::{PrecisionController, SteppedParams};
 
 use crate::spmv::SpmvOp;
 
@@ -79,19 +84,20 @@ impl SolveOutcome {
 }
 
 /// True relative residual ‖b − A·x‖₂ / ‖b‖₂ using the given operator.
+/// Built on the [`blas1`] kernels so every residual in the codebase
+/// goes through the one dot/norm implementation.
 pub fn true_relres(op: &dyn SpmvOp, x: &[f64], b: &[f64]) -> f64 {
-    let mut ax = vec![0.0; op.nrows()];
-    op.apply(x, &mut ax);
-    let mut num = 0.0;
-    for i in 0..b.len() {
-        let d = b[i] - ax[i];
-        num += d * d;
-    }
-    let den: f64 = b.iter().map(|v| v * v).sum();
+    let mut r = vec![0.0; op.nrows()];
+    op.apply(x, &mut r);
+    // r = b − A·x
+    blas1::scal(-1.0, &mut r);
+    blas1::axpy(1.0, b, &mut r);
+    let num = blas1::nrm2(&r);
+    let den = blas1::nrm2(b);
     if den == 0.0 {
-        num.sqrt()
+        num
     } else {
-        (num / den).sqrt()
+        num / den
     }
 }
 

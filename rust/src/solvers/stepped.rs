@@ -16,14 +16,22 @@
 //!   steady but slow decrease.
 //! **Condition 3**: `nDec == 0` — no decrease at all.
 //!
-//! Any of the three triggers one escalation step.
+//! Any of the three triggers one escalation step. The controller is
+//! agnostic to *what* escalates: any [`PrecisionSwitchable`] ladder
+//! (see [`crate::solvers::ladder`]) plugs into [`run_stepped_with`] —
+//! the paper's zero-copy GSE tag ladder and the copy-based fp32→fp64
+//! baseline both run under the identical switching policy.
 
 use crate::formats::Precision;
-use crate::formats::ValueFormat;
+use crate::solvers::ladder::PrecisionSwitchable;
 use crate::spmv::gse::GseCsr;
-use crate::spmv::SpmvOp;
 use crate::util::stats;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+
+// Historical home of the GSE tag ladder — re-exported so existing
+// `stepped::SwitchableOp` paths keep working after the extraction into
+// the format-agnostic [`crate::solvers::ladder`] module.
+pub use crate::solvers::ladder::SwitchableOp;
 
 /// Controller parameters (paper §IV-D1 values via [`SteppedParams::gmres_paper`]
 /// / [`SteppedParams::cg_paper`]; [`SteppedParams::scaled`] shrinks the
@@ -129,11 +137,17 @@ pub fn window_metrics(window: &[f64]) -> WindowMetrics {
     WindowMetrics { rsd, ndec, reldec }
 }
 
-/// The residual-monitoring precision controller.
+/// The residual-monitoring precision controller. Ladder-agnostic: it
+/// tracks a 1-based rung `tag` up to a configured depth, and the caller
+/// (see [`run_stepped_with`]) mirrors escalations onto whatever
+/// [`PrecisionSwitchable`] operator is in play.
 #[derive(Clone, Debug)]
 pub struct PrecisionController {
     pub params: SteppedParams,
-    pub tag: Precision,
+    /// current 1-based rung (Alg. 3's `tag`)
+    pub tag: u8,
+    /// ladder depth — no checks once `tag` reaches it
+    max_tag: u8,
     window: Vec<f64>,
     last_check: usize,
     best_resid: f64,
@@ -144,10 +158,18 @@ pub struct PrecisionController {
 }
 
 impl PrecisionController {
+    /// Controller for the paper's three-rung GSE ladder.
     pub fn new(params: SteppedParams) -> Self {
+        Self::with_ladder_depth(params, Precision::LADDER.len() as u8)
+    }
+
+    /// Controller for a ladder with `max_tag` rungs (tags `1..=max_tag`,
+    /// e.g. 2 for the copy-based fp32→fp64 ladder).
+    pub fn with_ladder_depth(params: SteppedParams, max_tag: u8) -> Self {
         Self {
             params,
-            tag: Precision::Head,
+            tag: 1,
+            max_tag: max_tag.max(1),
             window: Vec::with_capacity(params.t),
             last_check: 0,
             best_resid: f64::INFINITY,
@@ -171,14 +193,14 @@ impl PrecisionController {
         None
     }
 
-    /// Feed one residual observation; returns the new precision if the
+    /// Feed one residual observation; returns the new rung tag if the
     /// controller escalated at this iteration.
-    pub fn observe(&mut self, iter: usize, resid: f64) -> Option<Precision> {
+    pub fn observe(&mut self, iter: usize, resid: f64) -> Option<u8> {
         if self.window.len() == self.params.t {
             self.window.remove(0);
         }
         self.window.push(resid);
-        if self.tag == Precision::Full {
+        if self.tag >= self.max_tag {
             return None;
         }
         // divergence safety valve fires regardless of the l/m schedule
@@ -187,8 +209,8 @@ impl PrecisionController {
             && resid > self.params.divergence_factor * self.best_resid
         {
             self.best_resid = self.best_resid.min(resid);
-            self.tag = self.tag.escalate();
-            self.switches.push((iter, self.tag.tag()));
+            self.tag += 1;
+            self.switches.push((iter, self.tag));
             self.reasons.push(SwitchReason::Diverged);
             self.window.clear();
             self.last_check = iter;
@@ -207,8 +229,8 @@ impl PrecisionController {
         self.last_check = iter;
         let metrics = window_metrics(&self.window);
         if let Some(reason) = self.check_conditions(&metrics) {
-            self.tag = self.tag.escalate();
-            self.switches.push((iter, self.tag.tag()));
+            self.tag += 1;
+            self.switches.push((iter, self.tag));
             self.reasons.push(reason);
             // restart the window so the next decision sees post-switch data
             self.window.clear();
@@ -218,59 +240,52 @@ impl PrecisionController {
     }
 }
 
-/// An [`SpmvOp`] whose precision level can be raised mid-solve — the
-/// `A_1/A_2/A_3` of Algorithm 3 over a *single* GSE-SEM storage.
-pub struct SwitchableOp {
-    pub m: GseCsr,
-    level: AtomicU8,
+/// Run a solver with the stepped controller attached to **any**
+/// precision ladder (Algorithm 3's outer wiring, generalized): the
+/// `solve` closure receives the ladder operator and the monitor callback
+/// to install; every escalation the controller decides is mirrored onto
+/// `op` via [`PrecisionSwitchable::set_tag`] and answered with
+/// [`crate::solvers::MonitorCmd::Restart`] (the Krylov recurrence was
+/// built with the old operator). Returns the outcome, the switch
+/// reasons, and the sequence of tags seen.
+pub fn run_stepped_with<L, F>(
+    op: &L,
+    params: SteppedParams,
+    solve: F,
+) -> (crate::solvers::SolveOutcome, Vec<SwitchReason>, Vec<u8>)
+where
+    L: PrecisionSwitchable,
+    F: FnOnce(
+        &L,
+        &mut dyn FnMut(usize, f64) -> crate::solvers::MonitorCmd,
+    ) -> crate::solvers::SolveOutcome,
+{
+    let mut ctrl = PrecisionController::with_ladder_depth(params, op.num_tags());
+    ctrl.tag = op.tag().max(1);
+    let mut tags_seen = vec![ctrl.tag];
+    let mut out = {
+        let ctrlref = &mut ctrl;
+        let tags = &mut tags_seen;
+        let mut monitor = move |iter: usize, resid: f64| {
+            if let Some(new_tag) = ctrlref.observe(iter, resid) {
+                op.set_tag(new_tag);
+                tags.push(new_tag);
+                crate::solvers::MonitorCmd::Restart
+            } else {
+                crate::solvers::MonitorCmd::Continue
+            }
+        };
+        solve(op, &mut monitor)
+    };
+    out.switches = ctrl.switches.clone();
+    (out, ctrl.reasons, tags_seen)
 }
 
-impl SwitchableOp {
-    pub fn new(m: GseCsr) -> Self {
-        Self { m, level: AtomicU8::new(1) }
-    }
-
-    pub fn level(&self) -> Precision {
-        match self.level.load(Ordering::Relaxed) {
-            1 => Precision::Head,
-            2 => Precision::HeadTail1,
-            _ => Precision::Full,
-        }
-    }
-
-    pub fn set_level(&self, p: Precision) {
-        self.level.store(p.tag(), Ordering::Relaxed);
-    }
-}
-
-impl SpmvOp for SwitchableOp {
-    fn apply(&self, x: &[f64], y: &mut [f64]) {
-        self.m.spmv(x, y, self.level());
-    }
-
-    fn nrows(&self) -> usize {
-        self.m.nrows
-    }
-
-    fn ncols(&self) -> usize {
-        self.m.ncols
-    }
-
-    fn format(&self) -> ValueFormat {
-        ValueFormat::GseSem(self.level())
-    }
-
-    fn matrix_bytes(&self) -> usize {
-        self.m.bytes_at(self.level())
-    }
-}
-
-/// Run a solver with the stepped controller attached (Algorithm 3's
-/// outer wiring). The `solve` closure receives the switchable operator
-/// and the monitor callback to install; shared by the CG and GMRES
-/// stepped entry points.
+/// The historical GSE-SEM entry point: wrap `m` in a [`SwitchableOp`]
+/// and run [`run_stepped_with`], reporting the levels as [`Precision`]
+/// values. Shared by the CG and GMRES stepped paths.
 pub fn run_stepped<F>(
-    m: GseCsr,
+    m: impl Into<Arc<GseCsr>>,
     params: SteppedParams,
     solve: F,
 ) -> (crate::solvers::SolveOutcome, Vec<SwitchReason>, Vec<Precision>)
@@ -281,32 +296,14 @@ where
     ) -> crate::solvers::SolveOutcome,
 {
     let op = SwitchableOp::new(m);
-    let mut ctrl = PrecisionController::new(params);
-    let mut levels_seen = vec![Precision::Head];
-    let mut out = {
-        let opref = &op;
-        let ctrlref = &mut ctrl;
-        let levels = &mut levels_seen;
-        let mut monitor = move |iter: usize, resid: f64| {
-            if let Some(new_level) = ctrlref.observe(iter, resid) {
-                opref.set_level(new_level);
-                levels.push(new_level);
-                // the Krylov recurrence was built with the old operator
-                crate::solvers::MonitorCmd::Restart
-            } else {
-                crate::solvers::MonitorCmd::Continue
-            }
-        };
-        solve(&op, &mut monitor)
-    };
-    out.switches = ctrl.switches.clone();
-    (out, ctrl.reasons, levels_seen)
+    let (out, reasons, tags) = run_stepped_with(&op, params, solve);
+    let levels = tags.into_iter().map(Precision::from_tag).collect();
+    (out, reasons, levels)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::gen::poisson::poisson2d;
 
     #[test]
     fn metrics_match_paper_equations() {
@@ -341,8 +338,8 @@ mod tests {
                 break;
             }
         }
-        let (i, lvl) = switched_at.expect("must escalate on constant residuals");
-        assert_eq!(lvl, Precision::HeadTail1);
+        let (i, tag) = switched_at.expect("must escalate on constant residuals");
+        assert_eq!(tag, 2);
         assert!(i >= 5);
         assert_eq!(c.reasons[0], SwitchReason::NoDecrease);
     }
@@ -363,7 +360,7 @@ mod tests {
             // residual halves every iteration: healthy convergence
             assert!(c.observe(i, 2f64.powi(-(i as i32))).is_none(), "switched at {i}");
         }
-        assert_eq!(c.tag, Precision::Head);
+        assert_eq!(c.tag, 1);
     }
 
     #[test]
@@ -380,14 +377,37 @@ mod tests {
         let mut c = PrecisionController::new(p);
         let mut seen = Vec::new();
         for i in 1..200 {
-            if let Some(lvl) = c.observe(i, 1.0) {
-                seen.push(lvl);
+            if let Some(tag) = c.observe(i, 1.0) {
+                seen.push(tag);
             }
         }
-        assert_eq!(seen, vec![Precision::HeadTail1, Precision::Full]);
+        assert_eq!(seen, vec![2, 3]);
         assert_eq!(c.switches.len(), 2);
         assert_eq!(c.switches[0].1, 2);
         assert_eq!(c.switches[1].1, 3);
+    }
+
+    #[test]
+    fn ladder_depth_caps_escalation() {
+        // two-rung ladder (the copy fp32→fp64 baseline): one escalation
+        let p = SteppedParams {
+            l: 2,
+            t: 3,
+            m: 1,
+            rsd_limit: 0.5,
+            ndec_limit: 2,
+            reldec_limit: 0.1,
+            divergence_factor: 100.0,
+        };
+        let mut c = PrecisionController::with_ladder_depth(p, 2);
+        let mut seen = Vec::new();
+        for i in 1..200 {
+            if let Some(tag) = c.observe(i, 1.0) {
+                seen.push(tag);
+            }
+        }
+        assert_eq!(seen, vec![2]);
+        assert_eq!(c.tag, 2);
     }
 
     #[test]
@@ -456,19 +476,6 @@ mod tests {
         }
         assert!(fired.is_some());
         assert_eq!(c.reasons[0], SwitchReason::SlowDecrease);
-    }
-
-    #[test]
-    fn switchable_op_levels() {
-        let a = poisson2d(6, 6);
-        let g = crate::spmv::GseCsr::from_csr(&a, 8);
-        let op = SwitchableOp::new(g);
-        assert_eq!(op.level(), Precision::Head);
-        assert_eq!(op.format(), ValueFormat::GseSem(Precision::Head));
-        let b_head = op.matrix_bytes();
-        op.set_level(Precision::Full);
-        assert_eq!(op.level(), Precision::Full);
-        assert!(op.matrix_bytes() > b_head);
     }
 
     #[test]

@@ -70,9 +70,48 @@ pub fn spmv_par(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
     });
 }
 
+/// Fused multi-RHS SpMV: each row's non-zeros are read **once** and
+/// streamed across all `nrhs` column-major packed vectors (see
+/// [`SpmvOp::apply_multi`] for the layout). Bit-for-bit identical to
+/// `nrhs` single [`spmv`] calls for every thread count.
+pub fn spmv_multi(a: &Csr, x: &[f64], y: &mut [f64], nrhs: usize, threads: usize) {
+    assert_eq!(x.len(), a.ncols * nrhs);
+    assert_eq!(y.len(), a.nrows * nrhs);
+    if nrhs == 0 {
+        return;
+    }
+    let parts = if threads <= 1 || a.nrows < PAR_MIN_ROWS {
+        1
+    } else {
+        threads
+    };
+    let chunks = balance_rows(a, parts);
+    let ncols = a.ncols;
+    parallel::for_each_disjoint_cols(y, a.nrows, &chunks, |ch, cols| {
+        let mut acc = vec![0.0f64; nrhs];
+        for (i, r) in ch.enumerate() {
+            let (rc, rv) = a.row(r);
+            acc.fill(0.0);
+            for (&c, &v) in rc.iter().zip(rv) {
+                let c = c as usize;
+                for (j, aj) in acc.iter_mut().enumerate() {
+                    *aj += v * x[j * ncols + c];
+                }
+            }
+            for (j, aj) in acc.iter().enumerate() {
+                cols[j][i] = *aj;
+            }
+        }
+    });
+}
+
 impl SpmvOp for Fp64Csr {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         spmv_par(&self.a, x, y, self.threads);
+    }
+
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
+        spmv_multi(&self.a, x, y, nrhs, self.threads);
     }
 
     fn nrows(&self) -> usize {
@@ -145,6 +184,28 @@ mod tests {
         spmv(&a, &x, &mut y1);
         spmv_par(&a, &x, &mut y2, 4);
         assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn fused_multi_rhs_equals_looped_single() {
+        // below and above the PAR_MIN_ROWS fallback, all thread counts
+        for (w, h) in [(8usize, 8usize), (40, 40)] {
+            let a = poisson2d(w, h);
+            let mut rng = Prng::new(11);
+            for nrhs in [1usize, 3, 8] {
+                let x: Vec<f64> = (0..a.ncols * nrhs).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                let mut y_loop = vec![0.0; a.nrows * nrhs];
+                for j in 0..nrhs {
+                    let xj = &x[j * a.ncols..(j + 1) * a.ncols];
+                    spmv(&a, xj, &mut y_loop[j * a.nrows..(j + 1) * a.nrows]);
+                }
+                for threads in [1usize, 3, 5] {
+                    let mut y = vec![0.0; a.nrows * nrhs];
+                    spmv_multi(&a, &x, &mut y, nrhs, threads);
+                    assert_eq!(y, y_loop, "nrhs={nrhs} threads={threads}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::formats::{ieee, Precision, ValueFormat};
 use crate::sparse::csr::Csr;
 use crate::util::parallel;
 use std::ops::Range;
+use std::sync::Arc;
 
 /// How the SpMV inner loop converts SEM words to f64.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -176,7 +177,7 @@ impl GseCsr {
 
     /// Wrap as an [`SpmvOp`] at a fixed precision level.
     pub fn at_level(self, level: Precision) -> GseSpmv {
-        GseSpmv { m: self, level }
+        GseSpmv { m: Arc::new(self), level }
     }
 
     /// Column index and exponent index of non-zero `j`.
@@ -379,6 +380,163 @@ impl GseCsr {
         }
     }
 
+    /// Fused multi-RHS three-precision SpMV over column-major packed
+    /// vectors (layout in [`SpmvOp::apply_multi`]): every SEM word is
+    /// decoded **once** per apply and streamed across all RHS, so the
+    /// segment traffic and decode overhead amortize over the batch.
+    /// Bit-for-bit identical to `nrhs` single [`GseCsr::spmv`] calls for
+    /// every strategy / packing / thread count.
+    pub fn spmv_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize, level: Precision) {
+        assert_eq!(x.len(), self.ncols * nrhs);
+        assert_eq!(y.len(), self.nrows * nrhs);
+        if nrhs == 0 {
+            return;
+        }
+        let parts = if self.threads <= 1 || self.nrows < PAR_MIN_ROWS {
+            1
+        } else {
+            self.threads
+        };
+        let chunks = parallel::balance_by_weight(self.nrows, parts, |r| {
+            self.rowptr[r + 1] - self.rowptr[r]
+        });
+        parallel::for_each_disjoint_cols(y, self.nrows, &chunks, |ch, cols| {
+            self.spmv_multi_range(x, ch, cols, level)
+        });
+    }
+
+    /// One row-range of the multi-RHS SpMV; `cols_out[j][i]` receives
+    /// (row `rows.start + i`, RHS `j`). Kernel dispatch mirrors
+    /// [`GseCsr::spmv_range`].
+    fn spmv_multi_range(
+        &self,
+        x: &[f64],
+        rows: Range<usize>,
+        cols_out: &mut [&mut [f64]],
+        level: Precision,
+    ) {
+        if self.strategy == DecodeStrategy::ScaleLut && self.packed && self.all_exact {
+            if level == Precision::Head {
+                self.spmv_multi_head_packed_lut(x, rows, cols_out)
+            } else {
+                self.spmv_multi_tails_packed_lut(x, rows, cols_out, level)
+            }
+        } else {
+            self.spmv_multi_generic(x, rows, cols_out, level)
+        }
+    }
+
+    /// Multi-RHS sibling of [`GseCsr::spmv_head_packed_lut`]: one decode
+    /// (`mant × signed scale`) per non-zero, `nrhs` multiply-adds. The
+    /// product order per RHS matches the single-RHS kernel exactly.
+    fn spmv_multi_head_packed_lut(
+        &self,
+        x: &[f64],
+        rows: Range<usize>,
+        cols_out: &mut [&mut [f64]],
+    ) {
+        let shift = 32 - self.table.ei_bit;
+        let col_mask = (1u32 << shift) - 1;
+        let sscale = &self.sscale_head[..];
+        let heads = &self.heads[..];
+        let cols = &self.cols[..];
+        let ncols = self.ncols;
+        let mut acc = vec![0.0f64; cols_out.len()];
+        for (i, r) in rows.enumerate() {
+            let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+            acc.fill(0.0);
+            for j in a..b {
+                // SAFETY: validated at construction (from_csr_with_table);
+                // x length asserted against ncols*nrhs in spmv_multi.
+                let (cw, h) = unsafe { (*cols.get_unchecked(j), *heads.get_unchecked(j)) };
+                let scale = unsafe {
+                    *sscale.get_unchecked(2 * (cw >> shift) as usize + (h >> 15) as usize)
+                };
+                let val = (h & 0x7FFF) as f64 * scale;
+                let c = (cw & col_mask) as usize;
+                for (q, aq) in acc.iter_mut().enumerate() {
+                    *aq += val * unsafe { *x.get_unchecked(q * ncols + c) };
+                }
+            }
+            for (q, aq) in acc.iter().enumerate() {
+                cols_out[q][i] = *aq;
+            }
+        }
+    }
+
+    /// Multi-RHS sibling of [`GseCsr::spmv_tails_packed_lut`].
+    fn spmv_multi_tails_packed_lut(
+        &self,
+        x: &[f64],
+        rows: Range<usize>,
+        cols_out: &mut [&mut [f64]],
+        level: Precision,
+    ) {
+        let shift = 32 - self.table.ei_bit;
+        let col_mask = (1u32 << shift) - 1;
+        let sscale = &self.sscale[..];
+        let full = level == Precision::Full;
+        let (s_head, s_tail1) = (self.geom.s_head, self.geom.s_tail1);
+        let heads = &self.heads[..];
+        let tail1 = &self.tail1[..];
+        let tail2 = &self.tail2[..];
+        let cols = &self.cols[..];
+        let ncols = self.ncols;
+        let mut acc = vec![0.0f64; cols_out.len()];
+        for (i, r) in rows.enumerate() {
+            let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+            acc.fill(0.0);
+            for j in a..b {
+                // SAFETY: validated at construction (see from_csr_with_table)
+                let (cw, h, t1) = unsafe {
+                    (*cols.get_unchecked(j), *heads.get_unchecked(j), *tail1.get_unchecked(j))
+                };
+                let mut d = (((h & 0x7FFF) as u64) << s_head) | ((t1 as u64) << s_tail1);
+                if full {
+                    d |= unsafe { *tail2.get_unchecked(j) } as u64;
+                }
+                let scale = unsafe {
+                    *sscale.get_unchecked(2 * (cw >> shift) as usize + (h >> 15) as usize)
+                };
+                let val = d as f64 * scale;
+                let c = (cw & col_mask) as usize;
+                for (q, aq) in acc.iter_mut().enumerate() {
+                    *aq += val * unsafe { *x.get_unchecked(q * ncols + c) };
+                }
+            }
+            for (q, aq) in acc.iter().enumerate() {
+                cols_out[q][i] = *aq;
+            }
+        }
+    }
+
+    /// Multi-RHS sibling of [`GseCsr::spmv_generic`] (any strategy /
+    /// packing): still decodes each non-zero once per apply.
+    fn spmv_multi_generic(
+        &self,
+        x: &[f64],
+        rows: Range<usize>,
+        cols_out: &mut [&mut [f64]],
+        level: Precision,
+    ) {
+        let ncols = self.ncols;
+        let mut acc = vec![0.0f64; cols_out.len()];
+        for (i, r) in rows.enumerate() {
+            let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+            acc.fill(0.0);
+            for j in a..b {
+                let (col, idx) = self.col_and_idx(j);
+                let val = self.decode_with_idx(j, idx, level);
+                for (q, aq) in acc.iter_mut().enumerate() {
+                    *aq += val * x[q * ncols + col];
+                }
+            }
+            for (q, aq) in acc.iter().enumerate() {
+                cols_out[q][i] = *aq;
+            }
+        }
+    }
+
     /// Materialize the decoded matrix at a level (tests / analyses).
     pub fn decode_csr(&self, level: Precision) -> Csr {
         let vals: Vec<f64> = (0..self.nnz()).map(|j| self.decode(j, level)).collect();
@@ -429,16 +587,29 @@ fn saturate(x: f64, table: &GseTable, geom: &SemGeometry) -> sem::SemParts {
     sem::encode(v, table, geom).expect("saturated value must encode")
 }
 
-/// [`SpmvOp`] adapter fixing the precision level.
+/// [`SpmvOp`] adapter fixing the precision level. Holds the encoded
+/// matrix behind an `Arc` so one encode can serve several levels (the
+/// operator comparison set) or cache entries without deep copies.
 #[derive(Clone)]
 pub struct GseSpmv {
-    pub m: GseCsr,
+    pub m: Arc<GseCsr>,
     pub level: Precision,
+}
+
+impl GseSpmv {
+    /// View an already-shared encoded matrix at `level`.
+    pub fn new(m: Arc<GseCsr>, level: Precision) -> Self {
+        Self { m, level }
+    }
 }
 
 impl SpmvOp for GseSpmv {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.m.spmv(x, y, self.level);
+    }
+
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
+        self.m.spmv_multi(x, y, nrhs, self.level);
     }
 
     fn nrows(&self) -> usize {
@@ -602,6 +773,45 @@ mod tests {
                 let par = serial.clone().with_threads(threads);
                 let mut y2 = vec![0.0; a.nrows];
                 par.spmv(&x, &mut y2, lvl);
+                assert_eq!(y1, y2, "threads={threads} {lvl:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_multi_rhs_equals_looped_single_all_strategies() {
+        let a = exp_controlled(120, 120, 5, ExpLaw::Gaussian { e0: 0, sigma: 3.0 }, 21);
+        for strat in [DecodeStrategy::BitScan, DecodeStrategy::Ldexp, DecodeStrategy::ScaleLut] {
+            let g = GseCsr::from_csr(&a, 8).with_strategy(strat);
+            for lvl in Precision::LADDER {
+                for nrhs in [1usize, 3, 8] {
+                    let x = rand_x(a.ncols * nrhs, 40 + nrhs as u64);
+                    let mut y_loop = vec![0.0; a.nrows * nrhs];
+                    for j in 0..nrhs {
+                        let (lo, hi) = (j * a.nrows, (j + 1) * a.nrows);
+                        g.spmv(&x[j * a.ncols..(j + 1) * a.ncols], &mut y_loop[lo..hi], lvl);
+                    }
+                    let mut y = vec![0.0; a.nrows * nrhs];
+                    g.spmv_multi(&x, &mut y, nrhs, lvl);
+                    assert_eq!(y, y_loop, "{strat:?} {lvl:?} nrhs={nrhs}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_multi_rhs_parallel_bit_exact() {
+        let a = exp_controlled(1300, 1300, 5, ExpLaw::Gaussian { e0: 0, sigma: 3.0 }, 6);
+        let g = GseCsr::from_csr(&a, 8);
+        let nrhs = 4usize;
+        let x = rand_x(a.ncols * nrhs, 17);
+        for lvl in Precision::LADDER {
+            let mut y1 = vec![0.0; a.nrows * nrhs];
+            g.spmv_multi(&x, &mut y1, nrhs, lvl);
+            for threads in [2usize, 5] {
+                let par = g.clone().with_threads(threads);
+                let mut y2 = vec![0.0; a.nrows * nrhs];
+                par.spmv_multi(&x, &mut y2, nrhs, lvl);
                 assert_eq!(y1, y2, "threads={threads} {lvl:?}");
             }
         }

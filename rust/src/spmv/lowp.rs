@@ -122,11 +122,52 @@ impl<T: StoredValue> LowpCsr<T> {
             y[i] = sum;
         }
     }
+
+    /// Fused multi-RHS SpMV over column-major packed vectors (layout in
+    /// [`SpmvOp::apply_multi`]): each stored value is loaded and widened
+    /// to f64 **once**, then streamed across all RHS. Bit-for-bit
+    /// identical to `nrhs` single [`LowpCsr::spmv`] calls.
+    pub fn spmv_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
+        assert_eq!(x.len(), self.ncols * nrhs);
+        assert_eq!(y.len(), self.nrows * nrhs);
+        if nrhs == 0 {
+            return;
+        }
+        let parts = if self.threads <= 1 || self.nrows < PAR_MIN_ROWS {
+            1
+        } else {
+            self.threads
+        };
+        let chunks = parallel::balance_by_weight(self.nrows, parts, |r| {
+            self.rowptr[r + 1] - self.rowptr[r]
+        });
+        parallel::for_each_disjoint_cols(y, self.nrows, &chunks, |ch, cols| {
+            let mut acc = vec![0.0f64; nrhs];
+            for (i, r) in ch.enumerate() {
+                let (a, b) = (self.rowptr[r], self.rowptr[r + 1]);
+                acc.fill(0.0);
+                for k in a..b {
+                    let v = self.vals[k].to_f64();
+                    let c = self.colidx[k] as usize;
+                    for (j, aj) in acc.iter_mut().enumerate() {
+                        *aj += v * x[j * self.ncols + c];
+                    }
+                }
+                for (j, aj) in acc.iter().enumerate() {
+                    cols[j][i] = *aj;
+                }
+            }
+        });
+    }
 }
 
 impl<T: StoredValue> SpmvOp for LowpCsr<T> {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.spmv(x, y);
+    }
+
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
+        self.spmv_multi(x, y, nrhs);
     }
 
     fn nrows(&self) -> usize {
@@ -204,6 +245,27 @@ mod tests {
             let mut y2 = vec![0.0; a.nrows];
             par.spmv(&x, &mut y2);
             assert_eq!(y1, y2, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_multi_rhs_equals_looped_single() {
+        // above the PAR_MIN_ROWS threshold so the parallel path runs too
+        let a = exp_controlled(1100, 1100, 5, ExpLaw::Gaussian { e0: 0, sigma: 2.0 }, 8);
+        let mut rng = Prng::new(3);
+        for nrhs in [1usize, 3, 8] {
+            let x: Vec<f64> = (0..a.ncols * nrhs).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            for threads in [1usize, 4] {
+                let m = LowpCsr::<Bf16>::from_csr(&a).with_threads(threads);
+                let mut y_loop = vec![0.0; a.nrows * nrhs];
+                for j in 0..nrhs {
+                    let (lo, hi) = (j * a.nrows, (j + 1) * a.nrows);
+                    m.spmv(&x[j * a.ncols..(j + 1) * a.ncols], &mut y_loop[lo..hi]);
+                }
+                let mut y = vec![0.0; a.nrows * nrhs];
+                m.spmv_multi(&x, &mut y, nrhs);
+                assert_eq!(y, y_loop, "nrhs={nrhs} threads={threads}");
+            }
         }
     }
 

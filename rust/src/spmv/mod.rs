@@ -28,9 +28,29 @@ use crate::formats::{Precision, ValueFormat};
 use crate::sparse::csr::Csr;
 
 /// A type-erased "y = A·x" operator — what the solvers are generic over.
-pub trait SpmvOp: Sync {
+pub trait SpmvOp: Send + Sync {
     /// `y` must have length `nrows`; `x` length `ncols`.
     fn apply(&self, x: &[f64], y: &mut [f64]);
+
+    /// Block apply over `nrhs` column-major packed vectors:
+    /// `x[j*ncols..(j+1)*ncols]` is RHS `j` and
+    /// `y[j*nrows..(j+1)*nrows]` receives its product.
+    ///
+    /// The default implementation loops over single [`SpmvOp::apply`]
+    /// calls. Fused overrides decode each matrix row **once** and stream
+    /// it across all RHS — the amortization lever of the paper's
+    /// memory-bound analysis (§III-C) — and must stay **bit-for-bit**
+    /// identical to the looped default (each column's dot products
+    /// accumulate in the same order as a single apply).
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
+        let (nc, nr) = (self.ncols(), self.nrows());
+        assert_eq!(x.len(), nc * nrhs);
+        assert_eq!(y.len(), nr * nrhs);
+        for j in 0..nrhs {
+            self.apply(&x[j * nc..(j + 1) * nc], &mut y[j * nr..(j + 1) * nr]);
+        }
+    }
+
     fn nrows(&self) -> usize;
     fn ncols(&self) -> usize;
     /// Storage format (for traffic accounting / labels).
@@ -39,24 +59,38 @@ pub trait SpmvOp: Sync {
     fn matrix_bytes(&self) -> usize;
 }
 
+/// The looped multi-RHS baseline: `nrhs` single applies, regardless of
+/// any fused [`SpmvOp::apply_multi`] override. The ablation bench and
+/// the batched-parity tests compare fused kernels against this.
+pub fn apply_multi_looped(op: &dyn SpmvOp, x: &[f64], y: &mut [f64], nrhs: usize) {
+    let (nc, nr) = (op.ncols(), op.nrows());
+    assert_eq!(x.len(), nc * nrhs);
+    assert_eq!(y.len(), nr * nrhs);
+    for j in 0..nrhs {
+        op.apply(&x[j * nc..(j + 1) * nc], &mut y[j * nr..(j + 1) * nr]);
+    }
+}
+
 /// Build the paper's full comparison set of operators for one matrix.
 /// `k` is the shared-exponent count for the GSE-SEM entries.
 pub fn build_operators(a: &Csr, k: usize) -> Vec<Box<dyn SpmvOp>> {
     build_operators_par(a, k, 1)
 }
 
-/// Same comparison set with every operator — FP64 baseline, the 16-bit
-/// baselines, and all three GSE-SEM levels — sharing the chunk-parallel
-/// hot path ([`crate::util::parallel`]) at the given worker count.
+/// Same comparison set with every operator — FP64 baseline, the FP32 /
+/// 16-bit baselines, and all three GSE-SEM levels — sharing the
+/// chunk-parallel hot path ([`crate::util::parallel`]) at the given
+/// worker count. The three GSE levels share one encoded matrix.
 pub fn build_operators_par(a: &Csr, k: usize, threads: usize) -> Vec<Box<dyn SpmvOp>> {
-    let gse = GseCsr::from_csr(a, k).with_threads(threads);
+    let gse = std::sync::Arc::new(GseCsr::from_csr(a, k).with_threads(threads));
     vec![
         Box::new(fp64::Fp64Csr::with_threads(a.clone(), threads)),
+        Box::new(LowpCsr::<f32>::from_csr(a).with_threads(threads)),
         Box::new(LowpCsr::<crate::formats::Fp16>::from_csr(a).with_threads(threads)),
         Box::new(LowpCsr::<crate::formats::Bf16>::from_csr(a).with_threads(threads)),
-        Box::new(gse.clone().at_level(Precision::Head)),
-        Box::new(gse.clone().at_level(Precision::HeadTail1)),
-        Box::new(gse.at_level(Precision::Full)),
+        Box::new(gse::GseSpmv::new(std::sync::Arc::clone(&gse), Precision::Head)),
+        Box::new(gse::GseSpmv::new(std::sync::Arc::clone(&gse), Precision::HeadTail1)),
+        Box::new(gse::GseSpmv::new(gse, Precision::Full)),
     ]
 }
 
@@ -75,7 +109,7 @@ mod tests {
     fn operator_set_is_consistent() {
         let a = poisson2d(8, 8);
         let ops = build_operators(&a, 8);
-        assert_eq!(ops.len(), 6);
+        assert_eq!(ops.len(), 7);
         let x = vec![1.0; a.ncols];
         let mut y0 = vec![0.0; a.nrows];
         ops[0].apply(&x, &mut y0);
@@ -84,6 +118,41 @@ mod tests {
             op.apply(&x, &mut y);
             // Poisson values are exactly representable in every format.
             assert_eq!(max_abs_diff(&y0, &y), 0.0, "{}", op.format().label());
+        }
+    }
+
+    #[test]
+    fn operator_set_covers_comparison_formats() {
+        let a = poisson2d(6, 6);
+        let got: Vec<ValueFormat> = build_operators(&a, 8).iter().map(|op| op.format()).collect();
+        let want = vec![
+            ValueFormat::Fp64,
+            ValueFormat::Fp32,
+            ValueFormat::Fp16,
+            ValueFormat::Bf16,
+            ValueFormat::GseSem(Precision::Head),
+            ValueFormat::GseSem(Precision::HeadTail1),
+            ValueFormat::GseSem(Precision::Full),
+        ];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn default_apply_multi_loops_single_applies() {
+        let a = poisson2d(8, 8);
+        let ops = build_operators(&a, 8);
+        let nrhs = 3usize;
+        let n = a.ncols;
+        let mut x = vec![0.0; n * nrhs];
+        for (i, xi) in x.iter_mut().enumerate() {
+            *xi = (i % 7) as f64 - 3.0;
+        }
+        for op in &ops {
+            let mut y_multi = vec![0.0; a.nrows * nrhs];
+            op.apply_multi(&x, &mut y_multi, nrhs);
+            let mut y_loop = vec![0.0; a.nrows * nrhs];
+            apply_multi_looped(op.as_ref(), &x, &mut y_loop, nrhs);
+            assert_eq!(y_multi, y_loop, "{}", op.format().label());
         }
     }
 

@@ -11,6 +11,9 @@
 //!   roughly equal total weight (nnz-balanced row chunks for SpMV);
 //! * [`for_each_disjoint`] — run per-chunk work over disjoint mutable
 //!   slices of one output buffer on scoped threads;
+//! * [`for_each_disjoint_cols`] — the multi-RHS variant: per-chunk work
+//!   over the matching row range of every column of a column-major
+//!   buffer (the batched SpMV output layout);
 //! * [`run_queue`] — a fixed-size worker pool draining a job queue,
 //!   results returned in submission order;
 //! * [`broadcast`] — run a closure once per worker (stress tests).
@@ -93,6 +96,70 @@ where
     std::thread::scope(|s| {
         for (ch, ys) in slices {
             s.spawn(move || work(ch, ys));
+        }
+    });
+}
+
+/// Split a column-major `out` (columns of `col_len` elements each)
+/// along row `chunks` and run `work(chunk, cols)` per chunk on scoped
+/// threads, where `cols[j]` is column `j` restricted to the chunk's
+/// rows. This is the multi-RHS sibling of [`for_each_disjoint`]: the
+/// batched SpMV kernels partition rows exactly like the single-vector
+/// path but must write one output element per (row, column) pair.
+/// With a single chunk the work runs on the calling thread.
+pub fn for_each_disjoint_cols<T, F>(
+    out: &mut [T],
+    col_len: usize,
+    chunks: &[Range<usize>],
+    work: F,
+) where
+    T: Send,
+    F: Fn(Range<usize>, &mut [&mut [T]]) + Sync,
+{
+    debug_assert!(col_len == 0 || out.len() % col_len == 0);
+    debug_assert!(chunks.first().map(|c| c.start == 0).unwrap_or(true));
+    debug_assert!(chunks.windows(2).all(|w| w[0].end == w[1].start));
+    debug_assert!(chunks.last().map(|c| c.end == col_len).unwrap_or(true));
+    let ncols = if col_len == 0 {
+        0
+    } else {
+        out.len() / col_len
+    };
+    if chunks.len() <= 1 {
+        if let Some(ch) = chunks.first() {
+            let mut cols: Vec<&mut [T]> = Vec::with_capacity(ncols);
+            let mut rest = out;
+            for _ in 0..ncols {
+                let (col, tail) = std::mem::take(&mut rest).split_at_mut(col_len);
+                rest = tail;
+                let (_, upper) = col.split_at_mut(ch.start);
+                let (sub, _) = upper.split_at_mut(ch.end - ch.start);
+                cols.push(sub);
+            }
+            work(ch.clone(), &mut cols);
+        }
+        return;
+    }
+    let mut per_chunk: Vec<Vec<&mut [T]>> =
+        chunks.iter().map(|_| Vec::with_capacity(ncols)).collect();
+    let mut rest = out;
+    for _ in 0..ncols {
+        // same mem::take borrow-split as for_each_disjoint, applied per
+        // column: carve each column into its per-chunk sub-slices
+        let (mut col, tail) = std::mem::take(&mut rest).split_at_mut(col_len);
+        rest = tail;
+        let mut cursor = 0usize;
+        for (w, ch) in chunks.iter().enumerate() {
+            let (head, t) = std::mem::take(&mut col).split_at_mut(ch.end - cursor);
+            cursor = ch.end;
+            per_chunk[w].push(head);
+            col = t;
+        }
+    }
+    let work = &work;
+    std::thread::scope(|s| {
+        for (ch, mut cols) in chunks.iter().cloned().zip(per_chunk) {
+            s.spawn(move || work(ch, &mut cols));
         }
     });
 }
@@ -208,6 +275,42 @@ mod tests {
         // empty chunk list is a no-op
         let mut empty: Vec<u8> = Vec::new();
         for_each_disjoint(&mut empty, &[], |_, _| unreachable!());
+    }
+
+    #[test]
+    fn disjoint_cols_write_every_slot() {
+        // 3 columns of 57 rows, split 4 ways: slot = col*1000 + row + 1
+        let col_len = 57usize;
+        let ncols = 3usize;
+        let mut out = vec![0usize; col_len * ncols];
+        let chunks = balance_by_weight(col_len, 4, |_| 1);
+        for_each_disjoint_cols(&mut out, col_len, &chunks, |ch, cols| {
+            for (j, col) in cols.iter_mut().enumerate() {
+                for (k, slot) in col.iter_mut().enumerate() {
+                    *slot = j * 1000 + ch.start + k + 1;
+                }
+            }
+        });
+        for j in 0..ncols {
+            for r in 0..col_len {
+                assert_eq!(out[j * col_len + r], j * 1000 + r + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_cols_single_chunk_inline() {
+        let mut out = vec![0u8; 12]; // 2 columns of 6
+        for_each_disjoint_cols(&mut out, 6, &[0..6], |_, cols| {
+            assert_eq!(cols.len(), 2);
+            for col in cols.iter_mut() {
+                col.fill(9);
+            }
+        });
+        assert_eq!(out, vec![9; 12]);
+        // empty chunk list is a no-op
+        let mut empty: Vec<u8> = Vec::new();
+        for_each_disjoint_cols(&mut empty, 0, &[], |_, _| unreachable!());
     }
 
     #[test]

@@ -18,8 +18,8 @@ fn mini_suite_runs_all_formats_on_first_cg_matrices() {
     for m in set.iter().take(3) {
         let a = Arc::new(m.a.clone());
         for fmt in [
-            FormatChoice::Fixed(ValueFormat::Fp64),
-            FormatChoice::Fixed(ValueFormat::Bf16),
+            FormatChoice::fixed(ValueFormat::Fp64),
+            FormatChoice::fixed(ValueFormat::Bf16),
             FormatChoice::Stepped { k: 8, params: SteppedParams::cg_paper().scaled(0.01) },
         ] {
             reqs.push(SolveRequest::new(&m.name, Arc::clone(&a), SolverKind::Cg, fmt));
@@ -40,6 +40,49 @@ fn mini_suite_runs_all_formats_on_first_cg_matrices() {
 }
 
 #[test]
+fn pool_batches_same_matrix_cg_and_caches_encodes() {
+    // 4 random-RHS CG requests on one matrix: the pool must merge them
+    // into one multi-RHS block solve, and the GSE requests must share a
+    // single encode through the operator cache
+    let set = cg_set(CorpusSize::Small);
+    let a = Arc::new(set[0].a.clone());
+    let mut reqs = Vec::new();
+    for seed in 0..4u64 {
+        let mut r = SolveRequest::new(
+            &format!("rhs{seed}"),
+            Arc::clone(&a),
+            SolverKind::Cg,
+            FormatChoice::fixed(ValueFormat::Fp64),
+        );
+        r.rhs = gsem::coordinator::RhsSpec::Random(seed);
+        reqs.push(r);
+    }
+    for level in [gsem::formats::Precision::Head, gsem::formats::Precision::Full] {
+        reqs.push(SolveRequest::new(
+            "gse",
+            Arc::clone(&a),
+            SolverKind::Cg,
+            FormatChoice::fixed(ValueFormat::GseSem(level)),
+        ));
+    }
+    let pool = SolverPool::new(2);
+    let res = pool.run_batch(reqs);
+    assert_eq!(res.len(), 6);
+    for r in &res {
+        assert!(r.relres_fp64.is_finite(), "{} {}", r.name, r.format_label);
+    }
+    assert_eq!(pool.metrics().counter("pool.batched_groups"), 1);
+    assert_eq!(pool.metrics().counter("pool.batched_rhs"), 4);
+    // GSE head + full share one encode: at least one cache hit there,
+    // plus FP64 residual-operator reuse across all six jobs
+    // expected: 2 misses (FP64 op, GSE encode) and 4 hits (shared FP64
+    // residual operator ×3, second GSE level ×1)
+    let st = pool.cache().stats();
+    assert!(st.hits >= 4, "hits={} misses={}", st.hits, st.misses);
+    assert_eq!(st.misses, 2, "misses={}", st.misses);
+}
+
+#[test]
 fn gmres_small_suite_first_entries() {
     let set = gmres_set(CorpusSize::Small);
     let pool = SolverPool::new(2);
@@ -51,7 +94,7 @@ fn gmres_small_suite_first_entries() {
                 &m.name,
                 Arc::new(m.a.clone()),
                 SolverKind::Gmres,
-                FormatChoice::Fixed(ValueFormat::Fp64),
+                FormatChoice::fixed(ValueFormat::Fp64),
             )
         })
         .collect();

@@ -55,7 +55,7 @@ fn singular_matrix_solves_flag_not_panic() {
             "zero",
             Arc::clone(&a),
             solver,
-            FormatChoice::Fixed(ValueFormat::Fp64),
+            FormatChoice::fixed(ValueFormat::Fp64),
         );
         req.rhs = gsem::coordinator::RhsSpec::Ones;
         req.max_iters = 50;
@@ -75,7 +75,7 @@ fn indefinite_matrix_cg_does_not_panic() {
     c.push(3, 3, -2.0);
     let a = Arc::new(c.to_csr());
     let mut req =
-        SolveRequest::new("saddle", a, SolverKind::Cg, FormatChoice::Fixed(ValueFormat::Fp64));
+        SolveRequest::new("saddle", a, SolverKind::Cg, FormatChoice::fixed(ValueFormat::Fp64));
     req.rhs = gsem::coordinator::RhsSpec::Ones;
     req.max_iters = 100;
     let res = gsem::coordinator::jobs::dispatch(&req);

@@ -36,12 +36,12 @@ fn fp16_breaks_down_on_wide_range_cg_system() {
         ExpLaw::Bimodal { e0: 10, gap: 12, p: 0.5 }, // values up to ~2^23
         99,
     ));
-    let r16 = run(Arc::clone(&a), SolverKind::Cg, FormatChoice::Fixed(ValueFormat::Fp16));
-    let rb = run(Arc::clone(&a), SolverKind::Cg, FormatChoice::Fixed(ValueFormat::Bf16));
+    let r16 = run(Arc::clone(&a), SolverKind::Cg, FormatChoice::fixed(ValueFormat::Fp16));
+    let rb = run(Arc::clone(&a), SolverKind::Cg, FormatChoice::fixed(ValueFormat::Bf16));
     let rg = run(
         Arc::clone(&a),
         SolverKind::Cg,
-        FormatChoice::Fixed(ValueFormat::GseSem(Precision::Full)),
+        FormatChoice::fixed(ValueFormat::GseSem(Precision::Full)),
     );
     // FP16 matrix is corrupted: either breakdown or wildly wrong result
     assert!(
@@ -57,11 +57,11 @@ fn fp16_breaks_down_on_wide_range_cg_system() {
 #[test]
 fn gse_full_matches_fp64_iterations_on_cg() {
     let a = Arc::new(diffusion2d(20, 20, 6.0, 5));
-    let r64 = run(Arc::clone(&a), SolverKind::Cg, FormatChoice::Fixed(ValueFormat::Fp64));
+    let r64 = run(Arc::clone(&a), SolverKind::Cg, FormatChoice::fixed(ValueFormat::Fp64));
     let rg = run(
         Arc::clone(&a),
         SolverKind::Cg,
-        FormatChoice::Fixed(ValueFormat::GseSem(Precision::Full)),
+        FormatChoice::fixed(ValueFormat::GseSem(Precision::Full)),
     );
     assert!(r64.outcome.converged && rg.outcome.converged);
     let ratio = rg.outcome.iters as f64 / r64.outcome.iters as f64;
@@ -75,12 +75,12 @@ fn head_only_stalls_where_full_converges() {
     let rh = run(
         Arc::clone(&a),
         SolverKind::Cg,
-        FormatChoice::Fixed(ValueFormat::GseSem(Precision::Head)),
+        FormatChoice::fixed(ValueFormat::GseSem(Precision::Head)),
     );
     let rf = run(
         Arc::clone(&a),
         SolverKind::Cg,
-        FormatChoice::Fixed(ValueFormat::GseSem(Precision::Full)),
+        FormatChoice::fixed(ValueFormat::GseSem(Precision::Full)),
     );
     assert!(rf.outcome.converged);
     // head either fails to converge or needs (many) more iterations
@@ -115,7 +115,7 @@ fn stepped_cg_escalates_and_converges_on_hard_system() {
     let head_only = run(
         Arc::clone(&a),
         SolverKind::Cg,
-        FormatChoice::Fixed(ValueFormat::GseSem(Precision::Head)),
+        FormatChoice::fixed(ValueFormat::GseSem(Precision::Head)),
     );
     if !head_only.outcome.converged {
         assert!(
@@ -132,6 +132,51 @@ fn stepped_gmres_converges_on_asymmetric() {
     let res = run(Arc::clone(&a), SolverKind::Gmres, FormatChoice::Stepped { k: 8, params });
     assert!(res.outcome.converged, "relres={}", res.relres_fp64);
     assert!(res.relres_fp64 < 1e-4);
+}
+
+#[test]
+fn stepped_copy_ladder_cg_converges_and_reaches_fp64_accuracy() {
+    // the related-work fp32→fp64 copy ladder under the same controller:
+    // must converge on the hard system and report its own label
+    let a = Arc::new(diffusion2d(24, 24, 16.0, 9));
+    let params = SteppedParams {
+        l: 30,
+        t: 20,
+        m: 10,
+        rsd_limit: 0.5,
+        ndec_limit: 10,
+        reldec_limit: 0.45,
+        divergence_factor: 100.0,
+    };
+    let res = run(Arc::clone(&a), SolverKind::Cg, FormatChoice::SteppedCopy { params });
+    assert_eq!(res.format_label, "FP32->FP64");
+    assert!(res.outcome.converged, "copy-ladder CG must converge, relres={}", res.relres_fp64);
+    // fp32-rung convergence bounds the FP64-matrix residual only by the
+    // storage perturbation; escalation to the fp64 rung tightens it
+    assert!(res.relres_fp64 < 1e-2, "relres={}", res.relres_fp64);
+}
+
+#[test]
+fn stepped_copy_ladder_gmres_converges_on_asymmetric() {
+    let a = Arc::new(convdiff2d(20, 20, 24.0, 8.0));
+    let params = SteppedParams::gmres_paper().scaled(0.01);
+    let res = run(Arc::clone(&a), SolverKind::Gmres, FormatChoice::SteppedCopy { params });
+    assert!(res.outcome.converged, "relres={}", res.relres_fp64);
+    assert!(res.relres_fp64 < 1e-3, "relres={}", res.relres_fp64);
+}
+
+#[test]
+fn both_ladders_run_green_on_the_same_system() {
+    // acceptance: the stepped controller drives the GSE tag ladder and
+    // the copy ladder interchangeably on one system
+    let a = Arc::new(diffusion2d(20, 20, 10.0, 5));
+    let params = SteppedParams::cg_paper().scaled(0.02);
+    let gse = run(Arc::clone(&a), SolverKind::Cg, FormatChoice::Stepped { k: 8, params });
+    let copy = run(Arc::clone(&a), SolverKind::Cg, FormatChoice::SteppedCopy { params });
+    assert!(gse.outcome.converged, "GSE ladder relres={}", gse.relres_fp64);
+    assert!(copy.outcome.converged, "copy ladder relres={}", copy.relres_fp64);
+    assert_eq!(gse.format_label, "GSE-SEM");
+    assert_eq!(copy.format_label, "FP32->FP64");
 }
 
 #[test]

@@ -1,10 +1,11 @@
 //! Randomized property suite on the GSE-SEM format invariants —
-//! the deeper contracts the unit tests don't pin down.
+//! the deeper contracts the unit tests don't pin down — plus the
+//! batched-operator parity contract (`apply_multi` ≡ looped applies).
 
 use gsem::formats::gse::GseTable;
 use gsem::formats::sem::{self, SemGeometry, SemLayout};
 use gsem::formats::{Precision, SemVector};
-use gsem::spmv::GseCsr;
+use gsem::spmv::{GseCsr, SpmvOp};
 use gsem::util::quickcheck::check;
 use gsem::util::Prng;
 
@@ -193,6 +194,57 @@ fn table_reuse_is_stable_across_perturbed_data() {
                     // bits proportional to the distance; accept if tiny
                     if x.abs() > train_max * 1e-12 {
                         return Err(format!("reuse error x={x} d={d} rel={rel}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn apply_multi_is_bit_identical_to_looped_single_applies() {
+    // the batched-operator contract: for every storage format, fused
+    // apply_multi at nrhs ∈ {1, 3, 8} equals nrhs single applies
+    // bit-for-bit, below and above the parallel row threshold and for
+    // every worker count
+    check(
+        37,
+        8,
+        |r| {
+            // straddle the parallel fallback (PAR_MIN_ROWS = 1024 rows)
+            let n = if r.chance(0.5) {
+                40 + r.below(60)
+            } else {
+                1040 + r.below(80)
+            };
+            let a = gsem::sparse::gen::randmat::exp_controlled(
+                n,
+                n,
+                4,
+                gsem::sparse::gen::randmat::ExpLaw::Gaussian { e0: 0, sigma: 3.0 },
+                r.next_u64(),
+            );
+            let threads = 1 + r.below(4);
+            (a, threads)
+        },
+        |(a, threads)| {
+            let ops: Vec<Box<dyn SpmvOp>> = gsem::spmv::build_operators_par(a, 8, *threads);
+            let mut rx = Prng::new(77);
+            for nrhs in [1usize, 3, 8] {
+                let x: Vec<f64> = (0..a.ncols * nrhs).map(|_| rx.range_f64(-2.0, 2.0)).collect();
+                for op in &ops {
+                    let mut y_fused = vec![0.0; a.nrows * nrhs];
+                    op.apply_multi(&x, &mut y_fused, nrhs);
+                    let mut y_loop = vec![0.0; a.nrows * nrhs];
+                    gsem::spmv::apply_multi_looped(op.as_ref(), &x, &mut y_loop, nrhs);
+                    for (i, (f, l)) in y_fused.iter().zip(&y_loop).enumerate() {
+                        if f.to_bits() != l.to_bits() {
+                            return Err(format!(
+                                "{} nrhs={nrhs} threads={threads}: slot {i} {f} != {l}",
+                                op.format().label()
+                            ));
+                        }
                     }
                 }
             }
