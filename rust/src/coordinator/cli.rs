@@ -54,6 +54,13 @@ impl Cli {
         }
     }
 
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
         match self.get(key) {
             None => Ok(default),
@@ -103,5 +110,14 @@ mod tests {
     fn bad_numbers_error() {
         let c = parse("x --k eight");
         assert!(c.get_usize("k", 1).is_err());
+        assert!(c.get_u64("k", 1).is_err());
+    }
+
+    #[test]
+    fn u64_options() {
+        let c = parse("serve --window-ms 5 --stagger-us=250");
+        assert_eq!(c.get_u64("window-ms", 0).unwrap(), 5);
+        assert_eq!(c.get_u64("stagger-us", 0).unwrap(), 250);
+        assert_eq!(c.get_u64("missing", 9).unwrap(), 9);
     }
 }

@@ -1,0 +1,632 @@
+//! Windowed intake and the long-lived [`SolverService`] front door.
+//!
+//! `SolverPool::run_batch` was a one-shot API: it could only merge
+//! same-matrix CG requests that happened to arrive in the *same call*.
+//! A serving system sees the opposite arrival pattern — requests
+//! trickle in staggered — so the service puts an `IntakeQueue` in
+//! front of the grouping logic: [`SolverService::submit`] enqueues a
+//! [`SolveSpec`] and returns a [`SolveTicket`] immediately, and a
+//! background flusher holds the batch open until either a time
+//! **window** elapses (measured from the batch's first arrival) or a
+//! **batch-width** target is reached, then flushes everything pending
+//! through the same digest-keyed grouping — staggered same-matrix CG
+//! requests still merge into one
+//! [`crate::solvers::cg::cg_solve_multi`] block solve.
+//!
+//! Grouping is keyed on the [`MatrixHandle`]'s content digest (not
+//! `Arc` identity), so equal matrices submitted by unrelated callers
+//! batch together; per-request results stay bitwise-identical to
+//! one-shot dispatch because the multi-RHS kernels are bit-for-bit
+//! per column (PR 2's contract, re-verified in
+//! `tests/service_parity.rs`).
+//!
+//! [`ServiceConfig`] (builder) sets workers, window, batch width, and
+//! the registry's cache byte budget. Two driving modes share all the
+//! flush machinery:
+//!
+//! * [`SolverService::new`] — spawns the background flusher thread
+//!   (the serving mode; `gsem serve` and the intake ablation use it);
+//! * [`SolverService::manual`] — no thread; the caller decides when to
+//!   [`SolverService::flush`]. `SolverPool::run_batch` is now exactly
+//!   submit-all-then-flush over a manual service.
+//!
+//! Intake activity surfaces in [`Metrics`] as `intake.submitted` /
+//! `intake.flushes` / `intake.merged` counters next to the registry's
+//! `cache.*` family.
+
+use crate::coordinator::jobs::{
+    dispatch_with_handle, FormatChoice, RhsSpec, SolveRequest, SolveResult, SolverKind,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::{MatrixHandle, MatrixRegistry};
+use crate::formats::ValueFormat;
+use crate::solvers::cg::cg_solve_multi;
+use crate::solvers::CgOpts;
+use crate::sparse::csr::{Csr, MatrixDigest};
+use crate::util::parallel;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Builder-style configuration for a [`SolverService`].
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads draining flushed groups.
+    pub workers: usize,
+    /// How long the intake holds a batch open after its first request
+    /// arrives (zero = flush on every submit).
+    pub window: Duration,
+    /// Flush early once this many requests are pending.
+    pub batch_width: usize,
+    /// Registry byte budget (`None` = unbounded, the pool default).
+    pub cache_bytes: Option<usize>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: parallel::default_workers(),
+            window: Duration::from_millis(5),
+            batch_width: 32,
+            cache_bytes: None,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    pub fn window(mut self, w: Duration) -> Self {
+        self.window = w;
+        self
+    }
+
+    pub fn window_ms(self, ms: u64) -> Self {
+        self.window(Duration::from_millis(ms))
+    }
+
+    pub fn batch_width(mut self, n: usize) -> Self {
+        self.batch_width = n.max(1);
+        self
+    }
+
+    pub fn cache_bytes(mut self, bytes: usize) -> Self {
+        self.cache_bytes = Some(bytes);
+        self
+    }
+}
+
+/// One solve request addressed by registry handle — the serving-path
+/// sibling of [`SolveRequest`] (which names its matrix by `Arc`).
+#[derive(Clone, Debug)]
+pub struct SolveSpec {
+    pub name: String,
+    pub matrix: MatrixHandle,
+    pub rhs: RhsSpec,
+    pub solver: SolverKind,
+    pub format: FormatChoice,
+    pub tol: f64,
+    pub max_iters: usize,
+}
+
+impl SolveSpec {
+    /// Spec with the [`SolveRequest::new`] defaults (`AxOnes` RHS,
+    /// 1e-6 tolerance, solver-dependent iteration caps).
+    pub fn new(name: &str, matrix: MatrixHandle, solver: SolverKind, format: FormatChoice) -> Self {
+        let req = SolveRequest::new(name, Arc::clone(matrix.matrix()), solver, format);
+        Self {
+            name: req.name,
+            matrix,
+            rhs: req.rhs,
+            solver: req.solver,
+            format: req.format,
+            tol: req.tol,
+            max_iters: req.max_iters,
+        }
+    }
+
+    /// The equivalent `Arc`-addressed request (dispatch plumbing).
+    pub(crate) fn to_request(&self) -> SolveRequest {
+        SolveRequest {
+            name: self.name.clone(),
+            a: Arc::clone(self.matrix.matrix()),
+            rhs: self.rhs,
+            solver: self.solver,
+            format: self.format.clone(),
+            tol: self.tol,
+            max_iters: self.max_iters,
+        }
+    }
+}
+
+/// Receipt for a submitted solve; redeem with [`SolveTicket::wait`].
+pub struct SolveTicket {
+    rx: mpsc::Receiver<SolveResult>,
+    /// the one-shot result was already handed out via `try_wait`
+    answered: bool,
+}
+
+impl SolveTicket {
+    fn new(rx: mpsc::Receiver<SolveResult>) -> Self {
+        Self { rx, answered: false }
+    }
+
+    /// Block until the service answers this request. Panics if the
+    /// one-shot result was already redeemed via
+    /// [`SolveTicket::try_wait`] (caller bug, not a service failure).
+    pub fn wait(self) -> SolveResult {
+        assert!(!self.answered, "ticket already redeemed via try_wait");
+        self.rx.recv().expect("service answers every ticket before shutdown")
+    }
+
+    /// The result, if its flush already completed; `None` while the
+    /// request is still pending, and also after the one result was
+    /// already handed out (the channel is one-shot). A service that
+    /// died *without ever answering* panics (same contract as
+    /// [`SolveTicket::wait`]) instead of letting pollers spin forever.
+    pub fn try_wait(&mut self) -> Option<SolveResult> {
+        match self.rx.try_recv() {
+            Ok(res) => {
+                self.answered = true;
+                Some(res)
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) if self.answered => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                panic!("service dropped this ticket without answering")
+            }
+        }
+    }
+}
+
+/// A queued request plus the channel its result travels back on.
+struct PendingSolve {
+    spec: SolveSpec,
+    tx: mpsc::Sender<SolveResult>,
+}
+
+/// Accumulates staggered submissions until the flusher takes them.
+struct IntakeQueue {
+    state: Mutex<IntakeState>,
+    arrivals: Condvar,
+}
+
+struct IntakeState {
+    pending: Vec<PendingSolve>,
+    /// when the oldest pending request arrived (window anchor)
+    first_arrival: Option<Instant>,
+    shutdown: bool,
+}
+
+impl IntakeQueue {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(IntakeState {
+                pending: Vec::new(),
+                first_arrival: None,
+                shutdown: false,
+            }),
+            arrivals: Condvar::new(),
+        }
+    }
+
+    fn push(&self, p: PendingSolve) {
+        let mut st = self.state.lock().unwrap();
+        if st.pending.is_empty() {
+            st.first_arrival = Some(Instant::now());
+        }
+        st.pending.push(p);
+        self.arrivals.notify_all();
+    }
+
+    /// Drain everything pending right now (manual flush).
+    fn take(&self) -> Vec<PendingSolve> {
+        let mut st = self.state.lock().unwrap();
+        st.first_arrival = None;
+        std::mem::take(&mut st.pending)
+    }
+
+    fn len(&self) -> usize {
+        self.state.lock().unwrap().pending.len()
+    }
+
+    fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.arrivals.notify_all();
+    }
+
+    /// Block until a batch is ready — the oldest pending request aged
+    /// past `window`, `width` requests accumulated, or shutdown — and
+    /// drain it. `None` means shutdown with nothing left to flush.
+    fn wait_batch(&self, window: Duration, width: usize) -> Option<Vec<PendingSolve>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.pending.is_empty() {
+                if st.shutdown {
+                    return None;
+                }
+                st = self.arrivals.wait(st).unwrap();
+                continue;
+            }
+            if st.shutdown || st.pending.len() >= width {
+                break;
+            }
+            let Some(first) = st.first_arrival else { break };
+            let deadline = first + window;
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = self.arrivals.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        st.first_arrival = None;
+        Some(std::mem::take(&mut st.pending))
+    }
+}
+
+/// Batch-grouping key: CG requests on content-equal matrices with
+/// identical fixed format and solve caps merge into one multi-RHS
+/// block solve. Digest-keyed, so structurally equal matrices behind
+/// distinct `Arc`s batch together (pointer keys could not).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct GroupKey {
+    digest: MatrixDigest,
+    format: ValueFormat,
+    k: usize,
+    tol_bits: u64,
+    max_iters: usize,
+}
+
+fn group_key(spec: &SolveSpec) -> Option<GroupKey> {
+    match (&spec.format, spec.solver) {
+        (FormatChoice::Fixed { format, k }, SolverKind::Cg) => {
+            // k only affects GSE storage — normalize it away for the
+            // other formats so numerically identical requests batch
+            let k = match format {
+                ValueFormat::GseSem(_) => *k,
+                _ => 0,
+            };
+            Some(GroupKey {
+                digest: spec.matrix.digest(),
+                format: *format,
+                k,
+                tol_bits: spec.tol.to_bits(),
+                max_iters: spec.max_iters,
+            })
+        }
+        _ => None,
+    }
+}
+
+struct ServiceInner {
+    workers: usize,
+    window: Duration,
+    batch_width: usize,
+    registry: Arc<MatrixRegistry>,
+    metrics: Metrics,
+    intake: IntakeQueue,
+}
+
+impl ServiceInner {
+    fn flusher_loop(&self) {
+        while let Some(batch) = self.intake.wait_batch(self.window, self.batch_width) {
+            self.run_flush(batch);
+        }
+    }
+
+    /// Group one drained batch and solve it on the worker queue,
+    /// answering every ticket. Results are routed by per-ticket
+    /// channels, so callers see submission order regardless of how
+    /// groups interleave.
+    fn run_flush(&self, batch: Vec<PendingSolve>) {
+        if batch.is_empty() {
+            return;
+        }
+        self.metrics.incr("intake.flushes");
+        let mut groups: Vec<Vec<PendingSolve>> = Vec::new();
+        let mut by_key: HashMap<GroupKey, usize> = HashMap::new();
+        for p in batch {
+            match group_key(&p.spec) {
+                Some(key) => match by_key.entry(key) {
+                    Entry::Occupied(e) => groups[*e.get()].push(p),
+                    Entry::Vacant(v) => {
+                        v.insert(groups.len());
+                        groups.push(vec![p]);
+                    }
+                },
+                None => groups.push(vec![p]),
+            }
+        }
+        let merged: u64 = groups.iter().filter(|g| g.len() > 1).map(|g| g.len() as u64).sum();
+        if merged > 0 {
+            self.metrics.add("intake.merged", merged);
+        }
+        parallel::run_queue(self.workers, groups, |g| self.run_group(g));
+    }
+
+    /// Solve one group: singletons dispatch normally; larger groups run
+    /// as one multi-RHS CG block over the registry operator. Per-column
+    /// results are bit-for-bit what individual dispatch would produce.
+    fn run_group(&self, group: Vec<PendingSolve>) {
+        if group.len() == 1 {
+            let p = group.into_iter().next().unwrap();
+            let req = p.spec.to_request();
+            let res =
+                dispatch_with_handle(&req, &p.spec.matrix, &self.registry, Some(&self.metrics));
+            let _ = p.tx.send(res);
+            return;
+        }
+        let (format, k) = match &group[0].spec.format {
+            FormatChoice::Fixed { format, k } => (*format, *k),
+            _ => unreachable!("grouping only collects fixed formats"),
+        };
+        let (tol, max_iters) = (group[0].spec.tol, group[0].spec.max_iters);
+        let handle = group[0].spec.matrix.clone();
+        let op = self.registry.operator(&handle, format, k, Some(&self.metrics));
+        let fp64 = self.registry.operator(&handle, ValueFormat::Fp64, 0, Some(&self.metrics));
+        let nrhs = group.len();
+        let n = handle.matrix().nrows;
+        let mut bs = vec![0.0; n * nrhs];
+        for (j, p) in group.iter().enumerate() {
+            bs[j * n..(j + 1) * n].copy_from_slice(&p.spec.rhs.build(handle.matrix()));
+        }
+        self.metrics.incr("pool.batched_groups");
+        self.metrics.add("pool.batched_rhs", nrhs as u64);
+        let opts = CgOpts { tol, max_iters, inv_diag: None };
+        let outs = cg_solve_multi(op.as_ref(), &bs, nrhs, &opts);
+        for (j, (p, outcome)) in group.into_iter().zip(outs).enumerate() {
+            let b = &bs[j * n..(j + 1) * n];
+            let relres_fp64 = crate::solvers::true_relres(fp64.as_ref(), &outcome.x, b);
+            let _ = p.tx.send(SolveResult {
+                name: p.spec.name,
+                solver: p.spec.solver,
+                format_label: format.label().to_string(),
+                outcome,
+                relres_fp64,
+            });
+        }
+    }
+}
+
+/// Long-lived serving front door: a content-addressed
+/// [`MatrixRegistry`], a windowed intake queue, grouping, and a
+/// worker queue behind one `submit -> ticket` API (see module docs).
+pub struct SolverService {
+    inner: Arc<ServiceInner>,
+    flusher: Option<thread::JoinHandle<()>>,
+}
+
+impl SolverService {
+    /// Serving mode: spawns the background flusher thread that applies
+    /// the window / batch-width policy to staggered arrivals.
+    pub fn new(cfg: ServiceConfig) -> Self {
+        Self::build(cfg, true)
+    }
+
+    /// Manual mode: no background thread; batches flush only on
+    /// [`SolverService::flush`] (what `SolverPool::run_batch` drives).
+    pub fn manual(cfg: ServiceConfig) -> Self {
+        Self::build(cfg, false)
+    }
+
+    fn build(cfg: ServiceConfig, windowed: bool) -> Self {
+        let registry = Arc::new(match cfg.cache_bytes {
+            Some(budget) => MatrixRegistry::with_budget(budget),
+            None => MatrixRegistry::new(),
+        });
+        let inner = Arc::new(ServiceInner {
+            workers: cfg.workers.max(1),
+            window: cfg.window,
+            batch_width: cfg.batch_width.max(1),
+            registry,
+            metrics: Metrics::new(),
+            intake: IntakeQueue::new(),
+        });
+        let flusher = if windowed {
+            let thread_inner = Arc::clone(&inner);
+            Some(
+                thread::Builder::new()
+                    .name("gsem-intake".into())
+                    .spawn(move || thread_inner.flusher_loop())
+                    .expect("spawn intake flusher"),
+            )
+        } else {
+            None
+        };
+        Self { inner, flusher }
+    }
+
+    /// Register a matrix once; the returned handle addresses it in
+    /// [`SolveSpec`]s and shares encodes with every equal-content
+    /// registration.
+    pub fn register(&self, a: &Arc<Csr>) -> MatrixHandle {
+        self.inner.registry.register(a)
+    }
+
+    /// Enqueue a request; returns immediately with its ticket.
+    pub fn submit(&self, spec: SolveSpec) -> SolveTicket {
+        let (tx, rx) = mpsc::channel();
+        self.inner.metrics.incr("intake.submitted");
+        self.inner.intake.push(PendingSolve { spec, tx });
+        SolveTicket::new(rx)
+    }
+
+    /// Convenience: register the request's matrix and submit.
+    pub fn submit_request(&self, req: SolveRequest) -> SolveTicket {
+        let matrix = self.inner.registry.register(&req.a);
+        self.submit(SolveSpec {
+            name: req.name,
+            matrix,
+            rhs: req.rhs,
+            solver: req.solver,
+            format: req.format,
+            tol: req.tol,
+            max_iters: req.max_iters,
+        })
+    }
+
+    /// Flush everything pending right now, in the calling thread.
+    /// Returns how many requests were flushed.
+    pub fn flush(&self) -> usize {
+        let batch = self.inner.intake.take();
+        let n = batch.len();
+        self.inner.run_flush(batch);
+        n
+    }
+
+    /// Requests currently waiting for a flush.
+    pub fn pending(&self) -> usize {
+        self.inner.intake.len()
+    }
+
+    /// Service-lifetime counters: intake flushes/merges, cache
+    /// hits/misses/evictions/bytes, multi-RHS groups formed.
+    pub fn metrics(&self) -> &Metrics {
+        &self.inner.metrics
+    }
+
+    /// The service's content-addressed operator registry.
+    pub fn registry(&self) -> &MatrixRegistry {
+        &self.inner.registry
+    }
+}
+
+impl Drop for SolverService {
+    fn drop(&mut self) {
+        self.inner.intake.shutdown();
+        match self.flusher.take() {
+            // the flusher drains whatever is still pending, then exits
+            Some(handle) => {
+                let _ = handle.join();
+            }
+            // manual mode: answer any never-flushed stragglers so
+            // their tickets resolve instead of hanging
+            None => {
+                let batch = self.inner.intake.take();
+                self.inner.run_flush(batch);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson::poisson2d;
+
+    fn cg_spec(svc: &SolverService, a: &Arc<Csr>, name: &str, seed: u64) -> SolveSpec {
+        let mut spec = SolveSpec::new(
+            name,
+            svc.register(a),
+            SolverKind::Cg,
+            FormatChoice::fixed(ValueFormat::Fp64),
+        );
+        spec.rhs = RhsSpec::Random(seed);
+        spec
+    }
+
+    #[test]
+    fn manual_service_answers_every_ticket() {
+        let svc = SolverService::manual(ServiceConfig::new().workers(2));
+        let a = Arc::new(poisson2d(8, 8));
+        let tickets: Vec<SolveTicket> =
+            (0..5).map(|i| svc.submit(cg_spec(&svc, &a, &format!("t{i}"), i))).collect();
+        assert_eq!(svc.pending(), 5);
+        assert_eq!(svc.flush(), 5);
+        assert_eq!(svc.pending(), 0);
+        for (i, t) in tickets.into_iter().enumerate() {
+            let r = t.wait();
+            assert_eq!(r.name, format!("t{i}"));
+            assert!(r.outcome.converged);
+        }
+        // all five rode one digest-keyed multi-RHS group
+        assert_eq!(svc.metrics().counter("intake.flushes"), 1);
+        assert_eq!(svc.metrics().counter("intake.merged"), 5);
+        assert_eq!(svc.metrics().counter("pool.batched_rhs"), 5);
+    }
+
+    #[test]
+    fn windowed_service_flushes_on_batch_width() {
+        // width 4 with a long window: the 4th submit triggers the flush
+        let svc = SolverService::new(
+            ServiceConfig::new().workers(2).window(Duration::from_secs(30)).batch_width(4),
+        );
+        let a = Arc::new(poisson2d(8, 8));
+        let tickets: Vec<SolveTicket> =
+            (0..4).map(|i| svc.submit(cg_spec(&svc, &a, &format!("w{i}"), i))).collect();
+        for t in tickets {
+            assert!(t.wait().outcome.converged);
+        }
+        assert_eq!(svc.metrics().counter("intake.submitted"), 4);
+        assert!(svc.metrics().counter("intake.flushes") >= 1);
+        // every request merged with at least one other
+        assert_eq!(svc.metrics().counter("intake.merged"), 4);
+        assert_eq!(svc.metrics().counter("pool.batched_rhs"), 4);
+    }
+
+    #[test]
+    fn windowed_service_flushes_on_window_expiry() {
+        let svc = SolverService::new(
+            ServiceConfig::new().workers(1).window(Duration::from_millis(10)).batch_width(64),
+        );
+        let a = Arc::new(poisson2d(6, 6));
+        let t = svc.submit(cg_spec(&svc, &a, "lone", 3));
+        // width is far away: only the window can release this one
+        let r = t.wait();
+        assert!(r.outcome.converged);
+        assert_eq!(svc.metrics().counter("intake.flushes"), 1);
+        assert_eq!(svc.metrics().counter("intake.merged"), 0);
+    }
+
+    #[test]
+    fn distinct_content_does_not_group() {
+        let svc = SolverService::manual(ServiceConfig::new().workers(2));
+        let a = Arc::new(poisson2d(8, 8));
+        let b = Arc::new(poisson2d(9, 9));
+        let ta = svc.submit(cg_spec(&svc, &a, "a", 1));
+        let tb = svc.submit(cg_spec(&svc, &b, "b", 2));
+        svc.flush();
+        assert!(ta.wait().outcome.converged);
+        assert!(tb.wait().outcome.converged);
+        assert_eq!(svc.metrics().counter("intake.merged"), 0);
+        assert_eq!(svc.metrics().counter("pool.batched_groups"), 0);
+    }
+
+    #[test]
+    fn try_wait_tracks_pending_answered_and_redeemed() {
+        let svc = SolverService::manual(ServiceConfig::new().workers(1));
+        let a = Arc::new(poisson2d(6, 6));
+        let mut ticket = svc.submit(cg_spec(&svc, &a, "poll", 4));
+        // pending: not answered yet
+        assert!(ticket.try_wait().is_none());
+        svc.flush();
+        let res = ticket.try_wait().expect("flushed result is available");
+        assert!(res.outcome.converged);
+        // the one-shot result was redeemed: further polls are None, not
+        // a panic, even though the sender side is long gone
+        assert!(ticket.try_wait().is_none());
+        assert!(ticket.try_wait().is_none());
+    }
+
+    #[test]
+    fn dropping_service_resolves_unflushed_tickets() {
+        let a = Arc::new(poisson2d(6, 6));
+        let ticket = {
+            let svc = SolverService::manual(ServiceConfig::new().workers(1));
+            svc.submit(cg_spec(&svc, &a, "straggler", 7))
+            // dropped with the request still pending
+        };
+        assert!(ticket.wait().outcome.converged);
+    }
+}

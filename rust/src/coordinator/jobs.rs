@@ -1,28 +1,28 @@
-//! Solve-job model and worker pool.
+//! Solve-job model and the batch front door.
 //!
 //! A [`SolveRequest`] names a matrix, a right-hand side, a solver and a
 //! storage format (including both stepped ladders); [`dispatch`] runs
-//! it; [`SolverPool`] fans a batch out over OS threads with an
-//! mpsc-based queue (the offline substitute for a tokio runtime —
-//! DESIGN.md §5), reusing encodes through an [`OperatorCache`] and
-//! merging same-matrix CG requests into multi-RHS block solves
+//! it through the process-wide content-addressed
+//! [`MatrixRegistry`], so repeated one-shot solves share encodes with
+//! everything else in the process. [`SolverPool`] is now a thin
+//! submit-all-then-flush wrapper over
+//! [`crate::coordinator::intake::SolverService`]: every batch rides the
+//! same intake/grouping path the serving API uses, merging same-matrix
+//! CG requests into multi-RHS block solves
 //! ([`crate::solvers::cg::cg_solve_multi`]).
 
-use crate::coordinator::cache::{build_fixed_operator, OperatorCache};
+use crate::coordinator::intake::{ServiceConfig, SolverService};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::{build_fixed_operator, MatrixHandle, MatrixRegistry};
 use crate::formats::ValueFormat;
 use crate::solvers::bicgstab::{bicgstab_solve, BicgstabOpts};
-use crate::solvers::cg::cg_solve_multi;
 use crate::solvers::ladder::CopyLadderOp;
 use crate::solvers::stepped::{run_stepped, run_stepped_with, SteppedParams};
 use crate::solvers::{cg_solve, gmres_solve, CgOpts, GmresOpts, MonitorCmd, SolveOutcome};
 use crate::sparse::csr::Csr;
-use crate::spmv::fp64::Fp64Csr;
 use crate::spmv::{GseCsr, SpmvOp};
 use crate::util::parallel;
 use crate::util::Prng;
-use std::collections::hash_map::Entry;
-use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Default GSE shared-exponent count (the paper's headline k).
@@ -138,34 +138,65 @@ pub struct SolveResult {
     pub relres_fp64: f64,
 }
 
-/// Run one request synchronously, without operator reuse.
+/// Run one request synchronously through the process-wide
+/// [`MatrixRegistry::global`] — single CLI solves and the bench suites
+/// share encodes with pooled solves in the same process instead of
+/// rebuilding operators from scratch per call. Results are identical
+/// to an uncached build (the registry returns exactly the operator it
+/// would construct).
 pub fn dispatch(req: &SolveRequest) -> SolveResult {
-    dispatch_cached(req, None, None)
+    dispatch_cached(req, Some(MatrixRegistry::global()), None)
 }
 
-/// Run one request, reusing encoded operators from `cache` (when given)
-/// and reporting cache/solve counters into `metrics` (when given). The
-/// pool routes everything through here.
+/// Run one request, reusing encoded operators from `registry` (when
+/// given) and reporting cache/solve counters into `metrics` (when
+/// given).
 pub fn dispatch_cached(
     req: &SolveRequest,
-    cache: Option<&OperatorCache>,
+    registry: Option<&MatrixRegistry>,
+    metrics: Option<&Metrics>,
+) -> SolveResult {
+    match registry {
+        Some(reg) => dispatch_with_handle(req, &reg.register(&req.a), reg, metrics),
+        None => dispatch_inner(req, None, metrics),
+    }
+}
+
+/// Registry-backed dispatch for a caller that already digested the
+/// matrix (the intake queue's path — no per-request re-hash).
+pub(crate) fn dispatch_with_handle(
+    req: &SolveRequest,
+    handle: &MatrixHandle,
+    registry: &MatrixRegistry,
+    metrics: Option<&Metrics>,
+) -> SolveResult {
+    dispatch_inner(req, Some((registry, handle)), metrics)
+}
+
+fn dispatch_inner(
+    req: &SolveRequest,
+    cached: Option<(&MatrixRegistry, &MatrixHandle)>,
     metrics: Option<&Metrics>,
 ) -> SolveResult {
     let a = req.a.as_ref();
     let b = req.rhs.build(a);
+    // single lookup point: registry when available, fresh build when not
+    let op_for = |format: ValueFormat, k: usize| -> Arc<dyn SpmvOp> {
+        match cached {
+            Some((reg, h)) => reg.operator(h, format, k, metrics),
+            None => build_fixed_operator(a, format, k),
+        }
+    };
     let (outcome, label) = match &req.format {
         FormatChoice::Fixed { format, k } => {
-            let op: Arc<dyn SpmvOp> = match cache {
-                Some(c) => c.operator(&req.a, *format, *k, metrics),
-                None => build_fixed_operator(a, *format, *k),
-            };
+            let op = op_for(*format, *k);
             let mut noop = |_: usize, _: f64| MonitorCmd::Continue;
             let out = run_solver_monitored(req, op.as_ref(), &b, &mut noop);
             (out, format.label().to_string())
         }
         FormatChoice::Stepped { k, params } => {
-            let g: Arc<GseCsr> = match cache {
-                Some(c) => c.gse(&req.a, *k, metrics),
+            let g: Arc<GseCsr> = match cached {
+                Some((reg, h)) => reg.gse(h, *k, metrics),
                 None => Arc::new(GseCsr::from_csr(a, *k)),
             };
             let (out, _, _) = run_stepped(g, *params, |op, monitor| {
@@ -174,15 +205,11 @@ pub fn dispatch_cached(
             (out, "GSE-SEM".to_string())
         }
         FormatChoice::SteppedCopy { params } => {
-            // both rungs come from the cache so repeated jobs share the
-            // fp32/fp64 copies; only the tag state is per-solve
-            let op = match cache {
-                Some(c) => CopyLadderOp::new(
-                    c.operator(&req.a, ValueFormat::Fp32, 0, metrics),
-                    c.operator(&req.a, ValueFormat::Fp64, 0, metrics),
-                ),
-                None => CopyLadderOp::from_csr(a),
-            };
+            // both rungs come from the registry (when present) so
+            // repeated jobs share the fp32/fp64 copies; only the tag
+            // state is per-solve
+            let op =
+                CopyLadderOp::new(op_for(ValueFormat::Fp32, 0), op_for(ValueFormat::Fp64, 0));
             let (out, _, _) = run_stepped_with(&op, *params, |op, monitor| {
                 run_solver_monitored(req, op, &b, monitor)
             });
@@ -190,10 +217,7 @@ pub fn dispatch_cached(
         }
     };
     // the paper's reported residual: against the FP64 matrix
-    let fp64_op: Arc<dyn SpmvOp> = match cache {
-        Some(c) => c.operator(&req.a, ValueFormat::Fp64, 0, metrics),
-        None => Arc::new(Fp64Csr::new(a.clone())),
-    };
+    let fp64_op = op_for(ValueFormat::Fp64, 0);
     let relres_fp64 = crate::solvers::true_relres(fp64_op.as_ref(), &outcome.x, &b);
     SolveResult {
         name: req.name.clone(),
@@ -235,54 +259,22 @@ fn run_solver_monitored(
     }
 }
 
-/// Batch-grouping key: CG requests on the same matrix with identical
-/// fixed format and solve caps merge into one multi-RHS block solve.
-#[derive(Clone, Copy, PartialEq, Eq, Hash)]
-struct GroupKey {
-    matrix: usize,
-    format: ValueFormat,
-    k: usize,
-    tol_bits: u64,
-    max_iters: usize,
-}
-
-fn group_key(req: &SolveRequest) -> Option<GroupKey> {
-    match (&req.format, req.solver) {
-        (FormatChoice::Fixed { format, k }, SolverKind::Cg) => {
-            // k only affects GSE storage — normalize it away for the
-            // other formats so numerically identical requests batch
-            let k = match format {
-                ValueFormat::GseSem(_) => *k,
-                _ => 0,
-            };
-            Some(GroupKey {
-                matrix: Arc::as_ptr(&req.a) as usize,
-                format: *format,
-                k,
-                tol_bits: req.tol.to_bits(),
-                max_iters: req.max_iters,
-            })
-        }
-        _ => None,
-    }
-}
-
-/// Fixed-size worker pool over the shared [`parallel::run_queue`]
-/// machinery; results come back in submission order. Every job runs
-/// against a pool-wide [`OperatorCache`] (one encode per matrix ×
-/// format × k) and same-matrix CG requests are solved as one multi-RHS
-/// block — per-column results are bit-for-bit what individual dispatch
-/// would produce, but the matrix is decoded once per iteration instead
-/// of once per request.
+/// Fixed-size worker pool — since the serving redesign, a thin
+/// submit-all-then-flush wrapper over a manual-mode
+/// [`SolverService`]: every request goes through the same
+/// digest-keyed intake/grouping path the windowed service uses, so
+/// same-matrix CG requests (even behind distinct `Arc`s) are solved as
+/// one multi-RHS block and every job shares the pool's content-
+/// addressed [`MatrixRegistry`] (one encode per digest × format × k).
+/// Per-column results are bit-for-bit what individual dispatch would
+/// produce; results come back in submission order.
 pub struct SolverPool {
-    workers: usize,
-    cache: OperatorCache,
-    metrics: Metrics,
+    svc: SolverService,
 }
 
 impl SolverPool {
     pub fn new(workers: usize) -> Self {
-        Self { workers: workers.max(1), cache: OperatorCache::new(), metrics: Metrics::new() }
+        Self { svc: SolverService::manual(ServiceConfig::new().workers(workers)) }
     }
 
     /// Worker pool sized from `GSEM_WORKERS` / the machine's parallelism.
@@ -290,84 +282,23 @@ impl SolverPool {
         Self::new(parallel::default_workers())
     }
 
-    /// Pool-lifetime counters: cache hits/misses, encode seconds saved,
-    /// multi-RHS groups formed.
+    /// Pool-lifetime counters: cache hits/misses/evictions, encode
+    /// seconds saved, intake flushes, multi-RHS groups formed.
     pub fn metrics(&self) -> &Metrics {
-        &self.metrics
+        self.svc.metrics()
     }
 
-    /// The pool's operator cache (shared across batches).
-    pub fn cache(&self) -> &OperatorCache {
-        &self.cache
+    /// The pool's operator registry (shared across batches).
+    pub fn cache(&self) -> &MatrixRegistry {
+        self.svc.registry()
     }
 
-    /// Run a batch, preserving input order.
+    /// Run a batch, preserving input order: submit everything into the
+    /// service's intake, flush once, wait the tickets.
     pub fn run_batch(&self, reqs: Vec<SolveRequest>) -> Vec<SolveResult> {
-        let n = reqs.len();
-        let mut groups: Vec<Vec<(usize, SolveRequest)>> = Vec::new();
-        let mut by_key: HashMap<GroupKey, usize> = HashMap::new();
-        for (i, req) in reqs.into_iter().enumerate() {
-            match group_key(&req) {
-                Some(key) => match by_key.entry(key) {
-                    Entry::Occupied(e) => groups[*e.get()].push((i, req)),
-                    Entry::Vacant(v) => {
-                        v.insert(groups.len());
-                        groups.push(vec![(i, req)]);
-                    }
-                },
-                None => groups.push(vec![(i, req)]),
-            }
-        }
-        let done = parallel::run_queue(self.workers, groups, |g| self.run_group(g));
-        let mut out: Vec<Option<SolveResult>> = (0..n).map(|_| None).collect();
-        for (i, r) in done.into_iter().flatten() {
-            out[i] = Some(r);
-        }
-        out.into_iter().map(|r| r.expect("every request yields a result")).collect()
-    }
-
-    /// Solve one group: singletons dispatch normally; larger groups run
-    /// as one multi-RHS CG block over the cached operator.
-    fn run_group(&self, group: Vec<(usize, SolveRequest)>) -> Vec<(usize, SolveResult)> {
-        if group.len() == 1 {
-            let (i, req) = group.into_iter().next().unwrap();
-            let res = dispatch_cached(&req, Some(&self.cache), Some(&self.metrics));
-            return vec![(i, res)];
-        }
-        let (format, k) = match &group[0].1.format {
-            FormatChoice::Fixed { format, k } => (*format, *k),
-            _ => unreachable!("grouping only collects fixed formats"),
-        };
-        let (tol, max_iters) = (group[0].1.tol, group[0].1.max_iters);
-        let a = Arc::clone(&group[0].1.a);
-        let op = self.cache.operator(&a, format, k, Some(&self.metrics));
-        let fp64 = self.cache.operator(&a, ValueFormat::Fp64, 0, Some(&self.metrics));
-        let nrhs = group.len();
-        let n = a.nrows;
-        let mut bs = vec![0.0; n * nrhs];
-        for (j, (_, req)) in group.iter().enumerate() {
-            bs[j * n..(j + 1) * n].copy_from_slice(&req.rhs.build(&a));
-        }
-        self.metrics.incr("pool.batched_groups");
-        self.metrics.add("pool.batched_rhs", nrhs as u64);
-        let opts = CgOpts { tol, max_iters, inv_diag: None };
-        let outs = cg_solve_multi(op.as_ref(), &bs, nrhs, &opts);
-        let mut results = Vec::with_capacity(nrhs);
-        for (j, ((i, req), outcome)) in group.into_iter().zip(outs).enumerate() {
-            let b = &bs[j * n..(j + 1) * n];
-            let relres_fp64 = crate::solvers::true_relres(fp64.as_ref(), &outcome.x, b);
-            results.push((
-                i,
-                SolveResult {
-                    name: req.name,
-                    solver: req.solver,
-                    format_label: format.label().to_string(),
-                    outcome,
-                    relres_fp64,
-                },
-            ));
-        }
-        results
+        let tickets: Vec<_> = reqs.into_iter().map(|r| self.svc.submit_request(r)).collect();
+        self.svc.flush();
+        tickets.into_iter().map(|t| t.wait()).collect()
     }
 }
 
@@ -432,6 +363,27 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_uncached_matches_registry_dispatch() {
+        // the registry returns exactly the operator it would build:
+        // cached and uncached dispatch agree bitwise
+        let a = Arc::new(poisson2d(9, 9));
+        let mut req = SolveRequest::new(
+            "u",
+            a,
+            SolverKind::Cg,
+            FormatChoice::fixed(ValueFormat::GseSem(Precision::Full)),
+        );
+        req.rhs = RhsSpec::Random(5);
+        let uncached = dispatch_cached(&req, None, None);
+        let reg = MatrixRegistry::new();
+        let cached = dispatch_cached(&req, Some(&reg), None);
+        assert_eq!(uncached.outcome.iters, cached.outcome.iters);
+        assert_eq!(uncached.outcome.x, cached.outcome.x);
+        assert_eq!(uncached.relres_fp64.to_bits(), cached.relres_fp64.to_bits());
+        assert_eq!(reg.stats().misses, 2);
+    }
+
+    #[test]
     fn stepped_copy_jobs_share_cached_rungs() {
         let a = Arc::new(poisson2d(8, 8));
         let params = SteppedParams::cg_paper().scaled(0.01);
@@ -493,6 +445,7 @@ mod tests {
         // all six shared one matrix+format: one multi-RHS group
         assert_eq!(pool.metrics().counter("pool.batched_groups"), 1);
         assert_eq!(pool.metrics().counter("pool.batched_rhs"), 6);
+        assert_eq!(pool.metrics().counter("intake.flushes"), 1);
     }
 
     #[test]
@@ -516,6 +469,32 @@ mod tests {
             assert_eq!(br.outcome.x, single.outcome.x, "seed {seed}");
             assert_eq!(br.relres_fp64.to_bits(), single.relres_fp64.to_bits(), "seed {seed}");
         }
+    }
+
+    #[test]
+    fn pool_groups_equal_content_behind_distinct_arcs() {
+        // digest keying: three separately-allocated copies of one
+        // matrix still merge into a single multi-RHS group (pointer
+        // keys made each of these a singleton)
+        let reqs: Vec<SolveRequest> = (0..3)
+            .map(|i| {
+                let mut r = SolveRequest::new(
+                    &format!("copy{i}"),
+                    Arc::new(poisson2d(8, 8)),
+                    SolverKind::Cg,
+                    FormatChoice::fixed(ValueFormat::Fp64),
+                );
+                r.rhs = RhsSpec::Random(i as u64);
+                r
+            })
+            .collect();
+        let pool = SolverPool::new(2);
+        let res = pool.run_batch(reqs);
+        assert!(res.iter().all(|r| r.outcome.converged));
+        assert_eq!(pool.metrics().counter("pool.batched_groups"), 1);
+        assert_eq!(pool.metrics().counter("pool.batched_rhs"), 3);
+        // and one fp64 operator served all three (plus the residual)
+        assert_eq!(pool.cache().stats().misses, 1);
     }
 
     #[test]

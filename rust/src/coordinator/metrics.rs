@@ -1,5 +1,6 @@
-//! Process-wide metrics registry: counters and timing histograms for the
-//! coordinator (solve counts, SpMV calls per format, precision switches).
+//! Process-wide metrics registry: counters, gauges and timing
+//! histograms for the coordinator (solve counts, SpMV calls per format,
+//! precision switches, intake flushes, cache residency).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -8,6 +9,7 @@ use std::sync::Mutex;
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, u64>>,
     timings: Mutex<BTreeMap<String, Vec<f64>>>,
 }
 
@@ -22,6 +24,17 @@ impl Metrics {
 
     pub fn add(&self, name: &str, v: u64) {
         *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Set a point-in-time gauge (e.g. `cache.bytes`): last write wins,
+    /// unlike the monotonic counters.
+    pub fn gauge_set(&self, name: &str, v: u64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    /// Current gauge value (0 if never set).
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
     pub fn time(&self, name: &str, seconds: f64) {
@@ -49,6 +62,9 @@ impl Metrics {
         let mut out = String::from("== metrics ==\n");
         for (k, v) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("  {k:<40} {v}\n"));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("  {k:<40} {v} (gauge)\n"));
         }
         for (k, v) in self.timings.lock().unwrap().iter() {
             let total: f64 = v.iter().sum();
@@ -103,7 +119,19 @@ mod tests {
         let m = Metrics::new();
         m.incr("a");
         m.time("b", 0.1);
+        m.gauge_set("g", 7);
         let r = m.report();
         assert!(r.contains("a") && r.contains("b"));
+        assert!(r.contains("g") && r.contains("7 (gauge)"));
+    }
+
+    #[test]
+    fn gauges_last_write_wins() {
+        let m = Metrics::new();
+        assert_eq!(m.gauge("cache.bytes"), 0);
+        m.gauge_set("cache.bytes", 100);
+        m.gauge_set("cache.bytes", 42);
+        assert_eq!(m.gauge("cache.bytes"), 42);
+        assert!(m.report().contains("cache.bytes"));
     }
 }

@@ -1,14 +1,19 @@
-//! Thin L3 coordinator (DESIGN.md §2): the paper's contribution is the
-//! numeric format + solver policy (L1/L2), so L3 is a driver — a solve-
-//! job model, a worker pool with same-matrix multi-RHS batching, an
-//! operator cache, a metrics registry, and the CLI plumbing that runs
-//! the experiment suite. No request-path python anywhere.
+//! L3 coordinator (DESIGN.md §2): the paper's contribution is the
+//! numeric format + solver policy (L1/L2), so L3 is the serving layer —
+//! a solve-job model, a long-lived [`SolverService`] with windowed
+//! intake ([`intake`]), a sharded content-addressed operator registry
+//! ([`registry`]), the [`SolverPool`] batch wrapper with same-matrix
+//! multi-RHS merging, a metrics registry, and the CLI plumbing that
+//! runs the experiment suite and the `serve` trace replay. No
+//! request-path python anywhere.
 
-pub mod cache;
+pub mod registry;
+pub mod intake;
 pub mod jobs;
 pub mod metrics;
 pub mod cli;
 
-pub use cache::{CacheStats, OperatorCache};
+pub use intake::{ServiceConfig, SolveSpec, SolveTicket, SolverService};
 pub use jobs::{FormatChoice, RhsSpec, SolveRequest, SolveResult, SolverKind, SolverPool};
 pub use metrics::Metrics;
+pub use registry::{MatrixHandle, MatrixRegistry, RegistryStats};

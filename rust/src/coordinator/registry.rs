@@ -1,0 +1,801 @@
+//! Content-addressed operator registry — the serving-path replacement
+//! for the old `Arc`-pointer `OperatorCache`.
+//!
+//! Three problems with pointer keys at serving scale, and how this
+//! module solves each:
+//!
+//! * **Identity misses.** Structurally identical matrices behind
+//!   distinct `Arc`s (fresh parses of the same file, per-request
+//!   clones) missed on every lookup and each pinned a private encode.
+//!   Entries are now keyed by [`MatrixDigest`] — a structural digest of
+//!   the CSR — through a typed [`MatrixHandle`], so equal content
+//!   shares one entry and nothing needs to pin the matrix `Arc` to
+//!   keep its key valid.
+//! * **Serialized encodes.** Builds used to run under the one global
+//!   cache lock: no duplicate encodes, but every worker queued behind
+//!   every encode. The map is now **sharded**, and a miss installs a
+//!   per-key **build latch** before releasing the shard lock — distinct
+//!   matrices encode in parallel while duplicate requests wait on the
+//!   latch and still encode exactly once.
+//! * **Unbounded growth.** Entries used to live for the pool's
+//!   lifetime. Each entry now carries its resident size
+//!   ([`crate::spmv::SpmvOp::encoded_bytes`]) and the registry evicts
+//!   least-recently-used entries above a configurable byte budget.
+//!
+//! Outcomes surface in [`Metrics`] as `cache.hits` / `cache.misses` /
+//! `cache.evictions` counters, the `cache.bytes` gauge, and the
+//! `cache.encode_saved` timing series; the same numbers are available
+//! without a metrics sink via [`MatrixRegistry::stats`]. The pool's
+//! accessor is still called `cache()` for familiarity.
+
+use crate::coordinator::metrics::Metrics;
+use crate::formats::ValueFormat;
+use crate::sparse::csr::{Csr, MatrixDigest};
+use crate::spmv::fp64::Fp64Csr;
+use crate::spmv::gse::GseSpmv;
+use crate::spmv::lowp::LowpCsr;
+use crate::spmv::{GseCsr, SpmvOp};
+use crate::util::Timer;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+
+/// Shard count (power of two; keyed by digest hash). Sixteen shards
+/// keep lock contention negligible at any plausible worker count.
+const SHARD_COUNT: usize = 16;
+
+/// Byte budget of the process-wide registry when `GSEM_CACHE_BYTES`
+/// is not set.
+pub const DEFAULT_GLOBAL_BUDGET: usize = 1 << 30;
+
+/// Typed handle to a registered matrix: the structural digest plus the
+/// data `Arc`. Handles are cheap to clone and are the only way to ask
+/// the registry for operators — computing the digest once at
+/// registration keeps the per-request cost off the lookup path.
+#[derive(Clone, Debug)]
+pub struct MatrixHandle {
+    digest: MatrixDigest,
+    a: Arc<Csr>,
+}
+
+impl MatrixHandle {
+    /// Digest `a` and wrap it. Equal-content matrices produce equal
+    /// handles regardless of which `Arc` holds them.
+    pub fn of(a: &Arc<Csr>) -> Self {
+        Self { digest: a.digest(), a: Arc::clone(a) }
+    }
+
+    /// The content-addressed registry key.
+    pub fn digest(&self) -> MatrixDigest {
+        self.digest
+    }
+
+    /// The matrix data.
+    pub fn matrix(&self) -> &Arc<Csr> {
+        &self.a
+    }
+}
+
+/// Build a fixed-format operator from scratch (no memoization) — the
+/// single construction point shared by the registry miss path and
+/// uncached one-shot dispatch. `k` is the GSE shared-exponent count
+/// (ignored by the non-GSE formats).
+pub(crate) fn build_fixed_operator(a: &Csr, format: ValueFormat, k: usize) -> Arc<dyn SpmvOp> {
+    match format {
+        ValueFormat::Fp64 => Arc::new(Fp64Csr::new(a.clone())),
+        ValueFormat::Fp32 => Arc::new(LowpCsr::<f32>::from_csr(a)),
+        ValueFormat::Fp16 => Arc::new(LowpCsr::<crate::formats::Fp16>::from_csr(a)),
+        ValueFormat::Bf16 => Arc::new(LowpCsr::<crate::formats::Bf16>::from_csr(a)),
+        ValueFormat::GseSem(level) => Arc::new(GseCsr::from_csr(a, k).at_level(level)),
+    }
+}
+
+/// Registry key: content digest + what was built from it. GSE encodes
+/// are cached once per (digest, k) and every precision level views the
+/// same entry through a cheap wrapper; non-GSE operators ignore `k`
+/// entirely, so their key carries none.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum Key {
+    Op { digest: MatrixDigest, format: ValueFormat },
+    Gse { digest: MatrixDigest, k: usize },
+}
+
+/// What a cache entry holds.
+#[derive(Clone)]
+enum CachedVal {
+    Op(Arc<dyn SpmvOp>),
+    Gse(Arc<GseCsr>),
+}
+
+impl CachedVal {
+    fn bytes(&self) -> usize {
+        match self {
+            CachedVal::Op(op) => op.encoded_bytes(),
+            CachedVal::Gse(m) => m.encoded_bytes(),
+        }
+    }
+
+    fn into_op(self) -> Arc<dyn SpmvOp> {
+        match self {
+            CachedVal::Op(op) => op,
+            CachedVal::Gse(_) => unreachable!("op keys hold operators"),
+        }
+    }
+
+    fn into_gse(self) -> Arc<GseCsr> {
+        match self {
+            CachedVal::Gse(m) => m,
+            CachedVal::Op(_) => unreachable!("gse keys hold encodes"),
+        }
+    }
+}
+
+/// One filled cache slot.
+struct CacheEntry {
+    v: CachedVal,
+    /// resident size charged against the byte budget
+    bytes: usize,
+    /// seconds the build took — credited as "saved" on every hit
+    build_s: f64,
+    /// LRU clock tick of the last access
+    last_used: u64,
+}
+
+/// Per-key build latch: a miss installs one before releasing the shard
+/// lock, so duplicate requests block here (not on the shard) while the
+/// builder encodes, and distinct keys encode in parallel.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+enum LatchState {
+    Pending,
+    Done(CachedVal, f64),
+    Failed,
+}
+
+impl Latch {
+    fn new() -> Self {
+        Self { state: Mutex::new(LatchState::Pending), cv: Condvar::new() }
+    }
+
+    /// Block until the builder publishes; `None` means the builder
+    /// withdrew (panicked) and the caller should race to rebuild.
+    fn wait(&self) -> Option<(CachedVal, f64)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match &*st {
+                LatchState::Pending => st = self.cv.wait(st).unwrap(),
+                LatchState::Done(v, build_s) => return Some((v.clone(), *build_s)),
+                LatchState::Failed => return None,
+            }
+        }
+    }
+
+    fn fill(&self, v: CachedVal, build_s: f64) {
+        *self.state.lock().unwrap() = LatchState::Done(v, build_s);
+        self.cv.notify_all();
+    }
+
+    fn fail(&self) {
+        *self.state.lock().unwrap() = LatchState::Failed;
+        self.cv.notify_all();
+    }
+}
+
+enum Slot {
+    Ready(CacheEntry),
+    Building(Arc<Latch>),
+}
+
+/// What the shard lookup decided to do (computed under the shard lock,
+/// acted on outside it).
+enum Plan {
+    Hit(CachedVal, f64),
+    Wait(Arc<Latch>),
+    Build,
+}
+
+#[derive(Clone, Copy, Default)]
+struct Counters {
+    hits: u64,
+    misses: u64,
+    encode_saved_s: f64,
+    evictions: u64,
+}
+
+/// Aggregate registry outcomes (also exported to [`Metrics`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegistryStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// total encode/build seconds that hits avoided re-spending
+    pub encode_saved_s: f64,
+    /// entries dropped by the LRU byte-budget policy
+    pub evictions: u64,
+    /// resident encoded bytes currently cached
+    pub bytes: usize,
+    /// cached builds currently resident (operators + GSE encodes)
+    pub entries: usize,
+}
+
+/// Sharded, content-addressed, byte-budgeted operator registry (see
+/// module docs).
+pub struct MatrixRegistry {
+    shards: Vec<Mutex<HashMap<Key, Slot>>>,
+    /// byte budget; `usize::MAX` = unbounded (no eviction)
+    budget: usize,
+    /// resident bytes across all shards (Ready entries only)
+    bytes: AtomicUsize,
+    /// LRU clock: monotonically increasing access ticks
+    clock: AtomicU64,
+    counters: Mutex<Counters>,
+    /// `Arc`-pointer → digest memo so re-registering the same
+    /// allocation (every request of a big batch) skips the O(nnz)
+    /// re-hash; `Weak` guards against address reuse after drop.
+    digests: Mutex<HashMap<usize, (Weak<Csr>, MatrixDigest)>>,
+}
+
+impl Default for MatrixRegistry {
+    fn default() -> Self {
+        Self::with_budget(usize::MAX)
+    }
+}
+
+impl MatrixRegistry {
+    /// Unbounded registry (no eviction) — the per-pool default.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Registry that evicts least-recently-used entries once resident
+    /// encoded storage exceeds `budget_bytes`.
+    pub fn with_budget(budget_bytes: usize) -> Self {
+        Self {
+            shards: (0..SHARD_COUNT).map(|_| Mutex::new(HashMap::new())).collect(),
+            budget: budget_bytes,
+            bytes: AtomicUsize::new(0),
+            clock: AtomicU64::new(0),
+            counters: Mutex::new(Counters::default()),
+            digests: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The process-wide registry used by one-shot
+    /// [`crate::coordinator::jobs::dispatch`] — single CLI solves and
+    /// the bench suites share encodes with each other instead of
+    /// rebuilding per call. Budget: `GSEM_CACHE_BYTES` env override,
+    /// else [`DEFAULT_GLOBAL_BUDGET`].
+    pub fn global() -> &'static MatrixRegistry {
+        static GLOBAL: OnceLock<MatrixRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let budget = std::env::var("GSEM_CACHE_BYTES")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(DEFAULT_GLOBAL_BUDGET);
+            MatrixRegistry::with_budget(budget)
+        })
+    }
+
+    /// Register a matrix: digest its content and hand back the typed
+    /// key. Registration never encodes anything — operators build
+    /// lazily on first request. Re-registering the same `Arc` (every
+    /// request of a batch on one matrix) is a pointer lookup, not a
+    /// re-hash.
+    pub fn register(&self, a: &Arc<Csr>) -> MatrixHandle {
+        let ptr = Arc::as_ptr(a) as usize;
+        {
+            let memo = self.digests.lock().unwrap();
+            if let Some((weak, digest)) = memo.get(&ptr) {
+                // the allocation must still be this exact Arc — an
+                // upgrade failure means the address was recycled
+                if weak.upgrade().is_some_and(|live| Arc::ptr_eq(&live, a)) {
+                    return MatrixHandle { digest: *digest, a: Arc::clone(a) };
+                }
+            }
+        }
+        let handle = MatrixHandle::of(a);
+        let mut memo = self.digests.lock().unwrap();
+        // opportunistically drop dead entries so the memo stays small
+        memo.retain(|_, (weak, _)| weak.strong_count() > 0);
+        memo.insert(ptr, (Arc::downgrade(a), handle.digest));
+        handle
+    }
+
+    /// The encoded GSE-SEM matrix for `(handle, k)`, building it on a
+    /// miss. Shared by the fixed-level operators (all three levels view
+    /// one encode) and the stepped ladder.
+    pub fn gse(&self, h: &MatrixHandle, k: usize, metrics: Option<&Metrics>) -> Arc<GseCsr> {
+        let a = Arc::clone(h.matrix());
+        self.get_or_build(Key::Gse { digest: h.digest(), k }, metrics, move || {
+            CachedVal::Gse(Arc::new(GseCsr::from_csr(&a, k)))
+        })
+        .into_gse()
+    }
+
+    /// A type-erased fixed-format operator for `(handle, format, k)`,
+    /// building it on a miss. GSE levels wrap the shared
+    /// [`MatrixRegistry::gse`] encode (the wrapper itself is a cheap
+    /// `Arc` view, so only the encode is memoized and budgeted).
+    pub fn operator(
+        &self,
+        h: &MatrixHandle,
+        format: ValueFormat,
+        k: usize,
+        metrics: Option<&Metrics>,
+    ) -> Arc<dyn SpmvOp> {
+        if let ValueFormat::GseSem(level) = format {
+            let g = self.gse(h, k, metrics);
+            return Arc::new(GseSpmv::new(g, level));
+        }
+        let a = Arc::clone(h.matrix());
+        self.get_or_build(Key::Op { digest: h.digest(), format }, metrics, move || {
+            CachedVal::Op(build_fixed_operator(&a, format, 0))
+        })
+        .into_op()
+    }
+
+    /// Aggregate hit/miss/eviction/byte counters.
+    pub fn stats(&self) -> RegistryStats {
+        let c = *self.counters.lock().unwrap();
+        RegistryStats {
+            hits: c.hits,
+            misses: c.misses,
+            encode_saved_s: c.encode_saved_s,
+            evictions: c.evictions,
+            bytes: self.bytes.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+
+    /// Drop every resident entry, returning how many were dropped.
+    /// Builds currently in flight are unaffected (they republish when
+    /// they finish); outstanding `Arc`s handed to callers stay valid.
+    /// This is the escape hatch for embedders of the process-wide
+    /// [`MatrixRegistry::global`] cache, whose entries otherwise live
+    /// until the byte budget pushes them out.
+    pub fn clear(&self) -> usize {
+        let mut dropped = 0usize;
+        for shard in &self.shards {
+            let mut map = shard.lock().unwrap();
+            map.retain(|_, slot| match slot {
+                Slot::Ready(e) => {
+                    self.bytes.fetch_sub(e.bytes, Ordering::Relaxed);
+                    dropped += 1;
+                    false
+                }
+                Slot::Building(_) => true,
+            });
+        }
+        // the digest memo only holds weak refs; reclaim dead slots too
+        self.digests.lock().unwrap().retain(|_, (weak, _)| weak.strong_count() > 0);
+        dropped
+    }
+
+    /// Resident encoded bytes currently cached.
+    pub fn bytes(&self) -> usize {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// The configured byte budget (`usize::MAX` = unbounded).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Number of resident cached builds (operators + GSE encodes).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock().unwrap().values().filter(|v| matches!(v, Slot::Ready(_))).count()
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn shard_of(&self, key: &Key) -> usize {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// The registry's core path: hit, wait on a concurrent build, or
+    /// become the builder. `build` runs **outside** the shard lock.
+    fn get_or_build(
+        &self,
+        key: Key,
+        metrics: Option<&Metrics>,
+        build: impl FnOnce() -> CachedVal,
+    ) -> CachedVal {
+        let si = self.shard_of(&key);
+        let mut build = Some(build);
+        loop {
+            let plan = {
+                let mut map = self.shards[si].lock().unwrap();
+                match map.get_mut(&key) {
+                    Some(Slot::Ready(e)) => {
+                        e.last_used = self.clock.fetch_add(1, Ordering::Relaxed);
+                        Plan::Hit(e.v.clone(), e.build_s)
+                    }
+                    Some(Slot::Building(latch)) => Plan::Wait(Arc::clone(latch)),
+                    None => {
+                        map.insert(key, Slot::Building(Arc::new(Latch::new())));
+                        Plan::Build
+                    }
+                }
+            };
+            match plan {
+                Plan::Hit(v, saved_s) => {
+                    self.credit_hit(saved_s, metrics);
+                    return v;
+                }
+                Plan::Wait(latch) => match latch.wait() {
+                    // the builder finished while we slept: a hit that
+                    // cost no duplicate encode (exactly-once build)
+                    Some((v, build_s)) => {
+                        self.credit_hit(build_s, metrics);
+                        return v;
+                    }
+                    // the builder withdrew (panicked); race to rebuild
+                    None => continue,
+                },
+                Plan::Build => {
+                    let mut guard = BuildGuard { reg: self, shard: si, key, armed: true };
+                    let t = Timer::start();
+                    let run = build.take().expect("a get_or_build call builds at most once");
+                    let v = run();
+                    let build_s = t.elapsed_s();
+                    let bytes = v.bytes();
+                    // charge the budget *before* publishing: a
+                    // concurrent evictor may uncharge the entry the
+                    // moment it becomes visible, and the counter must
+                    // never go below the sum of resident entries
+                    self.bytes.fetch_add(bytes, Ordering::Relaxed);
+                    {
+                        let mut map = self.shards[si].lock().unwrap();
+                        let slot = map.get_mut(&key).expect("builder's slot is present");
+                        let latch = match slot {
+                            Slot::Building(l) => Arc::clone(l),
+                            Slot::Ready(_) => unreachable!("only the builder fills its slot"),
+                        };
+                        let last_used = self.clock.fetch_add(1, Ordering::Relaxed);
+                        *slot = Slot::Ready(CacheEntry { v: v.clone(), bytes, build_s, last_used });
+                        latch.fill(v.clone(), build_s);
+                    }
+                    guard.armed = false;
+                    self.credit_miss(build_s, metrics);
+                    self.enforce_budget(metrics);
+                    return v;
+                }
+            }
+        }
+    }
+
+    /// Evict least-recently-used Ready entries until resident bytes fit
+    /// the budget. Shards are scanned one lock at a time and victims
+    /// revalidated before removal, so this never holds two locks.
+    fn enforce_budget(&self, metrics: Option<&Metrics>) {
+        while self.bytes.load(Ordering::Relaxed) > self.budget {
+            let mut victim: Option<(usize, Key, u64)> = None;
+            for (si, shard) in self.shards.iter().enumerate() {
+                let map = shard.lock().unwrap();
+                for (k, slot) in map.iter() {
+                    if let Slot::Ready(e) = slot {
+                        if victim.as_ref().map(|v| e.last_used < v.2).unwrap_or(true) {
+                            victim = Some((si, *k, e.last_used));
+                        }
+                    }
+                }
+            }
+            let Some((si, key, last_used)) = victim else { break };
+            let mut map = self.shards[si].lock().unwrap();
+            let still_lru =
+                matches!(map.get(&key), Some(Slot::Ready(e)) if e.last_used == last_used);
+            if still_lru {
+                if let Some(Slot::Ready(e)) = map.remove(&key) {
+                    drop(map);
+                    self.bytes.fetch_sub(e.bytes, Ordering::Relaxed);
+                    self.counters.lock().unwrap().evictions += 1;
+                    if let Some(m) = metrics {
+                        m.incr("cache.evictions");
+                    }
+                }
+            }
+            // touched since the scan: loop and pick a fresh victim
+        }
+        if let Some(m) = metrics {
+            m.gauge_set("cache.bytes", self.bytes.load(Ordering::Relaxed) as u64);
+        }
+    }
+
+    fn credit_hit(&self, saved_s: f64, metrics: Option<&Metrics>) {
+        {
+            let mut c = self.counters.lock().unwrap();
+            c.hits += 1;
+            c.encode_saved_s += saved_s;
+        }
+        if let Some(m) = metrics {
+            m.incr("cache.hits");
+            m.time("cache.encode_saved", saved_s);
+        }
+    }
+
+    fn credit_miss(&self, build_s: f64, metrics: Option<&Metrics>) {
+        self.counters.lock().unwrap().misses += 1;
+        if let Some(m) = metrics {
+            m.incr("cache.misses");
+            m.time("cache.encode", build_s);
+        }
+    }
+
+    /// Test hook: run the full hit/latch/build machinery with an
+    /// injected builder, so concurrency tests can observe exactly when
+    /// and how often builds run.
+    #[cfg(test)]
+    fn operator_with(
+        &self,
+        h: &MatrixHandle,
+        format: ValueFormat,
+        build: impl FnOnce() -> Arc<dyn SpmvOp>,
+    ) -> Arc<dyn SpmvOp> {
+        self.get_or_build(Key::Op { digest: h.digest(), format }, None, move || {
+            CachedVal::Op(build())
+        })
+        .into_op()
+    }
+}
+
+/// Withdraws a `Building` slot if the builder unwinds, releasing latch
+/// waiters to retry instead of hanging forever.
+struct BuildGuard<'a> {
+    reg: &'a MatrixRegistry,
+    shard: usize,
+    key: Key,
+    armed: bool,
+}
+
+impl Drop for BuildGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut map = self.reg.shards[self.shard].lock().unwrap();
+        match map.remove(&self.key) {
+            Some(Slot::Building(latch)) => latch.fail(),
+            Some(ready @ Slot::Ready(_)) => {
+                // defensive: never drop a published entry
+                map.insert(self.key, ready);
+            }
+            None => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Precision;
+    use crate::sparse::gen::poisson::poisson2d;
+    use crate::sparse::gen::randmat::{exp_controlled, ExpLaw};
+    use crate::util::parallel;
+    use crate::util::quickcheck;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn equal_content_distinct_arcs_share_one_entry() {
+        // property: under pointer keying this was a guaranteed miss;
+        // under content addressing it must always hit
+        quickcheck::check(
+            11,
+            12,
+            |rng| {
+                let n = 4 + rng.below(24);
+                let row = 1 + rng.below(5);
+                let seed = rng.below(1000) as u64;
+                exp_controlled(n, n, row, ExpLaw::Gaussian { e0: 0, sigma: 2.0 }, seed)
+            },
+            |m| {
+                let reg = MatrixRegistry::new();
+                let a = Arc::new(m.clone());
+                let b = Arc::new(m.clone());
+                assert!(!Arc::ptr_eq(&a, &b));
+                let ha = reg.register(&a);
+                let hb = reg.register(&b);
+                if ha.digest() != hb.digest() {
+                    return Err("equal content must digest equally".into());
+                }
+                let op1 = reg.operator(&ha, ValueFormat::Fp64, 0, None);
+                let op2 = reg.operator(&hb, ValueFormat::Fp64, 0, None);
+                if !Arc::ptr_eq(&op1, &op2) {
+                    return Err("distinct arcs must share one cached operator".into());
+                }
+                let st = reg.stats();
+                if (st.hits, st.misses, st.entries) != (1, 1, 1) {
+                    return Err(format!(
+                        "expected 1 hit / 1 miss / 1 entry, got {} / {} / {}",
+                        st.hits, st.misses, st.entries
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn duplicate_requests_encode_exactly_once() {
+        let reg = MatrixRegistry::new();
+        let a = Arc::new(poisson2d(8, 8));
+        let h = reg.register(&a);
+        let encodes = AtomicUsize::new(0);
+        let ops: Mutex<Vec<Arc<dyn SpmvOp>>> = Mutex::new(Vec::new());
+        parallel::broadcast(8, |_| {
+            let op = reg.operator_with(&h, ValueFormat::Fp64, || {
+                // slow build: every other worker must arrive while this
+                // runs and wait on the latch rather than re-encode
+                std::thread::sleep(Duration::from_millis(30));
+                encodes.fetch_add(1, Ordering::Relaxed);
+                build_fixed_operator(&a, ValueFormat::Fp64, 0)
+            });
+            ops.lock().unwrap().push(op);
+        });
+        assert_eq!(encodes.load(Ordering::Relaxed), 1, "latch must dedupe builds");
+        let ops = ops.into_inner().unwrap();
+        assert!(ops.windows(2).all(|w| Arc::ptr_eq(&w[0], &w[1])));
+        let st = reg.stats();
+        assert_eq!((st.hits, st.misses), (7, 1));
+    }
+
+    #[test]
+    fn distinct_matrices_encode_in_parallel() {
+        // two slow builds on distinct keys rendezvous *inside* their
+        // builders — possible only if encodes run off the global lock
+        let reg = MatrixRegistry::new();
+        let mats = [Arc::new(poisson2d(6, 6)), Arc::new(poisson2d(7, 7))];
+        let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
+        parallel::broadcast(2, |w| {
+            let a = &mats[w];
+            let h = reg.register(a);
+            reg.operator_with(&h, ValueFormat::Fp64, || {
+                let (count, cv) = &*gate;
+                let mut inside = count.lock().unwrap();
+                *inside += 1;
+                cv.notify_all();
+                while *inside < 2 {
+                    let (g, timeout) = cv
+                        .wait_timeout(inside, Duration::from_secs(10))
+                        .unwrap();
+                    inside = g;
+                    assert!(!timeout.timed_out(), "builds serialized behind one lock");
+                }
+                build_fixed_operator(a, ValueFormat::Fp64, 0)
+            });
+        });
+        let st = reg.stats();
+        assert_eq!((st.hits, st.misses), (0, 2));
+    }
+
+    #[test]
+    fn gse_levels_share_one_encode() {
+        let reg = MatrixRegistry::new();
+        let a = Arc::new(poisson2d(8, 8));
+        let h = reg.register(&a);
+        let head = reg.operator(&h, ValueFormat::GseSem(Precision::Head), 8, None);
+        let full = reg.operator(&h, ValueFormat::GseSem(Precision::Full), 8, None);
+        assert_eq!(head.format(), ValueFormat::GseSem(Precision::Head));
+        assert_eq!(full.format(), ValueFormat::GseSem(Precision::Full));
+        // one encode miss, one hit; a different k encodes again
+        let st = reg.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        let _k2 = reg.gse(&h, 2, None);
+        assert_eq!(reg.stats().misses, 2);
+        // cached operators compute the same product as fresh ones
+        let x = vec![1.0; a.ncols];
+        let mut y1 = vec![0.0; a.nrows];
+        head.apply(&x, &mut y1);
+        let mut y2 = vec![0.0; a.nrows];
+        GseCsr::from_csr(&a, 8).at_level(Precision::Head).apply(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        let mats: Vec<Arc<Csr>> =
+            (0..3).map(|i| Arc::new(poisson2d(10 + i, 10 + i))).collect();
+        let one = Fp64Csr::new(mats[0].as_ref().clone()).encoded_bytes();
+        // room for about two fp64 operators of this size
+        let reg = MatrixRegistry::with_budget(one * 5 / 2);
+        let m = Metrics::new();
+        let h0 = reg.register(&mats[0]);
+        let h1 = reg.register(&mats[1]);
+        let h2 = reg.register(&mats[2]);
+        let _ = reg.operator(&h0, ValueFormat::Fp64, 0, Some(&m));
+        let _ = reg.operator(&h1, ValueFormat::Fp64, 0, Some(&m));
+        assert_eq!(reg.stats().evictions, 0);
+        // touch h0 so h1 is the LRU victim when h2 arrives
+        let _ = reg.operator(&h0, ValueFormat::Fp64, 0, Some(&m));
+        let _ = reg.operator(&h2, ValueFormat::Fp64, 0, Some(&m));
+        let st = reg.stats();
+        assert_eq!(st.evictions, 1);
+        assert!(st.bytes <= reg.budget());
+        assert_eq!(st.entries, 2);
+        assert_eq!(m.counter("cache.evictions"), 1);
+        assert_eq!(m.gauge("cache.bytes"), st.bytes as u64);
+        // h0 survived (recently used), h1 was evicted: re-request misses
+        let before = reg.stats().misses;
+        let _ = reg.operator(&h0, ValueFormat::Fp64, 0, Some(&m));
+        assert_eq!(reg.stats().misses, before);
+        let _ = reg.operator(&h1, ValueFormat::Fp64, 0, Some(&m));
+        assert_eq!(reg.stats().misses, before + 1);
+    }
+
+    #[test]
+    fn clear_drops_entries_and_uncharges_bytes() {
+        let reg = MatrixRegistry::new();
+        let a = Arc::new(poisson2d(8, 8));
+        let h = reg.register(&a);
+        let op = reg.operator(&h, ValueFormat::Fp64, 0, None);
+        let _ = reg.gse(&h, 8, None);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.bytes() > 0);
+        assert_eq!(reg.clear(), 2);
+        assert!(reg.is_empty());
+        assert_eq!(reg.bytes(), 0);
+        // handed-out operators stay usable; re-requesting re-encodes
+        let x = vec![1.0; a.ncols];
+        let mut y = vec![0.0; a.nrows];
+        op.apply(&x, &mut y);
+        let before = reg.stats().misses;
+        let _ = reg.operator(&h, ValueFormat::Fp64, 0, None);
+        assert_eq!(reg.stats().misses, before + 1);
+    }
+
+    #[test]
+    fn register_memoizes_digest_by_pointer() {
+        let reg = MatrixRegistry::new();
+        let a = Arc::new(poisson2d(8, 8));
+        let h1 = reg.register(&a);
+        let h2 = reg.register(&a); // memo path: pointer lookup, no re-hash
+        assert_eq!(h1.digest(), h2.digest());
+        assert_eq!(reg.digests.lock().unwrap().len(), 1);
+        // a distinct allocation gets its own memo slot but the same
+        // content digest
+        let b = Arc::new(poisson2d(8, 8));
+        let h3 = reg.register(&b);
+        assert_eq!(h1.digest(), h3.digest());
+        assert_eq!(reg.digests.lock().unwrap().len(), 2);
+        // dropping an Arc lets its memo entry be reclaimed on the next
+        // registration, and the memoized digest stays correct
+        drop(b);
+        let c = Arc::new(poisson2d(9, 9));
+        let hc = reg.register(&c);
+        assert_eq!(hc.digest(), c.digest());
+        assert!(reg.digests.lock().unwrap().len() <= 2);
+    }
+
+    #[test]
+    fn metrics_surface_hits_and_saved_seconds() {
+        let reg = MatrixRegistry::new();
+        let m = Metrics::new();
+        let a = Arc::new(poisson2d(10, 10));
+        let h = reg.register(&a);
+        let _ = reg.gse(&h, 8, Some(&m));
+        let _ = reg.gse(&h, 8, Some(&m));
+        assert_eq!(m.counter("cache.misses"), 1);
+        assert_eq!(m.counter("cache.hits"), 1);
+        let (n, total, _) = m.timing("cache.encode_saved");
+        assert_eq!(n, 1);
+        assert!(total >= 0.0);
+        assert!(reg.stats().encode_saved_s >= 0.0);
+        assert!(!reg.is_empty());
+        assert!(reg.bytes() > 0);
+        // the gauge tracks resident bytes after every build
+        assert_eq!(m.gauge("cache.bytes"), reg.bytes() as u64);
+    }
+}

@@ -26,9 +26,12 @@
 //!   tags or the copy-based fp32→fp64 baseline).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`).
-//! * [`coordinator`] — thin L3 driver: solve-job queue, worker pool
-//!   with same-matrix multi-RHS batching, operator cache, metrics,
-//!   experiment suite runner.
+//! * [`coordinator`] — the L3 serving layer: a long-lived
+//!   `SolverService` (windowed intake that merges staggered same-matrix
+//!   requests into multi-RHS block solves), a sharded content-addressed
+//!   operator registry with per-key build latches and LRU byte-budget
+//!   eviction, the `SolverPool` batch wrapper, metrics, and the
+//!   experiment-suite / trace-replay CLI.
 
 pub mod util;
 pub mod formats;

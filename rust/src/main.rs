@@ -5,12 +5,17 @@
 //! * `spmv`      — run/compare SpMV formats on a matrix.
 //! * `solve`     — run CG/GMRES/BiCGSTAB in any storage format
 //!                 (including stepped GSE-SEM) and print the outcome.
+//! * `serve`     — replay a staggered request trace through the
+//!                 windowed `SolverService` (intake/cache metrics).
 //! * `suite`     — run the paper's CG + GMRES test sets end-to-end.
 //! * `kernels`   — list/compile the AOT artifacts (PJRT check).
 //! * `gen`       — write a corpus matrix to a MatrixMarket file.
 
 use gsem::coordinator::cli::Cli;
-use gsem::coordinator::{FormatChoice, SolveRequest, SolverKind, SolverPool};
+use gsem::coordinator::{
+    FormatChoice, RhsSpec, ServiceConfig, SolveRequest, SolveSpec, SolverKind, SolverPool,
+    SolverService,
+};
 use gsem::formats::{Precision, ValueFormat};
 use gsem::solvers::stepped::SteppedParams;
 use gsem::sparse::gen::corpus::{cg_set, gmres_set, spmv_corpus, CorpusSize, NamedMatrix};
@@ -33,6 +38,7 @@ fn main() {
         Some("analyze") => cmd_analyze(&cli),
         Some("spmv") => cmd_spmv(&cli),
         Some("solve") => cmd_solve(&cli),
+        Some("serve") => cmd_serve(&cli),
         Some("suite") => cmd_suite(&cli),
         Some("kernels") => cmd_kernels(&cli),
         Some("gen") => cmd_gen(&cli),
@@ -54,8 +60,13 @@ fn print_usage() {
                     compare SpMV formats (Fig. 6)\n\
            solve    --matrix <name|path.mtx> --solver cg|gmres|bicgstab\n\
                     --format fp64|fp32|fp16|bf16|gse-head|gse-t1|gse-full|stepped|stepped-copy\n\
-                    [--k 8] [--nrhs N]  (N > 1 pools N random RHS; fixed-format CG\n\
-                    merges them into one multi-RHS block solve)\n\
+                    [--k 8] [--nrhs N] [--workers N]  (N > 1 pools N random RHS over\n\
+                    --workers threads, 0 = auto; fixed-format CG merges them into one\n\
+                    multi-RHS block solve)\n\
+           serve    [--requests 24] [--window-ms 5] [--batch-width 8] [--stagger-us 300]\n\
+                    [--workers 0] [--cache-mb 0] [--matrix <...>] [--solver cg] [--format fp64]\n\
+                    replay a staggered request trace through the windowed SolverService\n\
+                    and report intake/cache metrics (0 = auto workers / unbounded cache)\n\
            suite    [--solver cg|gmres|both] [--size small|medium|full] [--workers N] (0 = auto)\n\
            kernels                                      PJRT artifact check\n\
            gen      --matrix <name> --out <path.mtx> | --list\n\n\
@@ -176,37 +187,45 @@ fn parse_format(s: &str, k: usize) -> Option<FormatChoice> {
     Some(FormatChoice::Fixed { format, k })
 }
 
+fn parse_solver(s: &str) -> Option<SolverKind> {
+    match s {
+        "cg" => Some(SolverKind::Cg),
+        "gmres" => Some(SolverKind::Gmres),
+        "bicgstab" => Some(SolverKind::Bicgstab),
+        _ => None,
+    }
+}
+
+/// Full format axis shared by `solve` and `serve`: fixed formats plus
+/// the two stepped ladders (whose controller thresholds depend on the
+/// solver family).
+fn parse_format_choice(s: &str, solver: SolverKind, k: usize, scale: f64) -> Option<FormatChoice> {
+    let stepped_base = match solver {
+        SolverKind::Cg | SolverKind::Bicgstab => SteppedParams::cg_paper(),
+        SolverKind::Gmres => SteppedParams::gmres_paper(),
+    };
+    match s {
+        "stepped" => Some(FormatChoice::Stepped { k, params: stepped_base.scaled(scale) }),
+        "stepped-copy" => Some(FormatChoice::SteppedCopy { params: stepped_base.scaled(scale) }),
+        other => parse_format(other, k),
+    }
+}
+
 fn cmd_solve(cli: &Cli) -> i32 {
     let Some(spec) = cli.get("matrix") else {
         eprintln!("--matrix required");
         return 2;
     };
-    let solver = match cli.get_or("solver", "cg") {
-        "cg" => SolverKind::Cg,
-        "gmres" => SolverKind::Gmres,
-        "bicgstab" => SolverKind::Bicgstab,
-        other => {
-            eprintln!("unknown solver {other}");
-            return 2;
-        }
+    let Some(solver) = parse_solver(cli.get_or("solver", "cg")) else {
+        eprintln!("unknown solver {}", cli.get_or("solver", "cg"));
+        return 2;
     };
     let k = cli.get_usize("k", 8).unwrap_or(8);
     let fmt_str = cli.get_or("format", "stepped");
-    let stepped_base = match solver {
-        SolverKind::Cg | SolverKind::Bicgstab => SteppedParams::cg_paper(),
-        SolverKind::Gmres => SteppedParams::gmres_paper(),
-    };
     let scale = cli.get_f64("scale", 0.02).unwrap_or(0.02);
-    let format = match fmt_str {
-        "stepped" => FormatChoice::Stepped { k, params: stepped_base.scaled(scale) },
-        "stepped-copy" => FormatChoice::SteppedCopy { params: stepped_base.scaled(scale) },
-        other => match parse_format(other, k) {
-            Some(f) => f,
-            None => {
-                eprintln!("unknown format {other}");
-                return 2;
-            }
-        },
+    let Some(format) = parse_format_choice(fmt_str, solver, k, scale) else {
+        eprintln!("unknown format {fmt_str}");
+        return 2;
     };
     let a = match load_matrix(spec) {
         Ok(a) => a,
@@ -219,7 +238,12 @@ fn cmd_solve(cli: &Cli) -> i32 {
     let mut req = SolveRequest::new(spec, Arc::new(a), solver, format);
     req.tol = cli.get_f64("tol", 1e-6).unwrap_or(1e-6);
     if nrhs > 1 {
-        return solve_multi_rhs(req, nrhs, solver);
+        // --workers 0 = auto, matching serve/suite
+        let workers = match cli.get_usize("workers", 1).unwrap_or(1) {
+            0 => gsem::util::parallel::default_workers(),
+            n => n,
+        };
+        return solve_multi_rhs(req, nrhs, solver, workers);
     }
     let res = gsem::coordinator::jobs::dispatch(&req);
     println!(
@@ -252,21 +276,21 @@ fn solver_name(solver: SolverKind) -> &'static str {
 }
 
 /// `solve --nrhs N`: N independent random right-hand sides on one
-/// matrix, run through the pool. Fixed-format CG requests merge into a
-/// single multi-RHS block solve over the cached operator; the stepped /
-/// non-CG modes run as N pooled solves that still share the cached
-/// encodes (see the `pool.batched_*` and `cache.*` counters printed at
-/// the end).
-fn solve_multi_rhs(req: SolveRequest, nrhs: usize, solver: SolverKind) -> i32 {
+/// matrix, run through the pool (`--workers` sizes it). Fixed-format CG
+/// requests merge into a single multi-RHS block solve over the cached
+/// operator; the stepped / non-CG modes run as N pooled solves that
+/// still share the cached encodes (see the `pool.batched_*` and
+/// `cache.*` counters printed at the end).
+fn solve_multi_rhs(req: SolveRequest, nrhs: usize, solver: SolverKind, workers: usize) -> i32 {
     let reqs: Vec<SolveRequest> = (0..nrhs)
         .map(|j| {
             let mut r = req.clone();
             r.name = format!("{}#{j}", req.name);
-            r.rhs = gsem::coordinator::RhsSpec::Random(1000 + j as u64);
+            r.rhs = RhsSpec::Random(1000 + j as u64);
             r
         })
         .collect();
-    let pool = SolverPool::new(1);
+    let pool = SolverPool::new(workers);
     let results = pool.run_batch(reqs);
     let mut t = TextTable::new(&["rhs", "format", "iters", "relres(FP64)", "time(s)"]);
     let mut all_ok = true;
@@ -283,6 +307,128 @@ fn solve_multi_rhs(req: SolveRequest, nrhs: usize, solver: SolverKind) -> i32 {
     println!("{} x{nrhs} RHS (pool-batched where possible)", solver_name(solver));
     t.print();
     print!("{}", pool.metrics().report());
+    if all_ok {
+        0
+    } else {
+        1
+    }
+}
+
+/// `serve`: replay a request trace with staggered arrivals through the
+/// windowed [`SolverService`]. Requests round-robin over the trace
+/// matrices (one `--matrix`, or the first three CG-set entries), each
+/// with a distinct random RHS; the intake merges whatever lands in the
+/// same window into multi-RHS block solves. Prints the per-request
+/// table, throughput, and the full metrics report (`intake.*`,
+/// `cache.*`, `pool.batched_*`).
+fn cmd_serve(cli: &Cli) -> i32 {
+    let (requests, window_ms, batch_width, stagger_us, cache_mb) = match (
+        cli.get_usize("requests", 24),
+        cli.get_u64("window-ms", 5),
+        cli.get_usize("batch-width", 8),
+        cli.get_u64("stagger-us", 300),
+        cli.get_usize("cache-mb", 0),
+    ) {
+        (Ok(r), Ok(w), Ok(b), Ok(s), Ok(c)) => (r.max(1), w, b, s, c),
+        _ => {
+            eprintln!("serve: numeric option failed to parse");
+            return 2;
+        }
+    };
+    let (workers_opt, k, scale, tol) = match (
+        cli.get_usize("workers", 0),
+        cli.get_usize("k", 8),
+        cli.get_f64("scale", 0.02),
+        cli.get_f64("tol", 1e-6),
+    ) {
+        (Ok(w), Ok(k), Ok(s), Ok(t)) => (w, k, s, t),
+        _ => {
+            eprintln!("serve: numeric option failed to parse");
+            return 2;
+        }
+    };
+    // --workers 0 = auto (machine parallelism / GSEM_WORKERS)
+    let workers = match workers_opt {
+        0 => gsem::util::parallel::default_workers(),
+        n => n,
+    };
+    let Some(solver) = parse_solver(cli.get_or("solver", "cg")) else {
+        eprintln!("unknown solver {}", cli.get_or("solver", "cg"));
+        return 2;
+    };
+    let fmt_str = cli.get_or("format", "fp64");
+    let Some(format) = parse_format_choice(fmt_str, solver, k, scale) else {
+        eprintln!("unknown format {fmt_str}");
+        return 2;
+    };
+    let mats: Vec<(String, Arc<Csr>)> = match cli.get("matrix") {
+        Some(spec) => match load_matrix(spec) {
+            Ok(a) => vec![(spec.to_string(), Arc::new(a))],
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        },
+        None => cg_set(CorpusSize::Small)
+            .into_iter()
+            .take(3)
+            .map(|m| (m.name, Arc::new(m.a)))
+            .collect(),
+    };
+    let mut cfg = ServiceConfig::new()
+        .workers(workers)
+        .window_ms(window_ms)
+        .batch_width(batch_width);
+    if cache_mb > 0 {
+        cfg = cfg.cache_bytes(cache_mb << 20);
+    }
+    let svc = SolverService::new(cfg);
+    // register each trace matrix once; handles are cheap to clone and
+    // carry the digest, so the submit loop never re-hashes
+    let handles: Vec<(String, gsem::coordinator::MatrixHandle)> =
+        mats.iter().map(|(name, a)| (name.clone(), svc.register(a))).collect();
+    println!(
+        "serving {requests} staggered requests over {} matrices \
+         (window {window_ms}ms, batch width {batch_width}, workers {workers}, \
+         stagger {stagger_us}us)",
+        mats.len()
+    );
+    let timer = Timer::start();
+    let tickets: Vec<_> = (0..requests)
+        .map(|i| {
+            let (name, handle) = &handles[i % handles.len()];
+            let mut spec = SolveSpec::new(
+                &format!("{name}#{i}"),
+                handle.clone(),
+                solver,
+                format.clone(),
+            );
+            spec.rhs = RhsSpec::Random(1000 + i as u64);
+            spec.tol = tol;
+            let ticket = svc.submit(spec);
+            if stagger_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(stagger_us));
+            }
+            ticket
+        })
+        .collect();
+    let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+    let wall = timer.elapsed_s();
+    let mut t = TextTable::new(&["request", "format", "iters", "relres(FP64)", "time(s)"]);
+    let mut all_ok = true;
+    for r in &results {
+        all_ok &= r.outcome.converged;
+        t.row(&[
+            r.name.clone(),
+            r.format_label.clone(),
+            r.outcome.iters.to_string(),
+            format!("{:.3E}", r.relres_fp64),
+            format!("{:.3}", r.outcome.seconds),
+        ]);
+    }
+    t.print();
+    println!("wall {:.3}s  ({:.1} req/s)", wall, requests as f64 / wall);
+    print!("{}", svc.metrics().report());
     if all_ok {
         0
     } else {

@@ -84,6 +84,11 @@ impl SpmvOp for SwitchableOp {
     fn matrix_bytes(&self) -> usize {
         self.m.bytes_at(self.level())
     }
+
+    fn encoded_bytes(&self) -> usize {
+        // one shared encode serves every rung — the paper's storage win
+        self.m.encoded_bytes()
+    }
 }
 
 impl PrecisionSwitchable for SwitchableOp {
@@ -171,6 +176,11 @@ impl SpmvOp for CopyLadderOp {
     fn matrix_bytes(&self) -> usize {
         self.active().matrix_bytes()
     }
+
+    fn encoded_bytes(&self) -> usize {
+        // the copy ladder's storage cost: both rungs stay resident
+        self.lo.encoded_bytes() + self.hi.encoded_bytes()
+    }
 }
 
 impl PrecisionSwitchable for CopyLadderOp {
@@ -208,10 +218,13 @@ mod tests {
         assert_eq!(op.format(), ValueFormat::GseSem(Precision::Head));
         assert_eq!(op.num_tags(), 3);
         let b_head = op.matrix_bytes();
+        let resident = op.encoded_bytes();
         op.set_level(Precision::Full);
         assert_eq!(op.level(), Precision::Full);
         assert_eq!(op.tag(), 3);
         assert!(op.matrix_bytes() > b_head);
+        // zero-copy ladder: switching rungs never changes residency
+        assert_eq!(op.encoded_bytes(), resident);
         assert_eq!(op.tag_label(1), "GSE-SEM(head)");
     }
 
@@ -230,6 +243,9 @@ mod tests {
         op.set_tag(2);
         assert_eq!(op.format(), ValueFormat::Fp64);
         assert!(op.matrix_bytes() > b32);
+        // both copies stay resident — the storage cost GSE-SEM avoids
+        assert_eq!(op.encoded_bytes(), op.lo.encoded_bytes() + op.hi.encoded_bytes());
+        assert!(op.encoded_bytes() > op.hi.encoded_bytes());
         let mut y64 = vec![0.0; a.nrows];
         op.apply(&x, &mut y64);
         let mut y_ref = vec![0.0; a.nrows];

@@ -129,6 +129,11 @@ impl SpmvOp for Fp64Csr {
     fn matrix_bytes(&self) -> usize {
         self.a.nnz() * (8 + 4) + (self.a.nrows + 1) * 8
     }
+
+    fn encoded_bytes(&self) -> usize {
+        // single-plane CSR: resident storage equals per-apply traffic
+        self.matrix_bytes()
+    }
 }
 
 #[cfg(test)]

@@ -569,6 +569,23 @@ impl GseCsr {
             + (self.nrows + 1) * 8
             + self.table.len() * 4
     }
+
+    /// Total resident bytes of the encode — all three segment planes,
+    /// column words, out-of-band exponent indexes, row pointers, and
+    /// the shared-exponent table. This is what a registry cache entry
+    /// actually holds (every precision level views the same storage),
+    /// as opposed to [`GseCsr::bytes_at`], the per-apply traffic of one
+    /// level.
+    pub fn encoded_bytes(&self) -> usize {
+        let ext = self.ext_idx.as_ref().map_or(0, Vec::len);
+        self.heads.len() * 2
+            + self.tail1.len() * 2
+            + self.tail2.len() * 4
+            + self.cols.len() * 4
+            + ext
+            + (self.nrows + 1) * 8
+            + self.table.len() * 4
+    }
 }
 
 /// Clamp out-of-table values to the largest shared binade (same policy
@@ -626,6 +643,11 @@ impl SpmvOp for GseSpmv {
 
     fn matrix_bytes(&self) -> usize {
         self.m.bytes_at(self.level)
+    }
+
+    fn encoded_bytes(&self) -> usize {
+        // the level is a view: the whole encode stays resident
+        self.m.encoded_bytes()
     }
 }
 

@@ -185,6 +185,11 @@ impl<T: StoredValue> SpmvOp for LowpCsr<T> {
     fn matrix_bytes(&self) -> usize {
         self.vals.len() * (T::BYTES + 4) + (self.nrows + 1) * 8
     }
+
+    fn encoded_bytes(&self) -> usize {
+        // single-plane CSR: resident storage equals per-apply traffic
+        self.matrix_bytes()
+    }
 }
 
 #[cfg(test)]

@@ -57,6 +57,17 @@ pub trait SpmvOp: Send + Sync {
     fn format(&self) -> ValueFormat;
     /// Bytes read from matrix storage per apply (traffic model input).
     fn matrix_bytes(&self) -> usize;
+    /// Resident bytes of the encoded operator — the matrix storage the
+    /// operator actually holds in memory, as opposed to
+    /// [`SpmvOp::matrix_bytes`]' per-apply traffic. This is what the
+    /// coordinator registry's eviction budget and its `cache.bytes`
+    /// gauge account. The default (storage = per-apply traffic) is
+    /// right for single-plane formats; multi-plane operators (GSE-SEM
+    /// levels, copy ladders, mantissa splits) override it with the sum
+    /// of every plane they keep resident.
+    fn encoded_bytes(&self) -> usize {
+        self.matrix_bytes()
+    }
 }
 
 /// The looped multi-RHS baseline: `nrhs` single applies, regardless of
@@ -160,5 +171,25 @@ mod tests {
     fn max_abs_diff_basic() {
         assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
         assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn encoded_bytes_cover_resident_storage() {
+        let a = poisson2d(8, 8);
+        for op in build_operators(&a, 8) {
+            // every operator holds at least its per-apply traffic
+            assert!(
+                op.encoded_bytes() >= op.matrix_bytes(),
+                "{}: encoded {} < traffic {}",
+                op.format().label(),
+                op.encoded_bytes(),
+                op.matrix_bytes()
+            );
+        }
+        // the three GSE levels view one encode: same resident size,
+        // even though head-only reads far less per apply
+        let ops = build_operators(&a, 8);
+        assert_eq!(ops[4].encoded_bytes(), ops[6].encoded_bytes());
+        assert!(ops[4].matrix_bytes() < ops[6].matrix_bytes());
     }
 }

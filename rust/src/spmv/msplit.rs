@@ -113,6 +113,11 @@ impl SpmvOp for SplitSpmv {
     fn matrix_bytes(&self) -> usize {
         self.m.bytes_at(self.level)
     }
+
+    fn encoded_bytes(&self) -> usize {
+        // head + tail planes both stay resident whatever the level
+        self.m.nnz() * (4 + 4 + 4) + (self.m.nrows + 1) * 8
+    }
 }
 
 /// Equivalent GSE-SEM precision by traffic (for apples-to-apples rows in

@@ -3,12 +3,16 @@
 //! touches.
 
 use gsem::coordinator::cli::Cli;
-use gsem::coordinator::{FormatChoice, SolveRequest, SolverKind, SolverPool};
+use gsem::coordinator::{
+    FormatChoice, RhsSpec, ServiceConfig, SolveRequest, SolveSpec, SolverKind, SolverPool,
+    SolverService,
+};
 use gsem::formats::ValueFormat;
 use gsem::solvers::stepped::SteppedParams;
 use gsem::sparse::gen::corpus::{cg_set, gmres_set, CorpusSize};
 use gsem::sparse::mm;
 use std::sync::Arc;
+use std::time::Duration;
 
 #[test]
 fn mini_suite_runs_all_formats_on_first_cg_matrices() {
@@ -102,6 +106,43 @@ fn gmres_small_suite_first_entries() {
         assert!(r.outcome.iters > 0);
         assert!(r.relres_fp64.is_finite());
     }
+}
+
+#[test]
+fn service_merges_staggered_corpus_requests_across_arcs() {
+    // the serve-path e2e: requests arrive staggered, each holding its
+    // *own* clone of the corpus matrix (distinct Arc allocations). The
+    // windowed intake plus digest keying must still batch them into
+    // one multi-RHS CG solve over one cached operator.
+    let set = cg_set(CorpusSize::Small);
+    let svc = SolverService::new(
+        ServiceConfig::new().workers(2).window(Duration::from_secs(30)).batch_width(4),
+    );
+    let tickets: Vec<_> = (0..4u64)
+        .map(|seed| {
+            let a = Arc::new(set[0].a.clone()); // fresh allocation per request
+            let mut spec = SolveSpec::new(
+                &format!("rr{seed}"),
+                svc.register(&a),
+                SolverKind::Cg,
+                FormatChoice::fixed(ValueFormat::Fp64),
+            );
+            spec.rhs = RhsSpec::Random(seed);
+            svc.submit(spec)
+        })
+        .collect();
+    for (seed, t) in tickets.into_iter().enumerate() {
+        let r = t.wait();
+        assert_eq!(r.name, format!("rr{seed}"));
+        assert!(r.outcome.converged, "rr{seed}: {}", r.relres_fp64);
+    }
+    assert_eq!(svc.metrics().counter("pool.batched_groups"), 1);
+    assert_eq!(svc.metrics().counter("pool.batched_rhs"), 4);
+    assert_eq!(svc.metrics().counter("intake.merged"), 4);
+    // one fp64 operator miss; the residual lookup and every duplicate
+    // registration hit the same digest-keyed entry
+    let st = svc.registry().stats();
+    assert_eq!(st.misses, 1, "stats: {st:?}");
 }
 
 #[test]

@@ -1,0 +1,186 @@
+//! Serving-path acceptance: per-request results from [`SolverService`]
+//! (windowed intake, digest-keyed registry) must be bitwise-identical
+//! to `SolverPool::run_batch` dispatch for the same request set, across
+//! formats and solvers; eviction under a small byte budget must never
+//! change results, only `cache.*` counters.
+
+use gsem::coordinator::{
+    FormatChoice, RhsSpec, ServiceConfig, SolveRequest, SolveResult, SolverKind, SolverPool,
+    SolverService,
+};
+use gsem::formats::{Precision, ValueFormat};
+use gsem::solvers::stepped::SteppedParams;
+use gsem::sparse::gen::convdiff::convdiff2d;
+use gsem::sparse::gen::poisson::poisson2d;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The cross-format, cross-solver request set. Built fresh per call so
+/// every run re-allocates its matrices (distinct `Arc`s — exactly what
+/// digest keying must see through).
+fn request_set() -> Vec<SolveRequest> {
+    let p = Arc::new(poisson2d(10, 10));
+    let c = Arc::new(convdiff2d(8, 8, 4.0, 2.0));
+    let mut reqs = Vec::new();
+    // three same-matrix CG/FP64 requests: the mergeable group
+    for seed in 0..3u64 {
+        let mut r = SolveRequest::new(
+            &format!("cg-fp64-{seed}"),
+            Arc::clone(&p),
+            SolverKind::Cg,
+            FormatChoice::fixed(ValueFormat::Fp64),
+        );
+        r.rhs = RhsSpec::Random(seed);
+        reqs.push(r);
+    }
+    // fixed low-precision and GSE formats
+    reqs.push(SolveRequest::new(
+        "cg-bf16",
+        Arc::clone(&p),
+        SolverKind::Cg,
+        FormatChoice::fixed(ValueFormat::Bf16),
+    ));
+    reqs.push(SolveRequest::new(
+        "cg-gse-head",
+        Arc::clone(&p),
+        SolverKind::Cg,
+        FormatChoice::fixed(ValueFormat::GseSem(Precision::Head)),
+    ));
+    reqs.push(SolveRequest::new(
+        "cg-gse-full",
+        Arc::clone(&p),
+        SolverKind::Cg,
+        FormatChoice::fixed(ValueFormat::GseSem(Precision::Full)),
+    ));
+    // other solvers
+    reqs.push(SolveRequest::new(
+        "gmres-fp64",
+        Arc::clone(&c),
+        SolverKind::Gmres,
+        FormatChoice::fixed(ValueFormat::Fp64),
+    ));
+    reqs.push(SolveRequest::new(
+        "bicgstab-fp32",
+        Arc::clone(&p),
+        SolverKind::Bicgstab,
+        FormatChoice::fixed(ValueFormat::Fp32),
+    ));
+    // both stepped ladders
+    reqs.push(SolveRequest::new(
+        "cg-stepped",
+        Arc::clone(&p),
+        SolverKind::Cg,
+        FormatChoice::Stepped { k: 8, params: SteppedParams::cg_paper().scaled(0.01) },
+    ));
+    reqs.push(SolveRequest::new(
+        "cg-stepped-copy",
+        Arc::clone(&p),
+        SolverKind::Cg,
+        FormatChoice::SteppedCopy { params: SteppedParams::cg_paper().scaled(0.01) },
+    ));
+    reqs
+}
+
+fn assert_bitwise_same(base: &[SolveResult], got: &[SolveResult]) {
+    assert_eq!(base.len(), got.len());
+    for (b, g) in base.iter().zip(got) {
+        assert_eq!(b.name, g.name);
+        assert_eq!(b.format_label, g.format_label, "{}", b.name);
+        assert_eq!(b.outcome.iters, g.outcome.iters, "{}", b.name);
+        assert_eq!(b.outcome.converged, g.outcome.converged, "{}", b.name);
+        assert_eq!(b.outcome.x, g.outcome.x, "{}: solution diverged bitwise", b.name);
+        assert_eq!(
+            b.relres_fp64.to_bits(),
+            g.relres_fp64.to_bits(),
+            "{}: residual diverged bitwise",
+            b.name
+        );
+    }
+}
+
+fn submit_all(svc: &SolverService, stagger: Option<Duration>) -> Vec<SolveResult> {
+    let tickets: Vec<_> = request_set()
+        .into_iter()
+        .map(|r| {
+            let t = svc.submit_request(r);
+            if let Some(d) = stagger {
+                std::thread::sleep(d);
+            }
+            t
+        })
+        .collect();
+    tickets.into_iter().map(|t| t.wait()).collect()
+}
+
+#[test]
+fn windowed_service_matches_pool_dispatch_bitwise() {
+    let pool = SolverPool::new(3);
+    let base = pool.run_batch(request_set());
+    // sanity: the baseline itself converges where expected
+    assert!(base.iter().filter(|r| r.format_label == "FP64").all(|r| r.outcome.converged));
+
+    // one-shot arrival: everything lands in a single window
+    let svc = SolverService::new(
+        ServiceConfig::new().workers(3).window(Duration::from_millis(20)).batch_width(256),
+    );
+    let got = submit_all(&svc, None);
+    assert_bitwise_same(&base, &got);
+
+    // staggered arrival: flushes may split the set arbitrarily across
+    // windows — per-request results must not change
+    let svc2 = SolverService::new(
+        ServiceConfig::new().workers(2).window(Duration::from_millis(2)).batch_width(4),
+    );
+    let got2 = submit_all(&svc2, Some(Duration::from_micros(500)));
+    assert_bitwise_same(&base, &got2);
+}
+
+#[test]
+fn manual_service_matches_pool_dispatch_bitwise() {
+    let pool = SolverPool::new(2);
+    let base = pool.run_batch(request_set());
+    let svc = SolverService::manual(ServiceConfig::new().workers(2));
+    let tickets: Vec<_> = request_set().into_iter().map(|r| svc.submit_request(r)).collect();
+    assert_eq!(svc.flush(), tickets.len());
+    let got: Vec<SolveResult> = tickets.into_iter().map(|t| t.wait()).collect();
+    assert_bitwise_same(&base, &got);
+    // the mergeable trio actually merged
+    assert_eq!(svc.metrics().counter("pool.batched_rhs"), 3);
+    assert_eq!(svc.metrics().counter("intake.merged"), 3);
+    assert_eq!(svc.metrics().counter("intake.flushes"), 1);
+}
+
+#[test]
+fn eviction_changes_counters_not_results() {
+    let pool = SolverPool::new(2);
+    let base = pool.run_batch(request_set());
+    // a budget far below the working set: operators are evicted and
+    // rebuilt continuously while the batch runs
+    let svc = SolverService::manual(ServiceConfig::new().workers(2).cache_bytes(8 * 1024));
+    let tickets: Vec<_> = request_set().into_iter().map(|r| svc.submit_request(r)).collect();
+    svc.flush();
+    let got: Vec<SolveResult> = tickets.into_iter().map(|t| t.wait()).collect();
+    assert_bitwise_same(&base, &got);
+    let st = svc.registry().stats();
+    assert!(st.evictions > 0, "tiny budget must evict (stats: {st:?})");
+    assert!(st.bytes <= 8 * 1024, "resident {} over budget", st.bytes);
+    assert_eq!(svc.metrics().counter("cache.evictions"), st.evictions);
+}
+
+#[test]
+fn new_counters_appear_in_metrics_report() {
+    let svc = SolverService::manual(ServiceConfig::new().workers(2).cache_bytes(8 * 1024));
+    let tickets: Vec<_> = request_set().into_iter().map(|r| svc.submit_request(r)).collect();
+    svc.flush();
+    for t in tickets {
+        let _ = t.wait();
+    }
+    let report = svc.metrics().report();
+    for counter in ["cache.evictions", "cache.bytes", "intake.flushes", "intake.merged"] {
+        assert!(report.contains(counter), "report missing {counter}:\n{report}");
+    }
+    assert!(svc.metrics().counter("intake.flushes") >= 1);
+    assert!(svc.metrics().counter("intake.merged") >= 3);
+    assert!(svc.metrics().counter("cache.evictions") >= 1);
+    assert!(svc.metrics().gauge("cache.bytes") <= 8 * 1024);
+}
