@@ -1,0 +1,157 @@
+//! Ablation — block vs. looped multi-RHS solves for the asymmetric
+//! suites. `cg_solve_multi` (PR 2) showed the win for SPD systems;
+//! this bench measures the same lever for GMRES, BiCGSTAB and the
+//! stepped mixed-precision mode on one suite matrix: `nrhs`
+//! right-hand sides solved as one lockstep block (every round trip is
+//! a single fused `apply_multi` across the live columns — for stepped,
+//! one per precision rung still in play) against the looped baseline
+//! (`nrhs` independent single-RHS solves). Per-column results are
+//! asserted bitwise identical, so the comparison isolates the batching.
+
+#[path = "common.rs"]
+mod common;
+
+use gsem::solvers::bicgstab::{bicgstab_solve, bicgstab_solve_multi, BicgstabOpts};
+use gsem::solvers::gmres::{gmres_solve, gmres_solve_multi, GmresOpts};
+use gsem::solvers::stepped::{run_stepped_multi, run_stepped_with, BlockSolver, SteppedParams};
+use gsem::solvers::{MonitorCmd, SolveOutcome, SwitchableOp};
+use gsem::sparse::gen::corpus::gmres_set;
+use gsem::spmv::fp64::Fp64Csr;
+use gsem::spmv::GseCsr;
+use gsem::util::csv::write_csv;
+use gsem::util::table::TextTable;
+use gsem::util::Prng;
+use gsem::util::Timer;
+use std::sync::Arc;
+
+struct Cell {
+    solver: &'static str,
+    looped_s: f64,
+    block_s: f64,
+    iters: usize,
+}
+
+fn check_parity(looped: &[SolveOutcome], block: &[SolveOutcome], solver: &str) {
+    for (j, (l, b)) in looped.iter().zip(block).enumerate() {
+        assert_eq!(l.iters, b.iters, "{solver} col {j}: iteration drift");
+        assert_eq!(l.x, b.x, "{solver} col {j}: blockwise result drift");
+    }
+}
+
+fn main() {
+    let mut set = gmres_set(common::bench_corpus_size());
+    set.sort_by_key(|m| m.a.nnz());
+    let m = set.into_iter().next().expect("gmres set is non-empty");
+    let a = m.a;
+    let nrhs = if common::fast() { 4 } else { 8 };
+    let n = a.nrows;
+    let mut rng = Prng::new(17);
+    let mut bs = vec![0.0; n * nrhs];
+    for v in bs.iter_mut() {
+        *v = rng.range_f64(-1.0, 1.0);
+    }
+    eprintln!(
+        "ablation_block_asym: {} ({}x{}, nnz {}), nrhs {}",
+        m.name,
+        n,
+        a.ncols,
+        a.nnz(),
+        nrhs
+    );
+
+    let op = Fp64Csr::new(a.clone());
+    let gse = Arc::new(GseCsr::from_csr(&a, 8));
+    let gmres_opts =
+        GmresOpts { tol: 1e-6, restart: 30, max_outer: if common::fast() { 40 } else { 200 } };
+    let bicg_opts = BicgstabOpts { tol: 1e-6, max_iters: if common::fast() { 600 } else { 3000 } };
+    let params = SteppedParams::gmres_paper().scaled(if common::fast() { 0.005 } else { 0.02 });
+    let mut cells: Vec<Cell> = Vec::new();
+
+    // GMRES: looped singles vs one block
+    let t = Timer::start();
+    let looped: Vec<SolveOutcome> = (0..nrhs)
+        .map(|j| {
+            gmres_solve(&op, &bs[j * n..(j + 1) * n], &gmres_opts, |_, _| MonitorCmd::Continue)
+        })
+        .collect();
+    let looped_s = t.elapsed_s();
+    let t = Timer::start();
+    let block = gmres_solve_multi(&op, &bs, nrhs, &gmres_opts);
+    let block_s = t.elapsed_s();
+    check_parity(&looped, &block, "gmres");
+    cells.push(Cell {
+        solver: "gmres",
+        looped_s,
+        block_s,
+        iters: block.iter().map(|o| o.iters).sum(),
+    });
+
+    // BiCGSTAB
+    let t = Timer::start();
+    let looped: Vec<SolveOutcome> = (0..nrhs)
+        .map(|j| {
+            bicgstab_solve(&op, &bs[j * n..(j + 1) * n], &bicg_opts, |_, _| MonitorCmd::Continue)
+        })
+        .collect();
+    let looped_s = t.elapsed_s();
+    let t = Timer::start();
+    let block = bicgstab_solve_multi(&op, &bs, nrhs, &bicg_opts);
+    let block_s = t.elapsed_s();
+    check_parity(&looped, &block, "bicgstab");
+    cells.push(Cell {
+        solver: "bicgstab",
+        looped_s,
+        block_s,
+        iters: block.iter().map(|o| o.iters).sum(),
+    });
+
+    // stepped GMRES over the shared GSE tag ladder
+    let t = Timer::start();
+    let looped: Vec<SolveOutcome> = (0..nrhs)
+        .map(|j| {
+            let ladder = SwitchableOp::new(Arc::clone(&gse));
+            let b = &bs[j * n..(j + 1) * n];
+            let (out, _, _) =
+                run_stepped_with(&ladder, params, |op, mon| gmres_solve(op, b, &gmres_opts, mon));
+            out
+        })
+        .collect();
+    let looped_s = t.elapsed_s();
+    let t = Timer::start();
+    let ladder = SwitchableOp::new(Arc::clone(&gse));
+    let block = run_stepped_multi(&ladder, &bs, nrhs, params, &BlockSolver::Gmres(gmres_opts));
+    let block_s = t.elapsed_s();
+    check_parity(&looped, &block, "stepped-gmres");
+    cells.push(Cell {
+        solver: "stepped-gmres",
+        looped_s,
+        block_s,
+        iters: block.iter().map(|o| o.iters).sum(),
+    });
+
+    let mut t = TextTable::new(&["solver", "looped(s)", "block(s)", "speedup", "total iters"]);
+    let mut rows = Vec::new();
+    for c in &cells {
+        t.row(&[
+            c.solver.to_string(),
+            format!("{:.3}", c.looped_s),
+            format!("{:.3}", c.block_s),
+            format!("{:.2}x", c.looped_s / c.block_s.max(1e-12)),
+            c.iters.to_string(),
+        ]);
+        rows.push(vec![
+            c.solver.to_string(),
+            nrhs.to_string(),
+            format!("{:.6}", c.looped_s),
+            format!("{:.6}", c.block_s),
+            c.iters.to_string(),
+        ]);
+    }
+    println!("Ablation — block vs. looped multi-RHS, asymmetric + stepped solvers");
+    t.print();
+    let _ = write_csv(
+        "ablation_block_asym",
+        &["solver", "nrhs", "looped_s", "block_s", "total_iters"],
+        &rows,
+    );
+}

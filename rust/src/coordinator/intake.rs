@@ -9,16 +9,22 @@
 //! background flusher holds the batch open until either a time
 //! **window** elapses (measured from the batch's first arrival) or a
 //! **batch-width** target is reached, then flushes everything pending
-//! through the same digest-keyed grouping — staggered same-matrix CG
-//! requests still merge into one
-//! [`crate::solvers::cg::cg_solve_multi`] block solve.
+//! through the same digest-keyed grouping — staggered same-matrix
+//! requests with equal solver/format/caps merge into one block solve:
+//! [`crate::solvers::cg::cg_solve_multi`],
+//! [`crate::solvers::gmres::gmres_solve_multi`],
+//! [`crate::solvers::bicgstab::bicgstab_solve_multi`], or a
+//! [`crate::solvers::stepped::run_stepped_multi`] block sharing one
+//! precision ladder across per-column controllers.
 //!
 //! Grouping is keyed on the [`MatrixHandle`]'s content digest (not
-//! `Arc` identity), so equal matrices submitted by unrelated callers
-//! batch together; per-request results stay bitwise-identical to
-//! one-shot dispatch because the multi-RHS kernels are bit-for-bit
-//! per column (PR 2's contract, re-verified in
-//! `tests/service_parity.rs`).
+//! `Arc` identity) plus the solver kind, the format fingerprint
+//! (`FormatChoice::group_key` — stepped controller params
+//! participate bit-for-bit) and the solve caps, so equal matrices
+//! submitted by unrelated callers batch together; per-request results
+//! stay bitwise-identical to one-shot dispatch because the multi-RHS
+//! kernels are bit-for-bit per column (PR 2's contract, re-verified in
+//! `tests/service_parity.rs` and `tests/block_parity.rs`).
 //!
 //! [`ServiceConfig`] (builder) sets workers, window, batch width, and
 //! the registry's cache byte budget. Two driving modes share all the
@@ -35,13 +41,18 @@
 //! `cache.*` family.
 
 use crate::coordinator::jobs::{
-    dispatch_with_handle, FormatChoice, RhsSpec, SolveRequest, SolveResult, SolverKind,
+    dispatch_with_handle, solver_opts, FormatChoice, FormatKey, RhsSpec, SolveRequest,
+    SolveResult, SolverKind,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::{MatrixHandle, MatrixRegistry};
 use crate::formats::ValueFormat;
+use crate::solvers::bicgstab::bicgstab_solve_multi;
 use crate::solvers::cg::cg_solve_multi;
-use crate::solvers::CgOpts;
+use crate::solvers::gmres::gmres_solve_multi;
+use crate::solvers::ladder::{CopyLadderOp, SwitchableOp};
+use crate::solvers::stepped::{run_stepped_multi, BlockSolver};
+use crate::solvers::SolveOutcome;
 use crate::sparse::csr::{Csr, MatrixDigest};
 use crate::util::parallel;
 use std::collections::hash_map::Entry;
@@ -275,37 +286,29 @@ impl IntakeQueue {
     }
 }
 
-/// Batch-grouping key: CG requests on content-equal matrices with
-/// identical fixed format and solve caps merge into one multi-RHS
-/// block solve. Digest-keyed, so structurally equal matrices behind
-/// distinct `Arc`s batch together (pointer keys could not).
+/// Batch-grouping key: requests on content-equal matrices with the
+/// same solver, format fingerprint ([`FormatChoice::group_key`] — the
+/// stepped controller params participate bit-for-bit) and solve caps
+/// merge into one multi-RHS block solve. Digest-keyed, so structurally
+/// equal matrices behind distinct `Arc`s batch together (pointer keys
+/// could not). Every solver/format combination is groupable: CG,
+/// GMRES and BiCGSTAB over fixed formats, plus both stepped ladders.
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct GroupKey {
     digest: MatrixDigest,
-    format: ValueFormat,
-    k: usize,
+    solver: SolverKind,
+    format: FormatKey,
     tol_bits: u64,
     max_iters: usize,
 }
 
-fn group_key(spec: &SolveSpec) -> Option<GroupKey> {
-    match (&spec.format, spec.solver) {
-        (FormatChoice::Fixed { format, k }, SolverKind::Cg) => {
-            // k only affects GSE storage — normalize it away for the
-            // other formats so numerically identical requests batch
-            let k = match format {
-                ValueFormat::GseSem(_) => *k,
-                _ => 0,
-            };
-            Some(GroupKey {
-                digest: spec.matrix.digest(),
-                format: *format,
-                k,
-                tol_bits: spec.tol.to_bits(),
-                max_iters: spec.max_iters,
-            })
-        }
-        _ => None,
+fn group_key(spec: &SolveSpec) -> GroupKey {
+    GroupKey {
+        digest: spec.matrix.digest(),
+        solver: spec.solver,
+        format: spec.format.group_key(),
+        tol_bits: spec.tol.to_bits(),
+        max_iters: spec.max_iters,
     }
 }
 
@@ -337,15 +340,12 @@ impl ServiceInner {
         let mut groups: Vec<Vec<PendingSolve>> = Vec::new();
         let mut by_key: HashMap<GroupKey, usize> = HashMap::new();
         for p in batch {
-            match group_key(&p.spec) {
-                Some(key) => match by_key.entry(key) {
-                    Entry::Occupied(e) => groups[*e.get()].push(p),
-                    Entry::Vacant(v) => {
-                        v.insert(groups.len());
-                        groups.push(vec![p]);
-                    }
-                },
-                None => groups.push(vec![p]),
+            match by_key.entry(group_key(&p.spec)) {
+                Entry::Occupied(e) => groups[*e.get()].push(p),
+                Entry::Vacant(v) => {
+                    v.insert(groups.len());
+                    groups.push(vec![p]);
+                }
             }
         }
         let merged: u64 = groups.iter().filter(|g| g.len() > 1).map(|g| g.len() as u64).sum();
@@ -356,8 +356,11 @@ impl ServiceInner {
     }
 
     /// Solve one group: singletons dispatch normally; larger groups run
-    /// as one multi-RHS CG block over the registry operator. Per-column
-    /// results are bit-for-bit what individual dispatch would produce.
+    /// as one multi-RHS block — CG / GMRES / BiCGSTAB over the registry
+    /// operator for fixed formats, or a stepped block over one shared
+    /// ladder ([`run_stepped_multi`]) for the two stepped modes.
+    /// Per-column results are bit-for-bit what individual dispatch
+    /// would produce.
     fn run_group(&self, group: Vec<PendingSolve>) {
         if group.len() == 1 {
             let p = group.into_iter().next().unwrap();
@@ -367,14 +370,9 @@ impl ServiceInner {
             let _ = p.tx.send(res);
             return;
         }
-        let (format, k) = match &group[0].spec.format {
-            FormatChoice::Fixed { format, k } => (*format, *k),
-            _ => unreachable!("grouping only collects fixed formats"),
-        };
-        let (tol, max_iters) = (group[0].spec.tol, group[0].spec.max_iters);
+        let (solver, tol, max_iters) =
+            (group[0].spec.solver, group[0].spec.tol, group[0].spec.max_iters);
         let handle = group[0].spec.matrix.clone();
-        let op = self.registry.operator(&handle, format, k, Some(&self.metrics));
-        let fp64 = self.registry.operator(&handle, ValueFormat::Fp64, 0, Some(&self.metrics));
         let nrhs = group.len();
         let n = handle.matrix().nrows;
         let mut bs = vec![0.0; n * nrhs];
@@ -383,15 +381,50 @@ impl ServiceInner {
         }
         self.metrics.incr("pool.batched_groups");
         self.metrics.add("pool.batched_rhs", nrhs as u64);
-        let opts = CgOpts { tol, max_iters, inv_diag: None };
-        let outs = cg_solve_multi(op.as_ref(), &bs, nrhs, &opts);
+        self.metrics.incr(match solver {
+            SolverKind::Cg => "pool.batched_cg",
+            SolverKind::Gmres => "pool.batched_gmres",
+            SolverKind::Bicgstab => "pool.batched_bicgstab",
+        });
+        // the exact caps single dispatch would hand the solver (shared
+        // mapping — see jobs::solver_opts)
+        let block_solver = solver_opts(solver, tol, max_iters);
+        let (outs, label): (Vec<SolveOutcome>, String) = match &group[0].spec.format {
+            FormatChoice::Fixed { format, k } => {
+                let op = self.registry.operator(&handle, *format, *k, Some(&self.metrics));
+                let outs = match &block_solver {
+                    BlockSolver::Cg(o) => cg_solve_multi(op.as_ref(), &bs, nrhs, o),
+                    BlockSolver::Gmres(o) => gmres_solve_multi(op.as_ref(), &bs, nrhs, o),
+                    BlockSolver::Bicgstab(o) => bicgstab_solve_multi(op.as_ref(), &bs, nrhs, o),
+                };
+                (outs, format.label().to_string())
+            }
+            FormatChoice::Stepped { k, params } => {
+                self.metrics.incr("pool.batched_stepped");
+                let g = self.registry.gse(&handle, *k, Some(&self.metrics));
+                let ladder = SwitchableOp::new(g);
+                let outs = run_stepped_multi(&ladder, &bs, nrhs, *params, &block_solver);
+                (outs, "GSE-SEM".to_string())
+            }
+            FormatChoice::SteppedCopy { params } => {
+                self.metrics.incr("pool.batched_stepped");
+                let lo =
+                    self.registry.operator(&handle, ValueFormat::Fp32, 0, Some(&self.metrics));
+                let hi =
+                    self.registry.operator(&handle, ValueFormat::Fp64, 0, Some(&self.metrics));
+                let ladder = CopyLadderOp::new(lo, hi);
+                let outs = run_stepped_multi(&ladder, &bs, nrhs, *params, &block_solver);
+                (outs, "FP32->FP64".to_string())
+            }
+        };
+        let fp64 = self.registry.operator(&handle, ValueFormat::Fp64, 0, Some(&self.metrics));
         for (j, (p, outcome)) in group.into_iter().zip(outs).enumerate() {
             let b = &bs[j * n..(j + 1) * n];
             let relres_fp64 = crate::solvers::true_relres(fp64.as_ref(), &outcome.x, b);
             let _ = p.tx.send(SolveResult {
                 name: p.spec.name,
                 solver: p.spec.solver,
-                format_label: format.label().to_string(),
+                format_label: label.clone(),
                 outcome,
                 relres_fp64,
             });

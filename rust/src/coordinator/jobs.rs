@@ -8,8 +8,12 @@
 //! submit-all-then-flush wrapper over
 //! [`crate::coordinator::intake::SolverService`]: every batch rides the
 //! same intake/grouping path the serving API uses, merging same-matrix
-//! CG requests into multi-RHS block solves
-//! ([`crate::solvers::cg::cg_solve_multi`]).
+//! same-configuration requests — CG, GMRES, BiCGSTAB, fixed-format or
+//! stepped — into multi-RHS block solves
+//! ([`crate::solvers::cg::cg_solve_multi`] and its
+//! [`crate::solvers::gmres::gmres_solve_multi`] /
+//! [`crate::solvers::bicgstab::bicgstab_solve_multi`] /
+//! [`crate::solvers::stepped::run_stepped_multi`] siblings).
 
 use crate::coordinator::intake::{ServiceConfig, SolverService};
 use crate::coordinator::metrics::Metrics;
@@ -17,7 +21,7 @@ use crate::coordinator::registry::{build_fixed_operator, MatrixHandle, MatrixReg
 use crate::formats::ValueFormat;
 use crate::solvers::bicgstab::{bicgstab_solve, BicgstabOpts};
 use crate::solvers::ladder::CopyLadderOp;
-use crate::solvers::stepped::{run_stepped, run_stepped_with, SteppedParams};
+use crate::solvers::stepped::{run_stepped, run_stepped_with, BlockSolver, SteppedParams};
 use crate::solvers::{cg_solve, gmres_solve, CgOpts, GmresOpts, MonitorCmd, SolveOutcome};
 use crate::sparse::csr::Csr;
 use crate::spmv::{GseCsr, SpmvOp};
@@ -29,7 +33,7 @@ use std::sync::Arc;
 pub const DEFAULT_K: usize = 8;
 
 /// Which solver to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SolverKind {
     Cg,
     Gmres,
@@ -43,6 +47,8 @@ pub enum RhsSpec {
     AxOnes,
     /// b = 1
     Ones,
+    /// b = e_i (canonical basis vector; degenerate-direction probes)
+    Unit(usize),
     /// uniform random in [-1, 1]
     Random(u64),
 }
@@ -57,6 +63,13 @@ impl RhsSpec {
                 b
             }
             RhsSpec::Ones => vec![1.0; a.nrows],
+            RhsSpec::Unit(i) => {
+                let mut b = vec![0.0; a.nrows];
+                if *i < b.len() {
+                    b[*i] = 1.0;
+                }
+                b
+            }
             RhsSpec::Random(seed) => {
                 let mut rng = Prng::new(*seed);
                 (0..a.nrows).map(|_| rng.range_f64(-1.0, 1.0)).collect()
@@ -81,6 +94,44 @@ pub enum FormatChoice {
     SteppedCopy { params: SteppedParams },
 }
 
+/// Hashable fingerprint of a [`SteppedParams`]: the f64 thresholds are
+/// keyed by bit pattern, so "same params" means the exactly-equal
+/// controller configuration and nothing looser.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub(crate) struct SteppedParamsKey {
+    l: usize,
+    t: usize,
+    m: usize,
+    rsd_bits: u64,
+    ndec: usize,
+    reldec_bits: u64,
+    div_bits: u64,
+}
+
+impl From<&SteppedParams> for SteppedParamsKey {
+    fn from(p: &SteppedParams) -> Self {
+        Self {
+            l: p.l,
+            t: p.t,
+            m: p.m,
+            rsd_bits: p.rsd_limit.to_bits(),
+            ndec: p.ndec_limit,
+            reldec_bits: p.reldec_limit.to_bits(),
+            div_bits: p.divergence_factor.to_bits(),
+        }
+    }
+}
+
+/// The format component of the intake grouping key — what must match
+/// (beyond matrix digest, solver kind and solve caps) for two requests
+/// to merge into one multi-RHS block solve.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub(crate) enum FormatKey {
+    Fixed { format: ValueFormat, k: usize },
+    Stepped { k: usize, params: SteppedParamsKey },
+    SteppedCopy { params: SteppedParamsKey },
+}
+
 impl FormatChoice {
     /// Fixed format with the default `k` = [`DEFAULT_K`].
     pub fn fixed(format: ValueFormat) -> Self {
@@ -93,6 +144,30 @@ impl FormatChoice {
             FormatChoice::Fixed { format: ValueFormat::GseSem(_), k } => Some(*k),
             FormatChoice::Stepped { k, .. } => Some(*k),
             FormatChoice::Fixed { .. } | FormatChoice::SteppedCopy { .. } => None,
+        }
+    }
+
+    /// Grouping fingerprint for the intake's batch merge. `k` is
+    /// normalized away for non-GSE fixed formats (it only affects GSE
+    /// storage, so numerically identical requests still batch), and
+    /// [`SteppedParams`] participates bit-for-bit — two stepped
+    /// requests with different controller tunings never merge, because
+    /// their escalation schedules (and thus their results) differ.
+    pub(crate) fn group_key(&self) -> FormatKey {
+        match self {
+            FormatChoice::Fixed { format, k } => {
+                let k = match format {
+                    ValueFormat::GseSem(_) => *k,
+                    _ => 0,
+                };
+                FormatKey::Fixed { format: *format, k }
+            }
+            FormatChoice::Stepped { k, params } => {
+                FormatKey::Stepped { k: *k, params: params.into() }
+            }
+            FormatChoice::SteppedCopy { params } => {
+                FormatKey::SteppedCopy { params: params.into() }
+            }
         }
     }
 }
@@ -228,6 +303,21 @@ fn dispatch_inner(
     }
 }
 
+/// The per-solver caps for one request — the single source of the
+/// `SolverKind` → options mapping (GMRES turns the iteration cap into
+/// restart-30 outer cycles), shared by single dispatch
+/// ([`run_solver_monitored`]) and the intake's block path, so the two
+/// can never drift apart and break block/single bitwise parity.
+pub(crate) fn solver_opts(solver: SolverKind, tol: f64, max_iters: usize) -> BlockSolver {
+    match solver {
+        SolverKind::Cg => BlockSolver::Cg(CgOpts { tol, max_iters, inv_diag: None }),
+        SolverKind::Gmres => {
+            BlockSolver::Gmres(GmresOpts { tol, restart: 30, max_outer: max_iters.div_ceil(30) })
+        }
+        SolverKind::Bicgstab => BlockSolver::Bicgstab(BicgstabOpts { tol, max_iters }),
+    }
+}
+
 /// One solver invocation with an installed monitor — the plumbing every
 /// format path (fixed, GSE stepped, copy stepped) shares. The monitor
 /// is what the stepped controllers hook; plain solves pass a no-op.
@@ -237,25 +327,10 @@ fn run_solver_monitored(
     b: &[f64],
     monitor: &mut dyn FnMut(usize, f64) -> MonitorCmd,
 ) -> SolveOutcome {
-    match req.solver {
-        SolverKind::Cg => cg_solve(
-            op,
-            b,
-            &CgOpts { tol: req.tol, max_iters: req.max_iters, inv_diag: None },
-            monitor,
-        ),
-        SolverKind::Gmres => gmres_solve(
-            op,
-            b,
-            &GmresOpts { tol: req.tol, restart: 30, max_outer: req.max_iters.div_ceil(30) },
-            monitor,
-        ),
-        SolverKind::Bicgstab => bicgstab_solve(
-            op,
-            b,
-            &BicgstabOpts { tol: req.tol, max_iters: req.max_iters },
-            monitor,
-        ),
+    match solver_opts(req.solver, req.tol, req.max_iters) {
+        BlockSolver::Cg(o) => cg_solve(op, b, &o, monitor),
+        BlockSolver::Gmres(o) => gmres_solve(op, b, &o, monitor),
+        BlockSolver::Bicgstab(o) => bicgstab_solve(op, b, &o, monitor),
     }
 }
 
@@ -263,11 +338,12 @@ fn run_solver_monitored(
 /// submit-all-then-flush wrapper over a manual-mode
 /// [`SolverService`]: every request goes through the same
 /// digest-keyed intake/grouping path the windowed service uses, so
-/// same-matrix CG requests (even behind distinct `Arc`s) are solved as
-/// one multi-RHS block and every job shares the pool's content-
-/// addressed [`MatrixRegistry`] (one encode per digest × format × k).
-/// Per-column results are bit-for-bit what individual dispatch would
-/// produce; results come back in submission order.
+/// same-matrix requests with equal solver/format/caps (even behind
+/// distinct `Arc`s) — CG, GMRES, BiCGSTAB, fixed-format or stepped —
+/// are solved as one multi-RHS block and every job shares the pool's
+/// content-addressed [`MatrixRegistry`] (one encode per digest ×
+/// format × k). Per-column results are bit-for-bit what individual
+/// dispatch would produce; results come back in submission order.
 pub struct SolverPool {
     svc: SolverService,
 }
@@ -402,11 +478,66 @@ mod tests {
         let pool = SolverPool::new(2);
         let res = pool.run_batch(reqs);
         assert!(res.iter().all(|r| r.outcome.converged));
-        // fp32 + fp64 copies built once; the second job hits both, and
-        // the fp64 residual operator is shared by every job
+        // equal-params stepped-copy jobs now merge into one block over
+        // a single shared fp32/fp64 ladder: two rung encodes, and the
+        // fp64 residual lookup hits the cached high rung
         let st = pool.cache().stats();
         assert_eq!(st.misses, 2);
-        assert!(st.hits >= 4, "hits={}", st.hits);
+        assert!(st.hits >= 1, "hits={}", st.hits);
+        assert_eq!(pool.metrics().counter("pool.batched_groups"), 1);
+        assert_eq!(pool.metrics().counter("pool.batched_stepped"), 1);
+    }
+
+    #[test]
+    fn group_key_separates_stepped_params_and_normalizes_fixed_k() {
+        // SteppedParams participates in the key: differently tuned
+        // stepped requests must never merge
+        let a = SteppedParams::cg_paper();
+        let b = SteppedParams::cg_paper().scaled(0.5);
+        let mut c = a;
+        c.rsd_limit += 1e-9;
+        let key = |f: &FormatChoice| f.group_key();
+        assert_eq!(
+            key(&FormatChoice::Stepped { k: 8, params: a }),
+            key(&FormatChoice::Stepped { k: 8, params: a })
+        );
+        assert_ne!(
+            key(&FormatChoice::Stepped { k: 8, params: a }),
+            key(&FormatChoice::Stepped { k: 8, params: b })
+        );
+        assert_ne!(
+            key(&FormatChoice::Stepped { k: 8, params: a }),
+            key(&FormatChoice::Stepped { k: 8, params: c }),
+            "an epsilon threshold change must change the key"
+        );
+        assert_ne!(
+            key(&FormatChoice::Stepped { k: 8, params: a }),
+            key(&FormatChoice::Stepped { k: 4, params: a }),
+            "k participates for the GSE stepped ladder"
+        );
+        assert_eq!(
+            key(&FormatChoice::SteppedCopy { params: a }),
+            key(&FormatChoice::SteppedCopy { params: a })
+        );
+        assert_ne!(
+            key(&FormatChoice::SteppedCopy { params: a }),
+            key(&FormatChoice::SteppedCopy { params: b })
+        );
+        // the stepped and copy ladders never merge with each other
+        assert_ne!(
+            key(&FormatChoice::Stepped { k: 8, params: a }),
+            key(&FormatChoice::SteppedCopy { params: a })
+        );
+        // k is normalized away for non-GSE fixed formats...
+        assert_eq!(
+            key(&FormatChoice::Fixed { format: ValueFormat::Fp64, k: 8 }),
+            key(&FormatChoice::Fixed { format: ValueFormat::Fp64, k: 3 })
+        );
+        // ...but kept for GSE storage, where it changes the encode
+        assert_ne!(
+            key(&FormatChoice::Fixed { format: ValueFormat::GseSem(Precision::Head), k: 8 }),
+            key(&FormatChoice::Fixed { format: ValueFormat::GseSem(Precision::Head), k: 3 })
+        );
     }
 
     #[test]
@@ -530,5 +661,10 @@ mod tests {
         let r2 = RhsSpec::Random(1).build(&a);
         assert_eq!(r1, r2);
         assert_ne!(r1, RhsSpec::Random(2).build(&a));
+        let e3 = RhsSpec::Unit(3).build(&a);
+        assert_eq!(e3.iter().sum::<f64>(), 1.0);
+        assert_eq!(e3[3], 1.0);
+        // out-of-range index degrades to the zero vector, not a panic
+        assert!(RhsSpec::Unit(99).build(&a).iter().all(|&v| v == 0.0));
     }
 }

@@ -19,16 +19,19 @@
 //! * [`spmv`] — SpMV operators for every storage format, including the
 //!   three-precision GSE-SEM SpMV, plus a memory-traffic roofline model
 //!   used to translate CPU measurements into the paper's V100 setting.
-//! * [`solvers`] — CG (single- and multi-RHS), restarted GMRES,
-//!   BiCGSTAB, iterative refinement, and the paper's **stepped
+//! * [`solvers`] — CG, restarted GMRES and BiCGSTAB, each single- and
+//!   multi-RHS (lockstep block solves, bitwise identical per column to
+//!   single dispatch), iterative refinement, and the paper's **stepped
 //!   mixed-precision controller** (RSD / nDec / relDec switching
 //!   conditions), generic over precision ladders (zero-copy GSE-SEM
-//!   tags or the copy-based fp32→fp64 baseline).
+//!   tags or the copy-based fp32→fp64 baseline) — including a batched
+//!   stepped mode sharing one ladder across per-column controllers.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`).
 //! * [`coordinator`] — the L3 serving layer: a long-lived
 //!   `SolverService` (windowed intake that merges staggered same-matrix
-//!   requests into multi-RHS block solves), a sharded content-addressed
+//!   requests — CG, GMRES, BiCGSTAB, fixed-format or stepped — into
+//!   multi-RHS block solves), a sharded content-addressed
 //!   operator registry with per-key build latches and LRU byte-budget
 //!   eviction, the `SolverPool` batch wrapper, metrics, and the
 //!   experiment-suite / trace-replay CLI.

@@ -61,7 +61,8 @@ fn print_usage() {
            solve    --matrix <name|path.mtx> --solver cg|gmres|bicgstab\n\
                     --format fp64|fp32|fp16|bf16|gse-head|gse-t1|gse-full|stepped|stepped-copy\n\
                     [--k 8] [--nrhs N] [--workers N]  (N > 1 pools N random RHS over\n\
-                    --workers threads, 0 = auto; fixed-format CG merges them into one\n\
+                    --workers threads, 0 = auto; every solver/format combination —\n\
+                    CG/GMRES/BiCGSTAB, fixed or stepped — merges them into one\n\
                     multi-RHS block solve)\n\
            serve    [--requests 24] [--window-ms 5] [--batch-width 8] [--stagger-us 300]\n\
                     [--workers 0] [--cache-mb 0] [--matrix <...>] [--solver cg] [--format fp64]\n\
@@ -276,11 +277,12 @@ fn solver_name(solver: SolverKind) -> &'static str {
 }
 
 /// `solve --nrhs N`: N independent random right-hand sides on one
-/// matrix, run through the pool (`--workers` sizes it). Fixed-format CG
-/// requests merge into a single multi-RHS block solve over the cached
-/// operator; the stepped / non-CG modes run as N pooled solves that
-/// still share the cached encodes (see the `pool.batched_*` and
-/// `cache.*` counters printed at the end).
+/// matrix, run through the pool (`--workers` sizes it). Every
+/// solver/format combination — CG, GMRES and BiCGSTAB over fixed
+/// formats, plus both stepped ladders — merges into a single multi-RHS
+/// block solve over the cached operator (stepped blocks share one
+/// precision ladder across per-column controllers; see the
+/// `pool.batched_*` and `cache.*` counters printed at the end).
 fn solve_multi_rhs(req: SolveRequest, nrhs: usize, solver: SolverKind, workers: usize) -> i32 {
     let reqs: Vec<SolveRequest> = (0..nrhs)
         .map(|j| {

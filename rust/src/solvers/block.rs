@@ -1,0 +1,173 @@
+//! Lockstep block-solve machinery shared by the multi-RHS solvers.
+//!
+//! `cg_solve_multi` showed the shape of the paper's batching win: run
+//! `nrhs` independent Krylov recurrences in lockstep so every
+//! iteration makes **one** pass over the matrix
+//! ([`crate::spmv::SpmvOp::apply_multi`]). Extending that to GMRES,
+//! BiCGSTAB and the stepped controller needs a slightly more general
+//! frame, because those columns are not always in the same *phase*:
+//! a GMRES column may be recomputing its cycle-start residual while a
+//! neighbour is mid-Arnoldi, and a stepped column may sit on a finer
+//! precision rung than the rest of the block.
+//!
+//! The frame here models each right-hand side as a [`BlockColumn`]
+//! state machine that, between matrix applies, runs exactly the
+//! arithmetic of its single-RHS solver. [`drive_columns`] repeatedly
+//! gathers every live column's next SpMV input into a column-major
+//! packed block, performs one fused `apply_multi` per precision rung
+//! (coarsest first — columns whose controller demanded a finer rung
+//! peel off into their own residual sub-block), and feeds each result
+//! back into its column. Because every in-tree `apply_multi` is
+//! bit-for-bit identical to looped single applies, each column's
+//! outcome is **bitwise identical** to a standalone solve on that RHS
+//! — the contract `tests/block_parity.rs` pins across formats, nrhs
+//! and worker counts. Columns deflate out of the block as they
+//! converge (or break down); the rest keep batching.
+
+use super::stepped::PrecisionController;
+use super::{MonitorCmd, SolveOutcome};
+use crate::solvers::ladder::PrecisionSwitchable;
+use crate::spmv::SpmvOp;
+use crate::util::Timer;
+use std::collections::BTreeMap;
+
+/// Per-column monitor: the multi-RHS analogue of the `monitor`
+/// callback the single-RHS solvers take. Fixed-format blocks observe
+/// nothing; stepped blocks give every column its own
+/// [`PrecisionController`] (same escalation policy, same switch log as
+/// `run_stepped_with` installs around a single solve).
+pub(crate) enum ColumnMonitor {
+    /// No controller: always [`MonitorCmd::Continue`] (rung 1).
+    Fixed,
+    /// A private stepped controller deciding this column's rung.
+    Stepped(PrecisionController),
+}
+
+impl ColumnMonitor {
+    /// Feed one residual observation; [`MonitorCmd::Restart`] iff the
+    /// controller escalated at this iteration.
+    pub(crate) fn observe(&mut self, iter: usize, resid: f64) -> MonitorCmd {
+        match self {
+            ColumnMonitor::Fixed => MonitorCmd::Continue,
+            ColumnMonitor::Stepped(ctrl) => {
+                if ctrl.observe(iter, resid).is_some() {
+                    MonitorCmd::Restart
+                } else {
+                    MonitorCmd::Continue
+                }
+            }
+        }
+    }
+
+    /// The precision rung this column's applies must run at.
+    pub(crate) fn tag(&self) -> u8 {
+        match self {
+            ColumnMonitor::Fixed => 1,
+            ColumnMonitor::Stepped(ctrl) => ctrl.tag,
+        }
+    }
+
+    /// The controller's escalation log (what `run_stepped_with` copies
+    /// into [`SolveOutcome::switches`]).
+    pub(crate) fn take_switches(&mut self) -> Vec<(usize, u8)> {
+        match self {
+            ColumnMonitor::Fixed => Vec::new(),
+            ColumnMonitor::Stepped(ctrl) => std::mem::take(&mut ctrl.switches),
+        }
+    }
+}
+
+/// One right-hand side of a block solve, advanced one matrix apply at
+/// a time. Implementations replicate their single-RHS solver's
+/// arithmetic exactly between applies.
+pub(crate) trait BlockColumn {
+    /// Still needs matrix applies (not converged / broken / done)?
+    fn active(&self) -> bool;
+    /// Precision rung the next apply must run at (1 for fixed blocks).
+    fn tag(&self) -> u8;
+    /// The vector to multiply next (valid only while [`Self::active`]).
+    fn input(&self) -> &[f64];
+    /// Consume `y = A · input()` and advance to the next state.
+    fn absorb(&mut self, y: &[f64]);
+    /// Final outcome; `op` must be at this column's rung (the driver
+    /// guarantees it) so the closing `true_relres` matches single
+    /// dispatch. `seconds` is the shared wall time of the block.
+    fn finish(self, op: &dyn SpmvOp, seconds: f64) -> SolveOutcome;
+}
+
+/// Drive a set of columns to completion over a square operator:
+/// gather live columns' inputs per rung (coarsest first), one fused
+/// `apply_multi` per rung, scatter results. `apply(tag, xs, ys, width)`
+/// performs the block product — fixed-format callers ignore `tag`,
+/// ladder callers switch the shared operator to that rung first.
+pub(crate) fn drive_columns<C: BlockColumn>(
+    cols: &mut [C],
+    n: usize,
+    mut apply: impl FnMut(u8, &[f64], &mut [f64], usize),
+) {
+    let mut xs: Vec<f64> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    loop {
+        // group the live columns by rung; BTreeMap iterates coarsest
+        // (lowest tag) first
+        let mut by_tag: BTreeMap<u8, Vec<usize>> = BTreeMap::new();
+        for (i, c) in cols.iter().enumerate() {
+            if c.active() {
+                by_tag.entry(c.tag()).or_default().push(i);
+            }
+        }
+        if by_tag.is_empty() {
+            break;
+        }
+        for (tag, idxs) in by_tag {
+            let width = idxs.len();
+            xs.clear();
+            xs.resize(n * width, 0.0);
+            ys.clear();
+            ys.resize(n * width, 0.0);
+            for (slot, &i) in idxs.iter().enumerate() {
+                xs[slot * n..(slot + 1) * n].copy_from_slice(cols[i].input());
+            }
+            apply(tag, &xs, &mut ys, width);
+            for (slot, &i) in idxs.iter().enumerate() {
+                cols[i].absorb(&ys[slot * n..(slot + 1) * n]);
+            }
+        }
+    }
+}
+
+/// Run a fully-built column set over a fixed operator and collect the
+/// per-column outcomes (shared wall clock, like `cg_solve_multi`).
+pub(crate) fn run_fixed_block<C: BlockColumn>(
+    op: &dyn SpmvOp,
+    mut cols: Vec<C>,
+) -> Vec<SolveOutcome> {
+    let n = op.nrows();
+    let timer = Timer::start();
+    drive_columns(&mut cols, n, |_tag, xs, ys, width| op.apply_multi(xs, ys, width));
+    let seconds = timer.elapsed_s();
+    cols.into_iter().map(|c| c.finish(op, seconds)).collect()
+}
+
+/// Run a column set over a shared precision ladder: each rung's
+/// sub-block applies with the ladder switched to that rung, and every
+/// column's closing residual is computed at its final rung — exactly
+/// what a fresh per-request ladder would have seen.
+pub(crate) fn run_tagged_block<L: PrecisionSwitchable, C: BlockColumn>(
+    op: &L,
+    mut cols: Vec<C>,
+) -> Vec<SolveOutcome> {
+    let n = op.nrows();
+    let timer = Timer::start();
+    drive_columns(&mut cols, n, |tag, xs, ys, width| {
+        op.set_tag(tag);
+        op.apply_multi(xs, ys, width);
+    });
+    let seconds = timer.elapsed_s();
+    cols.into_iter()
+        .map(|c| {
+            op.set_tag(c.tag());
+            c.finish(op, seconds)
+        })
+        .collect()
+}

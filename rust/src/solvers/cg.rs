@@ -4,6 +4,7 @@
 //! SpMV operator supplies whichever storage precision is under test.
 
 use super::blas1::{axpy, dot, has_nonfinite, nrm2, xpby};
+use super::block::{BlockColumn, ColumnMonitor};
 use super::{MonitorCmd, SolveOutcome};
 use crate::spmv::SpmvOp;
 use crate::util::Timer;
@@ -283,6 +284,196 @@ pub fn cg_solve_multi(
         });
     }
     out
+}
+
+/// One CG right-hand side as a [`BlockColumn`] state machine — the
+/// monitored sibling of a [`cg_solve_multi`] column, used by the
+/// stepped multi-RHS mode ([`crate::solvers::stepped::run_stepped_multi`]).
+/// Between applies it runs exactly the arithmetic of [`cg_solve`] with
+/// its monitor installed, so the outcome is bitwise identical to a
+/// standalone monitored solve on this RHS.
+pub(crate) struct CgColumn<'a> {
+    b: &'a [f64],
+    opts: &'a CgOpts,
+    monitor: ColumnMonitor,
+    bnorm: f64,
+    x: Vec<f64>,
+    r: Vec<f64>,
+    z: Vec<f64>,
+    p: Vec<f64>,
+    best_x: Vec<f64>,
+    best_rel: f64,
+    rz: f64,
+    history: Vec<f64>,
+    iters: usize,
+    converged: bool,
+    broke_down: bool,
+    state: CgState,
+}
+
+enum CgState {
+    /// Next apply: `A · p` (the regular iteration).
+    NeedAp,
+    /// Next apply: `A · x` (re-anchoring after a precision switch).
+    NeedRestart,
+    Done,
+}
+
+impl<'a> CgColumn<'a> {
+    pub(crate) fn new(b: &'a [f64], opts: &'a CgOpts, monitor: ColumnMonitor) -> Self {
+        let n = b.len();
+        let bnorm = nrm2(b);
+        let mut col = Self {
+            b,
+            opts,
+            monitor,
+            bnorm,
+            x: vec![0.0; n],
+            r: b.to_vec(),
+            z: vec![0.0; n],
+            p: vec![0.0; n],
+            best_x: vec![0.0; n],
+            best_rel: f64::INFINITY,
+            rz: 0.0,
+            history: Vec::new(),
+            iters: 0,
+            converged: false,
+            broke_down: false,
+            state: CgState::NeedAp,
+        };
+        if bnorm == 0.0 {
+            col.converged = true;
+            col.state = CgState::Done;
+            return col;
+        }
+        if opts.max_iters == 0 {
+            col.state = CgState::Done;
+            return col;
+        }
+        col.apply_pre();
+        col.p.copy_from_slice(&col.z);
+        col.rz = dot(&col.r, &col.z);
+        col
+    }
+
+    /// z ← M⁻¹ r (Jacobi or identity), as in [`cg_solve`].
+    fn apply_pre(&mut self) {
+        let opts = self.opts;
+        if let Some(d) = &opts.inv_diag {
+            for i in 0..self.r.len() {
+                self.z[i] = self.r[i] * d[i];
+            }
+        } else {
+            self.z.copy_from_slice(&self.r);
+        }
+    }
+
+    fn absorb_ap(&mut self, ap: &[f64]) {
+        let pap = dot(&self.p, ap);
+        if pap == 0.0 || !pap.is_finite() {
+            self.broke_down = !pap.is_finite();
+            self.state = CgState::Done;
+            return;
+        }
+        let alpha = self.rz / pap;
+        axpy(alpha, &self.p, &mut self.x);
+        axpy(-alpha, ap, &mut self.r);
+        let rel = nrm2(&self.r) / self.bnorm;
+        self.history.push(rel);
+        self.iters += 1;
+        let cmd = self.monitor.observe(self.iters, rel);
+        if !rel.is_finite() || has_nonfinite(&self.x) {
+            self.broke_down = true;
+            self.state = CgState::Done;
+            return;
+        }
+        if rel < self.best_rel {
+            self.best_rel = rel;
+            self.best_x.copy_from_slice(&self.x);
+        }
+        if rel <= self.opts.tol {
+            self.converged = true;
+            self.state = CgState::Done;
+            return;
+        }
+        if cmd == MonitorCmd::Restart {
+            // operator escalated: resume from the best iterate; the
+            // next apply recomputes the true residual at the new rung
+            self.x.copy_from_slice(&self.best_x);
+            self.state = CgState::NeedRestart;
+            return;
+        }
+        self.apply_pre();
+        let rz_new = dot(&self.r, &self.z);
+        let beta = rz_new / self.rz;
+        self.rz = rz_new;
+        xpby(&self.z, beta, &mut self.p);
+        if self.iters >= self.opts.max_iters {
+            self.state = CgState::Done;
+        }
+    }
+
+    fn absorb_restart(&mut self, ax: &[f64]) {
+        let b = self.b;
+        for i in 0..b.len() {
+            self.r[i] = b[i] - ax[i];
+        }
+        self.apply_pre();
+        self.p.copy_from_slice(&self.z);
+        self.rz = dot(&self.r, &self.z);
+        self.state = if self.iters >= self.opts.max_iters {
+            CgState::Done
+        } else {
+            CgState::NeedAp
+        };
+    }
+}
+
+impl BlockColumn for CgColumn<'_> {
+    fn active(&self) -> bool {
+        !matches!(self.state, CgState::Done)
+    }
+
+    fn tag(&self) -> u8 {
+        self.monitor.tag()
+    }
+
+    fn input(&self) -> &[f64] {
+        match self.state {
+            CgState::NeedAp => &self.p,
+            CgState::NeedRestart => &self.x,
+            CgState::Done => unreachable!("inactive column asked for input"),
+        }
+    }
+
+    fn absorb(&mut self, y: &[f64]) {
+        match self.state {
+            CgState::NeedAp => self.absorb_ap(y),
+            CgState::NeedRestart => self.absorb_restart(y),
+            CgState::Done => unreachable!("inactive column fed a result"),
+        }
+    }
+
+    fn finish(mut self, op: &dyn SpmvOp, seconds: f64) -> SolveOutcome {
+        // a diverged tail must not beat the checkpoint (as in cg_solve)
+        if !self.broke_down && self.best_rel.is_finite() {
+            let final_rel = super::true_relres(op, &self.x, self.b);
+            if self.best_rel < final_rel {
+                self.x.copy_from_slice(&self.best_x);
+            }
+        }
+        let relres = super::true_relres(op, &self.x, self.b);
+        SolveOutcome {
+            converged: self.converged,
+            iters: self.iters,
+            relres,
+            history: self.history,
+            switches: self.monitor.take_switches(),
+            seconds,
+            x: self.x,
+            broke_down: self.broke_down,
+        }
+    }
 }
 
 #[cfg(test)]

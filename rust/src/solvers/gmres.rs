@@ -6,7 +6,8 @@
 //! *inner* iteration for free; that estimate is what the stepped
 //! controller monitors (the paper records residuals per iteration).
 
-use super::blas1::{axpy, dot, nrm2, scal};
+use super::blas1::{axpy, dot, has_nonfinite, nrm2, scal};
+use super::block::{run_fixed_block, BlockColumn, ColumnMonitor};
 use super::{MonitorCmd, SolveOutcome};
 use crate::spmv::SpmvOp;
 use crate::util::Timer;
@@ -196,6 +197,280 @@ pub fn gmres_solve(
     }
 }
 
+/// Solve `A X = B` for `nrhs` right-hand sides packed column-major in
+/// `bs`, running `nrhs` independent restarted-GMRES recurrences in
+/// lockstep: every round trip over the matrix is **one**
+/// [`SpmvOp::apply_multi`] across all still-active columns (cycle-start
+/// residuals and Arnoldi products batch together — columns need not be
+/// in the same phase). Each column follows the identical arithmetic
+/// sequence as a standalone [`gmres_solve`] on that RHS, so per-column
+/// outcomes are bitwise identical to single dispatch; columns deflate
+/// out of the block as they converge or break down. `seconds` in each
+/// outcome is the shared wall time of the block solve.
+pub fn gmres_solve_multi(
+    op: &dyn SpmvOp,
+    bs: &[f64],
+    nrhs: usize,
+    opts: &GmresOpts,
+) -> Vec<SolveOutcome> {
+    let n = op.nrows();
+    assert_eq!(op.ncols(), n, "multi-RHS GMRES requires a square operator");
+    assert_eq!(bs.len(), n * nrhs);
+    if nrhs == 0 {
+        return Vec::new();
+    }
+    let cols: Vec<GmresColumn> = (0..nrhs)
+        .map(|j| GmresColumn::new(&bs[j * n..(j + 1) * n], opts, ColumnMonitor::Fixed))
+        .collect();
+    run_fixed_block(op, cols)
+}
+
+/// One GMRES right-hand side as a [`BlockColumn`] state machine.
+/// Between applies it runs exactly the arithmetic of [`gmres_solve`]
+/// with its monitor installed (Arnoldi/MGS, Givens update,
+/// back-substitution at cycle end), so the outcome is bitwise
+/// identical to a standalone monitored solve on this RHS.
+pub(crate) struct GmresColumn<'a> {
+    b: &'a [f64],
+    opts: &'a GmresOpts,
+    monitor: ColumnMonitor,
+    m: usize,
+    bnorm: f64,
+    x: Vec<f64>,
+    v: Vec<Vec<f64>>,
+    h: Vec<f64>,
+    cs: Vec<f64>,
+    sn: Vec<f64>,
+    g: Vec<f64>,
+    cycle: usize,
+    j: usize,
+    j_used: usize,
+    iters: usize,
+    history: Vec<f64>,
+    converged: bool,
+    broke_down: bool,
+    state: GmresState,
+}
+
+enum GmresState {
+    /// Next apply: `A · x` (cycle-start residual).
+    NeedResidual,
+    /// Next apply: `A · v_j` (the Arnoldi step).
+    NeedArnoldi,
+    Done,
+}
+
+impl<'a> GmresColumn<'a> {
+    pub(crate) fn new(b: &'a [f64], opts: &'a GmresOpts, monitor: ColumnMonitor) -> Self {
+        let n = b.len();
+        let bnorm = nrm2(b);
+        let m = opts.restart.max(1);
+        let mut col = Self {
+            b,
+            opts,
+            monitor,
+            m,
+            bnorm,
+            x: vec![0.0; n],
+            v: (0..=m).map(|_| vec![0.0; n]).collect(),
+            h: vec![0.0; (m + 1) * m],
+            cs: vec![0.0; m],
+            sn: vec![0.0; m],
+            g: vec![0.0; m + 1],
+            cycle: 0,
+            j: 0,
+            j_used: 0,
+            iters: 0,
+            history: Vec::new(),
+            converged: false,
+            broke_down: false,
+            state: GmresState::NeedResidual,
+        };
+        if bnorm == 0.0 {
+            col.converged = true;
+            col.state = GmresState::Done;
+        } else if opts.max_outer == 0 {
+            col.state = GmresState::Done;
+        }
+        col
+    }
+
+    fn absorb_residual(&mut self, ax: &[f64]) {
+        let b = self.b;
+        let mut r = vec![0.0; b.len()];
+        for i in 0..b.len() {
+            r[i] = b[i] - ax[i];
+        }
+        let beta = nrm2(&r);
+        if !beta.is_finite() {
+            self.broke_down = true;
+            self.state = GmresState::Done;
+            return;
+        }
+        if beta / self.bnorm <= self.opts.tol {
+            self.converged = true;
+            self.state = GmresState::Done;
+            return;
+        }
+        self.v[0].copy_from_slice(&r);
+        scal(1.0 / beta, &mut self.v[0]);
+        self.g.iter_mut().for_each(|gi| *gi = 0.0);
+        self.g[0] = beta;
+        self.j = 0;
+        self.j_used = 0;
+        self.state = GmresState::NeedArnoldi;
+    }
+
+    fn absorb_arnoldi(&mut self, w: &[f64]) {
+        let (m, j) = (self.m, self.j);
+        self.v[j + 1].copy_from_slice(w);
+        // MGS orthogonalization (split_at_mut: v[i] read, v[j+1] written)
+        for i in 0..=j {
+            let (head, tail) = self.v.split_at_mut(j + 1);
+            let hij = dot(&head[i], &tail[0]);
+            self.h[i + j * (m + 1)] = hij;
+            axpy(-hij, &head[i], &mut tail[0]);
+        }
+        let hj1 = nrm2(&self.v[j + 1]);
+        self.h[(j + 1) + j * (m + 1)] = hj1;
+        if !hj1.is_finite() {
+            self.broke_down = true;
+            self.state = GmresState::Done;
+            return;
+        }
+        if hj1 > 0.0 {
+            scal(1.0 / hj1, &mut self.v[j + 1]);
+        }
+        // apply existing rotations to the new column
+        for i in 0..j {
+            let t = self.cs[i] * self.h[i + j * (m + 1)]
+                + self.sn[i] * self.h[(i + 1) + j * (m + 1)];
+            self.h[(i + 1) + j * (m + 1)] =
+                -self.sn[i] * self.h[i + j * (m + 1)] + self.cs[i] * self.h[(i + 1) + j * (m + 1)];
+            self.h[i + j * (m + 1)] = t;
+        }
+        // new rotation annihilating h[j+1, j]
+        let (hjj, hj1j) = (self.h[j + j * (m + 1)], self.h[(j + 1) + j * (m + 1)]);
+        let denom = (hjj * hjj + hj1j * hj1j).sqrt();
+        if denom == 0.0 {
+            // zero Hessenberg column: singular on the Krylov space
+            self.broke_down = true;
+            self.state = GmresState::Done;
+            return;
+        }
+        let (c, s) = (hjj / denom, hj1j / denom);
+        self.cs[j] = c;
+        self.sn[j] = s;
+        self.h[j + j * (m + 1)] = c * hjj + s * hj1j;
+        self.h[(j + 1) + j * (m + 1)] = 0.0;
+        let gj = self.g[j];
+        self.g[j] = c * gj;
+        self.g[j + 1] = -s * gj;
+
+        self.j_used = j + 1;
+        self.iters += 1;
+        let rel = self.g[j + 1].abs() / self.bnorm;
+        self.history.push(rel);
+        let cmd = self.monitor.observe(self.iters, rel);
+        if !rel.is_finite() {
+            self.broke_down = true;
+            self.state = GmresState::Done;
+            return;
+        }
+        if rel <= self.opts.tol {
+            self.converged = true;
+            self.end_cycle();
+            return;
+        }
+        if cmd == MonitorCmd::Restart {
+            // operator escalated: finish this cycle now; the next
+            // cycle-start residual uses the new rung
+            self.end_cycle();
+            return;
+        }
+        self.j += 1;
+        if self.j == m {
+            self.end_cycle();
+        }
+    }
+
+    /// Back-substitute `y` from `H y = g`, update `x += V y`, and move
+    /// to the next cycle (or finish) — [`gmres_solve`]'s cycle tail.
+    fn end_cycle(&mut self) {
+        let m = self.m;
+        if self.j_used > 0 {
+            let ju = self.j_used;
+            let mut y = vec![0.0f64; ju];
+            for i in (0..ju).rev() {
+                let mut s = self.g[i];
+                for kk in (i + 1)..ju {
+                    s -= self.h[i + kk * (m + 1)] * y[kk];
+                }
+                let d = self.h[i + i * (m + 1)];
+                y[i] = if d != 0.0 { s / d } else { 0.0 };
+            }
+            for (kk, &yk) in y.iter().enumerate() {
+                axpy(yk, &self.v[kk], &mut self.x);
+            }
+            if has_nonfinite(&self.x) {
+                self.broke_down = true;
+                self.state = GmresState::Done;
+                return;
+            }
+        }
+        if self.converged {
+            self.state = GmresState::Done;
+            return;
+        }
+        self.cycle += 1;
+        self.state = if self.cycle >= self.opts.max_outer {
+            GmresState::Done
+        } else {
+            GmresState::NeedResidual
+        };
+    }
+}
+
+impl BlockColumn for GmresColumn<'_> {
+    fn active(&self) -> bool {
+        !matches!(self.state, GmresState::Done)
+    }
+
+    fn tag(&self) -> u8 {
+        self.monitor.tag()
+    }
+
+    fn input(&self) -> &[f64] {
+        match self.state {
+            GmresState::NeedResidual => &self.x,
+            GmresState::NeedArnoldi => &self.v[self.j],
+            GmresState::Done => unreachable!("inactive column asked for input"),
+        }
+    }
+
+    fn absorb(&mut self, y: &[f64]) {
+        match self.state {
+            GmresState::NeedResidual => self.absorb_residual(y),
+            GmresState::NeedArnoldi => self.absorb_arnoldi(y),
+            GmresState::Done => unreachable!("inactive column fed a result"),
+        }
+    }
+
+    fn finish(mut self, op: &dyn SpmvOp, seconds: f64) -> SolveOutcome {
+        let relres = super::true_relres(op, &self.x, self.b);
+        SolveOutcome {
+            converged: self.converged,
+            iters: self.iters,
+            relres,
+            history: self.history,
+            switches: self.monitor.take_switches(),
+            seconds,
+            x: self.x,
+            broke_down: self.broke_down,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -273,6 +548,34 @@ mod tests {
         );
         assert!(out.converged, "relres={}", out.relres);
         assert!(out.iters > 5, "should need more than one cycle");
+    }
+
+    #[test]
+    fn multi_rhs_matches_single_solves_bitwise() {
+        let op = Fp64Csr::new(convdiff2d(10, 10, 6.0, 3.0));
+        let n = op.nrows();
+        let nrhs = 3usize;
+        let mut bs = vec![0.0; n * nrhs];
+        bs[0..n].copy_from_slice(&rhs_for_ones(&op));
+        // column 1 stays zero (trivial); column 2 is a rough ramp
+        for (i, v) in bs[2 * n..3 * n].iter_mut().enumerate() {
+            *v = (i % 3) as f64 - 1.0;
+        }
+        let opts = GmresOpts::default();
+        let outs = gmres_solve_multi(&op, &bs, nrhs, &opts);
+        assert_eq!(outs.len(), nrhs);
+        for (j, multi) in outs.iter().enumerate() {
+            let b = &bs[j * n..(j + 1) * n];
+            let single = gmres_solve(&op, b, &opts, |_, _| MonitorCmd::Continue);
+            assert_eq!(multi.converged, single.converged, "rhs {j}");
+            assert_eq!(multi.iters, single.iters, "rhs {j}");
+            assert_eq!(multi.x, single.x, "rhs {j}");
+            assert_eq!(multi.history, single.history, "rhs {j}");
+            assert_eq!(multi.relres.to_bits(), single.relres.to_bits(), "rhs {j}");
+        }
+        // the zero column deflates immediately
+        assert!(outs[1].converged);
+        assert_eq!(outs[1].iters, 0);
     }
 
     #[test]

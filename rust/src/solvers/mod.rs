@@ -3,13 +3,21 @@
 //!
 //! * [`blas1`] — the dense vector kernels (dot/axpy/norm); the paper
 //!   calls cuBLAS for these, always in FP64 — so do we.
-//! * [`cg`] — conjugate gradients (Table IV / Fig. 9 solver).
+//! * [`cg`] — conjugate gradients (Table IV / Fig. 9 solver), single-
+//!   and multi-RHS ([`cg::cg_solve_multi`]).
 //! * [`gmres`] — restarted GMRES with MGS-Arnoldi + Givens rotations
-//!   (Table III / Fig. 8 solver).
-//! * [`bicgstab`] — BiCGSTAB (related-work extension [21]).
+//!   (Table III / Fig. 8 solver), single- and multi-RHS
+//!   ([`gmres::gmres_solve_multi`]).
+//! * [`bicgstab`] — BiCGSTAB (related-work extension [21]), single-
+//!   and multi-RHS ([`bicgstab::bicgstab_solve_multi`]).
+//! * `block` (crate-internal) — the lockstep block-solve frame behind
+//!   every multi-RHS entry point: per-column solver state machines
+//!   batched into one fused `apply_multi` per round trip, bitwise
+//!   identical per column to single dispatch.
 //! * [`stepped`] — the residual-monitoring precision controller
 //!   (RSD / nDec / relDec, Conditions 1–3) and the Algorithm-3 wiring,
-//!   generic over any precision ladder.
+//!   generic over any precision ladder; [`stepped::run_stepped_multi`]
+//!   is the batched mode (one shared ladder, per-column controllers).
 //! * [`ladder`] — the [`ladder::PrecisionSwitchable`] ladder trait with
 //!   the zero-copy GSE-SEM tag ladder ([`SwitchableOp`]) and the
 //!   copy-based fp32→fp64 baseline ([`ladder::CopyLadderOp`]).
@@ -21,15 +29,17 @@ pub mod blas1;
 pub mod cg;
 pub mod gmres;
 pub mod bicgstab;
+pub(crate) mod block;
 pub mod ladder;
 pub mod stepped;
 pub mod precond;
 pub mod ir;
 
+pub use bicgstab::{bicgstab_solve, bicgstab_solve_multi, BicgstabOpts};
 pub use cg::{cg_solve, cg_solve_multi, CgOpts};
-pub use gmres::{gmres_solve, GmresOpts};
+pub use gmres::{gmres_solve, gmres_solve_multi, GmresOpts};
 pub use ladder::{CopyLadderOp, PrecisionSwitchable, SwitchableOp};
-pub use stepped::{PrecisionController, SteppedParams};
+pub use stepped::{run_stepped_multi, BlockSolver, PrecisionController, SteppedParams};
 
 use crate::spmv::SpmvOp;
 

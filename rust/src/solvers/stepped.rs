@@ -281,6 +281,71 @@ where
     (out, ctrl.reasons, tags_seen)
 }
 
+/// Which solver drives a stepped block solve — the monitored sibling
+/// of the fixed-format `*_solve_multi` entry points, carrying the
+/// per-solver caps exactly as single dispatch would pass them.
+#[derive(Clone, Debug)]
+pub enum BlockSolver {
+    Cg(crate::solvers::CgOpts),
+    Gmres(crate::solvers::GmresOpts),
+    Bicgstab(crate::solvers::bicgstab::BicgstabOpts),
+}
+
+/// Stepped multi-RHS mode: solve `nrhs` column-major packed right-hand
+/// sides over **one shared** [`PrecisionSwitchable`] ladder, giving
+/// every column its own [`PrecisionController`] (same
+/// RSD / nDec / relDec policy as [`run_stepped_with`] installs around
+/// a single solve). Each round trip performs one fused
+/// [`crate::spmv::SpmvOp::apply_multi`] per precision rung still in
+/// play — the block applies at the coarsest rung first, and columns
+/// whose controller demanded a finer rung peel off into their own
+/// residual sub-block. Per-column outcomes (iterates, histories,
+/// switch logs, residuals) are bitwise identical to dispatching each
+/// RHS through [`run_stepped_with`] with a fresh ladder.
+pub fn run_stepped_multi<L: PrecisionSwitchable>(
+    op: &L,
+    bs: &[f64],
+    nrhs: usize,
+    params: SteppedParams,
+    solver: &BlockSolver,
+) -> Vec<crate::solvers::SolveOutcome> {
+    use crate::solvers::bicgstab::BicgstabColumn;
+    use crate::solvers::block::{run_tagged_block, ColumnMonitor};
+    use crate::solvers::cg::CgColumn;
+    use crate::solvers::gmres::GmresColumn;
+
+    let n = op.nrows();
+    assert_eq!(op.ncols(), n, "stepped multi-RHS requires a square operator");
+    assert_eq!(bs.len(), n * nrhs);
+    if nrhs == 0 {
+        return Vec::new();
+    }
+    // every column starts on the coarsest rung, as a fresh per-request
+    // ladder would
+    op.set_tag(1);
+    let depth = op.num_tags();
+    let ctrl = || ColumnMonitor::Stepped(PrecisionController::with_ladder_depth(params, depth));
+    match solver {
+        BlockSolver::Cg(o) => {
+            let cols: Vec<CgColumn> =
+                (0..nrhs).map(|j| CgColumn::new(&bs[j * n..(j + 1) * n], o, ctrl())).collect();
+            run_tagged_block(op, cols)
+        }
+        BlockSolver::Gmres(o) => {
+            let cols: Vec<GmresColumn> = (0..nrhs)
+                .map(|j| GmresColumn::new(&bs[j * n..(j + 1) * n], o, ctrl()))
+                .collect();
+            run_tagged_block(op, cols)
+        }
+        BlockSolver::Bicgstab(o) => {
+            let cols: Vec<BicgstabColumn> = (0..nrhs)
+                .map(|j| BicgstabColumn::new(&bs[j * n..(j + 1) * n], o, ctrl()))
+                .collect();
+            run_tagged_block(op, cols)
+        }
+    }
+}
+
 /// The historical GSE-SEM entry point: wrap `m` in a [`SwitchableOp`]
 /// and run [`run_stepped_with`], reporting the levels as [`Precision`]
 /// values. Shared by the CG and GMRES stepped paths.

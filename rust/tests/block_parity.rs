@@ -1,0 +1,218 @@
+//! Block-solver acceptance: every multi-RHS entry point added for the
+//! asymmetric suites — [`gmres_solve_multi`], [`bicgstab_solve_multi`]
+//! and the stepped multi-RHS mode ([`run_stepped_multi`], one shared
+//! precision ladder serving per-column controllers) — must be
+//! **bitwise identical per column** to dispatching each right-hand
+//! side through its single-RHS solver, across storage formats, block
+//! widths and operator worker counts, including columns that deflate
+//! out of the block early and columns that stagnate at the iteration
+//! cap.
+
+use gsem::solvers::bicgstab::{bicgstab_solve, bicgstab_solve_multi, BicgstabOpts};
+use gsem::solvers::gmres::{gmres_solve, gmres_solve_multi, GmresOpts};
+use gsem::solvers::stepped::{run_stepped_multi, run_stepped_with, BlockSolver, SteppedParams};
+use gsem::solvers::{
+    cg_solve, CgOpts, CopyLadderOp, MonitorCmd, PrecisionSwitchable, SolveOutcome, SwitchableOp,
+};
+use gsem::sparse::gen::convdiff::convdiff2d;
+use gsem::sparse::gen::fem::diffusion2d;
+use gsem::spmv::{build_operators_par, GseCsr, LowpCsr, SpmvOp};
+use gsem::util::Prng;
+use std::sync::Arc;
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Full bitwise comparison of one block column against its single
+/// dispatch: flags, counts, iterates, histories, switch logs and the
+/// closing residual must all agree to the bit.
+fn assert_bitwise(single: &SolveOutcome, multi: &SolveOutcome, ctx: &str) {
+    assert_eq!(single.converged, multi.converged, "{ctx}: converged");
+    assert_eq!(single.broke_down, multi.broke_down, "{ctx}: broke_down");
+    assert_eq!(single.iters, multi.iters, "{ctx}: iters");
+    assert_eq!(single.switches, multi.switches, "{ctx}: switches");
+    assert_eq!(bits(&single.x), bits(&multi.x), "{ctx}: x");
+    assert_eq!(bits(&single.history), bits(&multi.history), "{ctx}: history");
+    assert_eq!(single.relres.to_bits(), multi.relres.to_bits(), "{ctx}: relres");
+}
+
+/// A block of RHS columns exercising the deflation paths: an easy
+/// `b = A·1` column (converges first), a zero column (trivially
+/// converged, never enters the block), and random tails.
+fn rhs_block(op: &dyn SpmvOp, nrhs: usize, seed: u64) -> Vec<f64> {
+    let n = op.nrows();
+    let mut bs = vec![0.0; n * nrhs];
+    let ones = vec![1.0; op.ncols()];
+    op.apply(&ones, &mut bs[0..n]);
+    let mut rng = Prng::new(seed);
+    // column 1 (when present) stays zero; the rest are random
+    for j in 2..nrhs {
+        for v in bs[j * n..(j + 1) * n].iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+    }
+    bs
+}
+
+#[test]
+fn gmres_block_matches_single_dispatch_bitwise() {
+    let a = convdiff2d(8, 8, 4.0, 2.0);
+    let opts = GmresOpts { tol: 1e-6, restart: 10, max_outer: 60 };
+    for threads in [1usize, 3] {
+        for op in build_operators_par(&a, 8, threads) {
+            for nrhs in [1usize, 3, 8] {
+                let bs = rhs_block(op.as_ref(), nrhs, 7);
+                let outs = gmres_solve_multi(op.as_ref(), &bs, nrhs, &opts);
+                assert_eq!(outs.len(), nrhs);
+                for (j, multi) in outs.iter().enumerate() {
+                    let b = &bs[j * op.nrows()..(j + 1) * op.nrows()];
+                    let single = gmres_solve(op.as_ref(), b, &opts, |_, _| MonitorCmd::Continue);
+                    let ctx = format!(
+                        "gmres {} threads={threads} nrhs={nrhs} col={j}",
+                        op.format().label()
+                    );
+                    assert_bitwise(&single, multi, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bicgstab_block_matches_single_dispatch_bitwise() {
+    let a = convdiff2d(8, 8, 6.0, 3.0);
+    let opts = BicgstabOpts { tol: 1e-6, max_iters: 400 };
+    for threads in [1usize, 3] {
+        for op in build_operators_par(&a, 8, threads) {
+            for nrhs in [1usize, 3, 8] {
+                let bs = rhs_block(op.as_ref(), nrhs, 11);
+                let outs = bicgstab_solve_multi(op.as_ref(), &bs, nrhs, &opts);
+                assert_eq!(outs.len(), nrhs);
+                for (j, multi) in outs.iter().enumerate() {
+                    let b = &bs[j * op.nrows()..(j + 1) * op.nrows()];
+                    let single =
+                        bicgstab_solve(op.as_ref(), b, &opts, |_, _| MonitorCmd::Continue);
+                    let ctx = format!(
+                        "bicgstab {} threads={threads} nrhs={nrhs} col={j}",
+                        op.format().label()
+                    );
+                    assert_bitwise(&single, multi, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// Aggressive controller tuning: after the `l` warm-up, any window that
+/// is not improving by 99% per `t` residuals escalates — guarantees the
+/// ladder actually climbs mid-block, at different iterations for
+/// different columns (the rung peel-off path).
+fn eager_params() -> SteppedParams {
+    SteppedParams {
+        l: 6,
+        t: 4,
+        m: 2,
+        rsd_limit: 0.5,
+        ndec_limit: 2,
+        reldec_limit: 0.99,
+        divergence_factor: 100.0,
+    }
+}
+
+fn stepped_single(
+    op: &impl PrecisionSwitchable,
+    b: &[f64],
+    params: SteppedParams,
+    solver: &BlockSolver,
+) -> SolveOutcome {
+    let (out, _, _) = match solver {
+        BlockSolver::Cg(o) => run_stepped_with(op, params, |op, mon| cg_solve(op, b, o, mon)),
+        BlockSolver::Gmres(o) => {
+            run_stepped_with(op, params, |op, mon| gmres_solve(op, b, o, mon))
+        }
+        BlockSolver::Bicgstab(o) => {
+            run_stepped_with(op, params, |op, mon| bicgstab_solve(op, b, o, mon))
+        }
+    };
+    out
+}
+
+#[test]
+fn stepped_block_matches_single_dispatch_bitwise() {
+    // wide-exponent values: the low rungs differ numerically from the
+    // high ones, so escalation changes the arithmetic it re-anchors
+    let a = diffusion2d(10, 10, 9.0, 4);
+    let params = eager_params();
+    let g = Arc::new(GseCsr::from_csr(&a, 8));
+    let lo: Arc<dyn SpmvOp> = Arc::new(LowpCsr::<f32>::from_csr(&a));
+    let hi: Arc<dyn SpmvOp> = Arc::new(gsem::spmv::fp64::Fp64Csr::new(a.clone()));
+    let solvers = [
+        BlockSolver::Cg(CgOpts { tol: 1e-8, max_iters: 300, inv_diag: None }),
+        BlockSolver::Gmres(GmresOpts { tol: 1e-8, restart: 10, max_outer: 30 }),
+        BlockSolver::Bicgstab(BicgstabOpts { tol: 1e-8, max_iters: 300 }),
+    ];
+    let mut any_switched = false;
+    for solver in &solvers {
+        for nrhs in [1usize, 3, 8] {
+            let bs = rhs_block(hi.as_ref(), nrhs, 3);
+            // GSE tag ladder: one shared SwitchableOp for the block,
+            // a fresh one per single dispatch — same encode either way
+            let ladder = SwitchableOp::new(Arc::clone(&g));
+            let outs = run_stepped_multi(&ladder, &bs, nrhs, params, solver);
+            for (j, multi) in outs.iter().enumerate() {
+                let b = &bs[j * a.nrows..(j + 1) * a.nrows];
+                let sop = SwitchableOp::new(Arc::clone(&g));
+                let single = stepped_single(&sop, b, params, solver);
+                assert_bitwise(&single, multi, &format!("stepped-gse nrhs={nrhs} col={j}"));
+                any_switched |= !multi.switches.is_empty();
+            }
+            // copy ladder: shared fp32/fp64 rungs behind Arcs
+            let ladder = CopyLadderOp::new(Arc::clone(&lo), Arc::clone(&hi));
+            let outs = run_stepped_multi(&ladder, &bs, nrhs, params, solver);
+            for (j, multi) in outs.iter().enumerate() {
+                let b = &bs[j * a.nrows..(j + 1) * a.nrows];
+                let sop = CopyLadderOp::new(Arc::clone(&lo), Arc::clone(&hi));
+                let single = stepped_single(&sop, b, params, solver);
+                assert_bitwise(&single, multi, &format!("stepped-copy nrhs={nrhs} col={j}"));
+                any_switched |= !multi.switches.is_empty();
+            }
+        }
+    }
+    assert!(any_switched, "the eager controller must escalate at least one column");
+}
+
+#[test]
+fn block_deflation_and_stagnation_columns() {
+    let a = convdiff2d(10, 10, 8.0, 4.0);
+    let op = gsem::spmv::fp64::Fp64Csr::new(a.clone());
+    let n = a.nrows;
+
+    // deflation: the zero column converges at iteration 0 and the easy
+    // b = A·1 column well before the random ones; the survivors keep
+    // batching and still match single dispatch exactly
+    let opts = GmresOpts { tol: 1e-6, restart: 10, max_outer: 60 };
+    let bs = rhs_block(&op, 4, 23);
+    let outs = gmres_solve_multi(&op, &bs, 4, &opts);
+    assert!(outs[1].converged && outs[1].iters == 0, "zero column is trivial");
+    assert!(outs[0].converged, "easy column converges");
+    for (j, multi) in outs.iter().enumerate() {
+        let b = &bs[j * n..(j + 1) * n];
+        let single = gmres_solve(&op, b, &opts, |_, _| MonitorCmd::Continue);
+        assert_bitwise(&single, multi, &format!("deflation col={j}"));
+    }
+
+    // stagnation: an unreachable tolerance pins every column at the
+    // iteration cap — parity must hold on the capped path too
+    let tight = BicgstabOpts { tol: 1e-300, max_iters: 7 };
+    let outs = bicgstab_solve_multi(&op, &bs, 4, &tight);
+    for (j, multi) in outs.iter().enumerate() {
+        let b = &bs[j * n..(j + 1) * n];
+        let single = bicgstab_solve(&op, b, &tight, |_, _| MonitorCmd::Continue);
+        assert_bitwise(&single, multi, &format!("stagnation col={j}"));
+        if j != 1 {
+            assert!(!multi.converged, "col {j} must stagnate");
+        }
+    }
+    assert!(outs.iter().any(|o| o.iters == 7), "some column must run to the iteration cap");
+}

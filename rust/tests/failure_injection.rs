@@ -117,6 +117,57 @@ fn empty_and_single_row_matrices() {
 }
 
 #[test]
+fn bicgstab_breakdown_in_one_column_fails_only_that_ticket() {
+    // A = diag(1..5, 0): the last row/column is a null direction. A
+    // right-hand side b = e5 makes BiCGSTAB break down immediately —
+    // p = r̂₀ = e5 gives A·p = 0, so ⟨r̂₀, A·p⟩ = 0 and the ρ/α
+    // recurrence is degenerate (the Lanczos-breakdown family) — while
+    // b = A·1 lies in the range and converges. Merged into one block,
+    // the breakdown must deflate only its own column.
+    let mut c = Coo::new(6, 6);
+    for i in 0..5 {
+        c.push(i, i, 1.0 + i as f64);
+    }
+    let a = Arc::new(c.to_csr());
+    use gsem::coordinator::{RhsSpec, ServiceConfig, SolverService};
+    let svc = SolverService::manual(ServiceConfig::new().workers(2));
+    let mk = |name: &str, rhs: RhsSpec| {
+        let mut r = SolveRequest::new(
+            name,
+            Arc::clone(&a),
+            SolverKind::Bicgstab,
+            FormatChoice::fixed(ValueFormat::Fp64),
+        );
+        r.rhs = rhs;
+        r.max_iters = 50;
+        r
+    };
+    let good = mk("good", RhsSpec::AxOnes);
+    let bad = mk("bad", RhsSpec::Unit(5));
+    let tg = svc.submit_request(good.clone());
+    let tb = svc.submit_request(bad.clone());
+    assert_eq!(svc.flush(), 2);
+    let rg = tg.wait();
+    let rb = tb.wait();
+    // they really ran as one block...
+    assert_eq!(svc.metrics().counter("intake.merged"), 2);
+    assert_eq!(svc.metrics().counter("pool.batched_bicgstab"), 1);
+    // ...the degenerate column failed alone, without poisoning the rest
+    assert!(!rb.outcome.converged, "null-direction RHS cannot converge");
+    assert_eq!(rb.outcome.iters, 0, "breakdown fires before the first update");
+    assert!(rb.outcome.x.iter().all(|v| v.is_finite()));
+    assert!(rg.outcome.converged, "in-range RHS must still converge: {}", rg.relres_fp64);
+    // ...and both tickets match one-shot dispatch bitwise
+    for (req, res) in [(&good, &rg), (&bad, &rb)] {
+        let single = gsem::coordinator::jobs::dispatch(req);
+        assert_eq!(res.outcome.converged, single.outcome.converged, "{}", req.name);
+        assert_eq!(res.outcome.iters, single.outcome.iters, "{}", req.name);
+        assert_eq!(res.outcome.x, single.outcome.x, "{}", req.name);
+        assert_eq!(res.relres_fp64.to_bits(), single.relres_fp64.to_bits(), "{}", req.name);
+    }
+}
+
+#[test]
 fn cli_rejects_bad_invocations() {
     use gsem::coordinator::cli::Cli;
     // bare double-dash

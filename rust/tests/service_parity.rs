@@ -167,6 +167,108 @@ fn eviction_changes_counters_not_results() {
     assert_eq!(svc.metrics().counter("cache.evictions"), st.evictions);
 }
 
+/// One named request for the asymmetric/stepped merge traces.
+fn asym_request(
+    a: &Arc<gsem::sparse::Csr>,
+    name: &str,
+    seed: u64,
+    fmt: FormatChoice,
+) -> SolveRequest {
+    let solver = if name.starts_with("gmres") {
+        SolverKind::Gmres
+    } else {
+        SolverKind::Cg
+    };
+    let mut r = SolveRequest::new(name, Arc::clone(a), solver, fmt);
+    r.rhs = RhsSpec::Random(seed);
+    r
+}
+
+#[test]
+fn staggered_gmres_trace_merges_and_matches_dispatch() {
+    let a = Arc::new(convdiff2d(8, 8, 4.0, 2.0));
+    let svc = SolverService::new(
+        ServiceConfig::new().workers(2).window(Duration::from_secs(30)).batch_width(4),
+    );
+    let reqs: Vec<SolveRequest> = (0..4)
+        .map(|i| {
+            asym_request(&a, &format!("gmres-{i}"), i, FormatChoice::fixed(ValueFormat::Fp64))
+        })
+        .collect();
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            let t = svc.submit_request(r.clone());
+            std::thread::sleep(Duration::from_micros(300));
+            t
+        })
+        .collect();
+    for (r, t) in reqs.iter().zip(tickets) {
+        let got = t.wait();
+        let single = gsem::coordinator::jobs::dispatch(r);
+        assert_eq!(got.outcome.iters, single.outcome.iters, "{}", r.name);
+        assert_eq!(got.outcome.x, single.outcome.x, "{}", r.name);
+        assert_eq!(got.relres_fp64.to_bits(), single.relres_fp64.to_bits(), "{}", r.name);
+    }
+    assert!(svc.metrics().counter("intake.merged") > 0, "staggered GMRES must merge");
+    assert_eq!(svc.metrics().counter("pool.batched_gmres"), 1);
+    assert_eq!(svc.metrics().counter("pool.batched_rhs"), 4);
+}
+
+#[test]
+fn staggered_stepped_trace_merges_and_matches_dispatch() {
+    let a = Arc::new(poisson2d(9, 9));
+    let params = SteppedParams::cg_paper().scaled(0.01);
+    let mk_all = || -> Vec<SolveRequest> {
+        let mut reqs: Vec<SolveRequest> = (0..3)
+            .map(|i| {
+                asym_request(&a, &format!("cg-st-{i}"), i, FormatChoice::Stepped { k: 8, params })
+            })
+            .collect();
+        // a differently tuned stepped request must NOT join the block
+        reqs.push(asym_request(
+            &a,
+            "cg-st-other",
+            9,
+            FormatChoice::Stepped { k: 8, params: SteppedParams::cg_paper().scaled(0.02) },
+        ));
+        reqs
+    };
+    for cache_bytes in [None, Some(4 * 1024usize)] {
+        let mut cfg =
+            ServiceConfig::new().workers(2).window(Duration::from_secs(30)).batch_width(4);
+        if let Some(b) = cache_bytes {
+            cfg = cfg.cache_bytes(b);
+        }
+        let svc = SolverService::new(cfg);
+        let reqs = mk_all();
+        let tickets: Vec<_> = reqs
+            .iter()
+            .map(|r| {
+                let t = svc.submit_request(r.clone());
+                std::thread::sleep(Duration::from_micros(300));
+                t
+            })
+            .collect();
+        for (r, t) in reqs.iter().zip(tickets) {
+            let got = t.wait();
+            let single = gsem::coordinator::jobs::dispatch(r);
+            assert_eq!(got.format_label, "GSE-SEM", "{}", r.name);
+            assert_eq!(got.outcome.iters, single.outcome.iters, "{}", r.name);
+            assert_eq!(got.outcome.switches, single.outcome.switches, "{}", r.name);
+            assert_eq!(got.outcome.x, single.outcome.x, "{}", r.name);
+            assert_eq!(got.relres_fp64.to_bits(), single.relres_fp64.to_bits(), "{}", r.name);
+        }
+        // the three equal-params requests merged; the odd one ran alone
+        assert_eq!(svc.metrics().counter("intake.merged"), 3, "budget {cache_bytes:?}");
+        assert_eq!(svc.metrics().counter("pool.batched_stepped"), 1);
+        assert_eq!(svc.metrics().counter("pool.batched_rhs"), 3);
+        if cache_bytes.is_some() {
+            assert!(svc.registry().stats().evictions > 0, "tiny budget must evict");
+        }
+    }
+}
+
 #[test]
 fn new_counters_appear_in_metrics_report() {
     let svc = SolverService::manual(ServiceConfig::new().workers(2).cache_bytes(8 * 1024));
