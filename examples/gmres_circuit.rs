@@ -48,7 +48,12 @@ fn main() {
             let mut req = SolveRequest::new(label, Arc::clone(&arc), SolverKind::Gmres, fmt);
             req.rhs = RhsSpec::Random(1);
             req.max_iters = 3000;
-            let res = gsem::coordinator::jobs::dispatch(&req);
+            // keep breakdown rows in the table (the paper's "/" cells)
+            let res = match gsem::coordinator::jobs::dispatch(&req) {
+                Ok(r) => r,
+                Err(gsem::coordinator::ServiceError::Breakdown(b)) => *b,
+                Err(e) => panic!("{label}: {e}"),
+            };
             t.row(&[
                 label.to_string(),
                 res.outcome.iters.to_string(),

@@ -57,7 +57,7 @@ fn main() {
         SolverKind::Cg,
         FormatChoice::Stepped { k: 8, params: SteppedParams::cg_paper().scaled(0.02) },
     );
-    let res = gsem::coordinator::jobs::dispatch(&req);
+    let res = gsem::coordinator::jobs::dispatch(&req).expect("diffusion2d solves cleanly");
     println!(
         "\nstepped CG: converged={} iters={} relres(FP64)={:.2e} switches={:?}",
         res.outcome.converged, res.outcome.iters, res.relres_fp64, res.outcome.switches

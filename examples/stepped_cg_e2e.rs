@@ -49,7 +49,12 @@ fn main() {
         let mut req = SolveRequest::new(label, Arc::clone(&arc), SolverKind::Cg, fmt);
         req.rhs = RhsSpec::AxOnes;
         req.max_iters = 4000;
-        let res = gsem::coordinator::jobs::dispatch(&req);
+        // keep breakdown rows in the table (the paper's "/" cells)
+        let res = match gsem::coordinator::jobs::dispatch(&req) {
+            Ok(r) => r,
+            Err(gsem::coordinator::ServiceError::Breakdown(b)) => *b,
+            Err(e) => panic!("{label}: {e}"),
+        };
         table.row(&[
             label.to_string(),
             res.outcome.iters.to_string(),

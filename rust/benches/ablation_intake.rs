@@ -60,12 +60,16 @@ fn run_trace(
                 FormatChoice::fixed(ValueFormat::Fp64),
             );
             spec.rhs = RhsSpec::Random(i as u64);
-            let ticket = svc.submit(spec);
+            let ticket = svc.submit(spec).expect("unbounded intake admits the whole trace");
             std::thread::sleep(stagger);
             ticket
         })
         .collect();
-    let solved = tickets.into_iter().map(|t| t.wait()).filter(|r| r.outcome.converged).count();
+    let solved = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("trace solves cleanly"))
+        .filter(|r| r.outcome.converged)
+        .count();
     let wall_s = timer.elapsed_s();
     assert_eq!(solved, requests, "{name}: every request must converge");
     let m = svc.metrics();

@@ -90,7 +90,13 @@ pub fn run_solver_cell(
             }
         }
     };
-    gsem::coordinator::jobs::dispatch(&req)
+    // bench cells chart breakdowns as data points (the paper's "/"
+    // rows), so redeem them from the typed error surface
+    match gsem::coordinator::jobs::dispatch(&req) {
+        Ok(r) => r,
+        Err(gsem::coordinator::ServiceError::Breakdown(b)) => *b,
+        Err(e) => panic!("{name}: unexpected dispatch error: {e}"),
+    }
 }
 
 /// Geometric-mean speedup helper skipping non-positive entries.

@@ -1,0 +1,142 @@
+//! Typed serving-path errors — the coordinator's failure taxonomy.
+//!
+//! Every way a submitted solve can fail to produce a clean result maps
+//! onto one [`ServiceError`] variant, so callers match on *what
+//! happened* (shed vs. expired vs. solver breakdown) instead of parsing
+//! strings:
+//!
+//! * [`ServiceError::Overloaded`] — the bounded intake queue was full;
+//!   the request was shed at submit time (admission control).
+//! * [`ServiceError::DeadlineExceeded`] — the ticket's deadline passed
+//!   before its group flushed, or mid-solve (the column deflated out of
+//!   its block).
+//! * [`ServiceError::Cancelled`] — [`SolveTicket::cancel`] fired, either
+//!   before the flush or mid-solve (column deflation).
+//! * [`ServiceError::Breakdown`] — the solver hit non-finite values
+//!   (the paper's "/" rows); carries the partial [`SolveResult`] so the
+//!   iteration count / history stay inspectable.
+//! * [`ServiceError::Registry`] — an operator registry / spill-layer
+//!   failure, wrapping the [`crate::util::error::Error`] chain.
+//! * [`ServiceError::Shutdown`] — the service dropped before answering.
+//!
+//! [`SolveTicket::cancel`]: super::intake::SolveTicket::cancel
+
+use super::jobs::SolveResult;
+use std::fmt;
+
+/// Typed failure of a serving-path solve. See the module docs for the
+/// taxonomy.
+#[derive(Clone, Debug)]
+pub enum ServiceError {
+    /// Admission control shed the request: the bounded intake queue
+    /// held `depth` pending solves and accepted no more.
+    Overloaded {
+        /// Queue depth at the moment of rejection.
+        depth: usize,
+    },
+    /// The ticket's deadline expired before a result was produced.
+    DeadlineExceeded {
+        /// Request name, for attribution in logs.
+        name: String,
+    },
+    /// The ticket was cancelled via `SolveTicket::cancel`.
+    Cancelled {
+        /// Request name, for attribution in logs.
+        name: String,
+    },
+    /// The solver broke down (non-finite values — FP16 overflow, a
+    /// degenerate recurrence). The boxed result carries the partial
+    /// outcome: iterations completed, residual history, last iterate.
+    Breakdown(Box<SolveResult>),
+    /// Operator registry / spill failure.
+    Registry(crate::util::error::Error),
+    /// The service shut down before this ticket was answered.
+    Shutdown,
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Overloaded { depth } => {
+                write!(f, "overloaded: intake queue full at depth {depth}")
+            }
+            Self::DeadlineExceeded { name } => write!(f, "deadline exceeded: {name}"),
+            Self::Cancelled { name } => write!(f, "cancelled: {name}"),
+            Self::Breakdown(r) => write!(
+                f,
+                "solver breakdown: {} [{}] after {} iters",
+                r.name, r.format_label, r.outcome.iters
+            ),
+            Self::Registry(e) => write!(f, "registry: {e:#}"),
+            Self::Shutdown => write!(f, "service shut down before answering"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+impl From<crate::util::error::Error> for ServiceError {
+    fn from(e: crate::util::error::Error) -> Self {
+        Self::Registry(e)
+    }
+}
+
+/// Map a raw solver result onto the typed surface: breakdowns (the only
+/// in-band failure a solve itself produces) become
+/// [`ServiceError::Breakdown`], everything else passes through — a
+/// non-*converged* run is still an `Ok` result (the caller reads
+/// `outcome.converged`), exactly as the paper's tables report stalled
+/// runs alongside converged ones.
+pub(crate) fn classify(res: SolveResult) -> Result<SolveResult, ServiceError> {
+    if res.outcome.broke_down {
+        Err(ServiceError::Breakdown(Box::new(res)))
+    } else {
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::SolveOutcome;
+
+    fn result(broke_down: bool) -> SolveResult {
+        SolveResult {
+            name: "t".into(),
+            solver: super::super::jobs::SolverKind::Cg,
+            format_label: "FP64".into(),
+            outcome: SolveOutcome {
+                converged: false,
+                iters: 3,
+                relres: 0.5,
+                history: vec![],
+                switches: vec![],
+                seconds: 0.0,
+                x: vec![],
+                broke_down,
+            },
+            relres_fp64: 0.5,
+        }
+    }
+
+    #[test]
+    fn classify_splits_breakdown_from_stall() {
+        assert!(classify(result(false)).is_ok());
+        match classify(result(true)) {
+            Err(ServiceError::Breakdown(b)) => assert_eq!(b.outcome.iters, 3),
+            other => panic!("expected Breakdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let e = ServiceError::Overloaded { depth: 7 };
+        assert!(e.to_string().contains("depth 7"));
+        let e = ServiceError::DeadlineExceeded { name: "req".into() };
+        assert!(e.to_string().contains("req"));
+        let e: ServiceError = crate::util::error::Error::msg("disk full").into();
+        assert!(e.to_string().contains("disk full"));
+        // the std::error::Error impl is object-safe
+        let _: &dyn std::error::Error = &e;
+    }
+}

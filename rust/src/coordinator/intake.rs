@@ -17,6 +17,28 @@
 //! [`crate::solvers::stepped::run_stepped_multi`] block sharing one
 //! precision ladder across per-column controllers.
 //!
+//! The serving path is hardened end to end, with every failure typed
+//! as a [`ServiceError`]:
+//!
+//! * **Admission control** — [`ServiceConfig::queue_depth`] bounds the
+//!   intake; a full queue sheds the submit with
+//!   [`ServiceError::Overloaded`] (counted in `intake.shed`) instead
+//!   of queuing forever.
+//! * **Deadlines & priorities** — [`SolveSpec::deadline_in`] /
+//!   [`SolveSpec::priority`] ride the spec. The flusher orders groups
+//!   highest-priority first (ties: oldest arrival), expired tickets
+//!   resolve with [`ServiceError::DeadlineExceeded`], and a deadline
+//!   passing *mid-solve* deflates just that column out of its running
+//!   block.
+//! * **Cancellation** — [`SolveTicket::cancel`] resolves the ticket
+//!   with [`ServiceError::Cancelled`]; an in-flight block deflates the
+//!   cancelled column while its siblings stay bitwise identical to
+//!   one-shot dispatch (`solvers::block`'s ctl contract).
+//! * **Operator spill** — [`ServiceConfig::spill_dir`] hands the
+//!   registry a directory where LRU-evicted operators are serialized;
+//!   a digest re-hit restores from disk instead of re-paying the
+//!   encode (`cache.spills` / `cache.restores` / `cache.restore_bytes`).
+//!
 //! Grouping is keyed on the [`MatrixHandle`]'s content digest (not
 //! `Arc` identity) plus the solver kind, the format fingerprint
 //! (`FormatChoice::group_key` — stepped controller params
@@ -26,9 +48,9 @@
 //! kernels are bit-for-bit per column (PR 2's contract, re-verified in
 //! `tests/service_parity.rs` and `tests/block_parity.rs`).
 //!
-//! [`ServiceConfig`] (builder) sets workers, window, batch width, and
-//! the registry's cache byte budget. Two driving modes share all the
-//! flush machinery:
+//! [`ServiceConfig`] (builder) sets workers, window, batch width,
+//! queue depth, the registry's cache byte budget and its spill
+//! directory. Two driving modes share all the flush machinery:
 //!
 //! * [`SolverService::new`] — spawns the background flusher thread
 //!   (the serving mode; `gsem serve` and the intake ablation use it);
@@ -37,26 +59,31 @@
 //!   submit-all-then-flush over a manual service.
 //!
 //! Intake activity surfaces in [`Metrics`] as `intake.submitted` /
-//! `intake.flushes` / `intake.merged` counters next to the registry's
-//! `cache.*` family.
+//! `intake.flushes` / `intake.merged` / `intake.shed` /
+//! `intake.cancelled` / `intake.deadline_expired` counters and the
+//! `intake.depth` gauge, next to the registry's `cache.*` family.
 
+use crate::coordinator::error::{classify, ServiceError};
 use crate::coordinator::jobs::{
-    dispatch_with_handle, solver_opts, FormatChoice, FormatKey, RhsSpec, SolveRequest,
-    SolveResult, SolverKind,
+    default_caps, dispatch_with_handle, solver_opts, FormatChoice, FormatKey, RhsSpec,
+    SolveRequest, SolveResult, SolverKind,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::{MatrixHandle, MatrixRegistry};
 use crate::formats::ValueFormat;
-use crate::solvers::bicgstab::bicgstab_solve_multi;
-use crate::solvers::cg::cg_solve_multi;
-use crate::solvers::gmres::gmres_solve_multi;
+use crate::solvers::bicgstab::bicgstab_solve_multi_ctl;
+use crate::solvers::block::{BlockCtl, ColumnExit};
+use crate::solvers::cg::cg_solve_multi_ctl;
+use crate::solvers::gmres::gmres_solve_multi_ctl;
 use crate::solvers::ladder::{CopyLadderOp, SwitchableOp};
-use crate::solvers::stepped::{run_stepped_multi, BlockSolver};
+use crate::solvers::stepped::{run_stepped_multi_ctl, BlockSolver};
 use crate::solvers::SolveOutcome;
 use crate::sparse::csr::{Csr, MatrixDigest};
 use crate::util::parallel;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -73,6 +100,13 @@ pub struct ServiceConfig {
     pub batch_width: usize,
     /// Registry byte budget (`None` = unbounded, the pool default).
     pub cache_bytes: Option<usize>,
+    /// Bound on pending intake requests (`None` = unbounded). A full
+    /// queue sheds further submits with [`ServiceError::Overloaded`].
+    pub queue_depth: Option<usize>,
+    /// Directory for the registry's operator spill: LRU-evicted
+    /// encodes are serialized here and restored on the next digest hit
+    /// (`None` = evictions just drop and rebuild).
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -82,6 +116,8 @@ impl Default for ServiceConfig {
             window: Duration::from_millis(5),
             batch_width: 32,
             cache_bytes: None,
+            queue_depth: None,
+            spill_dir: None,
         }
     }
 }
@@ -114,10 +150,27 @@ impl ServiceConfig {
         self.cache_bytes = Some(bytes);
         self
     }
+
+    /// Bound the intake queue: at most `n` requests pending at once,
+    /// further submits shed with [`ServiceError::Overloaded`].
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = Some(n.max(1));
+        self
+    }
+
+    /// Spill LRU-evicted operators into `dir` (created on first use)
+    /// and restore them on the next digest hit.
+    pub fn spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self
+    }
 }
 
-/// One solve request addressed by registry handle — the serving-path
-/// sibling of [`SolveRequest`] (which names its matrix by `Arc`).
+/// One solve request addressed by registry handle — since the serving
+/// redesign the **single owner** of a request's name / RHS / tolerance
+/// / iteration caps plus the serving-only `deadline` and `priority`
+/// fields ([`SolveRequest`] is the thin `Arc`-addressed shim kept for
+/// one-shot dispatch).
 #[derive(Clone, Debug)]
 pub struct SolveSpec {
     pub name: String,
@@ -127,25 +180,70 @@ pub struct SolveSpec {
     pub format: FormatChoice,
     pub tol: f64,
     pub max_iters: usize,
+    /// Absolute wall-clock deadline: past it the ticket resolves with
+    /// [`ServiceError::DeadlineExceeded`] — before the flush, or
+    /// mid-solve by deflating the column out of its block.
+    pub deadline: Option<Instant>,
+    /// Flush-order priority (higher runs first; default 0). Ties break
+    /// by arrival age, oldest first.
+    pub priority: i32,
 }
 
 impl SolveSpec {
-    /// Spec with the [`SolveRequest::new`] defaults (`AxOnes` RHS,
-    /// 1e-6 tolerance, solver-dependent iteration caps).
+    /// Spec with the dispatch defaults (`AxOnes` RHS, 1e-6 tolerance,
+    /// solver-dependent iteration caps, no deadline, priority 0).
     pub fn new(name: &str, matrix: MatrixHandle, solver: SolverKind, format: FormatChoice) -> Self {
-        let req = SolveRequest::new(name, Arc::clone(matrix.matrix()), solver, format);
+        let (tol, max_iters) = default_caps(solver);
         Self {
-            name: req.name,
+            name: name.to_string(),
             matrix,
-            rhs: req.rhs,
-            solver: req.solver,
-            format: req.format,
-            tol: req.tol,
-            max_iters: req.max_iters,
+            rhs: RhsSpec::AxOnes,
+            solver,
+            format,
+            tol,
+            max_iters,
+            deadline: None,
+            priority: 0,
         }
     }
 
-    /// The equivalent `Arc`-addressed request (dispatch plumbing).
+    /// Replace the right-hand side.
+    pub fn rhs(mut self, rhs: RhsSpec) -> Self {
+        self.rhs = rhs;
+        self
+    }
+
+    /// Replace the convergence tolerance.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Replace the iteration cap.
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Absolute deadline for this solve.
+    pub fn deadline_at(mut self, d: Instant) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Deadline `d` from now.
+    pub fn deadline_in(self, d: Duration) -> Self {
+        self.deadline_at(Instant::now() + d)
+    }
+
+    /// Flush-order priority (higher runs first).
+    pub fn priority(mut self, p: i32) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// The equivalent `Arc`-addressed request (dispatch plumbing;
+    /// deadline/priority are serving-path concerns and do not ride).
     pub(crate) fn to_request(&self) -> SolveRequest {
         SolveRequest {
             name: self.name.clone(),
@@ -161,30 +259,36 @@ impl SolveSpec {
 
 /// Receipt for a submitted solve; redeem with [`SolveTicket::wait`].
 pub struct SolveTicket {
-    rx: mpsc::Receiver<SolveResult>,
+    rx: mpsc::Receiver<Result<SolveResult, ServiceError>>,
+    cancel: Arc<AtomicBool>,
     /// the one-shot result was already handed out via `try_wait`
     answered: bool,
 }
 
 impl SolveTicket {
-    fn new(rx: mpsc::Receiver<SolveResult>) -> Self {
-        Self { rx, answered: false }
+    fn new(rx: mpsc::Receiver<Result<SolveResult, ServiceError>>, cancel: Arc<AtomicBool>) -> Self {
+        Self { rx, cancel, answered: false }
     }
 
-    /// Block until the service answers this request. Panics if the
-    /// one-shot result was already redeemed via
-    /// [`SolveTicket::try_wait`] (caller bug, not a service failure).
-    pub fn wait(self) -> SolveResult {
+    /// Block until the service answers this request: the solve result,
+    /// or the typed reason it never produced one (cancelled, expired,
+    /// broke down, service shut down). Panics if the one-shot result
+    /// was already redeemed via [`SolveTicket::try_wait`] (caller bug,
+    /// not a service failure).
+    pub fn wait(self) -> Result<SolveResult, ServiceError> {
         assert!(!self.answered, "ticket already redeemed via try_wait");
-        self.rx.recv().expect("service answers every ticket before shutdown")
+        match self.rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(ServiceError::Shutdown),
+        }
     }
 
     /// The result, if its flush already completed; `None` while the
     /// request is still pending, and also after the one result was
     /// already handed out (the channel is one-shot). A service that
-    /// died *without ever answering* panics (same contract as
-    /// [`SolveTicket::wait`]) instead of letting pollers spin forever.
-    pub fn try_wait(&mut self) -> Option<SolveResult> {
+    /// died *without ever answering* yields [`ServiceError::Shutdown`]
+    /// instead of letting pollers spin forever.
+    pub fn try_wait(&mut self) -> Option<Result<SolveResult, ServiceError>> {
         match self.rx.try_recv() {
             Ok(res) => {
                 self.answered = true;
@@ -193,22 +297,38 @@ impl SolveTicket {
             Err(mpsc::TryRecvError::Empty) => None,
             Err(mpsc::TryRecvError::Disconnected) if self.answered => None,
             Err(mpsc::TryRecvError::Disconnected) => {
-                panic!("service dropped this ticket without answering")
+                self.answered = true;
+                Some(Err(ServiceError::Shutdown))
             }
         }
+    }
+
+    /// Ask the service to abandon this solve. Before the flush the
+    /// ticket resolves with [`ServiceError::Cancelled`] without running
+    /// at all; mid-solve the column deflates out of its running block
+    /// (siblings stay bitwise identical to one-shot dispatch). A solve
+    /// that already finished keeps its result — cancel is best-effort,
+    /// never an error.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
     }
 }
 
 /// A queued request plus the channel its result travels back on.
 struct PendingSolve {
     spec: SolveSpec,
-    tx: mpsc::Sender<SolveResult>,
+    tx: mpsc::Sender<Result<SolveResult, ServiceError>>,
+    cancel: Arc<AtomicBool>,
+    /// submit time: the flusher's age tiebreak, oldest first.
+    arrived: Instant,
 }
 
 /// Accumulates staggered submissions until the flusher takes them.
 struct IntakeQueue {
     state: Mutex<IntakeState>,
     arrivals: Condvar,
+    /// admission bound (`None` = unbounded).
+    depth: Option<usize>,
 }
 
 struct IntakeState {
@@ -219,7 +339,7 @@ struct IntakeState {
 }
 
 impl IntakeQueue {
-    fn new() -> Self {
+    fn new(depth: Option<usize>) -> Self {
         Self {
             state: Mutex::new(IntakeState {
                 pending: Vec::new(),
@@ -227,16 +347,25 @@ impl IntakeQueue {
                 shutdown: false,
             }),
             arrivals: Condvar::new(),
+            depth,
         }
     }
 
-    fn push(&self, p: PendingSolve) {
+    /// Admit one request, or shed it: `Err(depth)` when the queue is
+    /// already holding `depth >= bound` pending solves.
+    fn push(&self, p: PendingSolve) -> Result<(), usize> {
         let mut st = self.state.lock().unwrap();
+        if let Some(bound) = self.depth {
+            if st.pending.len() >= bound {
+                return Err(st.pending.len());
+            }
+        }
         if st.pending.is_empty() {
             st.first_arrival = Some(Instant::now());
         }
         st.pending.push(p);
         self.arrivals.notify_all();
+        Ok(())
     }
 
     /// Drain everything pending right now (manual flush).
@@ -293,6 +422,8 @@ impl IntakeQueue {
 /// equal matrices behind distinct `Arc`s batch together (pointer keys
 /// could not). Every solver/format combination is groupable: CG,
 /// GMRES and BiCGSTAB over fixed formats, plus both stepped ladders.
+/// Deadline and priority do **not** participate — they shape when a
+/// group runs and when a column leaves it, not the arithmetic.
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct GroupKey {
     digest: MatrixDigest,
@@ -312,6 +443,19 @@ fn group_key(spec: &SolveSpec) -> GroupKey {
     }
 }
 
+/// Flush-order policy: highest max-priority group first, ties broken
+/// by earliest arrival — urgent traffic runs first, starved groups
+/// still drain in age order behind it.
+fn order_groups(groups: &mut [Vec<PendingSolve>]) {
+    fn pri(g: &[PendingSolve]) -> i32 {
+        g.iter().map(|p| p.spec.priority).max().unwrap_or(0)
+    }
+    fn age(g: &[PendingSolve]) -> Option<Instant> {
+        g.iter().map(|p| p.arrived).min()
+    }
+    groups.sort_by(|ga, gb| pri(gb).cmp(&pri(ga)).then_with(|| age(ga).cmp(&age(gb))));
+}
+
 struct ServiceInner {
     workers: usize,
     window: Duration,
@@ -328,11 +472,12 @@ impl ServiceInner {
         }
     }
 
-    /// Group one drained batch and solve it on the worker queue,
-    /// answering every ticket. Results are routed by per-ticket
-    /// channels, so callers see submission order regardless of how
-    /// groups interleave.
+    /// Group one drained batch, order the groups by priority/age, and
+    /// solve them on the worker queue, answering every ticket. Results
+    /// are routed by per-ticket channels, so callers see submission
+    /// order regardless of how groups interleave.
     fn run_flush(&self, batch: Vec<PendingSolve>) {
+        self.metrics.gauge_set("intake.depth", self.intake.len() as u64);
         if batch.is_empty() {
             return;
         }
@@ -352,31 +497,66 @@ impl ServiceInner {
         if merged > 0 {
             self.metrics.add("intake.merged", merged);
         }
+        order_groups(&mut groups);
         parallel::run_queue(self.workers, groups, |g| self.run_group(g));
+    }
+
+    /// Answer a ticket that never ran (triage or mid-block deflation).
+    fn resolve_dead(&self, p: PendingSolve, exit: ColumnExit) {
+        let name = p.spec.name;
+        let err = match exit {
+            ColumnExit::Cancelled => {
+                self.metrics.incr("intake.cancelled");
+                ServiceError::Cancelled { name }
+            }
+            ColumnExit::DeadlineExceeded => {
+                self.metrics.incr("intake.deadline_expired");
+                ServiceError::DeadlineExceeded { name }
+            }
+            ColumnExit::Completed => unreachable!("completed columns carry results"),
+        };
+        let _ = p.tx.send(Err(err));
     }
 
     /// Solve one group: singletons dispatch normally; larger groups run
     /// as one multi-RHS block — CG / GMRES / BiCGSTAB over the registry
     /// operator for fixed formats, or a stepped block over one shared
-    /// ladder ([`run_stepped_multi`]) for the two stepped modes.
-    /// Per-column results are bit-for-bit what individual dispatch
-    /// would produce.
+    /// ladder ([`crate::solvers::stepped::run_stepped_multi`]) for the
+    /// two stepped modes. Cancelled or already-expired tickets are
+    /// triaged out first; the survivors' per-column results are
+    /// bit-for-bit what individual dispatch would produce, even when a
+    /// sibling column deflates mid-solve.
     fn run_group(&self, group: Vec<PendingSolve>) {
-        if group.len() == 1 {
-            let p = group.into_iter().next().unwrap();
+        // pre-solve triage: answer dead tickets without solver time
+        let now = Instant::now();
+        let mut live: Vec<PendingSolve> = Vec::with_capacity(group.len());
+        for p in group {
+            if p.cancel.load(Ordering::Relaxed) {
+                self.resolve_dead(p, ColumnExit::Cancelled);
+            } else if p.spec.deadline.is_some_and(|d| now >= d) {
+                self.resolve_dead(p, ColumnExit::DeadlineExceeded);
+            } else {
+                live.push(p);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        if live.len() == 1 {
+            let p = live.into_iter().next().unwrap();
             let req = p.spec.to_request();
             let res =
                 dispatch_with_handle(&req, &p.spec.matrix, &self.registry, Some(&self.metrics));
-            let _ = p.tx.send(res);
+            let _ = p.tx.send(classify(res));
             return;
         }
         let (solver, tol, max_iters) =
-            (group[0].spec.solver, group[0].spec.tol, group[0].spec.max_iters);
-        let handle = group[0].spec.matrix.clone();
-        let nrhs = group.len();
+            (live[0].spec.solver, live[0].spec.tol, live[0].spec.max_iters);
+        let handle = live[0].spec.matrix.clone();
+        let nrhs = live.len();
         let n = handle.matrix().nrows;
         let mut bs = vec![0.0; n * nrhs];
-        for (j, p) in group.iter().enumerate() {
+        for (j, p) in live.iter().enumerate() {
             bs[j * n..(j + 1) * n].copy_from_slice(&p.spec.rhs.build(handle.matrix()));
         }
         self.metrics.incr("pool.batched_groups");
@@ -386,55 +566,73 @@ impl ServiceInner {
             SolverKind::Gmres => "pool.batched_gmres",
             SolverKind::Bicgstab => "pool.batched_bicgstab",
         });
+        // per-column cancel flags and deadlines, polled between apply
+        // rounds so a triggered column deflates out of the block
+        let ctl = BlockCtl::new(
+            live.iter().map(|p| Some(Arc::clone(&p.cancel))).collect(),
+            live.iter().map(|p| p.spec.deadline).collect(),
+        );
         // the exact caps single dispatch would hand the solver (shared
         // mapping — see jobs::solver_opts)
         let block_solver = solver_opts(solver, tol, max_iters);
-        let (outs, label): (Vec<SolveOutcome>, String) = match &group[0].spec.format {
-            FormatChoice::Fixed { format, k } => {
-                let op = self.registry.operator(&handle, *format, *k, Some(&self.metrics));
-                let outs = match &block_solver {
-                    BlockSolver::Cg(o) => cg_solve_multi(op.as_ref(), &bs, nrhs, o),
-                    BlockSolver::Gmres(o) => gmres_solve_multi(op.as_ref(), &bs, nrhs, o),
-                    BlockSolver::Bicgstab(o) => bicgstab_solve_multi(op.as_ref(), &bs, nrhs, o),
-                };
-                (outs, format.label().to_string())
-            }
-            FormatChoice::Stepped { k, params } => {
-                self.metrics.incr("pool.batched_stepped");
-                let g = self.registry.gse(&handle, *k, Some(&self.metrics));
-                let ladder = SwitchableOp::new(g);
-                let outs = run_stepped_multi(&ladder, &bs, nrhs, *params, &block_solver);
-                (outs, "GSE-SEM".to_string())
-            }
-            FormatChoice::SteppedCopy { params } => {
-                self.metrics.incr("pool.batched_stepped");
-                let lo =
-                    self.registry.operator(&handle, ValueFormat::Fp32, 0, Some(&self.metrics));
-                let hi =
-                    self.registry.operator(&handle, ValueFormat::Fp64, 0, Some(&self.metrics));
-                let ladder = CopyLadderOp::new(lo, hi);
-                let outs = run_stepped_multi(&ladder, &bs, nrhs, *params, &block_solver);
-                (outs, "FP32->FP64".to_string())
-            }
-        };
+        let (outs, exits, label): (Vec<SolveOutcome>, Vec<ColumnExit>, String) =
+            match &live[0].spec.format {
+                FormatChoice::Fixed { format, k } => {
+                    let op = self.registry.operator(&handle, *format, *k, Some(&self.metrics));
+                    let (outs, exits) = match &block_solver {
+                        BlockSolver::Cg(o) => cg_solve_multi_ctl(op.as_ref(), &bs, nrhs, o, &ctl),
+                        BlockSolver::Gmres(o) => {
+                            gmres_solve_multi_ctl(op.as_ref(), &bs, nrhs, o, &ctl)
+                        }
+                        BlockSolver::Bicgstab(o) => {
+                            bicgstab_solve_multi_ctl(op.as_ref(), &bs, nrhs, o, &ctl)
+                        }
+                    };
+                    (outs, exits, format.label().to_string())
+                }
+                FormatChoice::Stepped { k, params } => {
+                    self.metrics.incr("pool.batched_stepped");
+                    let g = self.registry.gse(&handle, *k, Some(&self.metrics));
+                    let ladder = SwitchableOp::new(g);
+                    let (outs, exits) =
+                        run_stepped_multi_ctl(&ladder, &bs, nrhs, *params, &block_solver, &ctl);
+                    (outs, exits, "GSE-SEM".to_string())
+                }
+                FormatChoice::SteppedCopy { params } => {
+                    self.metrics.incr("pool.batched_stepped");
+                    let lo =
+                        self.registry.operator(&handle, ValueFormat::Fp32, 0, Some(&self.metrics));
+                    let hi =
+                        self.registry.operator(&handle, ValueFormat::Fp64, 0, Some(&self.metrics));
+                    let ladder = CopyLadderOp::new(lo, hi);
+                    let (outs, exits) =
+                        run_stepped_multi_ctl(&ladder, &bs, nrhs, *params, &block_solver, &ctl);
+                    (outs, exits, "FP32->FP64".to_string())
+                }
+            };
         let fp64 = self.registry.operator(&handle, ValueFormat::Fp64, 0, Some(&self.metrics));
-        for (j, (p, outcome)) in group.into_iter().zip(outs).enumerate() {
+        for (j, ((p, outcome), exit)) in live.into_iter().zip(outs).zip(exits).enumerate() {
+            if exit != ColumnExit::Completed {
+                self.resolve_dead(p, exit);
+                continue;
+            }
             let b = &bs[j * n..(j + 1) * n];
             let relres_fp64 = crate::solvers::true_relres(fp64.as_ref(), &outcome.x, b);
-            let _ = p.tx.send(SolveResult {
+            let _ = p.tx.send(classify(SolveResult {
                 name: p.spec.name,
                 solver: p.spec.solver,
                 format_label: label.clone(),
                 outcome,
                 relres_fp64,
-            });
+            }));
         }
     }
 }
 
 /// Long-lived serving front door: a content-addressed
-/// [`MatrixRegistry`], a windowed intake queue, grouping, and a
-/// worker queue behind one `submit -> ticket` API (see module docs).
+/// [`MatrixRegistry`] (optionally spill-backed), a bounded windowed
+/// intake queue, grouping, and a worker queue behind one
+/// `submit -> ticket` API with a typed error surface (see module docs).
 pub struct SolverService {
     inner: Arc<ServiceInner>,
     flusher: Option<thread::JoinHandle<()>>,
@@ -454,17 +652,17 @@ impl SolverService {
     }
 
     fn build(cfg: ServiceConfig, windowed: bool) -> Self {
-        let registry = Arc::new(match cfg.cache_bytes {
-            Some(budget) => MatrixRegistry::with_budget(budget),
-            None => MatrixRegistry::new(),
-        });
+        let registry = Arc::new(MatrixRegistry::with_options(
+            cfg.cache_bytes.unwrap_or(usize::MAX),
+            cfg.spill_dir.clone(),
+        ));
         let inner = Arc::new(ServiceInner {
             workers: cfg.workers.max(1),
             window: cfg.window,
             batch_width: cfg.batch_width.max(1),
             registry,
             metrics: Metrics::new(),
-            intake: IntakeQueue::new(),
+            intake: IntakeQueue::new(cfg.queue_depth),
         });
         let flusher = if windowed {
             let thread_inner = Arc::clone(&inner);
@@ -487,16 +685,29 @@ impl SolverService {
         self.inner.registry.register(a)
     }
 
-    /// Enqueue a request; returns immediately with its ticket.
-    pub fn submit(&self, spec: SolveSpec) -> SolveTicket {
+    /// Enqueue a request; returns immediately with its ticket, or
+    /// sheds it with [`ServiceError::Overloaded`] when the bounded
+    /// queue is full (counted in `intake.shed`).
+    pub fn submit(&self, spec: SolveSpec) -> Result<SolveTicket, ServiceError> {
         let (tx, rx) = mpsc::channel();
-        self.inner.metrics.incr("intake.submitted");
-        self.inner.intake.push(PendingSolve { spec, tx });
-        SolveTicket::new(rx)
+        let cancel = Arc::new(AtomicBool::new(false));
+        let pending =
+            PendingSolve { spec, tx, cancel: Arc::clone(&cancel), arrived: Instant::now() };
+        match self.inner.intake.push(pending) {
+            Ok(()) => {
+                self.inner.metrics.incr("intake.submitted");
+                self.inner.metrics.gauge_set("intake.depth", self.inner.intake.len() as u64);
+                Ok(SolveTicket::new(rx, cancel))
+            }
+            Err(depth) => {
+                self.inner.metrics.incr("intake.shed");
+                Err(ServiceError::Overloaded { depth })
+            }
+        }
     }
 
     /// Convenience: register the request's matrix and submit.
-    pub fn submit_request(&self, req: SolveRequest) -> SolveTicket {
+    pub fn submit_request(&self, req: SolveRequest) -> Result<SolveTicket, ServiceError> {
         let matrix = self.inner.registry.register(&req.a);
         self.submit(SolveSpec {
             name: req.name,
@@ -506,6 +717,8 @@ impl SolverService {
             format: req.format,
             tol: req.tol,
             max_iters: req.max_iters,
+            deadline: None,
+            priority: 0,
         })
     }
 
@@ -523,8 +736,9 @@ impl SolverService {
         self.inner.intake.len()
     }
 
-    /// Service-lifetime counters: intake flushes/merges, cache
-    /// hits/misses/evictions/bytes, multi-RHS groups formed.
+    /// Service-lifetime counters: intake flushes/merges/sheds, cache
+    /// hits/misses/evictions/spills/restores/bytes, multi-RHS groups
+    /// formed.
     pub fn metrics(&self) -> &Metrics {
         &self.inner.metrics
     }
@@ -559,14 +773,8 @@ mod tests {
     use crate::sparse::gen::poisson::poisson2d;
 
     fn cg_spec(svc: &SolverService, a: &Arc<Csr>, name: &str, seed: u64) -> SolveSpec {
-        let mut spec = SolveSpec::new(
-            name,
-            svc.register(a),
-            SolverKind::Cg,
-            FormatChoice::fixed(ValueFormat::Fp64),
-        );
-        spec.rhs = RhsSpec::Random(seed);
-        spec
+        let fmt = FormatChoice::fixed(ValueFormat::Fp64);
+        SolveSpec::new(name, svc.register(a), SolverKind::Cg, fmt).rhs(RhsSpec::Random(seed))
     }
 
     #[test]
@@ -574,12 +782,12 @@ mod tests {
         let svc = SolverService::manual(ServiceConfig::new().workers(2));
         let a = Arc::new(poisson2d(8, 8));
         let tickets: Vec<SolveTicket> =
-            (0..5).map(|i| svc.submit(cg_spec(&svc, &a, &format!("t{i}"), i))).collect();
+            (0..5).map(|i| svc.submit(cg_spec(&svc, &a, &format!("t{i}"), i)).unwrap()).collect();
         assert_eq!(svc.pending(), 5);
         assert_eq!(svc.flush(), 5);
         assert_eq!(svc.pending(), 0);
         for (i, t) in tickets.into_iter().enumerate() {
-            let r = t.wait();
+            let r = t.wait().unwrap();
             assert_eq!(r.name, format!("t{i}"));
             assert!(r.outcome.converged);
         }
@@ -597,9 +805,9 @@ mod tests {
         );
         let a = Arc::new(poisson2d(8, 8));
         let tickets: Vec<SolveTicket> =
-            (0..4).map(|i| svc.submit(cg_spec(&svc, &a, &format!("w{i}"), i))).collect();
+            (0..4).map(|i| svc.submit(cg_spec(&svc, &a, &format!("w{i}"), i)).unwrap()).collect();
         for t in tickets {
-            assert!(t.wait().outcome.converged);
+            assert!(t.wait().unwrap().outcome.converged);
         }
         assert_eq!(svc.metrics().counter("intake.submitted"), 4);
         assert!(svc.metrics().counter("intake.flushes") >= 1);
@@ -614,9 +822,9 @@ mod tests {
             ServiceConfig::new().workers(1).window(Duration::from_millis(10)).batch_width(64),
         );
         let a = Arc::new(poisson2d(6, 6));
-        let t = svc.submit(cg_spec(&svc, &a, "lone", 3));
+        let t = svc.submit(cg_spec(&svc, &a, "lone", 3)).unwrap();
         // width is far away: only the window can release this one
-        let r = t.wait();
+        let r = t.wait().unwrap();
         assert!(r.outcome.converged);
         assert_eq!(svc.metrics().counter("intake.flushes"), 1);
         assert_eq!(svc.metrics().counter("intake.merged"), 0);
@@ -627,11 +835,11 @@ mod tests {
         let svc = SolverService::manual(ServiceConfig::new().workers(2));
         let a = Arc::new(poisson2d(8, 8));
         let b = Arc::new(poisson2d(9, 9));
-        let ta = svc.submit(cg_spec(&svc, &a, "a", 1));
-        let tb = svc.submit(cg_spec(&svc, &b, "b", 2));
+        let ta = svc.submit(cg_spec(&svc, &a, "a", 1)).unwrap();
+        let tb = svc.submit(cg_spec(&svc, &b, "b", 2)).unwrap();
         svc.flush();
-        assert!(ta.wait().outcome.converged);
-        assert!(tb.wait().outcome.converged);
+        assert!(ta.wait().unwrap().outcome.converged);
+        assert!(tb.wait().unwrap().outcome.converged);
         assert_eq!(svc.metrics().counter("intake.merged"), 0);
         assert_eq!(svc.metrics().counter("pool.batched_groups"), 0);
     }
@@ -640,14 +848,14 @@ mod tests {
     fn try_wait_tracks_pending_answered_and_redeemed() {
         let svc = SolverService::manual(ServiceConfig::new().workers(1));
         let a = Arc::new(poisson2d(6, 6));
-        let mut ticket = svc.submit(cg_spec(&svc, &a, "poll", 4));
+        let mut ticket = svc.submit(cg_spec(&svc, &a, "poll", 4)).unwrap();
         // pending: not answered yet
         assert!(ticket.try_wait().is_none());
         svc.flush();
-        let res = ticket.try_wait().expect("flushed result is available");
+        let res = ticket.try_wait().expect("flushed result is available").unwrap();
         assert!(res.outcome.converged);
         // the one-shot result was redeemed: further polls are None, not
-        // a panic, even though the sender side is long gone
+        // an error, even though the sender side is long gone
         assert!(ticket.try_wait().is_none());
         assert!(ticket.try_wait().is_none());
     }
@@ -657,9 +865,83 @@ mod tests {
         let a = Arc::new(poisson2d(6, 6));
         let ticket = {
             let svc = SolverService::manual(ServiceConfig::new().workers(1));
-            svc.submit(cg_spec(&svc, &a, "straggler", 7))
+            svc.submit(cg_spec(&svc, &a, "straggler", 7)).unwrap()
             // dropped with the request still pending
         };
-        assert!(ticket.wait().outcome.converged);
+        assert!(ticket.wait().unwrap().outcome.converged);
+    }
+
+    #[test]
+    fn bounded_intake_sheds_with_typed_overload() {
+        let svc = SolverService::manual(ServiceConfig::new().workers(1).queue_depth(2));
+        let a = Arc::new(poisson2d(6, 6));
+        let t1 = svc.submit(cg_spec(&svc, &a, "a", 1)).unwrap();
+        let t2 = svc.submit(cg_spec(&svc, &a, "b", 2)).unwrap();
+        match svc.submit(cg_spec(&svc, &a, "c", 3)) {
+            Err(ServiceError::Overloaded { depth }) => assert_eq!(depth, 2),
+            other => panic!("expected Overloaded, got {:?}", other.map(|_| "ticket")),
+        }
+        assert_eq!(svc.metrics().counter("intake.shed"), 1);
+        assert_eq!(svc.metrics().counter("intake.submitted"), 2);
+        // admitted work is unaffected by the shed
+        svc.flush();
+        assert!(t1.wait().unwrap().outcome.converged);
+        assert!(t2.wait().unwrap().outcome.converged);
+        // the freed queue admits again
+        let t4 = svc.submit(cg_spec(&svc, &a, "d", 4)).unwrap();
+        svc.flush();
+        assert!(t4.wait().unwrap().outcome.converged);
+    }
+
+    #[test]
+    fn cancelled_before_flush_resolves_with_typed_error() {
+        let svc = SolverService::manual(ServiceConfig::new().workers(1));
+        let a = Arc::new(poisson2d(6, 6));
+        let t = svc.submit(cg_spec(&svc, &a, "gone", 1)).unwrap();
+        t.cancel();
+        svc.flush();
+        match t.wait() {
+            Err(ServiceError::Cancelled { name }) => assert_eq!(name, "gone"),
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        assert_eq!(svc.metrics().counter("intake.cancelled"), 1);
+    }
+
+    #[test]
+    fn expired_deadline_resolves_with_typed_error() {
+        let svc = SolverService::manual(ServiceConfig::new().workers(1));
+        let a = Arc::new(poisson2d(6, 6));
+        let spec = cg_spec(&svc, &a, "late", 1).deadline_at(Instant::now());
+        let t = svc.submit(spec).unwrap();
+        svc.flush();
+        match t.wait() {
+            Err(ServiceError::DeadlineExceeded { name }) => assert_eq!(name, "late"),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(svc.metrics().counter("intake.deadline_expired"), 1);
+    }
+
+    #[test]
+    fn groups_order_by_priority_then_age() {
+        let svc = SolverService::manual(ServiceConfig::new().workers(1));
+        let a = Arc::new(poisson2d(6, 6));
+        let t0 = Instant::now();
+        let pend = |name: &str, pri: i32, arrived: Instant| {
+            let (tx, _rx) = mpsc::channel();
+            PendingSolve {
+                spec: cg_spec(&svc, &a, name, 0).priority(pri),
+                tx,
+                cancel: Arc::new(AtomicBool::new(false)),
+                arrived,
+            }
+        };
+        let mut groups = vec![
+            vec![pend("old-low", 0, t0)],
+            vec![pend("new-high", 5, t0 + Duration::from_millis(2))],
+            vec![pend("mid-low", 0, t0 + Duration::from_millis(1))],
+        ];
+        order_groups(&mut groups);
+        let names: Vec<&str> = groups.iter().map(|g| g[0].spec.name.as_str()).collect();
+        assert_eq!(names, ["new-high", "old-low", "mid-low"]);
     }
 }

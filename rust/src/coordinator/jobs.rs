@@ -14,7 +14,15 @@
 //! [`crate::solvers::gmres::gmres_solve_multi`] /
 //! [`crate::solvers::bicgstab::bicgstab_solve_multi`] /
 //! [`crate::solvers::stepped::run_stepped_multi`] siblings).
+//!
+//! Since the serving hardening, [`dispatch`] / [`dispatch_cached`] and
+//! [`SolverPool::run_batch`] return results typed by [`ServiceError`]:
+//! solver breakdowns surface as [`ServiceError::Breakdown`] (carrying
+//! the partial result) instead of an `Ok` the caller must inspect for
+//! `broke_down`, and pooled batches can also report shed, cancelled or
+//! expired tickets.
 
+use crate::coordinator::error::{classify, ServiceError};
 use crate::coordinator::intake::{ServiceConfig, SolverService};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::{build_fixed_operator, MatrixHandle, MatrixRegistry};
@@ -172,7 +180,26 @@ impl FormatChoice {
     }
 }
 
-/// One solve job.
+/// Default `(tol, max_iters)` caps for one solver kind — the single
+/// source shared by [`SolveRequest::new`] and the serving path's
+/// [`crate::coordinator::intake::SolveSpec::new`], so the two request
+/// types can never drift apart.
+pub(crate) fn default_caps(solver: SolverKind) -> (f64, usize) {
+    let max_iters = match solver {
+        SolverKind::Cg | SolverKind::Bicgstab => 5000,
+        SolverKind::Gmres => 15000,
+    };
+    (1e-6, max_iters)
+}
+
+/// One solve job, addressed by `Arc` — the thin legacy shim kept for
+/// one-shot [`dispatch`] and `SolverPool::run_batch` callers.
+/// Migration note: the serving path's
+/// [`crate::coordinator::intake::SolveSpec`] is the single owner of a
+/// request's name / RHS / tolerance / caps (plus deadline and
+/// priority); prefer it when talking to a
+/// [`crate::coordinator::intake::SolverService`] — this type survives
+/// as the `Arc`-addressed front for registry-less dispatch.
 #[derive(Clone, Debug)]
 pub struct SolveRequest {
     pub name: String,
@@ -186,18 +213,8 @@ pub struct SolveRequest {
 
 impl SolveRequest {
     pub fn new(name: &str, a: Arc<Csr>, solver: SolverKind, format: FormatChoice) -> Self {
-        Self {
-            name: name.to_string(),
-            a,
-            rhs: RhsSpec::AxOnes,
-            solver,
-            format,
-            tol: 1e-6,
-            max_iters: match solver {
-                SolverKind::Cg | SolverKind::Bicgstab => 5000,
-                SolverKind::Gmres => 15000,
-            },
-        }
+        let (tol, max_iters) = default_caps(solver);
+        Self { name: name.to_string(), a, rhs: RhsSpec::AxOnes, solver, format, tol, max_iters }
     }
 }
 
@@ -218,23 +235,24 @@ pub struct SolveResult {
 /// share encodes with pooled solves in the same process instead of
 /// rebuilding operators from scratch per call. Results are identical
 /// to an uncached build (the registry returns exactly the operator it
-/// would construct).
-pub fn dispatch(req: &SolveRequest) -> SolveResult {
+/// would construct); a solver breakdown comes back as
+/// [`ServiceError::Breakdown`] carrying the partial result.
+pub fn dispatch(req: &SolveRequest) -> Result<SolveResult, ServiceError> {
     dispatch_cached(req, Some(MatrixRegistry::global()), None)
 }
 
 /// Run one request, reusing encoded operators from `registry` (when
 /// given) and reporting cache/solve counters into `metrics` (when
-/// given).
+/// given). Breakdowns surface as [`ServiceError::Breakdown`].
 pub fn dispatch_cached(
     req: &SolveRequest,
     registry: Option<&MatrixRegistry>,
     metrics: Option<&Metrics>,
-) -> SolveResult {
-    match registry {
+) -> Result<SolveResult, ServiceError> {
+    classify(match registry {
         Some(reg) => dispatch_with_handle(req, &reg.register(&req.a), reg, metrics),
         None => dispatch_inner(req, None, metrics),
-    }
+    })
 }
 
 /// Registry-backed dispatch for a caller that already digested the
@@ -370,11 +388,13 @@ impl SolverPool {
     }
 
     /// Run a batch, preserving input order: submit everything into the
-    /// service's intake, flush once, wait the tickets.
-    pub fn run_batch(&self, reqs: Vec<SolveRequest>) -> Vec<SolveResult> {
+    /// service's intake, flush once, wait the tickets. Each slot is the
+    /// job's result or the typed [`ServiceError`] that kept it from
+    /// producing one (a breakdown, or — under a bounded queue — a shed).
+    pub fn run_batch(&self, reqs: Vec<SolveRequest>) -> Vec<Result<SolveResult, ServiceError>> {
         let tickets: Vec<_> = reqs.into_iter().map(|r| self.svc.submit_request(r)).collect();
         self.svc.flush();
-        tickets.into_iter().map(|t| t.wait()).collect()
+        tickets.into_iter().map(|t| t.and_then(|t| t.wait())).collect()
     }
 }
 
@@ -390,7 +410,7 @@ mod tests {
         let a = Arc::new(poisson2d(10, 10));
         let fmt = FormatChoice::fixed(ValueFormat::Fp64);
         let req = SolveRequest::new("p", a, SolverKind::Cg, fmt);
-        let res = dispatch(&req);
+        let res = dispatch(&req).unwrap();
         assert!(res.outcome.converged);
         assert!(res.relres_fp64 < 1e-6);
         assert_eq!(res.format_label, "FP64");
@@ -405,7 +425,7 @@ mod tests {
             SolverKind::Gmres,
             FormatChoice::fixed(ValueFormat::GseSem(Precision::Head)),
         );
-        let res = dispatch(&req);
+        let res = dispatch(&req).unwrap();
         // head-only decode still converges on this well-conditioned system
         assert!(res.outcome.converged);
     }
@@ -419,7 +439,7 @@ mod tests {
             SolverKind::Cg,
             FormatChoice::Stepped { k: 8, params: SteppedParams::cg_paper().scaled(0.01) },
         );
-        let res = dispatch(&req);
+        let res = dispatch(&req).unwrap();
         assert_eq!(res.format_label, "GSE-SEM");
         assert!(res.outcome.converged);
     }
@@ -433,7 +453,7 @@ mod tests {
             SolverKind::Cg,
             FormatChoice::SteppedCopy { params: SteppedParams::cg_paper().scaled(0.01) },
         );
-        let res = dispatch(&req);
+        let res = dispatch(&req).unwrap();
         assert_eq!(res.format_label, "FP32->FP64");
         assert!(res.outcome.converged, "relres={}", res.relres_fp64);
     }
@@ -450,9 +470,9 @@ mod tests {
             FormatChoice::fixed(ValueFormat::GseSem(Precision::Full)),
         );
         req.rhs = RhsSpec::Random(5);
-        let uncached = dispatch_cached(&req, None, None);
+        let uncached = dispatch_cached(&req, None, None).unwrap();
         let reg = MatrixRegistry::new();
-        let cached = dispatch_cached(&req, Some(&reg), None);
+        let cached = dispatch_cached(&req, Some(&reg), None).unwrap();
         assert_eq!(uncached.outcome.iters, cached.outcome.iters);
         assert_eq!(uncached.outcome.x, cached.outcome.x);
         assert_eq!(uncached.relres_fp64.to_bits(), cached.relres_fp64.to_bits());
@@ -477,7 +497,7 @@ mod tests {
             .collect();
         let pool = SolverPool::new(2);
         let res = pool.run_batch(reqs);
-        assert!(res.iter().all(|r| r.outcome.converged));
+        assert!(res.iter().all(|r| r.as_ref().unwrap().outcome.converged));
         // equal-params stepped-copy jobs now merge into one block over
         // a single shared fp32/fp64 ladder: two rung encodes, and the
         // fp64 residual lookup hits the cached high rung
@@ -570,6 +590,7 @@ mod tests {
         let res = pool.run_batch(reqs);
         assert_eq!(res.len(), 6);
         for (i, r) in res.iter().enumerate() {
+            let r = r.as_ref().unwrap();
             assert_eq!(r.name, format!("job{i}"));
             assert!(r.outcome.converged);
         }
@@ -593,9 +614,10 @@ mod tests {
             r
         };
         let pool = SolverPool::new(2);
-        let batched = pool.run_batch(vec![mk(1), mk(2), mk(3)]);
+        let batched: Vec<SolveResult> =
+            pool.run_batch(vec![mk(1), mk(2), mk(3)]).into_iter().map(|r| r.unwrap()).collect();
         for (seed, br) in (1u64..=3).zip(&batched) {
-            let single = dispatch(&mk(seed));
+            let single = dispatch(&mk(seed)).unwrap();
             assert_eq!(br.outcome.iters, single.outcome.iters, "seed {seed}");
             assert_eq!(br.outcome.x, single.outcome.x, "seed {seed}");
             assert_eq!(br.relres_fp64.to_bits(), single.relres_fp64.to_bits(), "seed {seed}");
@@ -621,7 +643,7 @@ mod tests {
             .collect();
         let pool = SolverPool::new(2);
         let res = pool.run_batch(reqs);
-        assert!(res.iter().all(|r| r.outcome.converged));
+        assert!(res.iter().all(|r| r.as_ref().unwrap().outcome.converged));
         assert_eq!(pool.metrics().counter("pool.batched_groups"), 1);
         assert_eq!(pool.metrics().counter("pool.batched_rhs"), 3);
         // and one fp64 operator served all three (plus the residual)

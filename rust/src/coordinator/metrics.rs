@@ -1,9 +1,76 @@
 //! Process-wide metrics registry: counters, gauges and timing
 //! histograms for the coordinator (solve counts, SpMV calls per format,
-//! precision switches, intake flushes, cache residency).
+//! precision switches, intake flushes / sheds, cache residency and
+//! spill traffic). Besides the human-readable [`Metrics::report`],
+//! [`Metrics::snapshot`] exports everything as a plain
+//! [`MetricsSnapshot`] struct with a JSON renderer, so harnesses query
+//! counters instead of parsing the report string.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
+
+/// Aggregate of one timing series in a [`MetricsSnapshot`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimingSummary {
+    pub count: usize,
+    pub total_s: f64,
+    pub mean_s: f64,
+}
+
+/// Point-in-time copy of every counter, gauge and timing series — a
+/// plain data struct, safe to hold across solver runs and to serialize
+/// with [`MetricsSnapshot::to_json`].
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub timings: BTreeMap<String, TimingSummary>,
+}
+
+impl MetricsSnapshot {
+    /// Counter value (0 if absent) — mirrors [`Metrics::counter`].
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Render as a JSON object (hand-rolled: no serde in this offline
+    /// build). Keys are metric names; timings become
+    /// `{"count": n, "total_s": x, "mean_s": y}` objects.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut out = String::from("{\"counters\":{");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{}", esc(k), v));
+        }
+        out.push_str("},\"gauges\":{");
+        for (i, (k, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{}", esc(k), v));
+        }
+        out.push_str("},\"timings\":{");
+        for (i, (k, t)) in self.timings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{}\":{{\"count\":{},\"total_s\":{:.9},\"mean_s\":{:.9}}}",
+                esc(k),
+                t.count,
+                t.total_s,
+                t.mean_s
+            ));
+        }
+        out.push_str("}}");
+        out
+    }
+}
 
 /// Thread-safe metrics sink.
 #[derive(Default)]
@@ -55,6 +122,25 @@ impl Metrics {
             }
             _ => (0, 0.0, 0.0),
         }
+    }
+
+    /// Copy every counter, gauge and timing aggregate into a plain
+    /// [`MetricsSnapshot`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self.counters.lock().unwrap().clone();
+        let gauges = self.gauges.lock().unwrap().clone();
+        let timings = self
+            .timings
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| {
+                let total: f64 = v.iter().sum();
+                let mean = if v.is_empty() { 0.0 } else { total / v.len() as f64 };
+                (k.clone(), TimingSummary { count: v.len(), total_s: total, mean_s: mean })
+            })
+            .collect();
+        MetricsSnapshot { counters, gauges, timings }
     }
 
     /// Render a human-readable report.
@@ -123,6 +209,46 @@ mod tests {
         let r = m.report();
         assert!(r.contains("a") && r.contains("b"));
         assert!(r.contains("g") && r.contains("7 (gauge)"));
+    }
+
+    #[test]
+    fn snapshot_mirrors_live_state() {
+        let m = Metrics::new();
+        m.add("solves", 3);
+        m.gauge_set("cache.bytes", 99);
+        m.time("encode", 0.5);
+        m.time("encode", 1.5);
+        let s = m.snapshot();
+        assert_eq!(s.counter("solves"), 3);
+        assert_eq!(s.counter("missing"), 0);
+        assert_eq!(s.gauges["cache.bytes"], 99);
+        let t = s.timings["encode"];
+        assert_eq!(t.count, 2);
+        assert!((t.total_s - 2.0).abs() < 1e-12);
+        assert!((t.mean_s - 1.0).abs() < 1e-12);
+        // snapshots are detached copies
+        m.incr("solves");
+        assert_eq!(s.counter("solves"), 3);
+    }
+
+    #[test]
+    fn snapshot_json_is_well_formed() {
+        let m = Metrics::new();
+        m.incr("a.b");
+        m.gauge_set("g", 7);
+        m.time("t", 0.25);
+        let j = m.snapshot().to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"a.b\":1"));
+        assert!(j.contains("\"g\":7"));
+        assert!(j.contains("\"count\":1"));
+        // braces balance (cheap structural sanity without a parser)
+        let open = j.matches('{').count();
+        let close = j.matches('}').count();
+        assert_eq!(open, close);
+        // empty snapshot still renders all three sections
+        let empty = Metrics::new().snapshot().to_json();
+        assert_eq!(empty, "{\"counters\":{},\"gauges\":{},\"timings\":{}}");
     }
 
     #[test]

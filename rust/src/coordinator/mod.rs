@@ -1,19 +1,25 @@
 //! L3 coordinator (DESIGN.md §2): the paper's contribution is the
 //! numeric format + solver policy (L1/L2), so L3 is the serving layer —
-//! a solve-job model, a long-lived [`SolverService`] with windowed
-//! intake ([`intake`]), a sharded content-addressed operator registry
-//! ([`registry`]), the [`SolverPool`] batch wrapper with same-matrix
-//! multi-RHS merging, a metrics registry, and the CLI plumbing that
-//! runs the experiment suite and the `serve` trace replay. No
+//! a solve-job model, a long-lived [`SolverService`] with bounded,
+//! windowed intake ([`intake`]: admission control, deadlines,
+//! priorities, cancellation), a typed failure taxonomy ([`error`]), a
+//! sharded content-addressed operator registry ([`registry`]) with disk
+//! spill of evicted encodes (the `spill` codec), the [`SolverPool`] batch
+//! wrapper with same-matrix multi-RHS merging, a metrics registry with
+//! serializable snapshots ([`metrics`]), and the CLI plumbing that runs
+//! the experiment suite and the `serve` trace replay / soak harness. No
 //! request-path python anywhere.
 
 pub mod registry;
 pub mod intake;
 pub mod jobs;
+pub mod error;
 pub mod metrics;
 pub mod cli;
+pub(crate) mod spill;
 
+pub use error::ServiceError;
 pub use intake::{ServiceConfig, SolveSpec, SolveTicket, SolverService};
 pub use jobs::{FormatChoice, RhsSpec, SolveRequest, SolveResult, SolverKind, SolverPool};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{MatrixHandle, MatrixRegistry, RegistryStats};

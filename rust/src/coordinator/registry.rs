@@ -93,16 +93,18 @@ pub(crate) fn build_fixed_operator(a: &Csr, format: ValueFormat, k: usize) -> Ar
 /// Registry key: content digest + what was built from it. GSE encodes
 /// are cached once per (digest, k) and every precision level views the
 /// same entry through a cheap wrapper; non-GSE operators ignore `k`
-/// entirely, so their key carries none.
+/// entirely, so their key carries none. `pub(crate)` so the
+/// [`super::spill`] codec can name spill files after it.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
-enum Key {
+pub(crate) enum Key {
     Op { digest: MatrixDigest, format: ValueFormat },
     Gse { digest: MatrixDigest, k: usize },
 }
 
-/// What a cache entry holds.
+/// What a cache entry holds (`pub(crate)` for the [`super::spill`]
+/// encoder/decoder).
 #[derive(Clone)]
-enum CachedVal {
+pub(crate) enum CachedVal {
     Op(Arc<dyn SpmvOp>),
     Gse(Arc<GseCsr>),
 }
@@ -203,6 +205,9 @@ struct Counters {
     misses: u64,
     encode_saved_s: f64,
     evictions: u64,
+    spills: u64,
+    restores: u64,
+    restore_bytes: u64,
 }
 
 /// Aggregate registry outcomes (also exported to [`Metrics`]).
@@ -214,6 +219,12 @@ pub struct RegistryStats {
     pub encode_saved_s: f64,
     /// entries dropped by the LRU byte-budget policy
     pub evictions: u64,
+    /// evicted entries serialized to the spill directory
+    pub spills: u64,
+    /// misses answered from the spill directory instead of re-encoding
+    pub restores: u64,
+    /// total spill-file bytes read back by restores
+    pub restore_bytes: u64,
     /// resident encoded bytes currently cached
     pub bytes: usize,
     /// cached builds currently resident (operators + GSE encodes)
@@ -226,6 +237,9 @@ pub struct MatrixRegistry {
     shards: Vec<Mutex<HashMap<Key, Slot>>>,
     /// byte budget; `usize::MAX` = unbounded (no eviction)
     budget: usize,
+    /// spill directory: evicted entries are serialized here and
+    /// restored on the next miss for their key (`None` = drop on evict)
+    spill: Option<std::path::PathBuf>,
     /// resident bytes across all shards (Ready entries only)
     bytes: AtomicUsize,
     /// LRU clock: monotonically increasing access ticks
@@ -252,9 +266,21 @@ impl MatrixRegistry {
     /// Registry that evicts least-recently-used entries once resident
     /// encoded storage exceeds `budget_bytes`.
     pub fn with_budget(budget_bytes: usize) -> Self {
+        Self::with_options(budget_bytes, None)
+    }
+
+    /// Registry with a byte budget **and** an optional spill directory.
+    /// With a spill dir set, LRU eviction serializes the entry to disk
+    /// (see the `coordinator::spill` codec) and the next miss for that
+    /// key restores it instead of re-paying the encode — surfaced as
+    /// `cache.spills` / `cache.restores` / `cache.restore_bytes`.
+    /// Spill files are content-addressed (named by digest + format), so
+    /// they are never stale and persist across [`MatrixRegistry::clear`].
+    pub fn with_options(budget_bytes: usize, spill_dir: Option<std::path::PathBuf>) -> Self {
         Self {
             shards: (0..SHARD_COUNT).map(|_| Mutex::new(HashMap::new())).collect(),
             budget: budget_bytes,
+            spill: spill_dir,
             bytes: AtomicUsize::new(0),
             clock: AtomicU64::new(0),
             counters: Mutex::new(Counters::default()),
@@ -344,6 +370,9 @@ impl MatrixRegistry {
             misses: c.misses,
             encode_saved_s: c.encode_saved_s,
             evictions: c.evictions,
+            spills: c.spills,
+            restores: c.restores,
+            restore_bytes: c.restore_bytes,
             bytes: self.bytes.load(Ordering::Relaxed),
             entries: self.len(),
         }
@@ -447,27 +476,21 @@ impl MatrixRegistry {
                 },
                 Plan::Build => {
                     let mut guard = BuildGuard { reg: self, shard: si, key, armed: true };
+                    // a previously evicted entry may be waiting in the
+                    // spill dir: restoring skips the encode entirely,
+                    // so neither `misses` nor `cache.encode` move
+                    if let Some((v, build_s, file_bytes)) = self.try_restore(&key) {
+                        self.publish(si, &key, v.clone(), build_s);
+                        guard.armed = false;
+                        self.credit_restore(file_bytes, metrics);
+                        self.enforce_budget(metrics);
+                        return v;
+                    }
                     let t = Timer::start();
                     let run = build.take().expect("a get_or_build call builds at most once");
                     let v = run();
                     let build_s = t.elapsed_s();
-                    let bytes = v.bytes();
-                    // charge the budget *before* publishing: a
-                    // concurrent evictor may uncharge the entry the
-                    // moment it becomes visible, and the counter must
-                    // never go below the sum of resident entries
-                    self.bytes.fetch_add(bytes, Ordering::Relaxed);
-                    {
-                        let mut map = self.shards[si].lock().unwrap();
-                        let slot = map.get_mut(&key).expect("builder's slot is present");
-                        let latch = match slot {
-                            Slot::Building(l) => Arc::clone(l),
-                            Slot::Ready(_) => unreachable!("only the builder fills its slot"),
-                        };
-                        let last_used = self.clock.fetch_add(1, Ordering::Relaxed);
-                        *slot = Slot::Ready(CacheEntry { v: v.clone(), bytes, build_s, last_used });
-                        latch.fill(v.clone(), build_s);
-                    }
+                    self.publish(si, &key, v.clone(), build_s);
                     guard.armed = false;
                     self.credit_miss(build_s, metrics);
                     self.enforce_budget(metrics);
@@ -475,6 +498,25 @@ impl MatrixRegistry {
                 }
             }
         }
+    }
+
+    /// Flip the builder's `Building` slot to `Ready` and release latch
+    /// waiters — shared by the build and spill-restore paths.
+    fn publish(&self, si: usize, key: &Key, v: CachedVal, build_s: f64) {
+        let bytes = v.bytes();
+        // charge the budget *before* publishing: a concurrent evictor
+        // may uncharge the entry the moment it becomes visible, and the
+        // counter must never go below the sum of resident entries
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        let mut map = self.shards[si].lock().unwrap();
+        let slot = map.get_mut(key).expect("builder's slot is present");
+        let latch = match slot {
+            Slot::Building(l) => Arc::clone(l),
+            Slot::Ready(_) => unreachable!("only the builder fills its slot"),
+        };
+        let last_used = self.clock.fetch_add(1, Ordering::Relaxed);
+        *slot = Slot::Ready(CacheEntry { v: v.clone(), bytes, build_s, last_used });
+        latch.fill(v, build_s);
     }
 
     /// Evict least-recently-used Ready entries until resident bytes fit
@@ -501,9 +543,25 @@ impl MatrixRegistry {
                 if let Some(Slot::Ready(e)) = map.remove(&key) {
                     drop(map);
                     self.bytes.fetch_sub(e.bytes, Ordering::Relaxed);
-                    self.counters.lock().unwrap().evictions += 1;
+                    // best-effort spill before the planes drop: an I/O
+                    // failure or opt-out operator just falls back to
+                    // re-encoding on the next miss
+                    let spilled = self
+                        .spill
+                        .as_deref()
+                        .is_some_and(|dir| super::spill::write(dir, &key, &e.v, e.build_s));
+                    {
+                        let mut c = self.counters.lock().unwrap();
+                        c.evictions += 1;
+                        if spilled {
+                            c.spills += 1;
+                        }
+                    }
                     if let Some(m) = metrics {
                         m.incr("cache.evictions");
+                        if spilled {
+                            m.incr("cache.spills");
+                        }
                     }
                 }
             }
@@ -531,6 +589,27 @@ impl MatrixRegistry {
         if let Some(m) = metrics {
             m.incr("cache.misses");
             m.time("cache.encode", build_s);
+        }
+    }
+
+    /// Deserialize a spilled entry for `key`, if one exists. Returns
+    /// the value, its original build seconds (so later hits credit the
+    /// true saved encode time), and the spill-file size. The file stays
+    /// on disk: content-addressed names are never stale, so a future
+    /// eviction of the restored entry can skip re-serializing.
+    fn try_restore(&self, key: &Key) -> Option<(CachedVal, f64, u64)> {
+        super::spill::read(self.spill.as_deref()?, key)
+    }
+
+    fn credit_restore(&self, file_bytes: u64, metrics: Option<&Metrics>) {
+        {
+            let mut c = self.counters.lock().unwrap();
+            c.restores += 1;
+            c.restore_bytes += file_bytes;
+        }
+        if let Some(m) = metrics {
+            m.incr("cache.restores");
+            m.add("cache.restore_bytes", file_bytes);
         }
     }
 

@@ -1,0 +1,317 @@
+//! Operator spill codec — serializes evicted registry entries to a
+//! spill directory so the next miss for the same key restores the
+//! encoded operator instead of re-paying the encode (the whole point of
+//! the paper's one-encode-serves-every-rung storage at serving scale).
+//!
+//! Files are **content-addressed**: named by the matrix digest plus the
+//! format (or GSE table size), so a spill file is never stale and both
+//! sides of the codec can be fully best-effort — any I/O failure,
+//! truncation, or version mismatch simply falls back to re-encoding.
+//! Layout (little-endian, via [`crate::util::codec`]):
+//!
+//! ```text
+//! u64 magic · u32 version · f64 build_seconds · bytes payload
+//! ```
+//!
+//! The payload starts with a [`spill_tag`] byte and then the plane
+//! arrays of the concrete operator: for GSE entries the shared-exponent
+//! table plus head/tail planes exactly as encoded (every derived decode
+//! table is recomputed on restore, see `GseCsr::from_parts`), for
+//! fixed-format operators the CSR arrays with values widened losslessly
+//! to f64. A restored operator is bitwise indistinguishable from the
+//! original encode.
+
+use super::registry::{CachedVal, Key};
+use crate::formats::{GseTable, Precision, ValueFormat};
+use crate::sparse::csr::Csr;
+use crate::spmv::fp64::Fp64Csr;
+use crate::spmv::lowp::{LowpCsr, StoredValue};
+use crate::spmv::{spill_tag, GseCsr, SpmvOp};
+use crate::util::error::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const MAGIC: u64 = 0x4753_454D_5350_4C31; // "GSEMSPL1"
+const VERSION: u32 = 1;
+
+/// Spill-file name for a registry key: `<digest-hex>-<format>.spill`.
+fn file_path(dir: &Path, key: &Key) -> PathBuf {
+    let name = match key {
+        Key::Op { digest, format } => {
+            let tag = match format {
+                ValueFormat::Fp64 => "fp64",
+                ValueFormat::Fp32 => "fp32",
+                ValueFormat::Fp16 => "fp16",
+                ValueFormat::Bf16 => "bf16",
+                // Op keys never carry GseSem (the registry routes GSE
+                // levels through the shared Gse entry), but name them
+                // distinctly anyway rather than panic in a best-effort
+                // path
+                ValueFormat::GseSem(Precision::Head) => "gsehead",
+                ValueFormat::GseSem(Precision::HeadTail1) => "gset1",
+                ValueFormat::GseSem(Precision::Full) => "gsefull",
+            };
+            format!("{}-{}.spill", digest.to_hex(), tag)
+        }
+        Key::Gse { digest, k } => format!("{}-gse{}.spill", digest.to_hex(), k),
+    };
+    dir.join(name)
+}
+
+/// Serialize an evicted entry. Best-effort: returns `false` (and writes
+/// nothing lasting) on opt-out operators or any I/O failure. An already
+/// present file is left alone — content addressing makes it identical
+/// to what would be rewritten.
+pub(crate) fn write(dir: &Path, key: &Key, v: &CachedVal, build_s: f64) -> bool {
+    let path = file_path(dir, key);
+    if path.exists() {
+        return true;
+    }
+    try_write(dir, &path, v, build_s).is_ok()
+}
+
+fn try_write(dir: &Path, path: &Path, v: &CachedVal, build_s: f64) -> Result<()> {
+    let payload = match v {
+        CachedVal::Op(op) => op.spill_bytes().context("operator opts out of spill")?,
+        CachedVal::Gse(g) => encode_gse(g),
+    };
+    let mut w = crate::util::codec::ByteWriter::new();
+    w.put_u64(MAGIC);
+    w.put_u32(VERSION);
+    w.put_f64(build_s);
+    w.put_bytes(&payload);
+    std::fs::create_dir_all(dir)?;
+    // write-then-rename so a concurrent restore never sees a torn file;
+    // the temp name is keyed so concurrent evictors of *different*
+    // entries never collide (same-key racers write identical bytes)
+    let tmp = path.with_extension("spill.tmp");
+    std::fs::write(&tmp, w.into_bytes())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Deserialize the spilled entry for `key`, if present and intact.
+/// Returns the value, its original build seconds, and the file size;
+/// `None` covers both "never spilled" and "unreadable" (the caller
+/// falls back to a fresh encode either way).
+pub(crate) fn read(dir: &Path, key: &Key) -> Option<(CachedVal, f64, u64)> {
+    let bytes = std::fs::read(file_path(dir, key)).ok()?;
+    let n = bytes.len() as u64;
+    let (v, build_s) = try_decode(key, &bytes).ok()?;
+    Some((v, build_s, n))
+}
+
+fn try_decode(key: &Key, bytes: &[u8]) -> Result<(CachedVal, f64)> {
+    let mut r = crate::util::codec::ByteReader::new(bytes);
+    if r.get_u64()? != MAGIC {
+        bail!("not a spill file");
+    }
+    let version = r.get_u32()?;
+    if version != VERSION {
+        bail!("unsupported spill version {version}");
+    }
+    let build_s = r.get_f64()?;
+    let payload = r.get_bytes()?;
+    let v = match key {
+        Key::Gse { .. } => CachedVal::Gse(Arc::new(decode_gse(&payload)?)),
+        Key::Op { format, .. } => CachedVal::Op(decode_op(*format, &payload)?),
+    };
+    Ok((v, build_s))
+}
+
+/// GSE payload: the exact plane arrays of the encode (`GseTable`
+/// entries, rowptr/cols, head/tail planes, out-of-band exponent
+/// indexes). `packed` and `ei_bit` ride along so the restored decode
+/// geometry matches bit for bit.
+fn encode_gse(g: &GseCsr) -> Vec<u8> {
+    let mut w = crate::util::codec::ByteWriter::new();
+    w.put_u8(spill_tag::GSE);
+    w.put_u64(g.nrows as u64);
+    w.put_u64(g.ncols as u64);
+    w.put_usizes(&g.rowptr);
+    w.put_u32s(&g.cols);
+    w.put_u16s(&g.heads);
+    w.put_u16s(&g.tail1);
+    w.put_u32s(&g.tail2);
+    match &g.ext_idx {
+        Some(idx) => {
+            w.put_u8(1);
+            w.put_bytes(idx);
+        }
+        None => w.put_u8(0),
+    }
+    w.put_u32s(&g.table.entries);
+    w.put_u8(g.packed as u8);
+    w.into_bytes()
+}
+
+fn decode_gse(payload: &[u8]) -> Result<GseCsr> {
+    let mut r = crate::util::codec::ByteReader::new(payload);
+    if r.get_u8()? != spill_tag::GSE {
+        bail!("spill payload is not a GSE encode");
+    }
+    let nrows = r.get_u64()? as usize;
+    let ncols = r.get_u64()? as usize;
+    let rowptr = r.get_usizes()?;
+    let cols = r.get_u32s()?;
+    let heads = r.get_u16s()?;
+    let tail1 = r.get_u16s()?;
+    let tail2 = r.get_u32s()?;
+    let ext_idx = match r.get_u8()? {
+        0 => None,
+        _ => Some(r.get_bytes()?),
+    };
+    let entries = r.get_u32s()?;
+    let packed = r.get_u8()? != 0;
+    if rowptr.len() != nrows + 1 || *rowptr.last().unwrap_or(&0) != cols.len() {
+        bail!("inconsistent GSE spill structure");
+    }
+    let table = GseTable::from_entries(entries);
+    Ok(GseCsr::from_parts(nrows, ncols, rowptr, cols, heads, tail1, tail2, ext_idx, table, packed))
+}
+
+fn decode_op(format: ValueFormat, payload: &[u8]) -> Result<Arc<dyn SpmvOp>> {
+    let mut r = crate::util::codec::ByteReader::new(payload);
+    match format {
+        ValueFormat::Fp64 => {
+            let a = decode_csr(&mut r, spill_tag::FP64)?;
+            Ok(Arc::new(Fp64Csr::new(a)))
+        }
+        ValueFormat::Fp32 => decode_lowp::<f32>(&mut r, spill_tag::FP32),
+        ValueFormat::Fp16 => decode_lowp::<crate::formats::Fp16>(&mut r, spill_tag::FP16),
+        ValueFormat::Bf16 => decode_lowp::<crate::formats::Bf16>(&mut r, spill_tag::BF16),
+        ValueFormat::GseSem(_) => bail!("GSE operators restore via their shared encode key"),
+    }
+}
+
+/// The common CSR body shared by the fp64 and low-precision layouts
+/// (tag, dims, rowptr, colidx, f64-widened values).
+fn decode_csr(r: &mut crate::util::codec::ByteReader, want_tag: u8) -> Result<Csr> {
+    let tag = r.get_u8()?;
+    if tag != want_tag {
+        bail!("spill payload tag {tag} does not match key format (want {want_tag})");
+    }
+    let nrows = r.get_u64()? as usize;
+    let ncols = r.get_u64()? as usize;
+    let rowptr = r.get_usizes()?;
+    let colidx = r.get_u32s()?;
+    let vals = r.get_f64s()?;
+    if rowptr.len() != nrows + 1
+        || *rowptr.last().unwrap_or(&0) != colidx.len()
+        || colidx.len() != vals.len()
+    {
+        bail!("inconsistent CSR spill structure");
+    }
+    Ok(Csr { nrows, ncols, rowptr, colidx, vals })
+}
+
+fn decode_lowp<T: StoredValue>(
+    r: &mut crate::util::codec::ByteReader,
+    want_tag: u8,
+) -> Result<Arc<dyn SpmvOp>> {
+    let a = decode_csr(r, want_tag)?;
+    let overflowed = r.get_u8()? != 0;
+    let vals: Vec<T> = a.vals.iter().map(|&v| T::from_f64(v)).collect();
+    Ok(Arc::new(LowpCsr {
+        nrows: a.nrows,
+        ncols: a.ncols,
+        rowptr: a.rowptr,
+        colidx: a.colidx,
+        vals,
+        overflowed,
+        threads: 1,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson::poisson2d;
+    use crate::spmv::max_abs_diff;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("gsem-spill-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn gse_round_trip_is_bitwise() {
+        let a = Arc::new(poisson2d(9, 9));
+        let g = GseCsr::from_csr(&a, 8);
+        let dir = tmp_dir("gse");
+        let key = Key::Gse { digest: a.digest(), k: 8 };
+        assert!(write(&dir, &key, &CachedVal::Gse(Arc::new(GseCsr::from_csr(&a, 8))), 0.25));
+        let (v, build_s, n) = read(&dir, &key).expect("restore");
+        assert_eq!(build_s, 0.25);
+        assert!(n > 0);
+        let CachedVal::Gse(restored) = v else { panic!("gse key restores a gse encode") };
+        // every plane and the decoded SpMV must match the original
+        assert_eq!(restored.rowptr, g.rowptr);
+        assert_eq!(restored.cols, g.cols);
+        assert_eq!(restored.heads, g.heads);
+        assert_eq!(restored.tail1, g.tail1);
+        assert_eq!(restored.tail2, g.tail2);
+        assert_eq!(restored.ext_idx, g.ext_idx);
+        assert_eq!(restored.table.entries, g.table.entries);
+        let x: Vec<f64> = (0..a.ncols).map(|i| (i % 5) as f64 - 2.0).collect();
+        for level in [Precision::Head, Precision::HeadTail1, Precision::Full] {
+            let mut y0 = vec![0.0; a.nrows];
+            g.spmv(&x, &mut y0, level);
+            let mut y1 = vec![0.0; a.nrows];
+            restored.spmv(&x, &mut y1, level);
+            assert_eq!(y0, y1, "restored GSE SpMV must be bitwise identical at {level:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fixed_format_round_trips() {
+        let a = Arc::new(poisson2d(7, 7));
+        let dir = tmp_dir("op");
+        for format in [
+            ValueFormat::Fp64,
+            ValueFormat::Fp32,
+            ValueFormat::Fp16,
+            ValueFormat::Bf16,
+        ] {
+            let op = super::super::registry::build_fixed_operator(&a, format, 0);
+            let key = Key::Op { digest: a.digest(), format };
+            assert!(write(&dir, &key, &CachedVal::Op(Arc::clone(&op)), 0.0), "{format:?}");
+            let (v, _, _) = read(&dir, &key).expect("restore");
+            let CachedVal::Op(restored) = v else { panic!("op key restores an operator") };
+            assert_eq!(restored.format(), format);
+            assert_eq!(restored.encoded_bytes(), op.encoded_bytes());
+            let x: Vec<f64> = (0..a.ncols).map(|i| (i % 3) as f64).collect();
+            let mut y0 = vec![0.0; a.nrows];
+            op.apply(&x, &mut y0);
+            let mut y1 = vec![0.0; a.nrows];
+            restored.apply(&x, &mut y1);
+            assert_eq!(max_abs_diff(&y0, &y1), 0.0, "{format:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_or_missing_files_fall_back() {
+        let a = Arc::new(poisson2d(5, 5));
+        let dir = tmp_dir("corrupt");
+        let key = Key::Op { digest: a.digest(), format: ValueFormat::Fp64 };
+        // missing: a clean None
+        assert!(read(&dir, &key).is_none());
+        // corrupt: truncate a valid file at every prefix length
+        let op = super::super::registry::build_fixed_operator(&a, ValueFormat::Fp64, 0);
+        assert!(write(&dir, &key, &CachedVal::Op(op), 0.0));
+        let path = file_path(&dir, &key);
+        let full = std::fs::read(&path).unwrap();
+        for cut in [0, 4, 11, 13, 21, full.len() - 1] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert!(read(&dir, &key).is_none(), "cut at {cut} must not restore");
+        }
+        // and restored after rewriting the intact bytes
+        std::fs::write(&path, &full).unwrap();
+        assert!(read(&dir, &key).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

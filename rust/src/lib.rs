@@ -29,12 +29,15 @@
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`).
 //! * [`coordinator`] — the L3 serving layer: a long-lived
-//!   `SolverService` (windowed intake that merges staggered same-matrix
-//!   requests — CG, GMRES, BiCGSTAB, fixed-format or stepped — into
-//!   multi-RHS block solves), a sharded content-addressed
-//!   operator registry with per-key build latches and LRU byte-budget
-//!   eviction, the `SolverPool` batch wrapper, metrics, and the
-//!   experiment-suite / trace-replay CLI.
+//!   `SolverService` (bounded windowed intake that merges staggered
+//!   same-matrix requests — CG, GMRES, BiCGSTAB, fixed-format or
+//!   stepped — into multi-RHS block solves, with admission-control
+//!   load-shedding, per-ticket deadlines/priorities and cancellation
+//!   behind the typed `ServiceError` surface), a sharded
+//!   content-addressed operator registry with per-key build latches,
+//!   LRU byte-budget eviction and disk spill/restore, the `SolverPool`
+//!   batch wrapper, metrics with machine-readable snapshots, and the
+//!   experiment-suite / trace-replay / soak CLI.
 
 pub mod util;
 pub mod formats;

@@ -6,15 +6,17 @@
 //! * `solve`     — run CG/GMRES/BiCGSTAB in any storage format
 //!                 (including stepped GSE-SEM) and print the outcome.
 //! * `serve`     — replay a staggered request trace through the
-//!                 windowed `SolverService` (intake/cache metrics).
+//!                 windowed `SolverService` (intake/cache metrics);
+//!                 `--soak` runs the serving-hardening soak harness
+//!                 (overload, deadlines/cancellation, spill/restore).
 //! * `suite`     — run the paper's CG + GMRES test sets end-to-end.
 //! * `kernels`   — list/compile the AOT artifacts (PJRT check).
 //! * `gen`       — write a corpus matrix to a MatrixMarket file.
 
 use gsem::coordinator::cli::Cli;
 use gsem::coordinator::{
-    FormatChoice, RhsSpec, ServiceConfig, SolveRequest, SolveSpec, SolverKind, SolverPool,
-    SolverService,
+    FormatChoice, RhsSpec, ServiceConfig, ServiceError, SolveRequest, SolveResult, SolveSpec,
+    SolverKind, SolverPool, SolverService,
 };
 use gsem::formats::{Precision, ValueFormat};
 use gsem::solvers::stepped::SteppedParams;
@@ -65,9 +67,18 @@ fn print_usage() {
                     CG/GMRES/BiCGSTAB, fixed or stepped — merges them into one\n\
                     multi-RHS block solve)\n\
            serve    [--requests 24] [--window-ms 5] [--batch-width 8] [--stagger-us 300]\n\
-                    [--workers 0] [--cache-mb 0] [--matrix <...>] [--solver cg] [--format fp64]\n\
+                    [--workers 0] [--cache-mb 0] [--queue-depth 0] [--deadline-ms 0]\n\
+                    [--spill-dir <dir>] [--metrics-json <path>]\n\
+                    [--matrix <...>] [--solver cg] [--format fp64]\n\
                     replay a staggered request trace through the windowed SolverService\n\
-                    and report intake/cache metrics (0 = auto workers / unbounded cache)\n\
+                    and report intake/cache metrics (0 = auto workers / unbounded\n\
+                    cache / unbounded queue / no deadline); sheds past --queue-depth\n\
+                    surface as typed Overloaded errors\n\
+           serve --soak  [--queue-depth 8] [--soak-cache-kb 24] [--spill-dir <dir>]\n\
+                    [--metrics-json <path>] [--workers 0] [--stagger-us 200]\n\
+                    serving-hardening soak: overload/load-shed with an\n\
+                    admitted-vs-one-shot parity audit, a deadline+cancellation\n\
+                    mix, and spill/restore churn under a tiny cache budget\n\
            suite    [--solver cg|gmres|both] [--size small|medium|full] [--workers N] (0 = auto)\n\
            kernels                                      PJRT artifact check\n\
            gen      --matrix <name> --out <path.mtx> | --list\n\n\
@@ -246,7 +257,16 @@ fn cmd_solve(cli: &Cli) -> i32 {
         };
         return solve_multi_rhs(req, nrhs, solver, workers);
     }
-    let res = gsem::coordinator::jobs::dispatch(&req);
+    // redeem breakdowns so the outcome line still prints (the paper's
+    // "/" rows); other typed errors have no partial result to show
+    let res = match gsem::coordinator::jobs::dispatch(&req) {
+        Ok(r) => r,
+        Err(ServiceError::Breakdown(b)) => *b,
+        Err(e) => {
+            eprintln!("solve failed: {e}");
+            return 1;
+        }
+    };
     println!(
         "{} [{}] {}: iters={} converged={} relres(solver)={} relres(FP64)={:.3E} time={:.3}s",
         res.name,
@@ -293,10 +313,18 @@ fn solve_multi_rhs(req: SolveRequest, nrhs: usize, solver: SolverKind, workers: 
         })
         .collect();
     let pool = SolverPool::new(workers);
-    let results = pool.run_batch(reqs);
     let mut t = TextTable::new(&["rhs", "format", "iters", "relres(FP64)", "time(s)"]);
     let mut all_ok = true;
-    for r in &results {
+    for r in pool.run_batch(reqs) {
+        let r = match r {
+            Ok(r) => r,
+            Err(ServiceError::Breakdown(b)) => *b,
+            Err(e) => {
+                eprintln!("solve failed: {e}");
+                all_ok = false;
+                continue;
+            }
+        };
         all_ok &= r.outcome.converged;
         t.row(&[
             r.name.clone(),
@@ -324,6 +352,9 @@ fn solve_multi_rhs(req: SolveRequest, nrhs: usize, solver: SolverKind, workers: 
 /// table, throughput, and the full metrics report (`intake.*`,
 /// `cache.*`, `pool.batched_*`).
 fn cmd_serve(cli: &Cli) -> i32 {
+    if cli.flag("soak") {
+        return cmd_serve_soak(cli);
+    }
     let (requests, window_ms, batch_width, stagger_us, cache_mb) = match (
         cli.get_usize("requests", 24),
         cli.get_u64("window-ms", 5),
@@ -349,6 +380,14 @@ fn cmd_serve(cli: &Cli) -> i32 {
             return 2;
         }
     };
+    let (queue_depth, deadline_ms) =
+        match (cli.get_usize("queue-depth", 0), cli.get_u64("deadline-ms", 0)) {
+            (Ok(q), Ok(d)) => (q, d),
+            _ => {
+                eprintln!("serve: numeric option failed to parse");
+                return 2;
+            }
+        };
     // --workers 0 = auto (machine parallelism / GSEM_WORKERS)
     let workers = match workers_opt {
         0 => gsem::util::parallel::default_workers(),
@@ -384,6 +423,12 @@ fn cmd_serve(cli: &Cli) -> i32 {
     if cache_mb > 0 {
         cfg = cfg.cache_bytes(cache_mb << 20);
     }
+    if queue_depth > 0 {
+        cfg = cfg.queue_depth(queue_depth);
+    }
+    if let Some(dir) = cli.get("spill-dir") {
+        cfg = cfg.spill_dir(dir);
+    }
     let svc = SolverService::new(cfg);
     // register each trace matrix once; handles are cheap to clone and
     // carry the digest, so the submit loop never re-hashes
@@ -396,29 +441,48 @@ fn cmd_serve(cli: &Cli) -> i32 {
         mats.len()
     );
     let timer = Timer::start();
-    let tickets: Vec<_> = (0..requests)
-        .map(|i| {
-            let (name, handle) = &handles[i % handles.len()];
-            let mut spec = SolveSpec::new(
-                &format!("{name}#{i}"),
-                handle.clone(),
-                solver,
-                format.clone(),
-            );
-            spec.rhs = RhsSpec::Random(1000 + i as u64);
-            spec.tol = tol;
-            let ticket = svc.submit(spec);
-            if stagger_us > 0 {
-                std::thread::sleep(std::time::Duration::from_micros(stagger_us));
+    let mut tickets = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..requests {
+        let (mname, handle) = &handles[i % handles.len()];
+        let name = format!("{mname}#{i}");
+        let mut spec = SolveSpec::new(&name, handle.clone(), solver, format.clone())
+            .rhs(RhsSpec::Random(1000 + i as u64))
+            .tol(tol);
+        if deadline_ms > 0 {
+            spec = spec.deadline_in(std::time::Duration::from_millis(deadline_ms));
+        }
+        match svc.submit(spec) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                shed += 1;
+                eprintln!("  request {i}: {e}");
             }
-            ticket
-        })
-        .collect();
+        }
+        if stagger_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(stagger_us));
+        }
+    }
     let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
     let wall = timer.elapsed_s();
     let mut t = TextTable::new(&["request", "format", "iters", "relres(FP64)", "time(s)"]);
     let mut all_ok = true;
-    for r in &results {
+    let (mut expired, mut errors) = (0usize, 0usize);
+    for r in results {
+        let r = match r {
+            Ok(r) => r,
+            Err(ServiceError::Breakdown(b)) => *b,
+            Err(e @ ServiceError::DeadlineExceeded { .. }) => {
+                expired += 1;
+                println!("  {e}");
+                continue;
+            }
+            Err(e) => {
+                errors += 1;
+                eprintln!("  {e}");
+                continue;
+            }
+        };
         all_ok &= r.outcome.converged;
         t.row(&[
             r.name.clone(),
@@ -429,11 +493,308 @@ fn cmd_serve(cli: &Cli) -> i32 {
         ]);
     }
     t.print();
+    if shed + expired > 0 {
+        println!("shed {shed}  deadline-expired {expired}");
+    }
     println!("wall {:.3}s  ({:.1} req/s)", wall, requests as f64 / wall);
     print!("{}", svc.metrics().report());
-    if all_ok {
+    if let Some(path) = cli.get("metrics-json") {
+        match std::fs::write(path, svc.metrics().snapshot().to_json()) {
+            Ok(()) => println!("wrote metrics to {path}"),
+            Err(e) => {
+                eprintln!("cannot write {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    if all_ok && errors == 0 {
         0
     } else {
+        1
+    }
+}
+
+/// Bitwise equality of two solution vectors — the block-solve parity
+/// contract is *identical to single dispatch*, not merely close.
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// One-shot reference dispatch for the soak parity audits: same
+/// name/matrix/solver/format/seed as the serviced ticket.
+fn one_shot(
+    name: &str,
+    a: &Arc<Csr>,
+    solver: SolverKind,
+    format: &FormatChoice,
+    seed: u64,
+) -> Option<SolveResult> {
+    let mut req = SolveRequest::new(name, Arc::clone(a), solver, format.clone());
+    req.rhs = RhsSpec::Random(seed);
+    gsem::coordinator::jobs::dispatch(&req).ok()
+}
+
+/// `serve --soak`: the serving-hardening soak harness, three phases.
+///
+/// * **A — overload.** Burst-submit past a small bounded queue on a
+///   manual-flush service. The overflow must shed with typed
+///   `Overloaded` errors, and every *admitted* ticket must match its
+///   one-shot dispatch bitwise.
+/// * **B — deadlines + cancellation.** A staggered trace flushed in
+///   windows, with already-expired deadlines and post-submit cancels
+///   mixed in. Expired/cancelled tickets must resolve with the matching
+///   typed error; survivors are parity-audited against one-shot runs.
+/// * **C — spill/restore.** GSE-encoded solves over several matrices
+///   under a tiny cache byte budget with a spill directory, then the
+///   same digests re-touched: the second pass must be answered by spill
+///   restores (restore counter > 0) with zero re-encodes, bitwise equal
+///   to the first pass.
+///
+/// Prints one summary line per phase, optionally writes a combined
+/// `--metrics-json` snapshot, and exits non-zero if any check fails.
+/// `GSEM_BENCH_FAST=1` shrinks the trace for CI smoke runs.
+fn cmd_serve_soak(cli: &Cli) -> i32 {
+    let fast = std::env::var("GSEM_BENCH_FAST").is_ok();
+    let (queue_depth, cache_kb, stagger_us) = match (
+        cli.get_usize("queue-depth", 8),
+        cli.get_usize("soak-cache-kb", 24),
+        cli.get_u64("stagger-us", 200),
+    ) {
+        (Ok(q), Ok(c), Ok(s)) => (q.max(1), c.max(1), s),
+        _ => {
+            eprintln!("serve --soak: numeric option failed to parse");
+            return 2;
+        }
+    };
+    let workers = match cli.get_usize("workers", 0).unwrap_or(0) {
+        0 => gsem::util::parallel::default_workers(),
+        n => n,
+    };
+    let spill_dir = match cli.get("spill-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir().join("gsem-soak-spill"),
+    };
+    let mats: Vec<(String, Arc<Csr>)> = cg_set(CorpusSize::Small)
+        .into_iter()
+        .take(4)
+        .map(|m| (m.name, Arc::new(m.a)))
+        .collect();
+    let fp64 = FormatChoice::fixed(ValueFormat::Fp64);
+    let mut failures: Vec<String> = Vec::new();
+
+    // -- phase A: burst past the bounded queue; audit the admitted side
+    let svc = SolverService::manual(ServiceConfig::new().workers(workers).queue_depth(queue_depth));
+    let (name0, a0) = &mats[0];
+    let handle0 = svc.register(a0);
+    let burst = if fast { queue_depth + 4 } else { queue_depth * 3 };
+    let mut admitted = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..burst {
+        let name = format!("{name0}/soak-a#{i}");
+        let spec = SolveSpec::new(&name, handle0.clone(), SolverKind::Cg, fp64.clone())
+            .rhs(RhsSpec::Random(7000 + i as u64));
+        match svc.submit(spec) {
+            Ok(t) => admitted.push((i, t)),
+            Err(ServiceError::Overloaded { .. }) => shed += 1,
+            Err(e) => failures.push(format!("phase A: unexpected submit error: {e}")),
+        }
+    }
+    let n_admitted = admitted.len();
+    svc.flush();
+    let mut parity_a = true;
+    for (i, t) in admitted {
+        match t.wait() {
+            Ok(r) => match one_shot(&r.name, a0, SolverKind::Cg, &fp64, 7000 + i as u64) {
+                Some(s)
+                    if bits_eq(&r.outcome.x, &s.outcome.x)
+                        && r.outcome.iters == s.outcome.iters => {}
+                _ => parity_a = false,
+            },
+            Err(e) => failures.push(format!("phase A: admitted ticket failed: {e}")),
+        }
+    }
+    if shed == 0 || svc.metrics().counter("intake.shed") == 0 {
+        failures.push("phase A: burst was not shed (expected typed Overloaded)".into());
+    }
+    if !parity_a {
+        failures.push("phase A: admitted results diverge from one-shot dispatch".into());
+    }
+    println!(
+        "soak A (overload): burst={burst} admitted={n_admitted} shed={shed} parity={}",
+        if parity_a { "ok" } else { "MISMATCH" }
+    );
+    let snap_a = svc.metrics().snapshot();
+    drop(svc);
+
+    // -- phase B: staggered trace with expired deadlines and cancels
+    let svc = SolverService::manual(
+        ServiceConfig::new().workers(workers).queue_depth(4 * queue_depth.max(8)),
+    );
+    let handles: Vec<_> = mats.iter().map(|(_, a)| svc.register(a)).collect();
+    let n_req = if fast { 16 } else { 56 };
+    let mut tickets = Vec::new();
+    for i in 0..n_req {
+        let (mname, _) = &mats[i % mats.len()];
+        let name = format!("{mname}/soak-b#{i}");
+        let handle = handles[i % handles.len()].clone();
+        let mut spec = SolveSpec::new(&name, handle, SolverKind::Cg, fp64.clone())
+            .rhs(RhsSpec::Random(8000 + i as u64))
+            .priority((i % 3) as i32 - 1);
+        let expect = if i % 5 == 0 {
+            spec = spec.deadline_in(std::time::Duration::ZERO);
+            "deadline"
+        } else if i % 7 == 0 {
+            "cancel"
+        } else {
+            spec = spec.deadline_in(std::time::Duration::from_secs(600));
+            "ok"
+        };
+        match svc.submit(spec) {
+            Ok(t) => {
+                if expect == "cancel" {
+                    t.cancel();
+                }
+                tickets.push((i, t, expect));
+            }
+            Err(e) => failures.push(format!("phase B: submit {i}: {e}")),
+        }
+        if (i + 1) % 8 == 0 {
+            svc.flush();
+        }
+        if stagger_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(stagger_us));
+        }
+    }
+    svc.flush();
+    let (mut n_ok, mut n_dead, mut n_cancel) = (0usize, 0usize, 0usize);
+    let mut parity_b = true;
+    for (i, t, expect) in tickets {
+        match (expect, t.wait()) {
+            ("deadline", Err(ServiceError::DeadlineExceeded { .. })) => n_dead += 1,
+            ("cancel", Err(ServiceError::Cancelled { .. })) => n_cancel += 1,
+            ("ok", Ok(r)) => {
+                n_ok += 1;
+                let a = &mats[i % mats.len()].1;
+                match one_shot(&r.name, a, SolverKind::Cg, &fp64, 8000 + i as u64) {
+                    Some(s) if bits_eq(&r.outcome.x, &s.outcome.x) => {}
+                    _ => parity_b = false,
+                }
+            }
+            (exp, got) => {
+                let got = match got {
+                    Ok(r) => format!("ok ({})", r.name),
+                    Err(e) => e.to_string(),
+                };
+                failures.push(format!("phase B: request {i} expected {exp}, got {got}"));
+            }
+        }
+    }
+    if n_dead == 0 {
+        failures.push("phase B: no deadline expiries observed".into());
+    }
+    if n_cancel == 0 {
+        failures.push("phase B: no cancellations observed".into());
+    }
+    if !parity_b {
+        failures.push("phase B: surviving results diverge from one-shot dispatch".into());
+    }
+    println!(
+        "soak B (deadline/cancel): ok={n_ok} deadline={n_dead} cancelled={n_cancel} parity={}",
+        if parity_b { "ok" } else { "MISMATCH" }
+    );
+    let snap_b = svc.metrics().snapshot();
+    drop(svc);
+
+    // -- phase C: churn a tiny cache over GSE encodes, then re-touch
+    if let Err(e) = std::fs::create_dir_all(&spill_dir) {
+        eprintln!("serve --soak: cannot create spill dir {}: {e}", spill_dir.display());
+        return 1;
+    }
+    let svc = SolverService::manual(
+        ServiceConfig::new()
+            .workers(workers)
+            .cache_bytes(cache_kb << 10)
+            .spill_dir(spill_dir.clone()),
+    );
+    let gse = FormatChoice::Fixed { format: ValueFormat::GseSem(Precision::Full), k: 8 };
+    let handles: Vec<_> = mats.iter().map(|(_, a)| svc.register(a)).collect();
+    let mut firsts = Vec::new();
+    for (j, (mname, _)) in mats.iter().enumerate() {
+        let name = format!("{mname}/soak-c");
+        let spec = SolveSpec::new(&name, handles[j].clone(), SolverKind::Cg, gse.clone())
+            .rhs(RhsSpec::Random(9000 + j as u64));
+        match svc.submit(spec) {
+            Ok(t) => {
+                svc.flush();
+                firsts.push(t.wait());
+            }
+            Err(e) => failures.push(format!("phase C: submit {mname}: {e}")),
+        }
+    }
+    let encode_before = svc.metrics().timing("cache.encode").0;
+    let mut parity_c = true;
+    for (j, (mname, _)) in mats.iter().enumerate() {
+        let name = format!("{mname}/soak-c");
+        let spec = SolveSpec::new(&name, handles[j].clone(), SolverKind::Cg, gse.clone())
+            .rhs(RhsSpec::Random(9000 + j as u64));
+        match svc.submit(spec) {
+            Ok(t) => {
+                svc.flush();
+                match (t.wait(), firsts.get(j)) {
+                    (Ok(r2), Some(Ok(r1))) if bits_eq(&r1.outcome.x, &r2.outcome.x) => {}
+                    _ => parity_c = false,
+                }
+            }
+            Err(e) => failures.push(format!("phase C: resubmit {mname}: {e}")),
+        }
+    }
+    let encode_after = svc.metrics().timing("cache.encode").0;
+    let stats = svc.registry().stats();
+    if stats.spills == 0 {
+        failures.push("phase C: eviction never spilled (cache budget too large?)".into());
+    }
+    if stats.restores == 0 {
+        failures.push("phase C: digest re-hit was not answered from spill".into());
+    }
+    if encode_after != encode_before {
+        failures.push(format!(
+            "phase C: {} re-encode(s) on the restore pass",
+            encode_after - encode_before
+        ));
+    }
+    if !parity_c {
+        failures.push("phase C: restored operator changed the solve bitwise".into());
+    }
+    println!(
+        "soak C (spill/restore): spills={} restores={} restore_bytes={} re-encodes={} parity={}",
+        stats.spills,
+        stats.restores,
+        stats.restore_bytes,
+        encode_after - encode_before,
+        if parity_c { "ok" } else { "MISMATCH" }
+    );
+    let snap_c = svc.metrics().snapshot();
+
+    if let Some(path) = cli.get("metrics-json") {
+        let json = format!(
+            "{{\"overload\":{},\"deadline_cancel\":{},\"spill_restore\":{}}}\n",
+            snap_a.to_json(),
+            snap_b.to_json(),
+            snap_c.to_json()
+        );
+        if let Err(e) = std::fs::write(path, json) {
+            eprintln!("serve --soak: cannot write {path}: {e}");
+            return 1;
+        }
+        println!("wrote soak metrics to {path}");
+    }
+    if failures.is_empty() {
+        println!("soak: all checks passed");
+        0
+    } else {
+        for f in &failures {
+            eprintln!("soak FAIL: {f}");
+        }
         1
     }
 }
@@ -488,6 +849,14 @@ fn cmd_suite(cli: &Cli) -> i32 {
                 FormatChoice::Stepped { k: 8, params: stepped_base.scaled(scale) },
             ));
             for r in pool.run_batch(reqs) {
+                let r = match r {
+                    Ok(r) => r,
+                    Err(ServiceError::Breakdown(b)) => *b,
+                    Err(e) => {
+                        eprintln!("{}: {e}", m.name);
+                        continue;
+                    }
+                };
                 t.row(&[
                     r.name.clone(),
                     r.format_label.clone(),

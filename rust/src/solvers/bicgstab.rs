@@ -4,7 +4,9 @@
 //! extra ablation point for the stepped controller.
 
 use super::blas1::{axpy, dot, nrm2};
-use super::block::{run_fixed_block, BlockColumn, ColumnMonitor};
+use super::block::{
+    run_fixed_block, run_fixed_block_ctl, BlockColumn, BlockCtl, ColumnExit, ColumnMonitor,
+};
 use super::{MonitorCmd, SolveOutcome};
 use crate::spmv::SpmvOp;
 use crate::util::Timer;
@@ -175,6 +177,29 @@ pub fn bicgstab_solve_multi(
         .map(|j| BicgstabColumn::new(&bs[j * n..(j + 1) * n], opts, ColumnMonitor::Fixed))
         .collect();
     run_fixed_block(op, cols)
+}
+
+/// [`bicgstab_solve_multi`] with per-column cancel/deadline controls:
+/// triggered columns deflate mid-block (partial outcome, matching
+/// [`ColumnExit`] reason) while survivors stay bitwise identical to
+/// single dispatch.
+pub(crate) fn bicgstab_solve_multi_ctl(
+    op: &dyn SpmvOp,
+    bs: &[f64],
+    nrhs: usize,
+    opts: &BicgstabOpts,
+    ctl: &BlockCtl,
+) -> (Vec<SolveOutcome>, Vec<ColumnExit>) {
+    let n = op.nrows();
+    assert_eq!(op.ncols(), n, "multi-RHS BiCGSTAB requires a square operator");
+    assert_eq!(bs.len(), n * nrhs);
+    if nrhs == 0 {
+        return (Vec::new(), Vec::new());
+    }
+    let cols: Vec<BicgstabColumn> = (0..nrhs)
+        .map(|j| BicgstabColumn::new(&bs[j * n..(j + 1) * n], opts, ColumnMonitor::Fixed))
+        .collect();
+    run_fixed_block_ctl(op, cols, ctl)
 }
 
 /// One BiCGSTAB right-hand side as a [`BlockColumn`] state machine.
@@ -381,6 +406,10 @@ impl BlockColumn for BicgstabColumn<'_> {
             BicgstabState::NeedRestart => self.absorb_restart(y),
             BicgstabState::Done => unreachable!("inactive column fed a result"),
         }
+    }
+
+    fn deflate(&mut self) {
+        self.state = BicgstabState::Done;
     }
 
     fn finish(mut self, op: &dyn SpmvOp, seconds: f64) -> SolveOutcome {

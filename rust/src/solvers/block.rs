@@ -30,6 +30,9 @@ use crate::solvers::ladder::PrecisionSwitchable;
 use crate::spmv::SpmvOp;
 use crate::util::Timer;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Per-column monitor: the multi-RHS analogue of the `monitor`
 /// callback the single-RHS solvers take. Fixed-format blocks observe
@@ -93,6 +96,69 @@ pub(crate) trait BlockColumn {
     /// guarantees it) so the closing `true_relres` matches single
     /// dispatch. `seconds` is the shared wall time of the block.
     fn finish(self, op: &dyn SpmvOp, seconds: f64) -> SolveOutcome;
+    /// Force the column out of the block mid-flight (cancellation /
+    /// deadline): after this, [`Self::active`] is false and
+    /// [`Self::finish`] reports the partial state reached so far.
+    /// Siblings are untouched — their recurrences never read a
+    /// neighbour's values, so the block stays bitwise identical to
+    /// running them alone.
+    fn deflate(&mut self);
+}
+
+/// Why a column left the block (parallel to the outcome vector of the
+/// `_ctl` runners).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum ColumnExit {
+    /// Ran to its solver's own stopping rule (converged, stalled, or
+    /// broke down) — the outcome is authoritative.
+    Completed,
+    /// Deflated mid-block: its ticket's cancel flag flipped.
+    Cancelled,
+    /// Deflated mid-block: its deadline passed.
+    DeadlineExceeded,
+}
+
+/// Per-column cancellation flags and deadlines for a block solve,
+/// polled between apply rounds by [`drive_columns_ctl`]. A column with
+/// neither control is never polled, and a ctl built by
+/// [`BlockCtl::none`] adds zero work to the drive loop.
+pub(crate) struct BlockCtl {
+    cancels: Vec<Option<Arc<AtomicBool>>>,
+    deadlines: Vec<Option<Instant>>,
+    any: bool,
+}
+
+impl BlockCtl {
+    /// No controls: every column runs to its own stopping rule.
+    pub(crate) fn none(n: usize) -> Self {
+        Self { cancels: vec![None; n], deadlines: vec![None; n], any: false }
+    }
+
+    /// Per-column controls; both vectors must match the column count.
+    pub(crate) fn new(
+        cancels: Vec<Option<Arc<AtomicBool>>>,
+        deadlines: Vec<Option<Instant>>,
+    ) -> Self {
+        assert_eq!(cancels.len(), deadlines.len());
+        let any = cancels.iter().any(Option::is_some) || deadlines.iter().any(Option::is_some);
+        Self { cancels, deadlines, any }
+    }
+
+    /// Should column `j` deflate now? Cancel wins over deadline when
+    /// both have triggered.
+    fn poll(&self, j: usize) -> Option<ColumnExit> {
+        if let Some(c) = &self.cancels[j] {
+            if c.load(Ordering::Relaxed) {
+                return Some(ColumnExit::Cancelled);
+            }
+        }
+        if let Some(d) = self.deadlines[j] {
+            if Instant::now() >= d {
+                return Some(ColumnExit::DeadlineExceeded);
+            }
+        }
+        None
+    }
 }
 
 /// Drive a set of columns to completion over a square operator:
@@ -103,11 +169,40 @@ pub(crate) trait BlockColumn {
 pub(crate) fn drive_columns<C: BlockColumn>(
     cols: &mut [C],
     n: usize,
+    apply: impl FnMut(u8, &[f64], &mut [f64], usize),
+) {
+    let ctl = BlockCtl::none(cols.len());
+    let mut exits = vec![ColumnExit::Completed; cols.len()];
+    drive_columns_ctl(cols, n, &ctl, &mut exits, apply);
+}
+
+/// [`drive_columns`] plus mid-flight deflation: before every apply
+/// round, each live column's [`BlockCtl`] is polled and triggered
+/// columns deflate out of the block, recording why in `exits`
+/// (columns that run to completion keep [`ColumnExit::Completed`]).
+/// Survivors see exactly the apply sequence a ctl-free block would
+/// have given them — the bitwise-parity contract is unchanged.
+pub(crate) fn drive_columns_ctl<C: BlockColumn>(
+    cols: &mut [C],
+    n: usize,
+    ctl: &BlockCtl,
+    exits: &mut [ColumnExit],
     mut apply: impl FnMut(u8, &[f64], &mut [f64], usize),
 ) {
+    assert_eq!(cols.len(), exits.len());
     let mut xs: Vec<f64> = Vec::new();
     let mut ys: Vec<f64> = Vec::new();
     loop {
+        if ctl.any {
+            for (j, c) in cols.iter_mut().enumerate() {
+                if c.active() {
+                    if let Some(exit) = ctl.poll(j) {
+                        c.deflate();
+                        exits[j] = exit;
+                    }
+                }
+            }
+        }
         // group the live columns by rung; BTreeMap iterates coarsest
         // (lowest tag) first
         let mut by_tag: BTreeMap<u8, Vec<usize>> = BTreeMap::new();
@@ -140,13 +235,27 @@ pub(crate) fn drive_columns<C: BlockColumn>(
 /// per-column outcomes (shared wall clock, like `cg_solve_multi`).
 pub(crate) fn run_fixed_block<C: BlockColumn>(
     op: &dyn SpmvOp,
-    mut cols: Vec<C>,
+    cols: Vec<C>,
 ) -> Vec<SolveOutcome> {
+    let ctl = BlockCtl::none(cols.len());
+    run_fixed_block_ctl(op, cols, &ctl).0
+}
+
+/// [`run_fixed_block`] with per-column cancel/deadline controls;
+/// returns each column's outcome plus why it exited.
+pub(crate) fn run_fixed_block_ctl<C: BlockColumn>(
+    op: &dyn SpmvOp,
+    mut cols: Vec<C>,
+    ctl: &BlockCtl,
+) -> (Vec<SolveOutcome>, Vec<ColumnExit>) {
     let n = op.nrows();
+    let mut exits = vec![ColumnExit::Completed; cols.len()];
     let timer = Timer::start();
-    drive_columns(&mut cols, n, |_tag, xs, ys, width| op.apply_multi(xs, ys, width));
+    drive_columns_ctl(&mut cols, n, ctl, &mut exits, |_tag, xs, ys, width| {
+        op.apply_multi(xs, ys, width)
+    });
     let seconds = timer.elapsed_s();
-    cols.into_iter().map(|c| c.finish(op, seconds)).collect()
+    (cols.into_iter().map(|c| c.finish(op, seconds)).collect(), exits)
 }
 
 /// Run a column set over a shared precision ladder: each rung's
@@ -155,19 +264,32 @@ pub(crate) fn run_fixed_block<C: BlockColumn>(
 /// what a fresh per-request ladder would have seen.
 pub(crate) fn run_tagged_block<L: PrecisionSwitchable, C: BlockColumn>(
     op: &L,
-    mut cols: Vec<C>,
+    cols: Vec<C>,
 ) -> Vec<SolveOutcome> {
+    let ctl = BlockCtl::none(cols.len());
+    run_tagged_block_ctl(op, cols, &ctl).0
+}
+
+/// [`run_tagged_block`] with per-column cancel/deadline controls.
+pub(crate) fn run_tagged_block_ctl<L: PrecisionSwitchable, C: BlockColumn>(
+    op: &L,
+    mut cols: Vec<C>,
+    ctl: &BlockCtl,
+) -> (Vec<SolveOutcome>, Vec<ColumnExit>) {
     let n = op.nrows();
+    let mut exits = vec![ColumnExit::Completed; cols.len()];
     let timer = Timer::start();
-    drive_columns(&mut cols, n, |tag, xs, ys, width| {
+    drive_columns_ctl(&mut cols, n, ctl, &mut exits, |tag, xs, ys, width| {
         op.set_tag(tag);
         op.apply_multi(xs, ys, width);
     });
     let seconds = timer.elapsed_s();
-    cols.into_iter()
+    let outcomes = cols
+        .into_iter()
         .map(|c| {
             op.set_tag(c.tag());
             c.finish(op, seconds)
         })
-        .collect()
+        .collect();
+    (outcomes, exits)
 }

@@ -4,7 +4,7 @@
 //! SpMV operator supplies whichever storage precision is under test.
 
 use super::blas1::{axpy, dot, has_nonfinite, nrm2, xpby};
-use super::block::{BlockColumn, ColumnMonitor};
+use super::block::{run_fixed_block_ctl, BlockColumn, BlockCtl, ColumnExit, ColumnMonitor};
 use super::{MonitorCmd, SolveOutcome};
 use crate::spmv::SpmvOp;
 use crate::util::Timer;
@@ -286,6 +286,27 @@ pub fn cg_solve_multi(
     out
 }
 
+/// [`cg_solve_multi`] with per-column cancel/deadline controls: columns
+/// whose [`BlockCtl`] entry triggers deflate out of the block with a
+/// [`ColumnExit`] recording why (their outcome carries the partial
+/// iterate), while every surviving column stays bitwise identical to a
+/// standalone [`cg_solve`] — the serving path's cancellation hook.
+pub(crate) fn cg_solve_multi_ctl(
+    op: &dyn SpmvOp,
+    bs: &[f64],
+    nrhs: usize,
+    opts: &CgOpts,
+    ctl: &BlockCtl,
+) -> (Vec<SolveOutcome>, Vec<ColumnExit>) {
+    let n = op.nrows();
+    assert_eq!(op.ncols(), n, "multi-RHS CG requires a square operator");
+    assert_eq!(bs.len(), n * nrhs);
+    let cols: Vec<CgColumn> = (0..nrhs)
+        .map(|j| CgColumn::new(&bs[j * n..(j + 1) * n], opts, ColumnMonitor::Fixed))
+        .collect();
+    run_fixed_block_ctl(op, cols, ctl)
+}
+
 /// One CG right-hand side as a [`BlockColumn`] state machine — the
 /// monitored sibling of a [`cg_solve_multi`] column, used by the
 /// stepped multi-RHS mode ([`crate::solvers::stepped::run_stepped_multi`]).
@@ -454,6 +475,10 @@ impl BlockColumn for CgColumn<'_> {
         }
     }
 
+    fn deflate(&mut self) {
+        self.state = CgState::Done;
+    }
+
     fn finish(mut self, op: &dyn SpmvOp, seconds: f64) -> SolveOutcome {
         // a diverged tail must not beat the checkpoint (as in cg_solve)
         if !self.broke_down && self.best_rel.is_finite() {
@@ -613,6 +638,81 @@ mod tests {
             assert!(!out.converged);
             assert_eq!(out.iters, 4);
         }
+    }
+
+    #[test]
+    fn ctl_deflates_only_triggered_columns() {
+        use crate::formats::ValueFormat;
+        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+        use std::sync::Arc;
+        use std::time::Instant;
+
+        /// Flips `flag` after its `after`-th block apply — a
+        /// deterministic stand-in for a cancel arriving mid-solve.
+        struct FlipAfter<'a> {
+            inner: &'a dyn SpmvOp,
+            calls: AtomicUsize,
+            after: usize,
+            flag: Arc<AtomicBool>,
+        }
+        impl SpmvOp for FlipAfter<'_> {
+            fn apply(&self, x: &[f64], y: &mut [f64]) {
+                self.inner.apply(x, y);
+            }
+            fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
+                self.inner.apply_multi(x, y, nrhs);
+                if self.calls.fetch_add(1, Ordering::Relaxed) + 1 == self.after {
+                    self.flag.store(true, Ordering::Relaxed);
+                }
+            }
+            fn nrows(&self) -> usize {
+                self.inner.nrows()
+            }
+            fn ncols(&self) -> usize {
+                self.inner.ncols()
+            }
+            fn format(&self) -> ValueFormat {
+                self.inner.format()
+            }
+            fn matrix_bytes(&self) -> usize {
+                self.inner.matrix_bytes()
+            }
+        }
+
+        let op = Fp64Csr::new(poisson2d(14, 14));
+        let n = op.nrows();
+        let mut rng = Prng::new(3);
+        let mut bs = vec![0.0; n * 3];
+        bs[0..n].copy_from_slice(&rhs_for_ones(&op));
+        for v in bs[n..].iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+        let flag = Arc::new(AtomicBool::new(false));
+        let wrapped =
+            FlipAfter { inner: &op, calls: AtomicUsize::new(0), after: 3, flag: Arc::clone(&flag) };
+        // column 1 cancels after the third apply round; column 2's
+        // deadline is already in the past (deflates before any apply)
+        let ctl = crate::solvers::block::BlockCtl::new(
+            vec![None, Some(flag), None],
+            vec![None, None, Some(Instant::now())],
+        );
+        let (outs, exits) = cg_solve_multi_ctl(&wrapped, &bs, 3, &CgOpts::default(), &ctl);
+        assert_eq!(exits[0], crate::solvers::block::ColumnExit::Completed);
+        assert_eq!(exits[1], crate::solvers::block::ColumnExit::Cancelled);
+        assert_eq!(exits[2], crate::solvers::block::ColumnExit::DeadlineExceeded);
+        // the cancelled column carries exactly the 3 iterations it ran
+        assert_eq!(outs[1].iters, 3);
+        assert!(!outs[1].converged);
+        assert_eq!(outs[2].iters, 0);
+        // the surviving column is bitwise identical to a standalone solve
+        let single = cg_solve(&op, &bs[0..n], &CgOpts::default(), |_, _| MonitorCmd::Continue);
+        assert_eq!(outs[0].converged, single.converged);
+        assert_eq!(outs[0].iters, single.iters);
+        assert_eq!(outs[0].x, single.x);
+        assert_eq!(outs[0].relres.to_bits(), single.relres.to_bits());
+        // and the ctl-free block is untouched by the machinery
+        let plain = cg_solve_multi(&op, &bs, 3, &CgOpts::default());
+        assert_eq!(plain[0].x, outs[0].x);
     }
 
     #[test]

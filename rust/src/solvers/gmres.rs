@@ -7,7 +7,9 @@
 //! controller monitors (the paper records residuals per iteration).
 
 use super::blas1::{axpy, dot, has_nonfinite, nrm2, scal};
-use super::block::{run_fixed_block, BlockColumn, ColumnMonitor};
+use super::block::{
+    run_fixed_block, run_fixed_block_ctl, BlockColumn, BlockCtl, ColumnExit, ColumnMonitor,
+};
 use super::{MonitorCmd, SolveOutcome};
 use crate::spmv::SpmvOp;
 use crate::util::Timer;
@@ -223,6 +225,29 @@ pub fn gmres_solve_multi(
         .map(|j| GmresColumn::new(&bs[j * n..(j + 1) * n], opts, ColumnMonitor::Fixed))
         .collect();
     run_fixed_block(op, cols)
+}
+
+/// [`gmres_solve_multi`] with per-column cancel/deadline controls:
+/// triggered columns deflate mid-block (partial outcome, matching
+/// [`ColumnExit`] reason) while survivors stay bitwise identical to
+/// single dispatch.
+pub(crate) fn gmres_solve_multi_ctl(
+    op: &dyn SpmvOp,
+    bs: &[f64],
+    nrhs: usize,
+    opts: &GmresOpts,
+    ctl: &BlockCtl,
+) -> (Vec<SolveOutcome>, Vec<ColumnExit>) {
+    let n = op.nrows();
+    assert_eq!(op.ncols(), n, "multi-RHS GMRES requires a square operator");
+    assert_eq!(bs.len(), n * nrhs);
+    if nrhs == 0 {
+        return (Vec::new(), Vec::new());
+    }
+    let cols: Vec<GmresColumn> = (0..nrhs)
+        .map(|j| GmresColumn::new(&bs[j * n..(j + 1) * n], opts, ColumnMonitor::Fixed))
+        .collect();
+    run_fixed_block_ctl(op, cols, ctl)
 }
 
 /// One GMRES right-hand side as a [`BlockColumn`] state machine.
@@ -454,6 +479,10 @@ impl BlockColumn for GmresColumn<'_> {
             GmresState::NeedArnoldi => self.absorb_arnoldi(y),
             GmresState::Done => unreachable!("inactive column fed a result"),
         }
+    }
+
+    fn deflate(&mut self) {
+        self.state = GmresState::Done;
     }
 
     fn finish(mut self, op: &dyn SpmvOp, seconds: f64) -> SolveOutcome {

@@ -309,8 +309,23 @@ pub fn run_stepped_multi<L: PrecisionSwitchable>(
     params: SteppedParams,
     solver: &BlockSolver,
 ) -> Vec<crate::solvers::SolveOutcome> {
+    let ctl = crate::solvers::block::BlockCtl::none(nrhs);
+    run_stepped_multi_ctl(op, bs, nrhs, params, solver, &ctl).0
+}
+
+/// [`run_stepped_multi`] with per-column cancel/deadline controls:
+/// triggered columns deflate mid-block (partial outcome, matching exit
+/// reason) while survivors stay bitwise identical to single dispatch.
+pub(crate) fn run_stepped_multi_ctl<L: PrecisionSwitchable>(
+    op: &L,
+    bs: &[f64],
+    nrhs: usize,
+    params: SteppedParams,
+    solver: &BlockSolver,
+    ctl: &crate::solvers::block::BlockCtl,
+) -> (Vec<crate::solvers::SolveOutcome>, Vec<crate::solvers::block::ColumnExit>) {
     use crate::solvers::bicgstab::BicgstabColumn;
-    use crate::solvers::block::{run_tagged_block, ColumnMonitor};
+    use crate::solvers::block::{run_tagged_block_ctl, ColumnMonitor};
     use crate::solvers::cg::CgColumn;
     use crate::solvers::gmres::GmresColumn;
 
@@ -318,7 +333,7 @@ pub fn run_stepped_multi<L: PrecisionSwitchable>(
     assert_eq!(op.ncols(), n, "stepped multi-RHS requires a square operator");
     assert_eq!(bs.len(), n * nrhs);
     if nrhs == 0 {
-        return Vec::new();
+        return (Vec::new(), Vec::new());
     }
     // every column starts on the coarsest rung, as a fresh per-request
     // ladder would
@@ -329,19 +344,19 @@ pub fn run_stepped_multi<L: PrecisionSwitchable>(
         BlockSolver::Cg(o) => {
             let cols: Vec<CgColumn> =
                 (0..nrhs).map(|j| CgColumn::new(&bs[j * n..(j + 1) * n], o, ctrl())).collect();
-            run_tagged_block(op, cols)
+            run_tagged_block_ctl(op, cols, ctl)
         }
         BlockSolver::Gmres(o) => {
             let cols: Vec<GmresColumn> = (0..nrhs)
                 .map(|j| GmresColumn::new(&bs[j * n..(j + 1) * n], o, ctrl()))
                 .collect();
-            run_tagged_block(op, cols)
+            run_tagged_block_ctl(op, cols, ctl)
         }
         BlockSolver::Bicgstab(o) => {
             let cols: Vec<BicgstabColumn> = (0..nrhs)
                 .map(|j| BicgstabColumn::new(&bs[j * n..(j + 1) * n], o, ctrl()))
                 .collect();
-            run_tagged_block(op, cols)
+            run_tagged_block_ctl(op, cols, ctl)
         }
     }
 }

@@ -134,6 +134,17 @@ impl SpmvOp for Fp64Csr {
         // single-plane CSR: resident storage equals per-apply traffic
         self.matrix_bytes()
     }
+
+    fn spill_bytes(&self) -> Option<Vec<u8>> {
+        let mut w = crate::util::codec::ByteWriter::new();
+        w.put_u8(super::spill_tag::FP64);
+        w.put_u64(self.a.nrows as u64);
+        w.put_u64(self.a.ncols as u64);
+        w.put_usizes(&self.a.rowptr);
+        w.put_u32s(&self.a.colidx);
+        w.put_f64s(&self.a.vals);
+        Some(w.into_bytes())
+    }
 }
 
 #[cfg(test)]

@@ -159,6 +159,66 @@ impl GseCsr {
         }
     }
 
+    /// Reassemble an encoded matrix from its stored planes — the
+    /// registry's spill-restore path (`coordinator::spill`). Only the
+    /// fields a spill file persists are taken; every derived decode
+    /// table (geometry, scale LUTs) is recomputed deterministically
+    /// from `table`, so a restored matrix is indistinguishable from the
+    /// original encode (same planes, same decode arithmetic, hence
+    /// bitwise-identical SpMV).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        rowptr: Vec<usize>,
+        cols: Vec<u32>,
+        heads: Vec<u16>,
+        tail1: Vec<u16>,
+        tail2: Vec<u32>,
+        ext_idx: Option<Vec<u8>>,
+        table: GseTable,
+        packed: bool,
+    ) -> Self {
+        let geom = SemGeometry::new(SemLayout::External, table.ei_bit);
+        let scales: Vec<f64> =
+            table.entries.iter().map(|&e| ieee::ldexp(1.0, e as i32 - 1075)).collect();
+        let scale_exact: Vec<bool> = scales
+            .iter()
+            .map(|&s| s.is_normal() && s > 0.0)
+            .collect();
+        let all_exact = scale_exact.iter().all(|&e| e);
+        let mut sscale = vec![0f64; 2 * 64];
+        let mut sscale_head = vec![0f64; 2 * 64];
+        for (i, &e) in table.entries.iter().enumerate() {
+            let s = ieee::ldexp(1.0, e as i32 - 1075);
+            sscale[2 * i] = s;
+            sscale[2 * i + 1] = -s;
+            let sh = ieee::ldexp(1.0, e as i32 - 1075 + geom.s_head as i32);
+            sscale_head[2 * i] = sh;
+            sscale_head[2 * i + 1] = -sh;
+        }
+        Self {
+            nrows,
+            ncols,
+            rowptr,
+            cols,
+            heads,
+            tail1,
+            tail2,
+            ext_idx,
+            table,
+            geom,
+            packed,
+            strategy: DecodeStrategy::ScaleLut,
+            threads: 1,
+            scales,
+            scale_exact,
+            all_exact,
+            sscale,
+            sscale_head,
+        }
+    }
+
     pub fn nnz(&self) -> usize {
         self.heads.len()
     }

@@ -190,6 +190,27 @@ impl<T: StoredValue> SpmvOp for LowpCsr<T> {
         // single-plane CSR: resident storage equals per-apply traffic
         self.matrix_bytes()
     }
+
+    fn spill_bytes(&self) -> Option<Vec<u8>> {
+        let tag = match T::FORMAT {
+            ValueFormat::Fp32 => super::spill_tag::FP32,
+            ValueFormat::Fp16 => super::spill_tag::FP16,
+            ValueFormat::Bf16 => super::spill_tag::BF16,
+            _ => return None,
+        };
+        // values round-trip through f64 losslessly (each stored format
+        // is a strict subset of f64), so one layout covers all three
+        let mut w = crate::util::codec::ByteWriter::new();
+        w.put_u8(tag);
+        w.put_u64(self.nrows as u64);
+        w.put_u64(self.ncols as u64);
+        w.put_usizes(&self.rowptr);
+        w.put_u32s(&self.colidx);
+        let vals: Vec<f64> = self.vals.iter().map(|v| v.to_f64()).collect();
+        w.put_f64s(&vals);
+        w.put_u8(self.overflowed as u8);
+        Some(w.into_bytes())
+    }
 }
 
 #[cfg(test)]

@@ -68,6 +68,28 @@ pub trait SpmvOp: Send + Sync {
     fn encoded_bytes(&self) -> usize {
         self.matrix_bytes()
     }
+
+    /// Serialize the operator's resident storage for the coordinator
+    /// registry's disk spill (see `coordinator::spill`). `None` — the
+    /// default — opts the operator type out: on eviction it is simply
+    /// dropped and rebuilt on the next hit. Implementations emit a
+    /// `spill_tag` byte followed by a layout private to themselves and
+    /// the spill decoder; the restored operator must be bitwise
+    /// indistinguishable from the original encode.
+    fn spill_bytes(&self) -> Option<Vec<u8>> {
+        None
+    }
+}
+
+/// Leading payload byte of each operator spill layout, so the decoder
+/// can cross-check the registry key's format against what is actually
+/// in the file.
+pub(crate) mod spill_tag {
+    pub const FP64: u8 = 0;
+    pub const FP32: u8 = 1;
+    pub const FP16: u8 = 2;
+    pub const BF16: u8 = 3;
+    pub const GSE: u8 = 4;
 }
 
 /// The looped multi-RHS baseline: `nrhs` single applies, regardless of

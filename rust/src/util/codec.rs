@@ -1,0 +1,244 @@
+//! Minimal little-endian binary codec — the serialization substrate for
+//! the coordinator's operator spill files (no `serde`/`bincode` in this
+//! offline build, see DESIGN.md §5).
+//!
+//! [`ByteWriter`] appends fixed-width scalars and length-prefixed
+//! arrays; [`ByteReader`] reads them back with fallible, bounds-checked
+//! accessors so a truncated or corrupt spill file surfaces as an
+//! [`Error`](crate::util::error::Error) instead of a panic — the
+//! registry then falls back to re-encoding.
+
+use crate::util::error::{Error, Result};
+
+/// Append-only little-endian byte buffer.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        // bit pattern, not value: round-trips NaN payloads and -0.0
+        self.put_u64(v.to_bits());
+    }
+
+    /// `u64` length prefix + raw bytes.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_u16s(&mut self, v: &[u16]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u16(x);
+        }
+    }
+
+    pub fn put_u32s(&mut self, v: &[u32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u32(x);
+        }
+    }
+
+    /// `usize` values stored as u64 (rowptr arrays).
+    pub fn put_usizes(&mut self, v: &[usize]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u64(x as u64);
+        }
+    }
+
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+}
+
+/// Bounds-checked reader over a byte slice; every accessor fails with a
+/// context message on truncation.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::msg(format!(
+                "truncated buffer: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    /// Read a `u64` length prefix, validated against the remaining bytes
+    /// so a corrupt length cannot trigger a huge allocation.
+    fn get_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.get_u64()? as usize;
+        if n.checked_mul(elem_bytes).is_none_or(|total| total > self.remaining()) {
+            return Err(Error::msg(format!(
+                "corrupt length prefix {n} at offset {} (remaining {})",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn get_u16s(&mut self) -> Result<Vec<u16>> {
+        let n = self.get_len(2)?;
+        (0..n).map(|_| self.get_u16()).collect()
+    }
+
+    pub fn get_u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.get_len(4)?;
+        (0..n).map(|_| self.get_u32()).collect()
+    }
+
+    pub fn get_usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.get_len(8)?;
+        (0..n).map(|_| Ok(self.get_u64()? as usize)).collect()
+    }
+
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_len(8)?;
+        (0..n).map(|_| self.get_f64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u16(0xBEEF);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f64(-0.0);
+        w.put_f64(f64::NAN);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u16().unwrap(), 0xBEEF);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.get_f64().unwrap().is_nan());
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn arrays_round_trip() {
+        let mut w = ByteWriter::new();
+        w.put_bytes(&[1, 2, 3]);
+        w.put_u16s(&[10, 20]);
+        w.put_u32s(&[]);
+        w.put_usizes(&[0, usize::MAX]);
+        w.put_f64s(&[1.5, -2.25]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_bytes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.get_u16s().unwrap(), vec![10, 20]);
+        assert_eq!(r.get_u32s().unwrap(), Vec::<u32>::new());
+        assert_eq!(r.get_usizes().unwrap(), vec![0, usize::MAX]);
+        assert_eq!(r.get_f64s().unwrap(), vec![1.5, -2.25]);
+    }
+
+    #[test]
+    fn truncation_errors_not_panics() {
+        let mut w = ByteWriter::new();
+        w.put_u32s(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+        // cut mid-array: the reader must fail cleanly
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(r.get_u32s().is_err(), "cut at {cut} should fail");
+        }
+    }
+
+    #[test]
+    fn corrupt_length_rejected_without_allocation() {
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX); // absurd length prefix, no payload
+        let bytes = w.into_bytes();
+        assert!(ByteReader::new(&bytes).get_f64s().is_err());
+        assert!(ByteReader::new(&bytes).get_bytes().is_err());
+    }
+}

@@ -6,6 +6,7 @@
 //! environment (see DESIGN.md §5).
 
 pub mod prng;
+pub mod codec;
 pub mod stats;
 pub mod timer;
 pub mod bits;

@@ -29,7 +29,7 @@ fn mini_suite_runs_all_formats_on_first_cg_matrices() {
             reqs.push(SolveRequest::new(&m.name, Arc::clone(&a), SolverKind::Cg, fmt));
         }
     }
-    let res = pool.run_batch(reqs);
+    let res: Vec<_> = pool.run_batch(reqs).into_iter().map(|r| r.unwrap()).collect();
     assert_eq!(res.len(), 9);
     // every FP64 run on the small CG set must converge
     for r in res.iter().filter(|r| r.format_label == "FP64") {
@@ -70,7 +70,7 @@ fn pool_batches_same_matrix_cg_and_caches_encodes() {
         ));
     }
     let pool = SolverPool::new(2);
-    let res = pool.run_batch(reqs);
+    let res: Vec<_> = pool.run_batch(reqs).into_iter().map(|r| r.unwrap()).collect();
     assert_eq!(res.len(), 6);
     for r in &res {
         assert!(r.relres_fp64.is_finite(), "{} {}", r.name, r.format_label);
@@ -103,6 +103,7 @@ fn gmres_small_suite_first_entries() {
         })
         .collect();
     for r in pool.run_batch(reqs) {
+        let r = r.unwrap();
         assert!(r.outcome.iters > 0);
         assert!(r.relres_fp64.is_finite());
     }
@@ -128,11 +129,11 @@ fn service_merges_staggered_corpus_requests_across_arcs() {
                 FormatChoice::fixed(ValueFormat::Fp64),
             );
             spec.rhs = RhsSpec::Random(seed);
-            svc.submit(spec)
+            svc.submit(spec).unwrap()
         })
         .collect();
     for (seed, t) in tickets.into_iter().enumerate() {
-        let r = t.wait();
+        let r = t.wait().unwrap();
         assert_eq!(r.name, format!("rr{seed}"));
         assert!(r.outcome.converged, "rr{seed}: {}", r.relres_fp64);
     }

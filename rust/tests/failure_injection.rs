@@ -1,7 +1,7 @@
 //! Failure-injection tests: malformed inputs and degenerate systems must
 //! produce errors or flagged breakdowns, never panics or silent garbage.
 
-use gsem::coordinator::{FormatChoice, SolveRequest, SolverKind};
+use gsem::coordinator::{FormatChoice, ServiceError, SolveRequest, SolveResult, SolverKind};
 use gsem::formats::ValueFormat;
 use gsem::runtime::artifacts::Manifest;
 use gsem::sparse::coo::Coo;
@@ -46,6 +46,17 @@ fn manifest_rejects_malformed_json() {
     let _ = std::fs::remove_file(dir.join("manifest.json"));
 }
 
+/// Redeem a typed dispatch result for inspection: a clean result passes
+/// through, a [`ServiceError::Breakdown`] yields its partial result
+/// (that is the point of boxing it), anything else is a test failure.
+fn redeem(res: Result<SolveResult, ServiceError>) -> SolveResult {
+    match res {
+        Ok(r) => r,
+        Err(ServiceError::Breakdown(b)) => *b,
+        Err(e) => panic!("unexpected service error: {e}"),
+    }
+}
+
 #[test]
 fn singular_matrix_solves_flag_not_panic() {
     // zero matrix: CG breaks down (pAp = 0), GMRES stalls — all flagged
@@ -59,7 +70,7 @@ fn singular_matrix_solves_flag_not_panic() {
         );
         req.rhs = gsem::coordinator::RhsSpec::Ones;
         req.max_iters = 50;
-        let res = gsem::coordinator::jobs::dispatch(&req);
+        let res = redeem(gsem::coordinator::jobs::dispatch(&req));
         assert!(!res.outcome.converged, "{solver:?} cannot converge on A=0");
         assert!(res.outcome.x.iter().all(|v| v.is_finite()), "{solver:?} produced non-finite x");
     }
@@ -78,7 +89,7 @@ fn indefinite_matrix_cg_does_not_panic() {
         SolveRequest::new("saddle", a, SolverKind::Cg, FormatChoice::fixed(ValueFormat::Fp64));
     req.rhs = gsem::coordinator::RhsSpec::Ones;
     req.max_iters = 100;
-    let res = gsem::coordinator::jobs::dispatch(&req);
+    let res = redeem(gsem::coordinator::jobs::dispatch(&req));
     // diagonal system: CG actually solves it; just require sanity
     assert!(res.relres_fp64.is_finite() || res.outcome.broke_down);
 }
@@ -144,11 +155,13 @@ fn bicgstab_breakdown_in_one_column_fails_only_that_ticket() {
     };
     let good = mk("good", RhsSpec::AxOnes);
     let bad = mk("bad", RhsSpec::Unit(5));
-    let tg = svc.submit_request(good.clone());
-    let tb = svc.submit_request(bad.clone());
+    let tg = svc.submit_request(good.clone()).unwrap();
+    let tb = svc.submit_request(bad.clone()).unwrap();
     assert_eq!(svc.flush(), 2);
-    let rg = tg.wait();
-    let rb = tb.wait();
+    let rg = tg.wait().unwrap();
+    // the exact-zero recurrence is flagged in-band (finite iterate, not
+    // a non-finite Breakdown) — redeem() tolerates either surface
+    let rb = redeem(tb.wait());
     // they really ran as one block...
     assert_eq!(svc.metrics().counter("intake.merged"), 2);
     assert_eq!(svc.metrics().counter("pool.batched_bicgstab"), 1);
@@ -159,12 +172,70 @@ fn bicgstab_breakdown_in_one_column_fails_only_that_ticket() {
     assert!(rg.outcome.converged, "in-range RHS must still converge: {}", rg.relres_fp64);
     // ...and both tickets match one-shot dispatch bitwise
     for (req, res) in [(&good, &rg), (&bad, &rb)] {
-        let single = gsem::coordinator::jobs::dispatch(req);
+        let single = redeem(gsem::coordinator::jobs::dispatch(req));
         assert_eq!(res.outcome.converged, single.outcome.converged, "{}", req.name);
         assert_eq!(res.outcome.iters, single.outcome.iters, "{}", req.name);
         assert_eq!(res.outcome.x, single.outcome.x, "{}", req.name);
         assert_eq!(res.relres_fp64.to_bits(), single.relres_fp64.to_bits(), "{}", req.name);
     }
+}
+
+#[test]
+fn cancelled_ticket_in_merged_group_fails_only_itself() {
+    use gsem::coordinator::{RhsSpec, ServiceConfig, SolveSpec, SolverService};
+    let a = Arc::new(gsem::sparse::gen::poisson::poisson2d(8, 8));
+    let svc = SolverService::manual(ServiceConfig::new().workers(2));
+    let h = svc.register(&a);
+    let mk = |name: &str, seed: u64| {
+        SolveSpec::new(name, h.clone(), SolverKind::Cg, FormatChoice::fixed(ValueFormat::Fp64))
+            .rhs(RhsSpec::Random(seed))
+    };
+    let keep = svc.submit(mk("keep", 1)).unwrap();
+    let gone = svc.submit(mk("gone", 2)).unwrap();
+    gone.cancel();
+    svc.flush();
+    // the cancelled ticket resolves with its typed error...
+    match gone.wait() {
+        Err(ServiceError::Cancelled { name }) => assert_eq!(name, "gone"),
+        other => panic!("expected Cancelled, got {:?}", other.map(|r| r.name)),
+    }
+    assert_eq!(svc.metrics().counter("intake.cancelled"), 1);
+    // ...while its group sibling completes bitwise-identical to a
+    // one-shot dispatch, untouched by the deflation
+    let kept = keep.wait().expect("sibling must be unaffected");
+    let mut req = SolveRequest::new(
+        "keep",
+        Arc::clone(&a),
+        SolverKind::Cg,
+        FormatChoice::fixed(ValueFormat::Fp64),
+    );
+    req.rhs = RhsSpec::Random(1);
+    let single = gsem::coordinator::jobs::dispatch(&req).unwrap();
+    assert_eq!(kept.outcome.iters, single.outcome.iters);
+    assert_eq!(kept.outcome.x, single.outcome.x);
+    assert_eq!(kept.relres_fp64.to_bits(), single.relres_fp64.to_bits());
+}
+
+#[test]
+fn expired_deadline_in_merged_group_fails_only_itself() {
+    use gsem::coordinator::{RhsSpec, ServiceConfig, SolveSpec, SolverService};
+    use std::time::Instant;
+    let a = Arc::new(gsem::sparse::gen::poisson::poisson2d(8, 8));
+    let svc = SolverService::manual(ServiceConfig::new().workers(2));
+    let h = svc.register(&a);
+    let mk = |name: &str, seed: u64| {
+        SolveSpec::new(name, h.clone(), SolverKind::Cg, FormatChoice::fixed(ValueFormat::Fp64))
+            .rhs(RhsSpec::Random(seed))
+    };
+    let keep = svc.submit(mk("keep", 3)).unwrap();
+    let late = svc.submit(mk("late", 4).deadline_at(Instant::now())).unwrap();
+    svc.flush();
+    match late.wait() {
+        Err(ServiceError::DeadlineExceeded { name }) => assert_eq!(name, "late"),
+        other => panic!("expected DeadlineExceeded, got {:?}", other.map(|r| r.name)),
+    }
+    assert_eq!(svc.metrics().counter("intake.deadline_expired"), 1);
+    assert!(keep.wait().expect("sibling must be unaffected").outcome.converged);
 }
 
 #[test]

@@ -5,8 +5,8 @@
 //! change results, only `cache.*` counters.
 
 use gsem::coordinator::{
-    FormatChoice, RhsSpec, ServiceConfig, SolveRequest, SolveResult, SolverKind, SolverPool,
-    SolverService,
+    FormatChoice, RhsSpec, ServiceConfig, ServiceError, SolveRequest, SolveResult, SolverKind,
+    SolverPool, SolverService,
 };
 use gsem::formats::{Precision, ValueFormat};
 use gsem::solvers::stepped::SteppedParams;
@@ -98,24 +98,30 @@ fn assert_bitwise_same(base: &[SolveResult], got: &[SolveResult]) {
     }
 }
 
+/// Drain a batch, unwrapping the typed-error layer: this request set
+/// never breaks down, so every ticket must resolve `Ok`.
+fn run_batch_ok(pool: &SolverPool, reqs: Vec<SolveRequest>) -> Vec<SolveResult> {
+    pool.run_batch(reqs).into_iter().map(|r| r.expect("clean request set")).collect()
+}
+
 fn submit_all(svc: &SolverService, stagger: Option<Duration>) -> Vec<SolveResult> {
     let tickets: Vec<_> = request_set()
         .into_iter()
         .map(|r| {
-            let t = svc.submit_request(r);
+            let t = svc.submit_request(r).expect("unbounded intake admits everything");
             if let Some(d) = stagger {
                 std::thread::sleep(d);
             }
             t
         })
         .collect();
-    tickets.into_iter().map(|t| t.wait()).collect()
+    tickets.into_iter().map(|t| t.wait().expect("clean request set")).collect()
 }
 
 #[test]
 fn windowed_service_matches_pool_dispatch_bitwise() {
     let pool = SolverPool::new(3);
-    let base = pool.run_batch(request_set());
+    let base = run_batch_ok(&pool, request_set());
     // sanity: the baseline itself converges where expected
     assert!(base.iter().filter(|r| r.format_label == "FP64").all(|r| r.outcome.converged));
 
@@ -138,11 +144,12 @@ fn windowed_service_matches_pool_dispatch_bitwise() {
 #[test]
 fn manual_service_matches_pool_dispatch_bitwise() {
     let pool = SolverPool::new(2);
-    let base = pool.run_batch(request_set());
+    let base = run_batch_ok(&pool, request_set());
     let svc = SolverService::manual(ServiceConfig::new().workers(2));
-    let tickets: Vec<_> = request_set().into_iter().map(|r| svc.submit_request(r)).collect();
+    let tickets: Vec<_> =
+        request_set().into_iter().map(|r| svc.submit_request(r).unwrap()).collect();
     assert_eq!(svc.flush(), tickets.len());
-    let got: Vec<SolveResult> = tickets.into_iter().map(|t| t.wait()).collect();
+    let got: Vec<SolveResult> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
     assert_bitwise_same(&base, &got);
     // the mergeable trio actually merged
     assert_eq!(svc.metrics().counter("pool.batched_rhs"), 3);
@@ -153,13 +160,14 @@ fn manual_service_matches_pool_dispatch_bitwise() {
 #[test]
 fn eviction_changes_counters_not_results() {
     let pool = SolverPool::new(2);
-    let base = pool.run_batch(request_set());
+    let base = run_batch_ok(&pool, request_set());
     // a budget far below the working set: operators are evicted and
     // rebuilt continuously while the batch runs
     let svc = SolverService::manual(ServiceConfig::new().workers(2).cache_bytes(8 * 1024));
-    let tickets: Vec<_> = request_set().into_iter().map(|r| svc.submit_request(r)).collect();
+    let tickets: Vec<_> =
+        request_set().into_iter().map(|r| svc.submit_request(r).unwrap()).collect();
     svc.flush();
-    let got: Vec<SolveResult> = tickets.into_iter().map(|t| t.wait()).collect();
+    let got: Vec<SolveResult> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
     assert_bitwise_same(&base, &got);
     let st = svc.registry().stats();
     assert!(st.evictions > 0, "tiny budget must evict (stats: {st:?})");
@@ -198,14 +206,14 @@ fn staggered_gmres_trace_merges_and_matches_dispatch() {
     let tickets: Vec<_> = reqs
         .iter()
         .map(|r| {
-            let t = svc.submit_request(r.clone());
+            let t = svc.submit_request(r.clone()).unwrap();
             std::thread::sleep(Duration::from_micros(300));
             t
         })
         .collect();
     for (r, t) in reqs.iter().zip(tickets) {
-        let got = t.wait();
-        let single = gsem::coordinator::jobs::dispatch(r);
+        let got = t.wait().unwrap();
+        let single = gsem::coordinator::jobs::dispatch(r).unwrap();
         assert_eq!(got.outcome.iters, single.outcome.iters, "{}", r.name);
         assert_eq!(got.outcome.x, single.outcome.x, "{}", r.name);
         assert_eq!(got.relres_fp64.to_bits(), single.relres_fp64.to_bits(), "{}", r.name);
@@ -245,14 +253,14 @@ fn staggered_stepped_trace_merges_and_matches_dispatch() {
         let tickets: Vec<_> = reqs
             .iter()
             .map(|r| {
-                let t = svc.submit_request(r.clone());
+                let t = svc.submit_request(r.clone()).unwrap();
                 std::thread::sleep(Duration::from_micros(300));
                 t
             })
             .collect();
         for (r, t) in reqs.iter().zip(tickets) {
-            let got = t.wait();
-            let single = gsem::coordinator::jobs::dispatch(r);
+            let got = t.wait().unwrap();
+            let single = gsem::coordinator::jobs::dispatch(r).unwrap();
             assert_eq!(got.format_label, "GSE-SEM", "{}", r.name);
             assert_eq!(got.outcome.iters, single.outcome.iters, "{}", r.name);
             assert_eq!(got.outcome.switches, single.outcome.switches, "{}", r.name);
@@ -270,12 +278,52 @@ fn staggered_stepped_trace_merges_and_matches_dispatch() {
 }
 
 #[test]
+fn bounded_intake_sheds_excess_and_admitted_match_dispatch() {
+    let a = Arc::new(poisson2d(10, 10));
+    let svc = SolverService::manual(ServiceConfig::new().workers(2).queue_depth(3));
+    let mut tickets = Vec::new();
+    let mut shed = 0u64;
+    for seed in 0..8u64 {
+        let mut r = SolveRequest::new(
+            &format!("burst-{seed}"),
+            Arc::clone(&a),
+            SolverKind::Cg,
+            FormatChoice::fixed(ValueFormat::Fp64),
+        );
+        r.rhs = RhsSpec::Random(seed);
+        match svc.submit_request(r.clone()) {
+            Ok(t) => tickets.push((r, t)),
+            Err(ServiceError::Overloaded { depth }) => {
+                assert_eq!(depth, 3, "shed must report the saturated depth");
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert_eq!(tickets.len(), 3, "bound admits exactly queue_depth");
+    assert_eq!(shed, 5);
+    assert_eq!(svc.metrics().counter("intake.shed"), 5);
+    assert_eq!(svc.metrics().counter("intake.submitted"), 3);
+    svc.flush();
+    // load-shedding must not perturb what was admitted: every survivor
+    // is bitwise identical to its one-shot dispatch
+    for (r, t) in tickets {
+        let got = t.wait().unwrap();
+        let single = gsem::coordinator::jobs::dispatch(&r).unwrap();
+        assert_eq!(got.outcome.iters, single.outcome.iters, "{}", r.name);
+        assert_eq!(got.outcome.x, single.outcome.x, "{}", r.name);
+        assert_eq!(got.relres_fp64.to_bits(), single.relres_fp64.to_bits(), "{}", r.name);
+    }
+}
+
+#[test]
 fn new_counters_appear_in_metrics_report() {
     let svc = SolverService::manual(ServiceConfig::new().workers(2).cache_bytes(8 * 1024));
-    let tickets: Vec<_> = request_set().into_iter().map(|r| svc.submit_request(r)).collect();
+    let tickets: Vec<_> =
+        request_set().into_iter().map(|r| svc.submit_request(r).unwrap()).collect();
     svc.flush();
     for t in tickets {
-        let _ = t.wait();
+        let _ = t.wait().unwrap();
     }
     let report = svc.metrics().report();
     for counter in ["cache.evictions", "cache.bytes", "intake.flushes", "intake.merged"] {

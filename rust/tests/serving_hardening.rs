@@ -1,0 +1,111 @@
+//! Serving-hardening acceptance, all through the public service API:
+//! operator spill/restore round-trips (GSE and the copy-ladder rungs)
+//! must re-hit without re-encoding and stay bitwise identical, and the
+//! hardening counters must surface in [`MetricsSnapshot`] / its JSON.
+//!
+//! [`MetricsSnapshot`]: gsem::coordinator::MetricsSnapshot
+
+use gsem::coordinator::{
+    FormatChoice, RhsSpec, ServiceConfig, SolveResult, SolveSpec, SolverKind, SolverService,
+};
+use gsem::formats::{Precision, ValueFormat};
+use gsem::solvers::stepped::SteppedParams;
+use gsem::sparse::gen::poisson::poisson2d;
+use gsem::sparse::Csr;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// A per-test spill directory, wiped first: spill files are
+/// content-addressed and persist, so leftovers from a previous run
+/// would satisfy first-pass misses and skew the encode counts.
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Two passes over several matrices through a spill-backed service
+/// whose cache budget is far below the working set. Pass 1 encodes and
+/// spills on eviction; pass 2 re-hits every digest and must be answered
+/// by restores — zero re-encodes — with bitwise-identical results.
+fn spill_roundtrip(dir_name: &str, format: FormatChoice) {
+    let dir = fresh_dir(dir_name);
+    let svc = SolverService::manual(
+        ServiceConfig::new().workers(2).cache_bytes(12 * 1024).spill_dir(dir),
+    );
+    let mats: Vec<Arc<Csr>> =
+        [10usize, 12, 14, 16].iter().map(|&n| Arc::new(poisson2d(n, n))).collect();
+    let handles: Vec<_> = mats.iter().map(|a| svc.register(a)).collect();
+    let solve = |j: usize| -> SolveResult {
+        let spec =
+            SolveSpec::new(&format!("m{j}"), handles[j].clone(), SolverKind::Cg, format.clone())
+                .rhs(RhsSpec::Random(40 + j as u64));
+        let t = svc.submit(spec).unwrap();
+        svc.flush();
+        t.wait().unwrap()
+    };
+    let first: Vec<SolveResult> = (0..mats.len()).map(|j| solve(j)).collect();
+    let st1 = svc.registry().stats();
+    assert!(st1.evictions > 0, "tiny budget must evict: {st1:?}");
+    assert!(st1.spills > 0, "evictions must spill, not drop: {st1:?}");
+    let encodes_after_pass1 = svc.metrics().timing("cache.encode").0;
+
+    let second: Vec<SolveResult> = (0..mats.len()).map(|j| solve(j)).collect();
+    let st2 = svc.registry().stats();
+    assert!(st2.restores > 0, "second pass must restore from spill: {st2:?}");
+    assert!(st2.restore_bytes > 0, "restores must account their file bytes: {st2:?}");
+    assert_eq!(
+        svc.metrics().timing("cache.encode").0,
+        encodes_after_pass1,
+        "a restored operator must not be re-encoded"
+    );
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.outcome.iters, b.outcome.iters, "{}", a.name);
+        assert!(bits_eq(&a.outcome.x, &b.outcome.x), "{}: restore changed the solve", a.name);
+        assert_eq!(a.relres_fp64.to_bits(), b.relres_fp64.to_bits(), "{}", a.name);
+    }
+}
+
+#[test]
+fn spill_restore_roundtrip_gse() {
+    spill_roundtrip(
+        "gsem_spill_gse_test",
+        FormatChoice::Fixed { format: ValueFormat::GseSem(Precision::Full), k: 8 },
+    );
+}
+
+#[test]
+fn spill_restore_roundtrip_copy_ladder() {
+    spill_roundtrip(
+        "gsem_spill_copy_test",
+        FormatChoice::SteppedCopy { params: SteppedParams::cg_paper().scaled(0.01) },
+    );
+}
+
+#[test]
+fn metrics_snapshot_and_json_expose_hardening_counters() {
+    let svc = SolverService::manual(ServiceConfig::new().workers(2).queue_depth(1));
+    let a = Arc::new(poisson2d(8, 8));
+    let h = svc.register(&a);
+    let mk = |name: &str, seed: u64| {
+        SolveSpec::new(name, h.clone(), SolverKind::Cg, FormatChoice::fixed(ValueFormat::Fp64))
+            .rhs(RhsSpec::Random(seed))
+    };
+    let t = svc.submit(mk("ok", 1)).unwrap();
+    assert!(svc.submit(mk("excess", 2)).is_err(), "depth-1 queue must shed the second submit");
+    svc.flush();
+    t.wait().unwrap();
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.counter("intake.submitted"), 1);
+    assert_eq!(snap.counter("intake.shed"), 1);
+    assert_eq!(snap.counter("intake.flushes"), 1);
+    let json = snap.to_json();
+    for key in ["\"counters\"", "\"gauges\"", "\"timings\"", "intake.submitted", "intake.shed"] {
+        assert!(json.contains(key), "snapshot JSON missing {key}: {json}");
+    }
+}
