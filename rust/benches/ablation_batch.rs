@@ -5,13 +5,21 @@
 //! `nrhs` looped single-RHS applies on per-RHS wall time — most of all
 //! for the decode-heavy GSE-SEM levels. This bench measures exactly
 //! that, per storage format and batch width, against the looped
-//! baseline (`apply_multi_looped`).
+//! baseline (`apply_multi_looped`) — and reports each cell's achieved
+//! GB/s (the `spmv::traffic` byte model over measured fused time)
+//! against a STREAM-triad roofline measured on this machine, so the
+//! "memory-bound" premise is legible as a fraction of peak.
+//!
+//! The largest (smoke) matrix doubles as a regression guard: fused must
+//! not lose to looped at nrhs >= 4 (geomean across formats), so a tile
+//! kernel regression fails this bench loudly in CI.
 
 #[path = "common.rs"]
 mod common;
 
 use gsem::formats::{Precision, ValueFormat};
 use gsem::sparse::gen::corpus::{spmv_corpus, NamedMatrix};
+use gsem::spmv::traffic::V100;
 use gsem::spmv::{apply_multi_looped, build_operators, SpmvOp};
 use gsem::util::csv::write_csv;
 use gsem::util::stats::geomean;
@@ -22,16 +30,25 @@ fn main() {
     corpus.sort_by_key(|m| m.a.nnz());
     // the largest few matrices give the stablest per-RHS timings
     let picks: Vec<&NamedMatrix> = corpus.iter().rev().take(3).collect();
-    eprintln!("ablation_batch: {} matrices", picks.len());
+    let bw = common::stream_triad_bw();
+    eprintln!(
+        "ablation_batch: {} matrices, STREAM triad roofline {:.2} GB/s",
+        picks.len(),
+        bw / 1e9
+    );
     let budget = common::cell_budget();
     let widths = [1usize, 2, 4, 8];
 
-    let header = ["matrix", "format", "nrhs", "looped/rhs", "fused/rhs", "speedup"];
+    let header =
+        ["matrix", "format", "nrhs", "looped/rhs", "fused/rhs", "speedup", "GB/s", "roof%"];
     let mut t = TextTable::new(&header);
     let mut rows = Vec::new();
+    let mut roof_rows = Vec::new();
     // (looped, fused) per-RHS seconds at nrhs=8 for the GSE head level
     let mut head8: Vec<(f64, f64)> = Vec::new();
-    for m in &picks {
+    // fused-vs-looped speedups on the largest (smoke) matrix, nrhs >= 4
+    let mut guard: Vec<f64> = Vec::new();
+    for (mi, m) in picks.iter().enumerate() {
         let a = &m.a;
         let ops: Vec<Box<dyn SpmvOp>> = build_operators(a, 8);
         for op in &ops {
@@ -45,8 +62,17 @@ fn main() {
                     op.apply_multi(&x, &mut y, nrhs);
                 });
                 let (lp, fp) = (t_loop / nrhs as f64, t_fused / nrhs as f64);
+                // achieved bandwidth of the fused kernel: modeled bytes
+                // (matrix planes once + per-RHS vector traffic) over
+                // measured wall time, as a fraction of the STREAM roof
+                let bytes = V100.spmv_multi_bytes(a.nnz(), a.nrows, op.format(), nrhs);
+                let gbs = bytes / t_fused / 1e9;
+                let roof = gbs * 1e9 / bw * 100.0;
                 if op.format() == ValueFormat::GseSem(Precision::Head) && nrhs == 8 {
                     head8.push((lp, fp));
+                }
+                if mi == 0 && nrhs >= 4 {
+                    guard.push(lp / fp);
                 }
                 t.row(&[
                     m.name.clone(),
@@ -55,6 +81,8 @@ fn main() {
                     format!("{:.3}us", lp * 1e6),
                     format!("{:.3}us", fp * 1e6),
                     format!("{:.2}x", lp / fp),
+                    format!("{gbs:.2}"),
+                    format!("{roof:.1}"),
                 ]);
                 rows.push(vec![
                     m.name.clone(),
@@ -62,16 +90,41 @@ fn main() {
                     nrhs.to_string(),
                     format!("{lp:.4e}"),
                     format!("{fp:.4e}"),
+                    format!("{gbs:.4e}"),
+                    format!("{roof:.2}"),
+                ]);
+                roof_rows.push(vec![
+                    m.name.clone(),
+                    op.format().label().to_string(),
+                    nrhs.to_string(),
+                    format!("{bytes:.4e}"),
+                    format!("{gbs:.4e}"),
+                    format!("{:.4e}", bw / 1e9),
+                    format!("{roof:.2}"),
                 ]);
             }
         }
     }
     println!("Ablation — per-RHS SpMV time, fused apply_multi vs looped single applies");
+    println!("(GB/s = modeled fused-kernel bytes / measured time; roof% vs STREAM triad)");
     t.print();
     let _ = write_csv(
         "ablation_batch",
-        &["matrix", "format", "nrhs", "t_looped_per_rhs", "t_fused_per_rhs"],
+        &[
+            "matrix",
+            "format",
+            "nrhs",
+            "t_looped_per_rhs",
+            "t_fused_per_rhs",
+            "fused_gbs",
+            "roof_pct",
+        ],
         &rows,
+    );
+    let _ = write_csv(
+        "ablation_batch_roofline",
+        &["matrix", "format", "nrhs", "model_bytes", "fused_gbs", "stream_gbs", "roof_pct"],
+        &roof_rows,
     );
 
     let speedups: Vec<f64> = head8.iter().map(|&(l, f)| l / f).collect();
@@ -82,5 +135,23 @@ fn main() {
         wins,
         head8.len(),
         geomean(&speedups)
+    );
+
+    // Regression guard: on the smoke matrix the fused tiled kernels
+    // must at least match the looped baseline once the batch is wide
+    // enough to amortize the matrix stream. Geomean across all formats
+    // and widths >= 4, so a single noisy cell cannot flip the verdict —
+    // but a real tile-kernel regression fails the bench (and CI) here.
+    let g = geomean(&guard);
+    println!(
+        "fused-vs-looped geomean on {} at nrhs>=4: {:.2}x ({} cells)",
+        picks[0].name,
+        g,
+        guard.len()
+    );
+    assert!(
+        g >= 1.0,
+        "fused multi-RHS kernels regressed below the looped baseline: {g:.3}x on {}",
+        picks[0].name
     );
 }

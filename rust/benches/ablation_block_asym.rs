@@ -11,12 +11,14 @@
 #[path = "common.rs"]
 mod common;
 
+use gsem::formats::{Precision, ValueFormat};
 use gsem::solvers::bicgstab::{bicgstab_solve, bicgstab_solve_multi, BicgstabOpts};
 use gsem::solvers::gmres::{gmres_solve, gmres_solve_multi, GmresOpts};
 use gsem::solvers::stepped::{run_stepped_multi, run_stepped_with, BlockSolver, SteppedParams};
 use gsem::solvers::{MonitorCmd, SolveOutcome, SwitchableOp};
 use gsem::sparse::gen::corpus::gmres_set;
 use gsem::spmv::fp64::Fp64Csr;
+use gsem::spmv::traffic::V100;
 use gsem::spmv::GseCsr;
 use gsem::util::csv::write_csv;
 use gsem::util::table::TextTable;
@@ -29,6 +31,12 @@ struct Cell {
     looped_s: f64,
     block_s: f64,
     iters: usize,
+    /// fused block rounds ~= the max per-column iteration count (the
+    /// block runs one `apply_multi` per round across live columns)
+    rounds: usize,
+    /// storage format of the operator the block streams, for the
+    /// modeled-traffic estimate (stepped uses the full-level GSE bound)
+    fmt: ValueFormat,
 }
 
 fn check_parity(looped: &[SolveOutcome], block: &[SolveOutcome], solver: &str) {
@@ -84,6 +92,8 @@ fn main() {
         looped_s,
         block_s,
         iters: block.iter().map(|o| o.iters).sum(),
+        rounds: block.iter().map(|o| o.iters).max().unwrap_or(0),
+        fmt: ValueFormat::Fp64,
     });
 
     // BiCGSTAB
@@ -103,6 +113,8 @@ fn main() {
         looped_s,
         block_s,
         iters: block.iter().map(|o| o.iters).sum(),
+        rounds: block.iter().map(|o| o.iters).max().unwrap_or(0),
+        fmt: ValueFormat::Fp64,
     });
 
     // stepped GMRES over the shared GSE tag ladder
@@ -127,17 +139,41 @@ fn main() {
         looped_s,
         block_s,
         iters: block.iter().map(|o| o.iters).sum(),
+        rounds: block.iter().map(|o| o.iters).max().unwrap_or(0),
+        // coarse upper bound: charge every rung at the full GSE level
+        fmt: ValueFormat::GseSem(Precision::Full),
     });
 
-    let mut t = TextTable::new(&["solver", "looped(s)", "block(s)", "speedup", "total iters"]);
+    let bw = common::stream_triad_bw();
+    eprintln!("STREAM triad roofline {:.2} GB/s", bw / 1e9);
+    let mut t = TextTable::new(&[
+        "solver",
+        "looped(s)",
+        "block(s)",
+        "speedup",
+        "total iters",
+        "est GB/s",
+        "roof%",
+    ]);
     let mut rows = Vec::new();
     for c in &cells {
+        // modeled block-solve traffic: matrix planes once per fused
+        // round (the block's whole point), per-RHS vector traffic per
+        // column iteration. An estimate — solver-side vector ops
+        // (orthogonalization, axpys) are not charged — so read it as a
+        // lower bound on the block's achieved bandwidth.
+        let est_bytes = V100.spmv_matrix_bytes(a.nnz(), n, c.fmt) * c.rounds as f64
+            + V100.spmv_rhs_bytes(a.nnz(), n) * c.iters as f64;
+        let gbs = est_bytes / c.block_s.max(1e-12) / 1e9;
+        let roof = gbs * 1e9 / bw * 100.0;
         t.row(&[
             c.solver.to_string(),
             format!("{:.3}", c.looped_s),
             format!("{:.3}", c.block_s),
             format!("{:.2}x", c.looped_s / c.block_s.max(1e-12)),
             c.iters.to_string(),
+            format!("{gbs:.2}"),
+            format!("{roof:.1}"),
         ]);
         rows.push(vec![
             c.solver.to_string(),
@@ -145,13 +181,16 @@ fn main() {
             format!("{:.6}", c.looped_s),
             format!("{:.6}", c.block_s),
             c.iters.to_string(),
+            format!("{gbs:.4e}"),
+            format!("{roof:.2}"),
         ]);
     }
     println!("Ablation — block vs. looped multi-RHS, asymmetric + stepped solvers");
+    println!("(est GB/s = modeled SpMV traffic of the block solve / measured block time)");
     t.print();
     let _ = write_csv(
         "ablation_block_asym",
-        &["solver", "nrhs", "looped_s", "block_s", "total_iters"],
+        &["solver", "nrhs", "looped_s", "block_s", "total_iters", "est_gbs", "roof_pct"],
         &rows,
     );
 }

@@ -49,6 +49,42 @@ pub fn cell_budget() -> f64 {
     }
 }
 
+/// Measured STREAM-triad bandwidth of this machine in bytes/s:
+/// `a[i] = b[i] + s·c[i]` over arrays well past the LLC, traffic
+/// counted as three 8-byte streams per element (write-allocate traffic
+/// on `a` is not separately charged, STREAM's own convention). This is
+/// the machine roofline the achieved-GB/s bench columns report
+/// against. Memoized — the arrays are allocated and swept once per
+/// process; `GSEM_BENCH_FAST` shrinks them so CI stays cheap (the
+/// fast-mode number reads as cache bandwidth, which only makes the
+/// roofline fraction conservative).
+pub fn stream_triad_bw() -> f64 {
+    use std::sync::OnceLock;
+    static BW: OnceLock<f64> = OnceLock::new();
+    *BW.get_or_init(|| {
+        let bytes_per_array: usize = if fast() { 4 << 20 } else { 64 << 20 };
+        let n = bytes_per_array / 8;
+        let s = 3.0f64;
+        let b: Vec<f64> = (0..n).map(|i| (i % 17) as f64).collect();
+        let c: Vec<f64> = (0..n).map(|i| (i % 13) as f64 * 0.5).collect();
+        let mut a = vec![0.0f64; n];
+        let mut best = f64::MAX;
+        // pass 0 faults the pages in and is discarded
+        for pass in 0..(if fast() { 4 } else { 6 }) {
+            let t = Timer::start();
+            for ((ai, bi), ci) in a.iter_mut().zip(&b).zip(&c) {
+                *ai = bi + s * ci;
+            }
+            std::hint::black_box(&mut a);
+            let dt = t.elapsed_s().max(1e-9);
+            if pass > 0 {
+                best = best.min(dt);
+            }
+        }
+        (3 * 8 * n) as f64 / best
+    })
+}
+
 /// The format set of the solver comparisons (Tables III/IV, Figs. 8/9).
 pub fn solver_formats(solver: SolverKind) -> Vec<(&'static str, FormatChoice)> {
     let stepped = match solver {

@@ -208,6 +208,7 @@ struct Counters {
     spills: u64,
     restores: u64,
     restore_bytes: u64,
+    restore_read_ns: u64,
 }
 
 /// Aggregate registry outcomes (also exported to [`Metrics`]).
@@ -225,6 +226,9 @@ pub struct RegistryStats {
     pub restores: u64,
     /// total spill-file bytes read back by restores
     pub restore_bytes: u64,
+    /// nanoseconds spent in spill-file reads (the restore IO cost,
+    /// one pre-sized `read_exact` per restored entry)
+    pub restore_read_ns: u64,
     /// resident encoded bytes currently cached
     pub bytes: usize,
     /// cached builds currently resident (operators + GSE encodes)
@@ -373,6 +377,7 @@ impl MatrixRegistry {
             spills: c.spills,
             restores: c.restores,
             restore_bytes: c.restore_bytes,
+            restore_read_ns: c.restore_read_ns,
             bytes: self.bytes.load(Ordering::Relaxed),
             entries: self.len(),
         }
@@ -479,12 +484,12 @@ impl MatrixRegistry {
                     // a previously evicted entry may be waiting in the
                     // spill dir: restoring skips the encode entirely,
                     // so neither `misses` nor `cache.encode` move
-                    if let Some((v, build_s, file_bytes)) = self.try_restore(&key) {
-                        self.publish(si, &key, v.clone(), build_s);
+                    if let Some(r) = self.try_restore(&key) {
+                        self.publish(si, &key, r.v.clone(), r.build_s);
                         guard.armed = false;
-                        self.credit_restore(file_bytes, metrics);
+                        self.credit_restore(r.file_bytes, r.read_ns, metrics);
                         self.enforce_budget(metrics);
-                        return v;
+                        return r.v;
                     }
                     let t = Timer::start();
                     let run = build.take().expect("a get_or_build call builds at most once");
@@ -592,24 +597,27 @@ impl MatrixRegistry {
         }
     }
 
-    /// Deserialize a spilled entry for `key`, if one exists. Returns
-    /// the value, its original build seconds (so later hits credit the
-    /// true saved encode time), and the spill-file size. The file stays
-    /// on disk: content-addressed names are never stale, so a future
-    /// eviction of the restored entry can skip re-serializing.
-    fn try_restore(&self, key: &Key) -> Option<(CachedVal, f64, u64)> {
+    /// Deserialize a spilled entry for `key`, if one exists. The
+    /// restored value carries its original build seconds (so later hits
+    /// credit the true saved encode time), the spill-file size, and the
+    /// file-read nanoseconds. The file stays on disk: content-addressed
+    /// names are never stale, so a future eviction of the restored
+    /// entry can skip re-serializing.
+    fn try_restore(&self, key: &Key) -> Option<super::spill::Restored> {
         super::spill::read(self.spill.as_deref()?, key)
     }
 
-    fn credit_restore(&self, file_bytes: u64, metrics: Option<&Metrics>) {
+    fn credit_restore(&self, file_bytes: u64, read_ns: u64, metrics: Option<&Metrics>) {
         {
             let mut c = self.counters.lock().unwrap();
             c.restores += 1;
             c.restore_bytes += file_bytes;
+            c.restore_read_ns += read_ns;
         }
         if let Some(m) = metrics {
             m.incr("cache.restores");
             m.add("cache.restore_bytes", file_bytes);
+            m.add("cache.restore_read_ns", read_ns);
         }
     }
 

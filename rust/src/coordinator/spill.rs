@@ -90,15 +90,41 @@ fn try_write(dir: &Path, path: &Path, v: &CachedVal, build_s: f64) -> Result<()>
     Ok(())
 }
 
+/// A successfully restored spill entry: the decoded value, its original
+/// encode seconds, the file size, and how long the file read itself
+/// took (surfaced as the `cache.restore_read_ns` counter).
+pub(crate) struct Restored {
+    pub v: CachedVal,
+    pub build_s: f64,
+    pub file_bytes: u64,
+    pub read_ns: u64,
+}
+
 /// Deserialize the spilled entry for `key`, if present and intact.
-/// Returns the value, its original build seconds, and the file size;
 /// `None` covers both "never spilled" and "unreadable" (the caller
 /// falls back to a fresh encode either way).
-pub(crate) fn read(dir: &Path, key: &Key) -> Option<(CachedVal, f64, u64)> {
-    let bytes = std::fs::read(file_path(dir, key)).ok()?;
-    let n = bytes.len() as u64;
+pub(crate) fn read(dir: &Path, key: &Key) -> Option<Restored> {
+    let t = crate::util::Timer::start();
+    let bytes = read_exact_all(&file_path(dir, key)).ok()?;
+    let read_ns = (t.elapsed_s() * 1e9) as u64;
+    let file_bytes = bytes.len() as u64;
     let (v, build_s) = try_decode(key, &bytes).ok()?;
-    Some((v, build_s, n))
+    Some(Restored { v, build_s, file_bytes, read_ns })
+}
+
+/// One pre-sized `read_exact` into the decode buffer: spill files are
+/// content-addressed and renamed into place whole, so the size from
+/// `metadata` is authoritative and a single sized read replaces the
+/// generic probe-and-grow `read_to_end` loop. A file that shrinks
+/// between stat and read (it never should) errors out into the normal
+/// fall-back-to-encode path.
+fn read_exact_all(path: &Path) -> std::io::Result<Vec<u8>> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)?;
+    let len = f.metadata()?.len() as usize;
+    let mut buf = vec![0u8; len];
+    f.read_exact(&mut buf)?;
+    Ok(buf)
 }
 
 fn try_decode(key: &Key, bytes: &[u8]) -> Result<(CachedVal, f64)> {
@@ -243,10 +269,10 @@ mod tests {
         let dir = tmp_dir("gse");
         let key = Key::Gse { digest: a.digest(), k: 8 };
         assert!(write(&dir, &key, &CachedVal::Gse(Arc::new(GseCsr::from_csr(&a, 8))), 0.25));
-        let (v, build_s, n) = read(&dir, &key).expect("restore");
-        assert_eq!(build_s, 0.25);
-        assert!(n > 0);
-        let CachedVal::Gse(restored) = v else { panic!("gse key restores a gse encode") };
+        let r = read(&dir, &key).expect("restore");
+        assert_eq!(r.build_s, 0.25);
+        assert!(r.file_bytes > 0);
+        let CachedVal::Gse(restored) = r.v else { panic!("gse key restores a gse encode") };
         // every plane and the decoded SpMV must match the original
         assert_eq!(restored.rowptr, g.rowptr);
         assert_eq!(restored.cols, g.cols);
@@ -279,8 +305,10 @@ mod tests {
             let op = super::super::registry::build_fixed_operator(&a, format, 0);
             let key = Key::Op { digest: a.digest(), format };
             assert!(write(&dir, &key, &CachedVal::Op(Arc::clone(&op)), 0.0), "{format:?}");
-            let (v, _, _) = read(&dir, &key).expect("restore");
-            let CachedVal::Op(restored) = v else { panic!("op key restores an operator") };
+            let restored = read(&dir, &key).expect("restore");
+            let CachedVal::Op(restored) = restored.v else {
+                panic!("op key restores an operator")
+            };
             assert_eq!(restored.format(), format);
             assert_eq!(restored.encoded_bytes(), op.encoded_bytes());
             let x: Vec<f64> = (0..a.ncols).map(|i| (i % 3) as f64).collect();

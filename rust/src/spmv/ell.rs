@@ -6,11 +6,13 @@
 //! TPU-side analog of CSR-vector's multiple-threads-per-row
 //! (DESIGN.md §6 Hardware-Adaptation).
 
-use crate::formats::Precision;
+use crate::formats::{Precision, ValueFormat};
 use crate::sparse::csr::Csr;
 use crate::spmv::fp64::PAR_MIN_ROWS;
 use crate::spmv::gse::GseCsr;
+use crate::spmv::SpmvOp;
 use crate::util::parallel;
+use std::sync::Arc;
 
 /// One fixed-shape slab of an ELL-converted matrix.
 #[derive(Clone, Debug)]
@@ -106,7 +108,7 @@ impl EllBlocks {
         let chunks = if threads <= 1 || self.nrows < PAR_MIN_ROWS {
             vec![0..self.nrows]
         } else {
-            parallel::balance_by_weight(self.nrows, threads, |_| 1)
+            self.balanced_chunks(g, threads)
         };
         parallel::for_each_disjoint(&mut y, &chunks, |rows, ys| {
             for (i, r) in rows.enumerate() {
@@ -133,6 +135,91 @@ impl EllBlocks {
         y
     }
 
+    /// Row partition for the parallel paths, weighted by real non-zeros
+    /// from the CSR rowptr rather than row count: padded slots decode
+    /// against a cached `x[0]`, so the cache-missing gathers — the cost
+    /// that actually skews — follow nnz. `max(1)` keeps empty rows from
+    /// collapsing to zero weight (their padding still decodes).
+    fn balanced_chunks(&self, g: &GseCsr, parts: usize) -> Vec<std::ops::Range<usize>> {
+        parallel::balance_by_weight(self.nrows, parts, |r| {
+            (g.rowptr[r + 1] - g.rowptr[r]).max(1)
+        })
+    }
+
+    /// Fused multi-RHS SpMV over the ELL planes: column-major packed `x`
+    /// and `y` (layout as [`SpmvOp::apply_multi`]), each slot's SEM word
+    /// decoded **once** and broadcast through the [`crate::spmv::tile`]
+    /// register tiles. Padded slots contribute exactly as in
+    /// [`EllBlocks::spmv_decoded`] (skipping them could flip a +0.0 sum
+    /// to -0.0), and per row the slab partial sums are added in slab
+    /// order per column — so every column is bit-for-bit identical to a
+    /// single [`EllBlocks::spmv_decoded`] over that column's `x` slice.
+    pub fn spmv_multi_decoded(
+        &self,
+        g: &GseCsr,
+        x: &[f64],
+        nrhs: usize,
+        level: Precision,
+    ) -> Vec<f64> {
+        self.spmv_multi_decoded_par(g, x, nrhs, level, 1)
+    }
+
+    /// Chunk-parallel variant of [`EllBlocks::spmv_multi_decoded`] —
+    /// bit-for-bit identical to it for every thread count.
+    pub fn spmv_multi_decoded_par(
+        &self,
+        g: &GseCsr,
+        x: &[f64],
+        nrhs: usize,
+        level: Precision,
+        threads: usize,
+    ) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols * nrhs);
+        let mut y = vec![0.0; self.nrows * nrhs];
+        if nrhs == 0 {
+            return y;
+        }
+        let nparts = crate::spmv::multi_parts(threads, self.nrows, nrhs);
+        let chunks =
+            if nparts <= 1 { vec![0..self.nrows] } else { self.balanced_chunks(g, nparts) };
+        let ncols = self.ncols;
+        parallel::for_each_disjoint_cols(&mut y, self.nrows, &chunks, |rows, cols_out| {
+            let mut total = vec![0.0f64; cols_out.len()];
+            let mut sum = vec![0.0f64; cols_out.len()];
+            for (i, r) in rows.enumerate() {
+                total.fill(0.0);
+                for slab in &self.slabs {
+                    sum.fill(0.0);
+                    for c in 0..self.width {
+                        let o = r * self.width + c;
+                        let parts = crate::formats::sem::SemParts {
+                            head: slab.heads[o],
+                            tail1: if level >= Precision::HeadTail1 { slab.tail1[o] } else { 0 },
+                            tail2: if level == Precision::Full { slab.tail2[o] } else { 0 },
+                            exp_idx: slab.exp_idx[o] as u16,
+                        };
+                        let v =
+                            crate::formats::sem::decode_ldexp(&parts, &g.table, &g.geom, level);
+                        crate::spmv::tile::fma_lanes(
+                            &mut sum,
+                            v,
+                            x,
+                            slab.cols[o] as usize,
+                            ncols,
+                        );
+                    }
+                    for (q, tq) in total.iter_mut().enumerate() {
+                        *tq += sum[q];
+                    }
+                }
+                for (q, tq) in total.iter().enumerate() {
+                    cols_out[q][i] = *tq;
+                }
+            }
+        });
+        y
+    }
+
     pub fn total_slots(&self) -> usize {
         self.slabs.len() * self.nrows * self.width
     }
@@ -144,6 +231,72 @@ impl EllBlocks {
         } else {
             self.total_slots() as f64 / nnz as f64
         }
+    }
+}
+
+/// [`SpmvOp`] adapter over the ELL planes at a fixed precision level —
+/// the static-shape (L1/Pallas) view of a GSE encode participating in
+/// the same solver / block-solve machinery as the CSR operators. Holds
+/// the encode behind an `Arc` (the decode table and geometry live
+/// there) next to the padded slabs.
+pub struct EllSpmv {
+    pub g: Arc<GseCsr>,
+    pub blocks: EllBlocks,
+    pub level: Precision,
+    /// Worker threads (1 = serial); any count is bit-for-bit identical.
+    pub threads: usize,
+}
+
+impl EllSpmv {
+    /// Lay out `original` (already encoded as `g`) into width-`width`
+    /// ELL slabs and wrap them as an operator at `level`.
+    pub fn new(g: Arc<GseCsr>, original: &Csr, width: usize, level: Precision) -> Self {
+        let blocks = to_ell(&g, original, width);
+        Self { g, blocks, level, threads: 1 }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+}
+
+impl SpmvOp for EllSpmv {
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let out = self.blocks.spmv_decoded_par(&self.g, x, self.level, self.threads);
+        y.copy_from_slice(&out);
+    }
+
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
+        assert_eq!(y.len(), self.blocks.nrows * nrhs);
+        let out =
+            self.blocks.spmv_multi_decoded_par(&self.g, x, nrhs, self.level, self.threads);
+        y.copy_from_slice(&out);
+    }
+
+    fn nrows(&self) -> usize {
+        self.blocks.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.blocks.ncols
+    }
+
+    fn format(&self) -> ValueFormat {
+        ValueFormat::GseSem(self.level)
+    }
+
+    fn matrix_bytes(&self) -> usize {
+        // every slot streams its column word, out-of-band exponent
+        // index, and the level's value planes; padding included
+        self.blocks.total_slots() * (4 + 4 + self.level.bytes_per_value())
+            + self.g.table.len() * 4
+    }
+
+    fn encoded_bytes(&self) -> usize {
+        // all planes stay resident regardless of level (cols + vals +
+        // heads + tail1 + tail2 + exp_idx), plus the shared CSR encode
+        self.blocks.total_slots() * (4 + 8 + 2 + 2 + 4 + 4) + self.g.encoded_bytes()
     }
 }
 
@@ -209,6 +362,61 @@ mod tests {
                 assert_eq!(serial, par, "threads={threads} {lvl:?}");
             }
         }
+    }
+
+    #[test]
+    fn fused_multi_rhs_matches_per_column_single() {
+        let a = exp_controlled(150, 150, 6, ExpLaw::Gaussian { e0: -1, sigma: 3.0 }, 14);
+        let g = GseCsr::from_csr(&a, 8);
+        let e = to_ell(&g, &a, 4);
+        let mut r = Prng::new(21);
+        for nrhs in [1usize, 3, 5] {
+            let x: Vec<f64> = (0..a.ncols * nrhs).map(|_| r.range_f64(-1.0, 1.0)).collect();
+            for lvl in Precision::LADDER {
+                let y = e.spmv_multi_decoded(&g, &x, nrhs, lvl);
+                for j in 0..nrhs {
+                    let yj = e.spmv_decoded(&g, &x[j * a.ncols..(j + 1) * a.ncols], lvl);
+                    assert_eq!(&y[j * a.nrows..(j + 1) * a.nrows], &yj[..], "col {j} {lvl:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_multi_rhs_parallel_bit_exact() {
+        // nrows * nrhs crosses the rows×nrhs gate even though a single
+        // apply would stay serial
+        let a = exp_controlled(700, 700, 5, ExpLaw::Zipf { e0: -3, count: 8, s: 1.1 }, 4);
+        let g = GseCsr::from_csr(&a, 8);
+        let e = to_ell(&g, &a, 3);
+        let mut r = Prng::new(8);
+        let nrhs = 4usize;
+        let x: Vec<f64> = (0..a.ncols * nrhs).map(|_| r.range_f64(-1.0, 1.0)).collect();
+        for lvl in Precision::LADDER {
+            let serial = e.spmv_multi_decoded(&g, &x, nrhs, lvl);
+            for threads in [2usize, 5] {
+                let par = e.spmv_multi_decoded_par(&g, &x, nrhs, lvl, threads);
+                assert_eq!(serial, par, "threads={threads} {lvl:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ell_operator_adapter_surface() {
+        let a = exp_controlled(60, 60, 5, ExpLaw::Gaussian { e0: 0, sigma: 2.0 }, 7);
+        let g = Arc::new(GseCsr::from_csr(&a, 8));
+        let op = EllSpmv::new(Arc::clone(&g), &a, 4, Precision::Full).with_threads(3);
+        assert_eq!(op.nrows(), 60);
+        assert_eq!(op.format(), ValueFormat::GseSem(Precision::Full));
+        assert!(op.encoded_bytes() > op.matrix_bytes());
+        let mut r = Prng::new(3);
+        let nrhs = 3usize;
+        let x: Vec<f64> = (0..a.ncols * nrhs).map(|_| r.range_f64(-1.0, 1.0)).collect();
+        let mut y_fused = vec![0.0; a.nrows * nrhs];
+        op.apply_multi(&x, &mut y_fused, nrhs);
+        let mut y_loop = vec![0.0; a.nrows * nrhs];
+        crate::spmv::apply_multi_looped(&op, &x, &mut y_loop, nrhs);
+        assert_eq!(y_fused, y_loop);
     }
 
     #[test]

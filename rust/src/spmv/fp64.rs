@@ -71,20 +71,17 @@ pub fn spmv_par(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
 }
 
 /// Fused multi-RHS SpMV: each row's non-zeros are read **once** and
-/// streamed across all `nrhs` column-major packed vectors (see
-/// [`SpmvOp::apply_multi`] for the layout). Bit-for-bit identical to
-/// `nrhs` single [`spmv`] calls for every thread count.
+/// broadcast through the [`super::tile`] register tiles across all
+/// `nrhs` column-major packed vectors (see [`SpmvOp::apply_multi`] for
+/// the layout). Bit-for-bit identical to `nrhs` single [`spmv`] calls
+/// for every thread count.
 pub fn spmv_multi(a: &Csr, x: &[f64], y: &mut [f64], nrhs: usize, threads: usize) {
     assert_eq!(x.len(), a.ncols * nrhs);
     assert_eq!(y.len(), a.nrows * nrhs);
     if nrhs == 0 {
         return;
     }
-    let parts = if threads <= 1 || a.nrows < PAR_MIN_ROWS {
-        1
-    } else {
-        threads
-    };
+    let parts = super::multi_parts(threads, a.nrows, nrhs);
     let chunks = balance_rows(a, parts);
     let ncols = a.ncols;
     parallel::for_each_disjoint_cols(y, a.nrows, &chunks, |ch, cols| {
@@ -93,10 +90,7 @@ pub fn spmv_multi(a: &Csr, x: &[f64], y: &mut [f64], nrhs: usize, threads: usize
             let (rc, rv) = a.row(r);
             acc.fill(0.0);
             for (&c, &v) in rc.iter().zip(rv) {
-                let c = c as usize;
-                for (j, aj) in acc.iter_mut().enumerate() {
-                    *aj += v * x[j * ncols + c];
-                }
+                super::tile::fma_lanes(&mut acc, v, x, c as usize, ncols);
             }
             for (j, aj) in acc.iter().enumerate() {
                 cols[j][i] = *aj;

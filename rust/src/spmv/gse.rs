@@ -452,11 +452,7 @@ impl GseCsr {
         if nrhs == 0 {
             return;
         }
-        let parts = if self.threads <= 1 || self.nrows < PAR_MIN_ROWS {
-            1
-        } else {
-            self.threads
-        };
+        let parts = super::multi_parts(self.threads, self.nrows, nrhs);
         let chunks = parallel::balance_by_weight(self.nrows, parts, |r| {
             self.rowptr[r + 1] - self.rowptr[r]
         });
@@ -487,8 +483,9 @@ impl GseCsr {
     }
 
     /// Multi-RHS sibling of [`GseCsr::spmv_head_packed_lut`]: one decode
-    /// (`mant × signed scale`) per non-zero, `nrhs` multiply-adds. The
-    /// product order per RHS matches the single-RHS kernel exactly.
+    /// (`mant × signed scale`) per non-zero, broadcast through the
+    /// [`super::tile`] register tiles. The product order per RHS matches
+    /// the single-RHS kernel exactly.
     fn spmv_multi_head_packed_lut(
         &self,
         x: &[f64],
@@ -514,9 +511,10 @@ impl GseCsr {
                 };
                 let val = (h & 0x7FFF) as f64 * scale;
                 let c = (cw & col_mask) as usize;
-                for (q, aq) in acc.iter_mut().enumerate() {
-                    *aq += val * unsafe { *x.get_unchecked(q * ncols + c) };
-                }
+                // SAFETY: c < ncols (construction) and x.len() ==
+                // ncols * nrhs (kernel mouth), so with stride == ncols
+                // and acc.len() == nrhs the lane walk stays in range.
+                unsafe { super::tile::fma_lanes_unchecked(&mut acc, val, x, c, ncols) };
             }
             for (q, aq) in acc.iter().enumerate() {
                 cols_out[q][i] = *aq;
@@ -560,9 +558,8 @@ impl GseCsr {
                 };
                 let val = d as f64 * scale;
                 let c = (cw & col_mask) as usize;
-                for (q, aq) in acc.iter_mut().enumerate() {
-                    *aq += val * unsafe { *x.get_unchecked(q * ncols + c) };
-                }
+                // SAFETY: same range argument as the head kernel above.
+                unsafe { super::tile::fma_lanes_unchecked(&mut acc, val, x, c, ncols) };
             }
             for (q, aq) in acc.iter().enumerate() {
                 cols_out[q][i] = *aq;
@@ -587,9 +584,7 @@ impl GseCsr {
             for j in a..b {
                 let (col, idx) = self.col_and_idx(j);
                 let val = self.decode_with_idx(j, idx, level);
-                for (q, aq) in acc.iter_mut().enumerate() {
-                    *aq += val * x[q * ncols + col];
-                }
+                super::tile::fma_lanes(&mut acc, val, x, col, ncols);
             }
             for (q, aq) in acc.iter().enumerate() {
                 cols_out[q][i] = *aq;

@@ -125,19 +125,16 @@ impl<T: StoredValue> LowpCsr<T> {
 
     /// Fused multi-RHS SpMV over column-major packed vectors (layout in
     /// [`SpmvOp::apply_multi`]): each stored value is loaded and widened
-    /// to f64 **once**, then streamed across all RHS. Bit-for-bit
-    /// identical to `nrhs` single [`LowpCsr::spmv`] calls.
+    /// to f64 **once**, then broadcast through the [`super::tile`]
+    /// register tiles across all RHS. Bit-for-bit identical to `nrhs`
+    /// single [`LowpCsr::spmv`] calls.
     pub fn spmv_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
         assert_eq!(x.len(), self.ncols * nrhs);
         assert_eq!(y.len(), self.nrows * nrhs);
         if nrhs == 0 {
             return;
         }
-        let parts = if self.threads <= 1 || self.nrows < PAR_MIN_ROWS {
-            1
-        } else {
-            self.threads
-        };
+        let parts = super::multi_parts(self.threads, self.nrows, nrhs);
         let chunks = parallel::balance_by_weight(self.nrows, parts, |r| {
             self.rowptr[r + 1] - self.rowptr[r]
         });
@@ -148,10 +145,7 @@ impl<T: StoredValue> LowpCsr<T> {
                 acc.fill(0.0);
                 for k in a..b {
                     let v = self.vals[k].to_f64();
-                    let c = self.colidx[k] as usize;
-                    for (j, aj) in acc.iter_mut().enumerate() {
-                        *aj += v * x[j * self.ncols + c];
-                    }
+                    super::tile::fma_lanes(&mut acc, v, x, self.colidx[k] as usize, self.ncols);
                 }
                 for (j, aj) in acc.iter().enumerate() {
                     cols[j][i] = *aj;

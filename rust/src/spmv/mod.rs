@@ -10,7 +10,11 @@
 //!   (Algorithm 2), with the exponent index packed into column-index
 //!   high bits or an out-of-band array (§III-C1).
 //! * [`ell`] — padded-ELL blocks, the static-shape view consumed by the
-//!   Pallas kernel (L1) and its parity tests.
+//!   Pallas kernel (L1) and its parity tests, with a fused multi-RHS
+//!   kernel and an [`ell::EllSpmv`] operator adapter.
+//! * [`tile`] — the register-tiled lane primitive every fused multi-RHS
+//!   kernel broadcasts decoded values through ([`LANES`]-wide
+//!   `[f64; LANES]` accumulator tiles the stable compiler vectorizes).
 //! * [`traffic`] — the memory-traffic/roofline model that translates
 //!   bytes-moved into modeled V100 kernel time (DESIGN.md §5).
 
@@ -19,10 +23,13 @@ pub mod lowp;
 pub mod gse;
 pub mod ell;
 pub mod msplit;
+pub mod tile;
 pub mod traffic;
 
+pub use ell::EllSpmv;
 pub use gse::{DecodeStrategy, GseCsr};
 pub use lowp::LowpCsr;
+pub use tile::LANES;
 
 use crate::formats::{Precision, ValueFormat};
 use crate::sparse::csr::Csr;
@@ -90,6 +97,20 @@ pub(crate) mod spill_tag {
     pub const FP16: u8 = 2;
     pub const BF16: u8 = 3;
     pub const GSE: u8 = 4;
+}
+
+/// Serial-vs-parallel split decision shared by the fused multi-RHS
+/// kernels. Work scales with rows × nrhs, so a short-but-wide block
+/// (say 1k rows × 64 RHS) still clears the [`fp64::PAR_MIN_ROWS`]
+/// spawn threshold that a single skinny apply would not. Thread count
+/// never changes results (rows are never split across workers), so the
+/// gate is free to consider shape only.
+pub(crate) fn multi_parts(threads: usize, nrows: usize, nrhs: usize) -> usize {
+    if threads <= 1 || nrows.saturating_mul(nrhs) < fp64::PAR_MIN_ROWS {
+        1
+    } else {
+        threads
+    }
 }
 
 /// The looped multi-RHS baseline: `nrhs` single applies, regardless of

@@ -1,0 +1,125 @@
+//! Register-tiled multi-RHS inner-loop primitive.
+//!
+//! Every fused `apply_multi` kernel shares one inner operation: a matrix
+//! value `v` decoded once at column `c` must accumulate into every RHS
+//! column's accumulator, `acc[j] += v * x[c + j*stride]` over the
+//! column-major RHS block (`stride` = ncols). Written as a plain indexed
+//! loop the stable compiler keeps a scalar FMA chain with a bounds check
+//! per lane; rewritten over fixed-width `[f64; LANES]` tiles via
+//! `chunks_exact_mut` it unrolls and autovectorizes on stable (no
+//! nightly `std::simd`), with one up-front range proof covering the
+//! whole lane walk and a scalar remainder path for `nrhs % LANES`.
+//!
+//! Bitwise contract: lane `j`'s update is exactly the scalar
+//! `acc[j] += v * x[c + j*stride]` it replaces — same operation, same
+//! per-column order, and lanes never mix. Every fused kernel built on
+//! this primitive therefore stays bit-for-bit identical per column to
+//! single-RHS dispatch, which is the invariant `block_parity` /
+//! `service_parity` pin.
+
+/// Lane width of the accumulator tiles: 4 × f64 fills one AVX2 register
+/// (two NEON registers). Batch widths that are not a multiple of LANES
+/// fall through `chunks_exact_mut` into the scalar remainder path.
+pub const LANES: usize = 4;
+
+/// `acc[j] += v * x[col + j * stride]` for every lane `j`, register-tiled,
+/// without per-lane bounds checks.
+///
+/// # Safety
+///
+/// Caller guarantees `col + (acc.len() - 1) * stride < x.len()` when
+/// `acc` is non-empty. The packed-LUT GSE kernels uphold this the same
+/// way their single-RHS unchecked gathers do: column indices are
+/// validated `< ncols` at construction and `x.len() == ncols * nrhs` is
+/// asserted at the kernel mouth, which with `stride == ncols` and
+/// `acc.len() <= nrhs` implies the bound.
+#[inline(always)]
+pub(crate) unsafe fn fma_lanes_unchecked(
+    acc: &mut [f64],
+    v: f64,
+    x: &[f64],
+    col: usize,
+    stride: usize,
+) {
+    debug_assert!(acc.is_empty() || col + (acc.len() - 1) * stride < x.len());
+    let mut base = col;
+    let mut tiles = acc.chunks_exact_mut(LANES);
+    for tile in tiles.by_ref() {
+        // fixed-width view: the compiler unrolls and packs these FMAs
+        let tile: &mut [f64; LANES] = tile.try_into().unwrap();
+        for (l, lane) in tile.iter_mut().enumerate() {
+            *lane += v * *x.get_unchecked(base + l * stride);
+        }
+        base += LANES * stride;
+    }
+    for lane in tiles.into_remainder() {
+        *lane += v * *x.get_unchecked(base);
+        base += stride;
+    }
+}
+
+/// Checked front door used by the kernels over plainly-indexed storage:
+/// one range proof for the whole lane walk, then the tiled loop.
+#[inline(always)]
+pub(crate) fn fma_lanes(acc: &mut [f64], v: f64, x: &[f64], col: usize, stride: usize) {
+    if acc.is_empty() {
+        return;
+    }
+    assert!(
+        col + (acc.len() - 1) * stride < x.len(),
+        "lane walk out of range: col {col} stride {stride} lanes {} x.len {}",
+        acc.len(),
+        x.len()
+    );
+    // SAFETY: the assert above is exactly the unchecked contract.
+    unsafe { fma_lanes_unchecked(acc, v, x, col, stride) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference(acc: &mut [f64], v: f64, x: &[f64], col: usize, stride: usize) {
+        for (j, aj) in acc.iter_mut().enumerate() {
+            *aj += v * x[col + j * stride];
+        }
+    }
+
+    #[test]
+    fn matches_scalar_loop_for_every_lane_count() {
+        let stride = 7usize;
+        for n in 0..=(2 * LANES + 3) {
+            let x: Vec<f64> = (0..stride * n.max(1)).map(|i| (i as f64) * 0.5 - 3.0).collect();
+            for col in [0usize, 3, stride - 1] {
+                let mut tiled = vec![1.0; n];
+                let mut plain = vec![1.0; n];
+                fma_lanes(&mut tiled, 1.25, &x, col, stride);
+                reference(&mut plain, 1.25, &x, col, stride);
+                assert_eq!(tiled, plain, "n={n} col={col}");
+            }
+        }
+    }
+
+    #[test]
+    fn signed_zero_contributions_are_preserved() {
+        // v * x can be -0.0; the tiled walk must add it like the scalar
+        // loop does (skipping would flip +0.0 sums to -0.0 and back)
+        let x = [-1.0, 0.0, -0.0];
+        let mut tiled = vec![0.0; 3];
+        let mut plain = vec![0.0; 3];
+        fma_lanes(&mut tiled, 0.0, &x, 0, 1);
+        reference(&mut plain, 0.0, &x, 0, 1);
+        assert_eq!(
+            tiled.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            plain.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "lane walk out of range")]
+    fn rejects_short_rhs_block() {
+        let x = vec![0.0; 4];
+        let mut acc = vec![0.0; 2];
+        fma_lanes(&mut acc, 1.0, &x, 3, 4);
+    }
+}

@@ -43,12 +43,35 @@ impl Device {
     /// the worst case the CSR-vector kernel approaches for scattered
     /// columns; caches only improve both sides equally).
     pub fn spmv_bytes(&self, nnz: usize, nrows: usize, fmt: ValueFormat) -> f64 {
+        self.spmv_multi_bytes(nnz, nrows, fmt, 1)
+    }
+
+    /// Matrix-plane bytes of one SpMV — the part a fused multi-RHS
+    /// kernel streams **once** regardless of batch width: values,
+    /// column indexes, rowptr, and the shared-exponent table.
+    pub fn spmv_matrix_bytes(&self, nnz: usize, nrows: usize, fmt: ValueFormat) -> f64 {
         let value_bytes = fmt.bytes_per_value();
         let gse_table = match fmt {
             ValueFormat::GseSem(_) => 64 * 4,
             _ => 0,
         };
-        (nnz * (value_bytes + 4 + 8) + (nrows + 1) * 8 + nrows * 8 + gse_table) as f64
+        (nnz * (value_bytes + 4) + (nrows + 1) * 8 + gse_table) as f64
+    }
+
+    /// Per-RHS vector traffic of one SpMV: the input gather (one 8-byte
+    /// load per nnz, the scattered-column worst case) plus the output
+    /// write.
+    pub fn spmv_rhs_bytes(&self, nnz: usize, nrows: usize) -> f64 {
+        (nnz * 8 + nrows * 8) as f64
+    }
+
+    /// Bytes moved by one fused multi-RHS SpMV: matrix planes once,
+    /// vector traffic per RHS. [`Device::spmv_bytes`] is the `nrhs = 1`
+    /// case; the looped baseline instead pays
+    /// `nrhs × spmv_bytes`. This is the byte model behind the
+    /// achieved-GB/s / roofline-fraction columns in `ablation_batch`.
+    pub fn spmv_multi_bytes(&self, nnz: usize, nrows: usize, fmt: ValueFormat, nrhs: usize) -> f64 {
+        self.spmv_matrix_bytes(nnz, nrows, fmt) + nrhs as f64 * self.spmv_rhs_bytes(nnz, nrows)
     }
 
     /// Modeled kernel time for one SpMV.
@@ -114,6 +137,24 @@ mod tests {
         let bf = d.spmv_bytes(1000, 100, ValueFormat::Fp16);
         assert!(b64 > bh && bh > bf - 300.0);
         assert!(b64 - bh >= 1000.0 * 6.0 - 300.0);
+    }
+
+    #[test]
+    fn fused_multi_bytes_amortize_matrix_planes() {
+        let d = V100;
+        for fmt in [ValueFormat::Fp64, ValueFormat::Fp16, ValueFormat::GseSem(Precision::Head)] {
+            let single = d.spmv_bytes(1000, 100, fmt);
+            // nrhs = 1 decomposes exactly into matrix + one RHS share
+            assert_eq!(d.spmv_multi_bytes(1000, 100, fmt, 1), single);
+            assert_eq!(
+                single,
+                d.spmv_matrix_bytes(1000, 100, fmt) + d.spmv_rhs_bytes(1000, 100)
+            );
+            // the fused batch streams the matrix once, the loop 8 times
+            let fused8 = d.spmv_multi_bytes(1000, 100, fmt, 8);
+            assert!(fused8 < 8.0 * single, "{fmt:?}");
+            assert!(fused8 > d.spmv_rhs_bytes(1000, 100) * 8.0);
+        }
     }
 
     #[test]

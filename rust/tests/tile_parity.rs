@@ -1,0 +1,103 @@
+//! Tile-remainder parity acceptance for the register-tiled multi-RHS
+//! kernels: every fused `apply_multi` (all 7 CSR operator formats plus
+//! the fused ELL kernel) must stay **bitwise identical** to single-RHS
+//! dispatch at batch widths that land on every lane-tile boundary —
+//! below one tile, exactly one tile, one past it, and mid-remainder —
+//! and at every worker count. The matrices are sized so a single apply
+//! stays under the serial threshold while the wide blocks cross the
+//! rows×nrhs parallel gate, exercising both sides of the split
+//! decision.
+
+use gsem::formats::Precision;
+use gsem::sparse::gen::randmat::{exp_controlled, ExpLaw};
+use gsem::spmv::ell::to_ell;
+use gsem::spmv::{apply_multi_looped, build_operators_par, EllSpmv, GseCsr, SpmvOp, LANES};
+use gsem::util::Prng;
+use std::sync::Arc;
+
+/// nrhs values straddling every tile boundary of the LANES-wide walk.
+fn tile_widths() -> [usize; 5] {
+    [1, LANES - 1, LANES, LANES + 1, 2 * LANES + 3]
+}
+
+fn rand_x(n: usize, seed: u64) -> Vec<f64> {
+    let mut r = Prng::new(seed);
+    (0..n).map(|_| r.range_f64(-2.0, 2.0)).collect()
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn fused_tiles_match_looped_across_formats_widths_and_workers() {
+    // 700 rows: a single apply stays below PAR_MIN_ROWS (serial), but
+    // 700 × nrhs ≥ 2 crosses the rows×nrhs gate, so widths 1 and 3+
+    // take different split paths — both must be bitwise identical.
+    let a = exp_controlled(700, 700, 5, ExpLaw::Gaussian { e0: 0, sigma: 3.0 }, 33);
+    for &workers in &[1usize, 3] {
+        let ops = build_operators_par(&a, 8, workers);
+        assert_eq!(ops.len(), 7);
+        for op in &ops {
+            for &nrhs in &tile_widths() {
+                let x = rand_x(a.ncols * nrhs, 7 + nrhs as u64);
+                let mut y_fused = vec![0.0; a.nrows * nrhs];
+                op.apply_multi(&x, &mut y_fused, nrhs);
+                let mut y_loop = vec![0.0; a.nrows * nrhs];
+                apply_multi_looped(op.as_ref(), &x, &mut y_loop, nrhs);
+                assert_eq!(
+                    bits(&y_fused),
+                    bits(&y_loop),
+                    "{} nrhs={nrhs} workers={workers}",
+                    op.format().label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ell_fused_multi_matches_per_column_single() {
+    let a = exp_controlled(600, 600, 6, ExpLaw::Zipf { e0: -4, count: 8, s: 1.2 }, 9);
+    let g = GseCsr::from_csr(&a, 8);
+    let e = to_ell(&g, &a, 3);
+    for &workers in &[1usize, 3] {
+        for &nrhs in &tile_widths() {
+            let x = rand_x(a.ncols * nrhs, 40 + nrhs as u64);
+            for lvl in Precision::LADDER {
+                let y = e.spmv_multi_decoded_par(&g, &x, nrhs, lvl, workers);
+                for j in 0..nrhs {
+                    let yj = e.spmv_decoded(&g, &x[j * a.ncols..(j + 1) * a.ncols], lvl);
+                    assert_eq!(
+                        bits(&y[j * a.nrows..(j + 1) * a.nrows]),
+                        bits(&yj),
+                        "col {j} nrhs={nrhs} workers={workers} {lvl:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ell_operator_matches_looped_through_the_trait() {
+    let a = exp_controlled(500, 500, 5, ExpLaw::Gaussian { e0: -1, sigma: 2.5 }, 5);
+    let g = Arc::new(GseCsr::from_csr(&a, 8));
+    for &workers in &[1usize, 3] {
+        for lvl in Precision::LADDER {
+            let op = EllSpmv::new(Arc::clone(&g), &a, 4, lvl).with_threads(workers);
+            for &nrhs in &tile_widths() {
+                let x = rand_x(a.ncols * nrhs, 60 + nrhs as u64);
+                let mut y_fused = vec![0.0; a.nrows * nrhs];
+                op.apply_multi(&x, &mut y_fused, nrhs);
+                let mut y_loop = vec![0.0; a.nrows * nrhs];
+                apply_multi_looped(&op, &x, &mut y_loop, nrhs);
+                assert_eq!(
+                    bits(&y_fused),
+                    bits(&y_loop),
+                    "nrhs={nrhs} workers={workers} {lvl:?}"
+                );
+            }
+        }
+    }
+}
