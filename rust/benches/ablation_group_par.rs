@@ -1,0 +1,179 @@
+//! Ablation — intra-group parallelism (the PR-8 core allocator's
+//! premise, measured): given the same core budget, is one **merged**
+//! nrhs-wide CG block over a thread-retuned registry operator faster
+//! than the pre-allocator baseline of **scattered** single solves, one
+//! worker-queue slot each with serial operators? The merged block
+//! streams the matrix once per iteration across all right-hand sides
+//! (the §III-C traffic argument) *and* concentrates the whole budget
+//! on that one stream via [`SpmvOp::set_threads`]; the scattered
+//! baseline re-reads the matrix per solve but overlaps solves across
+//! the budget's worker slots. Column-for-column the arithmetic is
+//! bitwise identical either way (pinned by `tests/group_threads.rs`),
+//! so the wall-time ratio is pure scheduling.
+//!
+//! Reported per (matrix, format, nrhs, budget): both wall times, the
+//! speedup, and the merged run's achieved GB/s from the
+//! `spmv::traffic` byte model against this machine's measured
+//! STREAM-triad roofline. The largest (smoke) matrix doubles as the
+//! CI regression guard: at a 4-core budget and nrhs >= 4, merged must
+//! beat scattered (geomean), or the allocator's policy of granting a
+//! dominant merged group the full budget has stopped paying.
+
+#[path = "common.rs"]
+mod common;
+
+use gsem::formats::{Precision, ValueFormat};
+use gsem::solvers::{cg_solve, cg_solve_multi, CgOpts, MonitorCmd};
+use gsem::sparse::gen::corpus::{spmv_corpus, NamedMatrix};
+use gsem::spmv::traffic::V100;
+use gsem::spmv::SpmvOp;
+use gsem::util::csv::write_csv;
+use gsem::util::stats::geomean;
+use gsem::util::table::TextTable;
+use gsem::util::{parallel, Prng, Timer};
+use std::sync::Arc;
+
+/// Wall time of `body`, best of `reps` runs (solves are too long for
+/// the adaptive per-cell budget; the min discards scheduler noise).
+fn best_of(reps: usize, mut body: impl FnMut()) -> f64 {
+    let mut best = f64::MAX;
+    for _ in 0..reps {
+        let t = Timer::start();
+        std::hint::black_box(&mut body)();
+        best = best.min(t.elapsed_s());
+    }
+    best
+}
+
+fn main() {
+    let mut corpus = spmv_corpus(common::bench_corpus_size());
+    corpus.sort_by_key(|m| m.a.nnz());
+    let picks: Vec<&NamedMatrix> = corpus.iter().rev().take(3).collect();
+    let bw = common::stream_triad_bw();
+    eprintln!(
+        "ablation_group_par: {} matrices, STREAM triad roofline {:.2} GB/s",
+        picks.len(),
+        bw / 1e9
+    );
+    let reps = if common::fast() { 2 } else { 3 };
+    let opts = CgOpts {
+        tol: 1e-6,
+        max_iters: if common::fast() { 150 } else { 500 },
+        inv_diag: None,
+    };
+    let budgets = [1usize, 2, 4];
+    let widths = [4usize, 8];
+    let formats = [ValueFormat::Fp64, ValueFormat::GseSem(Precision::Head)];
+
+    let header =
+        ["matrix", "format", "nrhs", "budget", "scattered", "merged", "speedup", "GB/s", "roof%"];
+    let mut t = TextTable::new(&header);
+    let mut rows = Vec::new();
+    // merged-vs-scattered speedups on the smoke matrix, budget 4
+    let mut guard: Vec<f64> = Vec::new();
+    let reg = gsem::coordinator::MatrixRegistry::new();
+    for (mi, m) in picks.iter().enumerate() {
+        let a = Arc::new(m.a.clone());
+        let h = reg.register(&a);
+        for &format in &formats {
+            let op = reg.operator(&h, format, 8, None);
+            for &nrhs in &widths {
+                let n = a.nrows;
+                let mut rng = Prng::new(41);
+                let bs: Vec<f64> =
+                    (0..n * nrhs).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                for &budget in &budgets {
+                    // scattered baseline: nrhs singleton "groups" on a
+                    // budget-wide worker queue, serial operators — the
+                    // flusher's behavior before the core allocator
+                    op.set_threads(1);
+                    let t_scat = best_of(reps, || {
+                        let jobs: Vec<usize> = (0..nrhs).collect();
+                        parallel::run_queue(budget, jobs, |j| {
+                            cg_solve(op.as_ref(), &bs[j * n..(j + 1) * n], &opts, |_, _| {
+                                MonitorCmd::Continue
+                            })
+                        });
+                    });
+                    // merged block: one fused multi-RHS solve holding
+                    // the entire budget (what the allocator grants a
+                    // lone dominant group)
+                    op.set_threads(budget);
+                    let mut iters_max = 0usize;
+                    let t_merge = best_of(reps, || {
+                        let outs = cg_solve_multi(op.as_ref(), &bs, nrhs, &opts);
+                        iters_max = outs.iter().map(|o| o.iters).max().unwrap_or(0);
+                    });
+                    // achieved bandwidth of the merged run: one fused
+                    // matrix stream per iteration (deflation and vector
+                    // traffic ignored, so this under-counts)
+                    let bytes = iters_max as f64
+                        * V100.spmv_multi_bytes(a.nnz(), a.nrows, op.format(), nrhs);
+                    let gbs = bytes / t_merge / 1e9;
+                    let roof = gbs * 1e9 / bw * 100.0;
+                    let speedup = t_scat / t_merge;
+                    if mi == 0 && budget == 4 {
+                        guard.push(speedup);
+                    }
+                    t.row(&[
+                        m.name.clone(),
+                        format.label().to_string(),
+                        nrhs.to_string(),
+                        budget.to_string(),
+                        format!("{:.3}ms", t_scat * 1e3),
+                        format!("{:.3}ms", t_merge * 1e3),
+                        format!("{speedup:.2}x"),
+                        format!("{gbs:.2}"),
+                        format!("{roof:.1}"),
+                    ]);
+                    rows.push(vec![
+                        m.name.clone(),
+                        format.label().to_string(),
+                        nrhs.to_string(),
+                        budget.to_string(),
+                        format!("{t_scat:.4e}"),
+                        format!("{t_merge:.4e}"),
+                        format!("{speedup:.4}"),
+                        format!("{gbs:.4e}"),
+                        format!("{roof:.2}"),
+                    ]);
+                }
+            }
+        }
+    }
+    println!("Ablation — merged multi-RHS block vs scattered single solves at equal core budget");
+    println!("(GB/s = modeled merged-stream bytes / measured time; roof% vs STREAM triad)");
+    t.print();
+    let _ = write_csv(
+        "ablation_group_par",
+        &[
+            "matrix",
+            "format",
+            "nrhs",
+            "budget",
+            "t_scattered",
+            "t_merged",
+            "speedup",
+            "merged_gbs",
+            "roof_pct",
+        ],
+        &rows,
+    );
+
+    // Regression guard: on the smoke matrix with the acceptance
+    // budget of 4 cores, the merged block must beat the scattered
+    // baseline at nrhs >= 4 — geomean across formats and widths, so a
+    // single noisy cell cannot flip the verdict.
+    let g = geomean(&guard);
+    println!(
+        "\nmerged-vs-scattered geomean on {} at budget=4, nrhs>=4: {:.2}x ({} cells)",
+        picks[0].name,
+        g,
+        guard.len()
+    );
+    assert!(
+        g >= 1.0,
+        "merged block solves regressed below scattered singles: {g:.3}x on {}",
+        picks[0].name
+    );
+}

@@ -62,6 +62,40 @@
 //! `intake.flushes` / `intake.merged` / `intake.shed` /
 //! `intake.cancelled` / `intake.deadline_expired` counters and the
 //! `intake.depth` gauge, next to the registry's `cache.*` family.
+//!
+//! # Core allocation: two-level parallelism
+//!
+//! A flush schedules its groups on the worker queue (groups run
+//! concurrently, one slot each) **and** hands every group an
+//! intra-group worker budget via the operators' runtime-reconfigurable
+//! [`crate::spmv::SpmvOp::set_threads`] surface — retuning a registry
+//! operator is an atomic store on its shared
+//! [`crate::spmv::ThreadBudget`], zero re-encode, no change to digest
+//! keys or `encoded_bytes`. The allocator divides
+//! [`ServiceConfig::workers`] cores across the flushed groups by
+//! weight (`max(nnz, rows) × nrhs` — nnz-informed like the ELL
+//! chunker's row weights):
+//!
+//! * a group whose row-work (`rows × nrhs`) stays under
+//!   [`crate::spmv::par_min_rows`] is granted one core — its kernels
+//!   would take the serial fallback anyway, exactly the one-per-core
+//!   behavior small groups always had;
+//! * the rest split the budget proportionally (floor-rounded, minimum
+//!   one core each), and rounding leftovers go to the heaviest group —
+//!   so a dominant merged block alone in a flush gets the **full**
+//!   budget, converting the merge from a bytes win into a wall-clock
+//!   win;
+//! * [`ServiceConfig::op_threads`] (nonzero) overrides the policy with
+//!   a fixed per-group budget (`serve --op-threads` in the CLI).
+//!
+//! Any budget is bit-for-bit identical to serial (rows never split
+//! across workers — the [`crate::util::parallel`] invariant), so
+//! allocation only moves wall time, never results; concurrent groups
+//! that share a registry operator may race on its budget, and that too
+//! is benign for the same reason. Allocation surfaces as the
+//! `pool.group_threads` gauge, the `pool.group_ns` counter (plus the
+//! `pool.group` timing series), and the `intake.group_split` counter
+//! (flushes whose core budget was divided across ≥ 2 groups).
 
 use crate::coordinator::error::{classify, ServiceError};
 use crate::coordinator::jobs::{
@@ -107,6 +141,10 @@ pub struct ServiceConfig {
     /// encodes are serialized here and restored on the next digest hit
     /// (`None` = evictions just drop and rebuild).
     pub spill_dir: Option<PathBuf>,
+    /// Fixed intra-group worker budget applied to every flushed group
+    /// (0 = allocator-managed: the flusher divides [`Self::workers`]
+    /// across concurrent groups by weight — see the module docs).
+    pub op_threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -118,6 +156,7 @@ impl Default for ServiceConfig {
             cache_bytes: None,
             queue_depth: None,
             spill_dir: None,
+            op_threads: 0,
         }
     }
 }
@@ -162,6 +201,14 @@ impl ServiceConfig {
     /// and restore them on the next digest hit.
     pub fn spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.spill_dir = Some(dir.into());
+        self
+    }
+
+    /// Pin every group's intra-group worker budget to `n` instead of
+    /// letting the flusher's core allocator divide [`Self::workers`]
+    /// by group weight (0 restores allocator management).
+    pub fn op_threads(mut self, n: usize) -> Self {
+        self.op_threads = n;
         self
     }
 }
@@ -460,9 +507,66 @@ struct ServiceInner {
     workers: usize,
     window: Duration,
     batch_width: usize,
+    op_threads: usize,
     registry: Arc<MatrixRegistry>,
     metrics: Metrics,
     intake: IntakeQueue,
+}
+
+/// Core allocator for one flush: divide `workers` cores across the
+/// flushed groups by weight, where a group's weight is
+/// `max(nnz, rows) × nrhs` — the same nnz-informed work estimate the
+/// ELL chunker applies per row, lifted to whole groups. Policy (see
+/// the module docs):
+///
+/// * a group whose row-work (`rows × nrhs`) stays under
+///   [`crate::spmv::par_min_rows`] gets one core — its kernels take
+///   the serial fallback anyway;
+/// * the rest split the budget proportionally (floored, minimum one),
+///   with rounding leftovers granted to the heaviest group, so a lone
+///   dominant merged block receives the full budget;
+/// * a nonzero `op_threads` override pins every group to that count.
+///
+/// Returns one intra-group budget per group, each in
+/// `[1, max(workers, op_threads)]`.
+fn allocate_threads(workers: usize, op_threads: usize, groups: &[Vec<PendingSolve>]) -> Vec<usize> {
+    if op_threads > 0 {
+        return vec![op_threads; groups.len()];
+    }
+    let workers = workers.max(1);
+    let min_rows = crate::spmv::par_min_rows();
+    // weight 0 marks a group too small to split profitably
+    let weights: Vec<u128> = groups
+        .iter()
+        .map(|g| {
+            let a = g[0].spec.matrix.matrix();
+            if a.nrows.saturating_mul(g.len()) < min_rows {
+                0
+            } else {
+                (a.nnz().max(a.nrows) as u128) * (g.len() as u128)
+            }
+        })
+        .collect();
+    let total: u128 = weights.iter().sum();
+    let mut budgets: Vec<usize> = weights
+        .iter()
+        .map(|&w| {
+            if w == 0 || total == 0 {
+                1
+            } else {
+                (((workers as u128) * w / total) as usize).clamp(1, workers)
+            }
+        })
+        .collect();
+    // floor rounding can strand cores; hand them to the heaviest
+    // splittable group (ties break to the first, i.e. highest priority)
+    if let Some(hi) = (0..groups.len()).filter(|&i| weights[i] > 0).max_by_key(|&i| weights[i]) {
+        let used: usize = budgets.iter().sum();
+        if used < workers {
+            budgets[hi] = (budgets[hi] + (workers - used)).min(workers);
+        }
+    }
+    budgets
 }
 
 impl ServiceInner {
@@ -498,7 +602,13 @@ impl ServiceInner {
             self.metrics.add("intake.merged", merged);
         }
         order_groups(&mut groups);
-        parallel::run_queue(self.workers, groups, |g| self.run_group(g));
+        let budgets = allocate_threads(self.workers, self.op_threads, &groups);
+        if groups.len() > 1 && budgets.iter().any(|&b| b > 1) {
+            // the flush's core budget was actually divided across groups
+            self.metrics.incr("intake.group_split");
+        }
+        let jobs: Vec<(Vec<PendingSolve>, usize)> = groups.into_iter().zip(budgets).collect();
+        parallel::run_queue(self.workers, jobs, |(g, threads)| self.run_group(g, threads));
     }
 
     /// Answer a ticket that never ran (triage or mid-block deflation).
@@ -518,6 +628,43 @@ impl ServiceInner {
         let _ = p.tx.send(Err(err));
     }
 
+    /// Point a spec's operator(s) at the granted worker budget before a
+    /// singleton dispatch. Registry entries are shared and budgets are
+    /// sticky, so this must run on every dispatch — a previous flush
+    /// may have left a different budget behind. The fetch is the same
+    /// cached lookup the dispatch itself performs a moment later, so
+    /// misses are not doubled.
+    fn tune_singleton(&self, spec: &SolveSpec, threads: usize) {
+        let handle = &spec.matrix;
+        let m = Some(&self.metrics);
+        match &spec.format {
+            FormatChoice::Fixed { format, k } => {
+                self.registry.operator(handle, *format, *k, m).set_threads(threads);
+            }
+            FormatChoice::Stepped { k, .. } => {
+                // the budget lives on the shared encode: every ladder
+                // rung over this GseCsr retunes at once
+                self.registry.gse(handle, *k, m).threads.set(threads);
+            }
+            FormatChoice::SteppedCopy { .. } => {
+                self.registry.operator(handle, ValueFormat::Fp32, 0, m).set_threads(threads);
+                self.registry.operator(handle, ValueFormat::Fp64, 0, m).set_threads(threads);
+            }
+        }
+    }
+
+    /// Solve one group under `threads` intra-group workers (granted by
+    /// [`allocate_threads`]), recording the budget and the group's wall
+    /// time in the `pool.*` metrics family.
+    fn run_group(&self, group: Vec<PendingSolve>, threads: usize) {
+        self.metrics.gauge_set("pool.group_threads", threads as u64);
+        let timer = crate::util::Timer::start();
+        self.run_group_inner(group, threads);
+        let s = timer.elapsed_s();
+        self.metrics.add("pool.group_ns", (s * 1e9) as u64);
+        self.metrics.time("pool.group", s);
+    }
+
     /// Solve one group: singletons dispatch normally; larger groups run
     /// as one multi-RHS block — CG / GMRES / BiCGSTAB over the registry
     /// operator for fixed formats, or a stepped block over one shared
@@ -525,8 +672,9 @@ impl ServiceInner {
     /// two stepped modes. Cancelled or already-expired tickets are
     /// triaged out first; the survivors' per-column results are
     /// bit-for-bit what individual dispatch would produce, even when a
-    /// sibling column deflates mid-solve.
-    fn run_group(&self, group: Vec<PendingSolve>) {
+    /// sibling column deflates mid-solve — and, by the row-chunking
+    /// invariant, regardless of the granted `threads` budget.
+    fn run_group_inner(&self, group: Vec<PendingSolve>, threads: usize) {
         // pre-solve triage: answer dead tickets without solver time
         let now = Instant::now();
         let mut live: Vec<PendingSolve> = Vec::with_capacity(group.len());
@@ -544,6 +692,7 @@ impl ServiceInner {
         }
         if live.len() == 1 {
             let p = live.into_iter().next().unwrap();
+            self.tune_singleton(&p.spec, threads);
             let req = p.spec.to_request();
             let res =
                 dispatch_with_handle(&req, &p.spec.matrix, &self.registry, Some(&self.metrics));
@@ -579,6 +728,7 @@ impl ServiceInner {
             match &live[0].spec.format {
                 FormatChoice::Fixed { format, k } => {
                     let op = self.registry.operator(&handle, *format, *k, Some(&self.metrics));
+                    op.set_threads(threads);
                     let (outs, exits) = match &block_solver {
                         BlockSolver::Cg(o) => cg_solve_multi_ctl(op.as_ref(), &bs, nrhs, o, &ctl),
                         BlockSolver::Gmres(o) => {
@@ -594,6 +744,7 @@ impl ServiceInner {
                     self.metrics.incr("pool.batched_stepped");
                     let g = self.registry.gse(&handle, *k, Some(&self.metrics));
                     let ladder = SwitchableOp::new(g);
+                    ladder.set_threads(threads);
                     let (outs, exits) =
                         run_stepped_multi_ctl(&ladder, &bs, nrhs, *params, &block_solver, &ctl);
                     (outs, exits, "GSE-SEM".to_string())
@@ -605,6 +756,7 @@ impl ServiceInner {
                     let hi =
                         self.registry.operator(&handle, ValueFormat::Fp64, 0, Some(&self.metrics));
                     let ladder = CopyLadderOp::new(lo, hi);
+                    ladder.set_threads(threads);
                     let (outs, exits) =
                         run_stepped_multi_ctl(&ladder, &bs, nrhs, *params, &block_solver, &ctl);
                     (outs, exits, "FP32->FP64".to_string())
@@ -660,6 +812,7 @@ impl SolverService {
             workers: cfg.workers.max(1),
             window: cfg.window,
             batch_width: cfg.batch_width.max(1),
+            op_threads: cfg.op_threads,
             registry,
             metrics: Metrics::new(),
             intake: IntakeQueue::new(cfg.queue_depth),
@@ -919,6 +1072,61 @@ mod tests {
             other => panic!("expected DeadlineExceeded, got {other:?}"),
         }
         assert_eq!(svc.metrics().counter("intake.deadline_expired"), 1);
+    }
+
+    #[test]
+    fn allocator_splits_cores_by_group_weight() {
+        let svc = SolverService::manual(ServiceConfig::new().workers(4));
+        let big = Arc::new(poisson2d(64, 64)); // 4096 rows >> par_min_rows
+        let tiny = Arc::new(poisson2d(6, 6)); // serial-gated at any nrhs here
+        let group = |a: &Arc<Csr>, n: usize| -> Vec<PendingSolve> {
+            (0..n)
+                .map(|i| {
+                    let (tx, _rx) = mpsc::channel();
+                    PendingSolve {
+                        spec: cg_spec(&svc, a, &format!("g{i}"), i as u64),
+                        tx,
+                        cancel: Arc::new(AtomicBool::new(false)),
+                        arrived: Instant::now(),
+                    }
+                })
+                .collect()
+        };
+
+        // a lone group gets the full budget
+        let lone = vec![group(&big, 8)];
+        assert_eq!(allocate_threads(4, 0, &lone), [4]);
+
+        // groups below the serial gate stay at one core
+        let small = vec![group(&tiny, 1), group(&tiny, 2)];
+        assert_eq!(allocate_threads(4, 0, &small), [1, 1]);
+
+        // proportional split: 8-wide vs 2-wide on the same matrix is a
+        // 4:1 weight ratio, leftovers land on the heavier group
+        let mixed = vec![group(&big, 8), group(&big, 2)];
+        assert_eq!(allocate_threads(5, 0, &mixed), [4, 1]);
+
+        // serial groups don't dilute the heavy group's share
+        let skewed = vec![group(&big, 8), group(&tiny, 1)];
+        assert_eq!(allocate_threads(4, 0, &skewed), [4, 1]);
+
+        // a nonzero op_threads override pins every group
+        assert_eq!(allocate_threads(4, 3, &mixed), [3, 3]);
+    }
+
+    #[test]
+    fn op_threads_override_flows_to_group_runs() {
+        let svc = SolverService::manual(ServiceConfig::new().workers(2).op_threads(2));
+        let a = Arc::new(poisson2d(8, 8));
+        let tickets: Vec<SolveTicket> =
+            (0..3).map(|i| svc.submit(cg_spec(&svc, &a, &format!("o{i}"), i)).unwrap()).collect();
+        svc.flush();
+        for t in tickets {
+            assert!(t.wait().unwrap().outcome.converged);
+        }
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.gauges.get("pool.group_threads"), Some(&2));
+        assert!(snap.counters.get("pool.group_ns").is_some_and(|&ns| ns > 0));
     }
 
     #[test]

@@ -13,7 +13,13 @@
 //! ([`crate::solvers::cg::cg_solve_multi`] and its
 //! [`crate::solvers::gmres::gmres_solve_multi`] /
 //! [`crate::solvers::bicgstab::bicgstab_solve_multi`] /
-//! [`crate::solvers::stepped::run_stepped_multi`] siblings).
+//! [`crate::solvers::stepped::run_stepped_multi`] siblings). Riding
+//! the intake path also buys pooled batches its **core allocator**:
+//! each flushed group's operators are retuned in place
+//! ([`crate::spmv::SpmvOp::set_threads`]) to a share of the service's
+//! workers — a lone dominant merged block gets the full budget — with
+//! results bitwise independent of the granted budget (see the intake
+//! module docs).
 //!
 //! Since the serving hardening, [`dispatch`] / [`dispatch_cached`] and
 //! [`SolverPool::run_batch`] return results typed by [`ServiceError`]:

@@ -27,6 +27,16 @@
 //! `cache.encode_saved` timing series; the same numbers are available
 //! without a metrics sink via [`MatrixRegistry::stats`]. The pool's
 //! accessor is still called `cache()` for familiarity.
+//!
+//! Cached operators are **thread-reconfigurable in place**: a worker
+//! budget set through [`crate::spmv::SpmvOp::set_threads`] is an
+//! atomic store on the operator's shared [`crate::spmv::ThreadBudget`]
+//! — zero re-encode, no change to digest keys or `encoded_bytes`, so
+//! one entry serves any parallelism level and the intake flusher's
+//! core allocator retunes entries freely between (and during) solves.
+//! Budgets are sticky on the shared entry and results are bitwise
+//! independent of them, so concurrent holders racing on a budget is
+//! benign; spill round-trips restore operators at budget 1.
 
 use crate::coordinator::metrics::Metrics;
 use crate::formats::ValueFormat;
@@ -713,6 +723,31 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn retuning_cached_operators_changes_no_bytes_or_keys() {
+        let reg = MatrixRegistry::new();
+        let a = Arc::new(poisson2d(8, 8));
+        let h = reg.register(&a);
+        // fixed format: the budget is shared through the cached Arc
+        let op = reg.operator(&h, ValueFormat::Fp64, 0, None);
+        let bytes = op.encoded_bytes();
+        op.set_threads(6);
+        assert_eq!(op.encoded_bytes(), bytes, "retune must not change residency");
+        let again = reg.operator(&h, ValueFormat::Fp64, 0, None);
+        assert!(Arc::ptr_eq(&op, &again), "retune must not change the cache key");
+        assert_eq!(again.threads(), 6, "budget is shared through the entry");
+        // GSE levels: fresh wrapper views, one shared encode — and one
+        // shared budget, so retuning any level retunes its siblings
+        let head = reg.operator(&h, ValueFormat::GseSem(Precision::Head), 8, None);
+        let full = reg.operator(&h, ValueFormat::GseSem(Precision::Full), 8, None);
+        let head_bytes = head.encoded_bytes();
+        head.set_threads(4);
+        assert_eq!(full.threads(), 4, "levels share the encode's budget");
+        assert_eq!(head.encoded_bytes(), head_bytes);
+        let st = reg.stats();
+        assert_eq!(st.misses, 2, "one fp64 encode + one gse encode, retunes add none");
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::formats::{GseTable, Precision, ValueFormat};
 use crate::sparse::csr::Csr;
 use crate::spmv::fp64::Fp64Csr;
 use crate::spmv::lowp::{LowpCsr, StoredValue};
-use crate::spmv::{spill_tag, GseCsr, SpmvOp};
+use crate::spmv::{spill_tag, GseCsr, SpmvOp, ThreadBudget};
 use crate::util::error::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -245,7 +245,7 @@ fn decode_lowp<T: StoredValue>(
         colidx: a.colidx,
         vals,
         overflowed,
-        threads: 1,
+        threads: ThreadBudget::new(1),
     }))
 }
 

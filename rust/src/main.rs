@@ -67,13 +67,15 @@ fn print_usage() {
                     CG/GMRES/BiCGSTAB, fixed or stepped — merges them into one\n\
                     multi-RHS block solve)\n\
            serve    [--requests 24] [--window-ms 5] [--batch-width 8] [--stagger-us 300]\n\
-                    [--workers 0] [--cache-mb 0] [--queue-depth 0] [--deadline-ms 0]\n\
-                    [--spill-dir <dir>] [--metrics-json <path>]\n\
+                    [--workers 0] [--op-threads 0] [--cache-mb 0] [--queue-depth 0]\n\
+                    [--deadline-ms 0] [--spill-dir <dir>] [--metrics-json <path>]\n\
                     [--matrix <...>] [--solver cg] [--format fp64]\n\
                     replay a staggered request trace through the windowed SolverService\n\
                     and report intake/cache metrics (0 = auto workers / unbounded\n\
                     cache / unbounded queue / no deadline); sheds past --queue-depth\n\
-                    surface as typed Overloaded errors\n\
+                    surface as typed Overloaded errors; --op-threads pins every\n\
+                    group's intra-group worker budget (0 = the flusher's core\n\
+                    allocator divides --workers across concurrent groups by weight)\n\
            serve --soak  [--queue-depth 8] [--soak-cache-kb 24] [--spill-dir <dir>]\n\
                     [--metrics-json <path>] [--workers 0] [--stagger-us 200]\n\
                     serving-hardening soak: overload/load-shed with an\n\
@@ -380,14 +382,17 @@ fn cmd_serve(cli: &Cli) -> i32 {
             return 2;
         }
     };
-    let (queue_depth, deadline_ms) =
-        match (cli.get_usize("queue-depth", 0), cli.get_u64("deadline-ms", 0)) {
-            (Ok(q), Ok(d)) => (q, d),
-            _ => {
-                eprintln!("serve: numeric option failed to parse");
-                return 2;
-            }
-        };
+    let (queue_depth, deadline_ms, op_threads) = match (
+        cli.get_usize("queue-depth", 0),
+        cli.get_u64("deadline-ms", 0),
+        cli.get_usize("op-threads", 0),
+    ) {
+        (Ok(q), Ok(d), Ok(t)) => (q, d, t),
+        _ => {
+            eprintln!("serve: numeric option failed to parse");
+            return 2;
+        }
+    };
     // --workers 0 = auto (machine parallelism / GSEM_WORKERS)
     let workers = match workers_opt {
         0 => gsem::util::parallel::default_workers(),
@@ -419,7 +424,9 @@ fn cmd_serve(cli: &Cli) -> i32 {
     let mut cfg = ServiceConfig::new()
         .workers(workers)
         .window_ms(window_ms)
-        .batch_width(batch_width);
+        .batch_width(batch_width)
+        // 0 = allocator-managed intra-group budgets (the default)
+        .op_threads(op_threads);
     if cache_mb > 0 {
         cfg = cfg.cache_bytes(cache_mb << 20);
     }

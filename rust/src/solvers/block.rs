@@ -23,6 +23,16 @@
 //! — the contract `tests/block_parity.rs` pins across formats, nrhs
 //! and worker counts. Columns deflate out of the block as they
 //! converge (or break down); the rest keep batching.
+//!
+//! Intra-block parallelism rides *inside* the operator: the intake
+//! flusher's core allocator retunes the operator's
+//! [`crate::spmv::ThreadBudget`] (via
+//! [`crate::spmv::SpmvOp::set_threads`]) before — or even during — a
+//! block solve, and nothing here needs to know. Every fused apply
+//! reads the budget at call time, and any budget is bitwise identical
+//! to serial, so thread counts never join iterates, histories or
+//! switch logs in the solver state (`tests/group_threads.rs` pins
+//! that, including mid-solve retunes between stepped rungs).
 
 use super::stepped::PrecisionController;
 use super::{MonitorCmd, SolveOutcome};

@@ -89,6 +89,16 @@ impl SpmvOp for SwitchableOp {
         // one shared encode serves every rung — the paper's storage win
         self.m.encoded_bytes()
     }
+
+    fn set_threads(&self, threads: usize) {
+        // the budget lives on the shared encode, so a retune reaches
+        // every rung (and any sibling level view) at once
+        self.m.threads.set(threads);
+    }
+
+    fn threads(&self) -> usize {
+        self.m.threads.get()
+    }
 }
 
 impl PrecisionSwitchable for SwitchableOp {
@@ -180,6 +190,16 @@ impl SpmvOp for CopyLadderOp {
     fn encoded_bytes(&self) -> usize {
         // the copy ladder's storage cost: both rungs stay resident
         self.lo.encoded_bytes() + self.hi.encoded_bytes()
+    }
+
+    fn set_threads(&self, threads: usize) {
+        // both rungs retune so an escalation keeps the same budget
+        self.lo.set_threads(threads);
+        self.hi.set_threads(threads);
+    }
+
+    fn threads(&self) -> usize {
+        self.active().threads()
     }
 }
 

@@ -8,9 +8,8 @@
 
 use crate::formats::{Precision, ValueFormat};
 use crate::sparse::csr::Csr;
-use crate::spmv::fp64::PAR_MIN_ROWS;
 use crate::spmv::gse::GseCsr;
-use crate::spmv::SpmvOp;
+use crate::spmv::{SpmvOp, ThreadBudget};
 use crate::util::parallel;
 use std::sync::Arc;
 
@@ -105,7 +104,7 @@ impl EllBlocks {
         threads: usize,
     ) -> Vec<f64> {
         let mut y = vec![0.0; self.nrows];
-        let chunks = if threads <= 1 || self.nrows < PAR_MIN_ROWS {
+        let chunks = if threads <= 1 || self.nrows < crate::spmv::par_min_rows() {
             vec![0..self.nrows]
         } else {
             self.balanced_chunks(g, threads)
@@ -243,8 +242,9 @@ pub struct EllSpmv {
     pub g: Arc<GseCsr>,
     pub blocks: EllBlocks,
     pub level: Precision,
-    /// Worker threads (1 = serial); any count is bit-for-bit identical.
-    pub threads: usize,
+    /// Runtime-reconfigurable worker count (1 = serial); any count is
+    /// bit-for-bit identical (see [`SpmvOp::set_threads`]).
+    pub threads: ThreadBudget,
 }
 
 impl EllSpmv {
@@ -252,26 +252,34 @@ impl EllSpmv {
     /// ELL slabs and wrap them as an operator at `level`.
     pub fn new(g: Arc<GseCsr>, original: &Csr, width: usize, level: Precision) -> Self {
         let blocks = to_ell(&g, original, width);
-        Self { g, blocks, level, threads: 1 }
+        Self { g, blocks, level, threads: ThreadBudget::new(1) }
     }
 
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        self.threads = ThreadBudget::new(threads);
         self
     }
 }
 
 impl SpmvOp for EllSpmv {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
-        let out = self.blocks.spmv_decoded_par(&self.g, x, self.level, self.threads);
+        let out = self.blocks.spmv_decoded_par(&self.g, x, self.level, self.threads.get());
         y.copy_from_slice(&out);
     }
 
     fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
         assert_eq!(y.len(), self.blocks.nrows * nrhs);
         let out =
-            self.blocks.spmv_multi_decoded_par(&self.g, x, nrhs, self.level, self.threads);
+            self.blocks.spmv_multi_decoded_par(&self.g, x, nrhs, self.level, self.threads.get());
         y.copy_from_slice(&out);
+    }
+
+    fn set_threads(&self, threads: usize) {
+        self.threads.set(threads);
+    }
+
+    fn threads(&self) -> usize {
+        self.threads.get()
     }
 
     fn nrows(&self) -> usize {

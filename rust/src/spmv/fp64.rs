@@ -5,28 +5,31 @@
 //! of roughly equal nnz (the CPU analog of the threads-per-row decision
 //! tree the paper cites [19]).
 
-use super::SpmvOp;
+use super::{SpmvOp, ThreadBudget};
 use crate::formats::ValueFormat;
 use crate::sparse::csr::Csr;
 use crate::util::parallel;
 
-/// Row count below which the parallel paths fall back to serial — the
-/// spawn cost dwarfs the work on tiny systems.
+/// Default row count below which the parallel paths fall back to serial
+/// — the spawn cost dwarfs the work on tiny systems. The live value is
+/// [`super::par_min_rows`] (env-overridable); this constant is only its
+/// default.
 pub(crate) const PAR_MIN_ROWS: usize = 1024;
 
 /// FP64-stored CSR operator.
 pub struct Fp64Csr {
     pub a: Csr,
-    pub threads: usize,
+    /// Runtime-reconfigurable worker count ([`SpmvOp::set_threads`]).
+    pub threads: ThreadBudget,
 }
 
 impl Fp64Csr {
     pub fn new(a: Csr) -> Self {
-        Self { a, threads: 1 }
+        Self { a, threads: ThreadBudget::new(1) }
     }
 
     pub fn with_threads(a: Csr, threads: usize) -> Self {
-        Self { a, threads: threads.max(1) }
+        Self { a, threads: ThreadBudget::new(threads) }
     }
 }
 
@@ -54,7 +57,7 @@ pub fn balance_rows(a: &Csr, parts: usize) -> Vec<std::ops::Range<usize>> {
 /// Bit-for-bit identical to [`spmv`] for every thread count (each row is
 /// accumulated by one thread in serial order).
 pub fn spmv_par(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
-    if threads <= 1 || a.nrows < PAR_MIN_ROWS {
+    if threads <= 1 || a.nrows < super::par_min_rows() {
         return spmv(a, x, y);
     }
     let chunks = balance_rows(a, threads);
@@ -101,11 +104,19 @@ pub fn spmv_multi(a: &Csr, x: &[f64], y: &mut [f64], nrhs: usize, threads: usize
 
 impl SpmvOp for Fp64Csr {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
-        spmv_par(&self.a, x, y, self.threads);
+        spmv_par(&self.a, x, y, self.threads.get());
     }
 
     fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
-        spmv_multi(&self.a, x, y, nrhs, self.threads);
+        spmv_multi(&self.a, x, y, nrhs, self.threads.get());
+    }
+
+    fn set_threads(&self, threads: usize) {
+        self.threads.set(threads);
+    }
+
+    fn threads(&self) -> usize {
+        self.threads.get()
     }
 
     fn nrows(&self) -> usize {

@@ -16,8 +16,7 @@
 //! (GSE-SEM vs GSE-SEM*), so three decode strategies are provided and
 //! ablated in `benches/ablation_decode.rs`.
 
-use super::fp64::PAR_MIN_ROWS;
-use super::SpmvOp;
+use super::{SpmvOp, ThreadBudget};
 use crate::formats::gse::GseTable;
 use crate::formats::sem::{self, SemGeometry, SemLayout};
 use crate::formats::{ieee, Precision, ValueFormat};
@@ -58,8 +57,11 @@ pub struct GseCsr {
     pub geom: SemGeometry,
     pub packed: bool,
     pub strategy: DecodeStrategy,
-    /// Worker threads for the SpMV (1 = serial; see [`crate::util::parallel`]).
-    pub threads: usize,
+    /// Runtime-reconfigurable worker count (1 = serial; see
+    /// [`crate::util::parallel`] and [`SpmvOp::set_threads`]). Shared by
+    /// every view of this encode — all three [`GseSpmv`] levels and any
+    /// `SwitchableOp` ladder over it retune together.
+    pub threads: ThreadBudget,
     /// 2^(storedExp − 1075) per table entry (ScaleLut path).
     scales: Vec<f64>,
     /// scale multiply is exact (scale normal & results in range)
@@ -150,7 +152,7 @@ impl GseCsr {
             geom,
             packed,
             strategy: DecodeStrategy::ScaleLut,
-            threads: 1,
+            threads: ThreadBudget::new(1),
             scales,
             scale_exact,
             all_exact,
@@ -210,7 +212,7 @@ impl GseCsr {
             geom,
             packed,
             strategy: DecodeStrategy::ScaleLut,
-            threads: 1,
+            threads: ThreadBudget::new(1),
             scales,
             scale_exact,
             all_exact,
@@ -230,8 +232,11 @@ impl GseCsr {
 
     /// Set the SpMV worker count (1 = serial). Any count produces
     /// bit-for-bit the serial result — rows never split across threads.
+    /// Installs a fresh [`ThreadBudget`] handle (detaching a clone from
+    /// its source); use [`SpmvOp::set_threads`] on any view of this
+    /// encode to retune the shared handle post-build.
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        self.threads = ThreadBudget::new(threads);
         self
     }
 
@@ -323,10 +328,11 @@ impl GseCsr {
     pub fn spmv(&self, x: &[f64], y: &mut [f64], level: Precision) {
         debug_assert_eq!(x.len(), self.ncols);
         debug_assert_eq!(y.len(), self.nrows);
-        if self.threads <= 1 || self.nrows < PAR_MIN_ROWS {
+        let threads = self.threads.get();
+        if threads <= 1 || self.nrows < super::par_min_rows() {
             return self.spmv_range(x, 0..self.nrows, y, level);
         }
-        let chunks = parallel::balance_by_weight(self.nrows, self.threads, |r| {
+        let chunks = parallel::balance_by_weight(self.nrows, threads, |r| {
             self.rowptr[r + 1] - self.rowptr[r]
         });
         parallel::for_each_disjoint(y, &chunks, |ch, ys| self.spmv_range(x, ch, ys, level));
@@ -452,7 +458,7 @@ impl GseCsr {
         if nrhs == 0 {
             return;
         }
-        let parts = super::multi_parts(self.threads, self.nrows, nrhs);
+        let parts = super::multi_parts(self.threads.get(), self.nrows, nrhs);
         let chunks = parallel::balance_by_weight(self.nrows, parts, |r| {
             self.rowptr[r + 1] - self.rowptr[r]
         });
@@ -682,6 +688,16 @@ impl SpmvOp for GseSpmv {
 
     fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
         self.m.spmv_multi(x, y, nrhs, self.level);
+    }
+
+    fn set_threads(&self, threads: usize) {
+        // the budget lives on the shared encode: all sibling level
+        // views (and any ladder over the same encode) retune together
+        self.m.threads.set(threads);
+    }
+
+    fn threads(&self) -> usize {
+        self.m.threads.get()
     }
 
     fn nrows(&self) -> usize {

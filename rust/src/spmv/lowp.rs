@@ -3,8 +3,7 @@
 //! then converted to FP64 and multiplied by the double-precision vector.
 //! All intermediate results are accumulated in double precision" (§IV-C).
 
-use super::fp64::PAR_MIN_ROWS;
-use super::SpmvOp;
+use super::{SpmvOp, ThreadBudget};
 use crate::formats::{Bf16, Fp16, ValueFormat};
 use crate::sparse::csr::Csr;
 use crate::util::parallel;
@@ -67,8 +66,9 @@ pub struct LowpCsr<T: StoredValue> {
     /// true if any finite value overflowed to ±Inf in conversion (the
     /// paper's "/" rows in Tables III/IV)
     pub overflowed: bool,
-    /// Worker threads for the SpMV (1 = serial; see [`crate::util::parallel`]).
-    pub threads: usize,
+    /// Runtime-reconfigurable worker count (1 = serial; see
+    /// [`crate::util::parallel`] and [`SpmvOp::set_threads`]).
+    pub threads: ThreadBudget,
 }
 
 impl<T: StoredValue> LowpCsr<T> {
@@ -86,14 +86,16 @@ impl<T: StoredValue> LowpCsr<T> {
             colidx: a.colidx.clone(),
             vals,
             overflowed,
-            threads: 1,
+            threads: ThreadBudget::new(1),
         }
     }
 
     /// Set the SpMV worker count (1 = serial). Any count produces
     /// bit-for-bit the serial result — rows never split across threads.
+    /// Installs a fresh [`ThreadBudget`] handle; use
+    /// [`SpmvOp::set_threads`] to retune post-build.
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        self.threads = ThreadBudget::new(threads);
         self
     }
 
@@ -102,10 +104,11 @@ impl<T: StoredValue> LowpCsr<T> {
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         debug_assert_eq!(x.len(), self.ncols);
         debug_assert_eq!(y.len(), self.nrows);
-        if self.threads <= 1 || self.nrows < PAR_MIN_ROWS {
+        let threads = self.threads.get();
+        if threads <= 1 || self.nrows < super::par_min_rows() {
             return self.spmv_range(x, 0..self.nrows, y);
         }
-        let chunks = parallel::balance_by_weight(self.nrows, self.threads, |r| {
+        let chunks = parallel::balance_by_weight(self.nrows, threads, |r| {
             self.rowptr[r + 1] - self.rowptr[r]
         });
         parallel::for_each_disjoint(y, &chunks, |ch, ys| self.spmv_range(x, ch, ys));
@@ -134,7 +137,7 @@ impl<T: StoredValue> LowpCsr<T> {
         if nrhs == 0 {
             return;
         }
-        let parts = super::multi_parts(self.threads, self.nrows, nrhs);
+        let parts = super::multi_parts(self.threads.get(), self.nrows, nrhs);
         let chunks = parallel::balance_by_weight(self.nrows, parts, |r| {
             self.rowptr[r + 1] - self.rowptr[r]
         });
@@ -162,6 +165,14 @@ impl<T: StoredValue> SpmvOp for LowpCsr<T> {
 
     fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
         self.spmv_multi(x, y, nrhs);
+    }
+
+    fn set_threads(&self, threads: usize) {
+        self.threads.set(threads);
+    }
+
+    fn threads(&self) -> usize {
+        self.threads.get()
     }
 
     fn nrows(&self) -> usize {

@@ -33,6 +33,56 @@ pub use tile::LANES;
 
 use crate::formats::{Precision, ValueFormat};
 use crate::sparse::csr::Csr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Runtime-reconfigurable worker-count handle shared between an encoded
+/// operator and whoever schedules it (the intake flusher's core
+/// allocator, the CLI, a bench). The count lives behind an
+/// `Arc<AtomicUsize>`, so reconfiguring it is a store — **zero
+/// re-encode**, no change to the operator's digest key or
+/// [`SpmvOp::encoded_bytes`] — and every view of one encode (the three
+/// GSE levels, a ladder's rungs) sees the new budget at its next apply.
+///
+/// Thread count never changes results (rows are never split across
+/// workers — the bit-exactness invariant of [`crate::util::parallel`]),
+/// which is what makes a mid-solve `set` safe.
+///
+/// `clone()` shares the handle; constructor-time `with_threads`
+/// builders install a **fresh** handle so a cloned-and-retuned operator
+/// detaches from its source.
+#[derive(Debug)]
+pub struct ThreadBudget(Arc<AtomicUsize>);
+
+impl ThreadBudget {
+    pub fn new(threads: usize) -> Self {
+        Self(Arc::new(AtomicUsize::new(threads.max(1))))
+    }
+
+    /// Current worker count (always >= 1).
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed).max(1)
+    }
+
+    /// Reconfigure the worker count; values are clamped to >= 1.
+    pub fn set(&self, threads: usize) {
+        self.0.store(threads.max(1), Ordering::Relaxed);
+    }
+}
+
+impl Clone for ThreadBudget {
+    /// Shares the underlying handle: a `set` on either clone is seen by
+    /// both. Use [`ThreadBudget::new`] for a detached handle.
+    fn clone(&self) -> Self {
+        Self(Arc::clone(&self.0))
+    }
+}
+
+impl Default for ThreadBudget {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
 
 /// A type-erased "y = A·x" operator — what the solvers are generic over.
 pub trait SpmvOp: Send + Sync {
@@ -86,6 +136,19 @@ pub trait SpmvOp: Send + Sync {
     fn spill_bytes(&self) -> Option<Vec<u8>> {
         None
     }
+
+    /// Reconfigure the operator's worker count **post-build** (see
+    /// [`ThreadBudget`]). Safe to call concurrently with applies and
+    /// even mid-solve: any count is bit-for-bit identical to serial, so
+    /// the only observable effect is wall time. The default is a no-op
+    /// for operators without a parallel path.
+    fn set_threads(&self, _threads: usize) {}
+
+    /// The operator's current worker count (>= 1). Defaults to 1 for
+    /// operators without a parallel path.
+    fn threads(&self) -> usize {
+        1
+    }
 }
 
 /// Leading payload byte of each operator spill layout, so the decoder
@@ -99,14 +162,31 @@ pub(crate) mod spill_tag {
     pub const GSE: u8 = 4;
 }
 
+/// The serial-fallback work threshold every parallel split gates on —
+/// the one tunable the intake core allocator and all SpMV kernels
+/// agree on for "when does a parallel split pay". Defaults to
+/// [`fp64::PAR_MIN_ROWS`] (1024); override with the
+/// `GSEM_PAR_MIN_ROWS` env var (read once, cached) so benches can
+/// force the parallel path on small smoke matrices.
+pub fn par_min_rows() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var("GSEM_PAR_MIN_ROWS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(fp64::PAR_MIN_ROWS)
+    })
+}
+
 /// Serial-vs-parallel split decision shared by the fused multi-RHS
 /// kernels. Work scales with rows × nrhs, so a short-but-wide block
-/// (say 1k rows × 64 RHS) still clears the [`fp64::PAR_MIN_ROWS`]
-/// spawn threshold that a single skinny apply would not. Thread count
-/// never changes results (rows are never split across workers), so the
-/// gate is free to consider shape only.
+/// (say 1k rows × 64 RHS) still clears the [`par_min_rows`] spawn
+/// threshold that a single skinny apply would not. Thread count never
+/// changes results (rows are never split across workers), so the gate
+/// is free to consider shape only.
 pub(crate) fn multi_parts(threads: usize, nrows: usize, nrhs: usize) -> usize {
-    if threads <= 1 || nrows.saturating_mul(nrhs) < fp64::PAR_MIN_ROWS {
+    if threads <= 1 || nrows.saturating_mul(nrhs) < par_min_rows() {
         1
     } else {
         threads

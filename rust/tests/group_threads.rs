@@ -1,0 +1,235 @@
+//! Thread-reconfiguration acceptance: [`SpmvOp::set_threads`] makes an
+//! operator's worker budget a post-build runtime property, and the
+//! contract is that *any* budget — including budgets changed between
+//! solves or mid-solve from a monitor callback — leaves every solver
+//! result bitwise identical to threads = 1. Rows are never split
+//! across workers (the `util::parallel` chunking invariant), so the
+//! budget may only move wall time, never bits. This suite pins that
+//! for registry-built operators across all seven storage formats,
+//! CG / GMRES / BiCGSTAB blocks, the two stepped ladders, and nrhs
+//! 1 / 5 / 8, which is what lets the intake flusher's core allocator
+//! retune shared registry entries freely.
+
+use gsem::coordinator::MatrixRegistry;
+use gsem::formats::{Precision, ValueFormat};
+use gsem::solvers::stepped::run_stepped_with;
+use gsem::solvers::{
+    bicgstab_solve_multi, cg_solve, cg_solve_multi, gmres_solve_multi, run_stepped_multi,
+    BicgstabOpts, BlockSolver, CgOpts, CopyLadderOp, GmresOpts, MonitorCmd, SolveOutcome,
+    SteppedParams, SwitchableOp,
+};
+use gsem::sparse::gen::fem::diffusion2d;
+use gsem::spmv::SpmvOp;
+use gsem::util::Prng;
+use std::sync::Arc;
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_bitwise(base: &SolveOutcome, other: &SolveOutcome, ctx: &str) {
+    assert_eq!(base.converged, other.converged, "{ctx}: converged");
+    assert_eq!(base.broke_down, other.broke_down, "{ctx}: broke_down");
+    assert_eq!(base.iters, other.iters, "{ctx}: iters");
+    assert_eq!(base.switches, other.switches, "{ctx}: switches");
+    assert_eq!(bits(&base.x), bits(&other.x), "{ctx}: x");
+    assert_eq!(bits(&base.history), bits(&other.history), "{ctx}: history");
+    assert_eq!(base.relres.to_bits(), other.relres.to_bits(), "{ctx}: relres");
+}
+
+/// All seven registry formats: the four fixed widths plus the three
+/// GSE-SEM levels (which share one encode — and one thread budget).
+fn formats() -> [ValueFormat; 7] {
+    [
+        ValueFormat::Fp64,
+        ValueFormat::Fp32,
+        ValueFormat::Fp16,
+        ValueFormat::Bf16,
+        ValueFormat::GseSem(Precision::Head),
+        ValueFormat::GseSem(Precision::HeadTail1),
+        ValueFormat::GseSem(Precision::Full),
+    ]
+}
+
+/// Column 0 easy (`b = A·1`), column 1 zero (trivially converged), the
+/// rest random — exercises deflation under every budget.
+fn rhs_block(op: &dyn SpmvOp, nrhs: usize, seed: u64) -> Vec<f64> {
+    let n = op.nrows();
+    let mut bs = vec![0.0; n * nrhs];
+    let ones = vec![1.0; op.ncols()];
+    op.apply(&ones, &mut bs[0..n]);
+    let mut rng = Prng::new(seed);
+    for j in 2..nrhs {
+        for v in bs[j * n..(j + 1) * n].iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+    }
+    bs
+}
+
+fn solve_block(op: &dyn SpmvOp, solver: &BlockSolver, bs: &[f64], nrhs: usize) -> Vec<SolveOutcome> {
+    match solver {
+        BlockSolver::Cg(o) => cg_solve_multi(op, bs, nrhs, o),
+        BlockSolver::Gmres(o) => gmres_solve_multi(op, bs, nrhs, o),
+        BlockSolver::Bicgstab(o) => bicgstab_solve_multi(op, bs, nrhs, o),
+    }
+}
+
+fn block_solvers() -> [BlockSolver; 3] {
+    [
+        BlockSolver::Cg(CgOpts { tol: 1e-6, max_iters: 120, inv_diag: None }),
+        BlockSolver::Gmres(GmresOpts { tol: 1e-6, restart: 10, max_outer: 12 }),
+        BlockSolver::Bicgstab(BicgstabOpts { tol: 1e-6, max_iters: 120 }),
+    ]
+}
+
+/// Eager controller: escalates whenever a 4-residual window is not
+/// improving 99% after the 6-iteration warm-up — the ladders climb.
+fn eager_params() -> SteppedParams {
+    SteppedParams {
+        l: 6,
+        t: 4,
+        m: 2,
+        rsd_limit: 0.5,
+        ndec_limit: 2,
+        reldec_limit: 0.99,
+        divergence_factor: 100.0,
+    }
+}
+
+#[test]
+fn registry_operators_retune_bitwise_across_formats_and_solvers() {
+    // 1296 rows: single applies clear the serial gate too, so budgets
+    // of 2 / 3 / cores genuinely change the execution shape
+    let a = Arc::new(diffusion2d(36, 36, 9.0, 4));
+    let reg = MatrixRegistry::new();
+    let h = reg.register(&a);
+    let cores = gsem::util::parallel::default_workers();
+    for format in formats() {
+        let op = reg.operator(&h, format, 8, None);
+        for solver in &block_solvers() {
+            for nrhs in [1usize, 5, 8] {
+                let bs = rhs_block(op.as_ref(), nrhs, 7);
+                op.set_threads(1);
+                assert_eq!(op.threads(), 1);
+                let base = solve_block(op.as_ref(), solver, &bs, nrhs);
+                for threads in [2usize, 3, cores] {
+                    op.set_threads(threads);
+                    assert_eq!(op.threads(), threads.max(1));
+                    let outs = solve_block(op.as_ref(), solver, &bs, nrhs);
+                    for (j, (b0, o)) in base.iter().zip(&outs).enumerate() {
+                        let ctx = format!(
+                            "{} {solver:?} nrhs={nrhs} threads={threads} col={j}",
+                            format.label()
+                        );
+                        assert_bitwise(b0, o, &ctx);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stepped_ladders_retune_bitwise() {
+    let a = Arc::new(diffusion2d(10, 10, 9.0, 4));
+    let reg = MatrixRegistry::new();
+    let h = reg.register(&a);
+    let params = eager_params();
+    // shared cached pieces, exactly what the intake multi path fetches
+    let g = reg.gse(&h, 8, None);
+    let lo = reg.operator(&h, ValueFormat::Fp32, 0, None);
+    let hi = reg.operator(&h, ValueFormat::Fp64, 0, None);
+    let cores = gsem::util::parallel::default_workers();
+    let solvers = [
+        BlockSolver::Cg(CgOpts { tol: 1e-8, max_iters: 300, inv_diag: None }),
+        BlockSolver::Gmres(GmresOpts { tol: 1e-8, restart: 10, max_outer: 30 }),
+        BlockSolver::Bicgstab(BicgstabOpts { tol: 1e-8, max_iters: 300 }),
+    ];
+    let mut any_switched = false;
+    for solver in &solvers {
+        for nrhs in [1usize, 5, 8] {
+            let bs = rhs_block(hi.as_ref(), nrhs, 3);
+            // GSE tag ladder: fresh per run (tag resets), but the
+            // budget lives on the shared encode and carries over
+            let ladder = SwitchableOp::new(Arc::clone(&g));
+            ladder.set_threads(1);
+            let base = run_stepped_multi(&ladder, &bs, nrhs, params, solver);
+            for threads in [2usize, 3, cores] {
+                let ladder = SwitchableOp::new(Arc::clone(&g));
+                ladder.set_threads(threads);
+                assert_eq!(ladder.threads(), threads.max(1));
+                let outs = run_stepped_multi(&ladder, &bs, nrhs, params, solver);
+                for (j, (b0, o)) in base.iter().zip(&outs).enumerate() {
+                    let ctx = format!("stepped-gse {solver:?} nrhs={nrhs} threads={threads} col={j}");
+                    assert_bitwise(b0, o, &ctx);
+                    any_switched |= !o.switches.is_empty();
+                }
+            }
+            // copy ladder: budgets live on the shared fp32/fp64 rungs
+            let ladder = CopyLadderOp::new(Arc::clone(&lo), Arc::clone(&hi));
+            ladder.set_threads(1);
+            let base = run_stepped_multi(&ladder, &bs, nrhs, params, solver);
+            for threads in [2usize, 3, cores] {
+                let ladder = CopyLadderOp::new(Arc::clone(&lo), Arc::clone(&hi));
+                ladder.set_threads(threads);
+                assert_eq!(ladder.threads(), threads.max(1));
+                let outs = run_stepped_multi(&ladder, &bs, nrhs, params, solver);
+                for (j, (b0, o)) in base.iter().zip(&outs).enumerate() {
+                    let ctx =
+                        format!("stepped-copy {solver:?} nrhs={nrhs} threads={threads} col={j}");
+                    assert_bitwise(b0, o, &ctx);
+                    any_switched |= !o.switches.is_empty();
+                }
+            }
+        }
+    }
+    assert!(any_switched, "the eager controller must escalate at least one column");
+}
+
+#[test]
+fn mid_solve_retune_is_bitwise_invisible() {
+    let a = Arc::new(diffusion2d(36, 36, 9.0, 4));
+    let reg = MatrixRegistry::new();
+    let h = reg.register(&a);
+    let n = a.nrows;
+    let mut rng = Prng::new(19);
+    let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+    // fixed format: the monitor retunes the operator every iteration,
+    // cycling budgets while CG is mid-recurrence
+    let op = reg.operator(&h, ValueFormat::Fp64, 0, None);
+    let o = CgOpts { tol: 1e-10, max_iters: 200, inv_diag: None };
+    op.set_threads(1);
+    let base = cg_solve(op.as_ref(), &b, &o, |_, _| MonitorCmd::Continue);
+    let budgets = [2usize, 5, 1, 3];
+    let retuned = cg_solve(op.as_ref(), &b, &o, |it, _| {
+        op.set_threads(budgets[it % budgets.len()]);
+        MonitorCmd::Continue
+    });
+    assert_bitwise(&base, &retuned, "mid-solve cg retune");
+
+    // stepped ladder: retune *between rungs* — each time the
+    // controller escalates (Restart), the budget changes with it
+    let g = reg.gse(&h, 8, None);
+    let params = eager_params();
+    let so = CgOpts { tol: 1e-8, max_iters: 300, inv_diag: None };
+    let ladder = SwitchableOp::new(Arc::clone(&g));
+    ladder.set_threads(1);
+    let (base, _, _) = run_stepped_with(&ladder, params, |op, mon| cg_solve(op, &b, &so, mon));
+    let ladder = SwitchableOp::new(Arc::clone(&g));
+    ladder.set_threads(1);
+    let mut budget = 1usize;
+    let (retuned, _, _) = run_stepped_with(&ladder, params, |op, mon| {
+        cg_solve(op, &b, &so, |it, r| {
+            let cmd = mon(it, r);
+            if matches!(cmd, MonitorCmd::Restart) {
+                budget = budget % 4 + 1;
+                op.set_threads(budget);
+            }
+            cmd
+        })
+    });
+    assert!(!retuned.switches.is_empty(), "the stepped run must escalate rungs");
+    assert_bitwise(&base, &retuned, "stepped between-rung retune");
+}
