@@ -99,8 +99,8 @@
 
 use crate::coordinator::error::{classify, ServiceError};
 use crate::coordinator::jobs::{
-    default_caps, dispatch_with_handle, solver_opts, FormatChoice, FormatKey, RhsSpec,
-    SolveRequest, SolveResult, SolverKind,
+    default_caps, dispatch_with_handle, ir_label, precond_inv_diag, solver_opts, FormatChoice,
+    FormatKey, RhsSpec, SolveRequest, SolveResult, SolverKind,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::{MatrixHandle, MatrixRegistry};
@@ -109,7 +109,9 @@ use crate::solvers::bicgstab::bicgstab_solve_multi_ctl;
 use crate::solvers::block::{BlockCtl, ColumnExit};
 use crate::solvers::cg::cg_solve_multi_ctl;
 use crate::solvers::gmres::gmres_solve_multi_ctl;
+use crate::solvers::ir::{ir_solve_multi_ctl, IrGmresOpts};
 use crate::solvers::ladder::{CopyLadderOp, SwitchableOp};
+use crate::solvers::sainv::{Precond, PrecondKey, PrecondOp};
 use crate::solvers::stepped::{run_stepped_multi_ctl, BlockSolver};
 use crate::solvers::SolveOutcome;
 use crate::sparse::csr::{Csr, MatrixDigest};
@@ -225,6 +227,9 @@ pub struct SolveSpec {
     pub rhs: RhsSpec,
     pub solver: SolverKind,
     pub format: FormatChoice,
+    /// Preconditioner spec ([`Precond::None`] by default). A batching
+    /// axis: only same-preconditioner requests merge.
+    pub precond: Precond,
     pub tol: f64,
     pub max_iters: usize,
     /// Absolute wall-clock deadline: past it the ticket resolves with
@@ -247,6 +252,7 @@ impl SolveSpec {
             rhs: RhsSpec::AxOnes,
             solver,
             format,
+            precond: Precond::None,
             tol,
             max_iters,
             deadline: None,
@@ -257,6 +263,12 @@ impl SolveSpec {
     /// Replace the right-hand side.
     pub fn rhs(mut self, rhs: RhsSpec) -> Self {
         self.rhs = rhs;
+        self
+    }
+
+    /// Replace the preconditioner spec.
+    pub fn precond(mut self, p: Precond) -> Self {
+        self.precond = p;
         self
     }
 
@@ -298,6 +310,7 @@ impl SolveSpec {
             rhs: self.rhs,
             solver: self.solver,
             format: self.format.clone(),
+            precond: self.precond.clone(),
             tol: self.tol,
             max_iters: self.max_iters,
         }
@@ -476,6 +489,7 @@ struct GroupKey {
     digest: MatrixDigest,
     solver: SolverKind,
     format: FormatKey,
+    precond: PrecondKey,
     tol_bits: u64,
     max_iters: usize,
 }
@@ -485,6 +499,7 @@ fn group_key(spec: &SolveSpec) -> GroupKey {
         digest: spec.matrix.digest(),
         solver: spec.solver,
         format: spec.format.group_key(),
+        precond: (&spec.precond).into(),
         tol_bits: spec.tol.to_bits(),
         max_iters: spec.max_iters,
     }
@@ -650,6 +665,13 @@ impl ServiceInner {
                 self.registry.operator(handle, ValueFormat::Fp32, 0, m).set_threads(threads);
                 self.registry.operator(handle, ValueFormat::Fp64, 0, m).set_threads(threads);
             }
+            FormatChoice::Ir { k } => {
+                // the sainv factors are NOT prefetched here — their
+                // build is fallible and the dispatch a moment later
+                // owns the typed error; budgets are bitwise-neutral,
+                // so the factors keep their sticky budget
+                self.registry.gse(handle, *k, m).threads.set(threads);
+            }
         }
     }
 
@@ -695,13 +717,17 @@ impl ServiceInner {
             self.tune_singleton(&p.spec, threads);
             let req = p.spec.to_request();
             let res =
-                dispatch_with_handle(&req, &p.spec.matrix, &self.registry, Some(&self.metrics));
-            let _ = p.tx.send(classify(res));
+                dispatch_with_handle(&req, &p.spec.matrix, &self.registry, Some(&self.metrics))
+                    .and_then(classify);
+            let _ = p.tx.send(res);
             return;
         }
         let (solver, tol, max_iters) =
             (live[0].spec.solver, live[0].spec.tol, live[0].spec.max_iters);
         let handle = live[0].spec.matrix.clone();
+        // cloned out so the match below can move `live` (error fan-out)
+        let format = live[0].spec.format.clone();
+        let precond = live[0].spec.precond.clone();
         let nrhs = live.len();
         let n = handle.matrix().nrows;
         let mut bs = vec![0.0; n * nrhs];
@@ -710,10 +736,13 @@ impl ServiceInner {
         }
         self.metrics.incr("pool.batched_groups");
         self.metrics.add("pool.batched_rhs", nrhs as u64);
-        self.metrics.incr(match solver {
-            SolverKind::Cg => "pool.batched_cg",
-            SolverKind::Gmres => "pool.batched_gmres",
-            SolverKind::Bicgstab => "pool.batched_bicgstab",
+        self.metrics.incr(match &format {
+            FormatChoice::Ir { .. } => "pool.batched_ir",
+            _ => match solver {
+                SolverKind::Cg => "pool.batched_cg",
+                SolverKind::Gmres => "pool.batched_gmres",
+                SolverKind::Bicgstab => "pool.batched_bicgstab",
+            },
         });
         // per-column cancel flags and deadlines, polled between apply
         // rounds so a triggered column deflates out of the block
@@ -722,10 +751,12 @@ impl ServiceInner {
             live.iter().map(|p| p.spec.deadline).collect(),
         );
         // the exact caps single dispatch would hand the solver (shared
-        // mapping — see jobs::solver_opts)
-        let block_solver = solver_opts(solver, tol, max_iters);
+        // mapping — see jobs::solver_opts; a Jacobi spec rides into
+        // CgOpts::inv_diag exactly as single dispatch computes it)
+        let block_solver =
+            solver_opts(solver, tol, max_iters, precond_inv_diag(&precond, handle.matrix()));
         let (outs, exits, label): (Vec<SolveOutcome>, Vec<ColumnExit>, String) =
-            match &live[0].spec.format {
+            match &format {
                 FormatChoice::Fixed { format, k } => {
                     let op = self.registry.operator(&handle, *format, *k, Some(&self.metrics));
                     op.set_threads(threads);
@@ -760,6 +791,34 @@ impl ServiceInner {
                     let (outs, exits) =
                         run_stepped_multi_ctl(&ladder, &bs, nrhs, *params, &block_solver, &ctl);
                     (outs, exits, "FP32->FP64".to_string())
+                }
+                FormatChoice::Ir { k } => {
+                    let g = self.registry.gse(&handle, *k, Some(&self.metrics));
+                    g.threads.set(threads);
+                    // the preconditioner build is the one fallible step:
+                    // a SAINV pivot breakdown (or any registry failure)
+                    // answers every ticket in the group with the same
+                    // typed error — nothing hangs, nothing is poisoned
+                    let built = match &precond {
+                        Precond::Sainv(p) => self
+                            .registry
+                            .sainv(&handle, *p, Some(&self.metrics))
+                            .map(PrecondOp::Sainv),
+                        other => PrecondOp::for_spec(other, handle.matrix()),
+                    };
+                    let m = match built {
+                        Ok(m) => m,
+                        Err(e) => {
+                            for t in live {
+                                let _ = t.tx.send(Err(ServiceError::Registry(e.clone())));
+                            }
+                            return;
+                        }
+                    };
+                    m.set_threads(threads);
+                    let opts = IrGmresOpts::for_caps(tol, max_iters);
+                    let (outs, exits) = ir_solve_multi_ctl(&g, &m, &bs, nrhs, &opts, &ctl);
+                    (outs, exits, ir_label(&precond).to_string())
                 }
             };
         let fp64 = self.registry.operator(&handle, ValueFormat::Fp64, 0, Some(&self.metrics));
@@ -868,6 +927,7 @@ impl SolverService {
             rhs: req.rhs,
             solver: req.solver,
             format: req.format,
+            precond: req.precond,
             tol: req.tol,
             max_iters: req.max_iters,
             deadline: None,
@@ -981,6 +1041,57 @@ mod tests {
         assert!(r.outcome.converged);
         assert_eq!(svc.metrics().counter("intake.flushes"), 1);
         assert_eq!(svc.metrics().counter("intake.merged"), 0);
+    }
+
+    #[test]
+    fn ir_sainv_requests_merge_and_build_factors_once() {
+        use crate::solvers::SainvParams;
+        let svc = SolverService::manual(ServiceConfig::new().workers(2));
+        let a = Arc::new(poisson2d(9, 9));
+        let params = SainvParams { drop_tol: 0.05, k: 8 };
+        let tickets: Vec<SolveTicket> = (0..3)
+            .map(|i| {
+                let spec =
+                    SolveSpec::new(&format!("ir{i}"), svc.register(&a), SolverKind::Gmres,
+                        FormatChoice::Ir { k: 8 })
+                    .precond(Precond::Sainv(params))
+                    .rhs(RhsSpec::Random(i))
+                    .tol(1e-10);
+                svc.submit(spec).unwrap()
+            })
+            .collect();
+        svc.flush();
+        for t in tickets {
+            let r = t.wait().unwrap();
+            assert!(r.outcome.converged);
+            assert_eq!(r.format_label, "GSE-IR(sainv)");
+            assert!(r.relres_fp64 < 1e-8, "relres={}", r.relres_fp64);
+        }
+        assert_eq!(svc.metrics().counter("pool.batched_groups"), 1);
+        assert_eq!(svc.metrics().counter("pool.batched_ir"), 1);
+        assert_eq!(svc.metrics().counter("precond.builds"), 1, "one build serves the block");
+    }
+
+    #[test]
+    fn precond_is_a_batching_axis() {
+        // same matrix/solver/format/caps but different preconditioners:
+        // the two requests must NOT merge (their iterates differ)
+        let svc = SolverService::manual(ServiceConfig::new().workers(2));
+        let a = Arc::new(poisson2d(8, 8));
+        let spec = |name: &str, p: Precond| {
+            SolveSpec::new(name, svc.register(&a), SolverKind::Gmres, FormatChoice::Ir { k: 8 })
+                .precond(p)
+                .rhs(RhsSpec::Random(1))
+        };
+        let t0 = svc.submit(spec("plain", Precond::None)).unwrap();
+        let t1 = svc.submit(spec("jacobi", Precond::Jacobi)).unwrap();
+        svc.flush();
+        let r0 = t0.wait().unwrap();
+        let r1 = t1.wait().unwrap();
+        assert_eq!(r0.format_label, "GSE-IR");
+        assert_eq!(r1.format_label, "GSE-IR(jacobi)");
+        assert_eq!(svc.metrics().counter("intake.merged"), 0);
+        assert_eq!(svc.metrics().counter("pool.batched_groups"), 0);
     }
 
     #[test]

@@ -34,9 +34,13 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::{build_fixed_operator, MatrixHandle, MatrixRegistry};
 use crate::formats::ValueFormat;
 use crate::solvers::bicgstab::{bicgstab_solve, BicgstabOpts};
+use crate::solvers::ir::IrGmresOpts;
 use crate::solvers::ladder::CopyLadderOp;
+use crate::solvers::sainv::{Precond, PrecondOp};
 use crate::solvers::stepped::{run_stepped, run_stepped_with, BlockSolver, SteppedParams};
-use crate::solvers::{cg_solve, gmres_solve, CgOpts, GmresOpts, MonitorCmd, SolveOutcome};
+use crate::solvers::{
+    cg_solve, gmres_solve, ir_gmres_solve, CgOpts, GmresOpts, MonitorCmd, SolveOutcome,
+};
 use crate::sparse::csr::Csr;
 use crate::spmv::{GseCsr, SpmvOp};
 use crate::util::parallel;
@@ -106,6 +110,11 @@ pub enum FormatChoice {
     Stepped { k: usize, params: SteppedParams },
     /// Copy-based fp32→fp64 stepped ladder (related-work baseline).
     SteppedCopy { params: SteppedParams },
+    /// GMRES-based iterative refinement over the GSE ladder
+    /// ([`crate::solvers::ir::ir_gmres_solve`]); the request's
+    /// [`Precond`] picks the preconditioner and the request's
+    /// [`SolverKind`] is ignored — IR drives its own inner GMRES.
+    Ir { k: usize },
 }
 
 /// Hashable fingerprint of a [`SteppedParams`]: the f64 thresholds are
@@ -144,6 +153,7 @@ pub(crate) enum FormatKey {
     Fixed { format: ValueFormat, k: usize },
     Stepped { k: usize, params: SteppedParamsKey },
     SteppedCopy { params: SteppedParamsKey },
+    Ir { k: usize },
 }
 
 impl FormatChoice {
@@ -157,6 +167,7 @@ impl FormatChoice {
         match self {
             FormatChoice::Fixed { format: ValueFormat::GseSem(_), k } => Some(*k),
             FormatChoice::Stepped { k, .. } => Some(*k),
+            FormatChoice::Ir { k } => Some(*k),
             FormatChoice::Fixed { .. } | FormatChoice::SteppedCopy { .. } => None,
         }
     }
@@ -182,6 +193,7 @@ impl FormatChoice {
             FormatChoice::SteppedCopy { params } => {
                 FormatKey::SteppedCopy { params: params.into() }
             }
+            FormatChoice::Ir { k } => FormatKey::Ir { k: *k },
         }
     }
 }
@@ -213,6 +225,11 @@ pub struct SolveRequest {
     pub rhs: RhsSpec,
     pub solver: SolverKind,
     pub format: FormatChoice,
+    /// Preconditioner spec: `Jacobi` scales CG's residual
+    /// (other fixed solvers ignore it), `Sainv(..)` requires the
+    /// [`FormatChoice::Ir`] format, where it is applied inside the
+    /// inner GMRES at the ladder's active rung.
+    pub precond: Precond,
     pub tol: f64,
     pub max_iters: usize,
 }
@@ -220,7 +237,16 @@ pub struct SolveRequest {
 impl SolveRequest {
     pub fn new(name: &str, a: Arc<Csr>, solver: SolverKind, format: FormatChoice) -> Self {
         let (tol, max_iters) = default_caps(solver);
-        Self { name: name.to_string(), a, rhs: RhsSpec::AxOnes, solver, format, tol, max_iters }
+        Self {
+            name: name.to_string(),
+            a,
+            rhs: RhsSpec::AxOnes,
+            solver,
+            format,
+            precond: Precond::None,
+            tol,
+            max_iters,
+        }
     }
 }
 
@@ -255,20 +281,24 @@ pub fn dispatch_cached(
     registry: Option<&MatrixRegistry>,
     metrics: Option<&Metrics>,
 ) -> Result<SolveResult, ServiceError> {
-    classify(match registry {
+    match registry {
         Some(reg) => dispatch_with_handle(req, &reg.register(&req.a), reg, metrics),
         None => dispatch_inner(req, None, metrics),
-    })
+    }
+    .and_then(classify)
 }
 
 /// Registry-backed dispatch for a caller that already digested the
-/// matrix (the intake queue's path — no per-request re-hash).
+/// matrix (the intake queue's path — no per-request re-hash). An `Err`
+/// here is a *construction* failure (an invalid precond/format pairing
+/// or a SAINV pivot breakdown); solver breakdowns are an `Ok` result
+/// the caller runs through [`classify`].
 pub(crate) fn dispatch_with_handle(
     req: &SolveRequest,
     handle: &MatrixHandle,
     registry: &MatrixRegistry,
     metrics: Option<&Metrics>,
-) -> SolveResult {
+) -> Result<SolveResult, ServiceError> {
     dispatch_inner(req, Some((registry, handle)), metrics)
 }
 
@@ -276,7 +306,13 @@ fn dispatch_inner(
     req: &SolveRequest,
     cached: Option<(&MatrixRegistry, &MatrixHandle)>,
     metrics: Option<&Metrics>,
-) -> SolveResult {
+) -> Result<SolveResult, ServiceError> {
+    if matches!(req.precond, Precond::Sainv(_)) && !matches!(req.format, FormatChoice::Ir { .. })
+    {
+        return Err(ServiceError::Registry(crate::util::error::Error::msg(
+            "sainv preconditioning requires the ir format",
+        )));
+    }
     let a = req.a.as_ref();
     let b = req.rhs.build(a);
     // single lookup point: registry when available, fresh build when not
@@ -314,16 +350,43 @@ fn dispatch_inner(
             });
             (out, "FP32->FP64".to_string())
         }
+        FormatChoice::Ir { k } => {
+            let g: Arc<GseCsr> = match cached {
+                Some((reg, h)) => reg.gse(h, *k, metrics),
+                None => Arc::new(GseCsr::from_csr(a, *k)),
+            };
+            // SAINV factors come from the registry when one is present
+            // (built exactly once per digest × params, LRU-budgeted);
+            // a pivot breakdown surfaces as a typed construction error
+            let m = match (&req.precond, cached) {
+                (Precond::Sainv(p), Some((reg, h))) => {
+                    PrecondOp::Sainv(reg.sainv(h, *p, metrics)?)
+                }
+                _ => PrecondOp::for_spec(&req.precond, a)?,
+            };
+            let opts = IrGmresOpts::for_caps(req.tol, req.max_iters);
+            let out = ir_gmres_solve(&g, &m, &b, &opts);
+            (out, ir_label(&req.precond).to_string())
+        }
     };
     // the paper's reported residual: against the FP64 matrix
     let fp64_op = op_for(ValueFormat::Fp64, 0);
     let relres_fp64 = crate::solvers::true_relres(fp64_op.as_ref(), &outcome.x, &b);
-    SolveResult {
+    Ok(SolveResult {
         name: req.name.clone(),
         solver: req.solver,
         format_label: label,
         outcome,
         relres_fp64,
+    })
+}
+
+/// Result label for the IR format, suffixed by the preconditioner.
+pub(crate) fn ir_label(p: &Precond) -> &'static str {
+    match p {
+        Precond::None => "GSE-IR",
+        Precond::Jacobi => "GSE-IR(jacobi)",
+        Precond::Sainv(_) => "GSE-IR(sainv)",
     }
 }
 
@@ -332,13 +395,29 @@ fn dispatch_inner(
 /// restart-30 outer cycles), shared by single dispatch
 /// ([`run_solver_monitored`]) and the intake's block path, so the two
 /// can never drift apart and break block/single bitwise parity.
-pub(crate) fn solver_opts(solver: SolverKind, tol: f64, max_iters: usize) -> BlockSolver {
+pub(crate) fn solver_opts(
+    solver: SolverKind,
+    tol: f64,
+    max_iters: usize,
+    inv_diag: Option<Vec<f64>>,
+) -> BlockSolver {
     match solver {
-        SolverKind::Cg => BlockSolver::Cg(CgOpts { tol, max_iters, inv_diag: None }),
+        SolverKind::Cg => BlockSolver::Cg(CgOpts { tol, max_iters, inv_diag }),
         SolverKind::Gmres => {
             BlockSolver::Gmres(GmresOpts { tol, restart: 30, max_outer: max_iters.div_ceil(30) })
         }
         SolverKind::Bicgstab => BlockSolver::Bicgstab(BicgstabOpts { tol, max_iters }),
+    }
+}
+
+/// The inverse-diagonal vector a [`Precond::Jacobi`] request feeds into
+/// [`CgOpts::inv_diag`] — shared by single dispatch and the intake's
+/// block path so preconditioned parity holds bitwise. `None` / `Sainv`
+/// contribute nothing here (SAINV lives inside the IR format).
+pub(crate) fn precond_inv_diag(p: &Precond, a: &Csr) -> Option<Vec<f64>> {
+    match p {
+        Precond::Jacobi => Some(crate::solvers::precond::Jacobi::from_csr(a).inv_diag),
+        Precond::None | Precond::Sainv(_) => None,
     }
 }
 
@@ -351,7 +430,8 @@ fn run_solver_monitored(
     b: &[f64],
     monitor: &mut dyn FnMut(usize, f64) -> MonitorCmd,
 ) -> SolveOutcome {
-    match solver_opts(req.solver, req.tol, req.max_iters) {
+    let inv_diag = precond_inv_diag(&req.precond, &req.a);
+    match solver_opts(req.solver, req.tol, req.max_iters, inv_diag) {
         BlockSolver::Cg(o) => cg_solve(op, b, &o, monitor),
         BlockSolver::Gmres(o) => gmres_solve(op, b, &o, monitor),
         BlockSolver::Bicgstab(o) => bicgstab_solve(op, b, &o, monitor),
@@ -462,6 +542,86 @@ mod tests {
         let res = dispatch(&req).unwrap();
         assert_eq!(res.format_label, "FP32->FP64");
         assert!(res.outcome.converged, "relres={}", res.relres_fp64);
+    }
+
+    #[test]
+    fn dispatch_ir_with_sainv_reaches_tight_tolerance() {
+        use crate::solvers::SainvParams;
+        let a = Arc::new(poisson2d(10, 10));
+        let mut req = SolveRequest::new("ir", a, SolverKind::Gmres, FormatChoice::Ir { k: 8 });
+        req.precond = Precond::Sainv(SainvParams { drop_tol: 0.05, k: 8 });
+        req.tol = 1e-10;
+        let reg = MatrixRegistry::new();
+        let m = Metrics::new();
+        let res = dispatch_cached(&req, Some(&reg), Some(&m)).unwrap();
+        assert!(res.outcome.converged);
+        assert_eq!(res.format_label, "GSE-IR(sainv)");
+        assert!(res.relres_fp64 < 1e-8, "relres={}", res.relres_fp64);
+        assert_eq!(m.counter("precond.builds"), 1);
+        // a second dispatch reuses the cached factors
+        let _ = dispatch_cached(&req, Some(&reg), Some(&m)).unwrap();
+        assert_eq!(m.counter("precond.builds"), 1);
+    }
+
+    #[test]
+    fn dispatch_ir_unpreconditioned_and_jacobi_labels() {
+        let a = Arc::new(poisson2d(8, 8));
+        let mut req =
+            SolveRequest::new("ir0", Arc::clone(&a), SolverKind::Gmres, FormatChoice::Ir { k: 8 });
+        let res = dispatch_cached(&req, None, None).unwrap();
+        assert_eq!(res.format_label, "GSE-IR");
+        assert!(res.outcome.converged);
+        req.precond = Precond::Jacobi;
+        let res = dispatch_cached(&req, None, None).unwrap();
+        assert_eq!(res.format_label, "GSE-IR(jacobi)");
+        assert!(res.outcome.converged);
+    }
+
+    #[test]
+    fn sainv_precond_requires_ir_format() {
+        use crate::solvers::SainvParams;
+        let a = Arc::new(poisson2d(6, 6));
+        let mut req =
+            SolveRequest::new("bad", a, SolverKind::Cg, FormatChoice::fixed(ValueFormat::Fp64));
+        req.precond = Precond::Sainv(SainvParams::default());
+        let err = dispatch_cached(&req, None, None).unwrap_err();
+        assert!(matches!(err, ServiceError::Registry(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn jacobi_precond_speeds_up_ill_scaled_cg() {
+        // scale the Poisson system's rows/cols wildly: plain CG slows
+        // down, Jacobi restores the iteration count
+        let base = poisson2d(12, 12);
+        let scales: Vec<f64> = (0..base.nrows).map(|i| 10f64.powi((i % 7) as i32 - 3)).collect();
+        let mut scaled = base.clone();
+        for i in 0..scaled.nrows {
+            let (start, end) = (scaled.rowptr[i], scaled.rowptr[i + 1]);
+            for idx in start..end {
+                let j = scaled.colidx[idx] as usize;
+                scaled.vals[idx] *= scales[i] * scales[j];
+            }
+        }
+        let a = Arc::new(scaled);
+        let mut plain = SolveRequest::new(
+            "plain",
+            Arc::clone(&a),
+            SolverKind::Cg,
+            FormatChoice::fixed(ValueFormat::Fp64),
+        );
+        plain.max_iters = 20000;
+        let mut pre = plain.clone();
+        pre.name = "jacobi".into();
+        pre.precond = Precond::Jacobi;
+        let plain = dispatch_cached(&plain, None, None).unwrap();
+        let pre = dispatch_cached(&pre, None, None).unwrap();
+        assert!(pre.outcome.converged);
+        assert!(
+            pre.outcome.iters < plain.outcome.iters,
+            "jacobi {} vs plain {}",
+            pre.outcome.iters,
+            plain.outcome.iters
+        );
     }
 
     #[test]

@@ -4,11 +4,13 @@
 //! windowed intake ([`intake`]: admission control, deadlines,
 //! priorities, cancellation), a typed failure taxonomy ([`error`]), a
 //! sharded content-addressed operator registry ([`registry`]) with disk
-//! spill of evicted encodes (the `spill` codec), the [`SolverPool`] batch
-//! wrapper with same-matrix multi-RHS merging, a metrics registry with
-//! serializable snapshots ([`metrics`]), and the CLI plumbing that runs
-//! the experiment suite and the `serve` trace replay / soak harness. No
-//! request-path python anywhere.
+//! spill of evicted encodes (the `spill` codec) — holding fixed-format
+//! operators, shared GSE encodes, **and** SAINV preconditioner factors
+//! (built fallibly, exactly once per digest × params) — the
+//! [`SolverPool`] batch wrapper with same-matrix multi-RHS merging, a
+//! metrics registry with serializable snapshots ([`metrics`]), and the
+//! CLI plumbing that runs the experiment suite and the `serve` trace
+//! replay / soak harness. No request-path python anywhere.
 
 pub mod registry;
 pub mod intake;
@@ -18,6 +20,7 @@ pub mod metrics;
 pub mod cli;
 pub(crate) mod spill;
 
+pub use crate::solvers::{Precond, SainvParams};
 pub use error::ServiceError;
 pub use intake::{ServiceConfig, SolveSpec, SolveTicket, SolverService};
 pub use jobs::{FormatChoice, RhsSpec, SolveRequest, SolveResult, SolverKind, SolverPool};

@@ -40,6 +40,7 @@
 
 use crate::coordinator::metrics::Metrics;
 use crate::formats::ValueFormat;
+use crate::solvers::sainv::{SainvFactors, SainvParams, SainvParamsKey};
 use crate::sparse::csr::{Csr, MatrixDigest};
 use crate::spmv::fp64::Fp64Csr;
 use crate::spmv::gse::GseSpmv;
@@ -109,6 +110,8 @@ pub(crate) fn build_fixed_operator(a: &Csr, format: ValueFormat, k: usize) -> Ar
 pub(crate) enum Key {
     Op { digest: MatrixDigest, format: ValueFormat },
     Gse { digest: MatrixDigest, k: usize },
+    /// SAINV factors: one entry per (matrix content, sainv params).
+    Sainv { digest: MatrixDigest, params: SainvParamsKey },
 }
 
 /// What a cache entry holds (`pub(crate)` for the [`super::spill`]
@@ -117,6 +120,7 @@ pub(crate) enum Key {
 pub(crate) enum CachedVal {
     Op(Arc<dyn SpmvOp>),
     Gse(Arc<GseCsr>),
+    Sainv(Arc<SainvFactors>),
 }
 
 impl CachedVal {
@@ -124,20 +128,28 @@ impl CachedVal {
         match self {
             CachedVal::Op(op) => op.encoded_bytes(),
             CachedVal::Gse(m) => m.encoded_bytes(),
+            CachedVal::Sainv(f) => f.encoded_bytes(),
         }
     }
 
     fn into_op(self) -> Arc<dyn SpmvOp> {
         match self {
             CachedVal::Op(op) => op,
-            CachedVal::Gse(_) => unreachable!("op keys hold operators"),
+            _ => unreachable!("op keys hold operators"),
         }
     }
 
     fn into_gse(self) -> Arc<GseCsr> {
         match self {
             CachedVal::Gse(m) => m,
-            CachedVal::Op(_) => unreachable!("gse keys hold encodes"),
+            _ => unreachable!("gse keys hold encodes"),
+        }
+    }
+
+    fn into_sainv(self) -> Arc<SainvFactors> {
+        match self {
+            CachedVal::Sainv(f) => f,
+            _ => unreachable!("sainv keys hold factors"),
         }
     }
 }
@@ -376,6 +388,36 @@ impl MatrixRegistry {
         .into_op()
     }
 
+    /// The SAINV factors for `(handle, params)`, building them on a
+    /// miss. The build is **fallible** (SAINV pivots can collapse on
+    /// singular or wildly indefinite matrices): an `Err` propagates to
+    /// every caller that raced on this key, the slot is withdrawn, and
+    /// the shard stays fully usable — a later request retries the
+    /// build from scratch. Successful factors are charged against the
+    /// byte budget, LRU-evicted, and spill/restore like every other
+    /// entry. Build outcomes surface as `precond.builds` /
+    /// `precond.build_ns` / `precond.bytes`.
+    pub fn sainv(
+        &self,
+        h: &MatrixHandle,
+        params: SainvParams,
+        metrics: Option<&Metrics>,
+    ) -> crate::util::error::Result<Arc<SainvFactors>> {
+        let a = Arc::clone(h.matrix());
+        let key = Key::Sainv { digest: h.digest(), params: params.into() };
+        self.try_get_or_build(key, metrics, move || {
+            let t = Timer::start();
+            let f = SainvFactors::build(&a, params)?;
+            if let Some(m) = metrics {
+                m.incr("precond.builds");
+                m.add("precond.build_ns", (t.elapsed_s() * 1e9) as u64);
+                m.add("precond.bytes", f.encoded_bytes() as u64);
+            }
+            Ok(CachedVal::Sainv(Arc::new(f)))
+        })
+        .map(CachedVal::into_sainv)
+    }
+
     /// Aggregate hit/miss/eviction/byte counters.
     pub fn stats(&self) -> RegistryStats {
         let c = *self.counters.lock().unwrap();
@@ -510,6 +552,78 @@ impl MatrixRegistry {
                     self.credit_miss(build_s, metrics);
                     self.enforce_budget(metrics);
                     return v;
+                }
+            }
+        }
+    }
+
+    /// Fallible sibling of [`MatrixRegistry::get_or_build`] for entries
+    /// whose construction can legitimately fail (SAINV pivot
+    /// breakdown). The hit / latch-wait / restore machinery is
+    /// identical; the difference is the error path: the builder leaves
+    /// its [`BuildGuard`] armed, so the guard's `Drop` withdraws the
+    /// `Building` slot and fails the latch — waiters wake, see the
+    /// withdrawal, loop, and retry the build themselves (each getting
+    /// its own typed error if the matrix really is broken). Nothing is
+    /// published, the shard is never poisoned, and a later request for
+    /// the same key starts clean.
+    fn try_get_or_build(
+        &self,
+        key: Key,
+        metrics: Option<&Metrics>,
+        build: impl FnOnce() -> crate::util::error::Result<CachedVal>,
+    ) -> crate::util::error::Result<CachedVal> {
+        let si = self.shard_of(&key);
+        let mut build = Some(build);
+        loop {
+            let plan = {
+                let mut map = self.shards[si].lock().unwrap();
+                match map.get_mut(&key) {
+                    Some(Slot::Ready(e)) => {
+                        e.last_used = self.clock.fetch_add(1, Ordering::Relaxed);
+                        Plan::Hit(e.v.clone(), e.build_s)
+                    }
+                    Some(Slot::Building(latch)) => Plan::Wait(Arc::clone(latch)),
+                    None => {
+                        map.insert(key, Slot::Building(Arc::new(Latch::new())));
+                        Plan::Build
+                    }
+                }
+            };
+            match plan {
+                Plan::Hit(v, saved_s) => {
+                    self.credit_hit(saved_s, metrics);
+                    return Ok(v);
+                }
+                Plan::Wait(latch) => match latch.wait() {
+                    Some((v, build_s)) => {
+                        self.credit_hit(build_s, metrics);
+                        return Ok(v);
+                    }
+                    // the builder withdrew (failed or panicked); retry
+                    // so this caller gets its own build outcome
+                    None => continue,
+                },
+                Plan::Build => {
+                    let mut guard = BuildGuard { reg: self, shard: si, key, armed: true };
+                    if let Some(r) = self.try_restore(&key) {
+                        self.publish(si, &key, r.v.clone(), r.build_s);
+                        guard.armed = false;
+                        self.credit_restore(r.file_bytes, r.read_ns, metrics);
+                        self.enforce_budget(metrics);
+                        return Ok(r.v);
+                    }
+                    let t = Timer::start();
+                    let run = build.take().expect("a try_get_or_build call builds at most once");
+                    // on Err the guard stays armed: its Drop withdraws
+                    // the slot and fails the latch, releasing waiters
+                    let v = run()?;
+                    let build_s = t.elapsed_s();
+                    self.publish(si, &key, v.clone(), build_s);
+                    guard.armed = false;
+                    self.credit_miss(build_s, metrics);
+                    self.enforce_budget(metrics);
+                    return Ok(v);
                 }
             }
         }
@@ -899,6 +1013,82 @@ mod tests {
         let hc = reg.register(&c);
         assert_eq!(hc.digest(), c.digest());
         assert!(reg.digests.lock().unwrap().len() <= 2);
+    }
+
+    #[test]
+    fn sainv_factors_build_exactly_once_under_concurrent_submits() {
+        let reg = MatrixRegistry::new();
+        let m = Metrics::new();
+        let a = Arc::new(poisson2d(8, 8));
+        let h = reg.register(&a);
+        let params = SainvParams { drop_tol: 0.1, k: 8 };
+        let factors: Mutex<Vec<Arc<SainvFactors>>> = Mutex::new(Vec::new());
+        parallel::broadcast(8, |_| {
+            let f = reg.sainv(&h, params, Some(&m)).expect("spd matrix factors cleanly");
+            factors.lock().unwrap().push(f);
+        });
+        let factors = factors.into_inner().unwrap();
+        assert_eq!(factors.len(), 8);
+        assert!(factors.windows(2).all(|w| Arc::ptr_eq(&w[0], &w[1])));
+        assert_eq!(m.counter("precond.builds"), 1, "latch must dedupe sainv builds");
+        let st = reg.stats();
+        assert_eq!((st.hits, st.misses), (7, 1));
+        assert!(st.bytes >= factors[0].encoded_bytes(), "factors count in cache.bytes");
+        // distinct params are a distinct entry
+        let other = SainvParams { drop_tol: 0.05, k: 8 };
+        let f2 = reg.sainv(&h, other, Some(&m)).unwrap();
+        assert!(!Arc::ptr_eq(&factors[0], &f2));
+        assert_eq!(m.counter("precond.builds"), 2);
+    }
+
+    #[test]
+    fn failed_sainv_build_does_not_poison_the_shard() {
+        let reg = MatrixRegistry::new();
+        let m = Metrics::new();
+        // zero a diagonal entry: the sainv pivot collapses and the
+        // build must fail with a typed error, twice in a row, without
+        // hanging a latch or leaving a dead slot behind
+        let mut bad = Csr::identity(4);
+        bad.vals[2] = 0.0;
+        let bad = Arc::new(bad);
+        let hb = reg.register(&bad);
+        let params = SainvParams::default();
+        assert!(reg.sainv(&hb, params, Some(&m)).is_err());
+        assert!(reg.sainv(&hb, params, Some(&m)).is_err(), "retry fails cleanly, no hang");
+        assert_eq!(m.counter("precond.builds"), 0, "failed builds are not counted");
+        assert_eq!(reg.len(), 0, "nothing published for a failed build");
+        // the same registry still serves good matrices
+        let good = Arc::new(poisson2d(6, 6));
+        let hg = reg.register(&good);
+        let f = reg.sainv(&hg, params, Some(&m)).expect("good matrix after failures");
+        assert_eq!(f.nrows(), 36);
+        assert_eq!(m.counter("precond.builds"), 1);
+    }
+
+    #[test]
+    fn sainv_entries_are_lru_evictable() {
+        let a = Arc::new(poisson2d(10, 10));
+        let params = SainvParams { drop_tol: 0.1, k: 8 };
+        let probe = MatrixRegistry::new();
+        let hp = probe.register(&a);
+        let one = probe.sainv(&hp, params, None).unwrap().encoded_bytes();
+        // room for the factors but not for them plus two fp64 operators
+        let reg = MatrixRegistry::with_budget(one + 1);
+        let m = Metrics::new();
+        let h = reg.register(&a);
+        let f = reg.sainv(&h, params, Some(&m)).unwrap();
+        assert!(reg.bytes() >= one);
+        // a newer entry pushes the factors out (they are now LRU)
+        let b = Arc::new(poisson2d(11, 11));
+        let hb = reg.register(&b);
+        let _ = reg.operator(&hb, ValueFormat::Fp64, 0, Some(&m));
+        assert!(reg.stats().evictions >= 1, "sainv entry must be evictable");
+        // the handed-out Arc stays valid; re-requesting rebuilds
+        assert_eq!(f.nrows(), 100);
+        let before = m.counter("precond.builds");
+        let f2 = reg.sainv(&h, params, Some(&m)).unwrap();
+        assert_eq!(m.counter("precond.builds"), before + 1);
+        assert_eq!(f2.nrows(), 100);
     }
 
     #[test]

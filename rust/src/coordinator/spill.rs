@@ -23,6 +23,7 @@
 
 use super::registry::{CachedVal, Key};
 use crate::formats::{GseTable, Precision, ValueFormat};
+use crate::solvers::sainv::{SainvFactors, SainvParamsKey};
 use crate::sparse::csr::Csr;
 use crate::spmv::fp64::Fp64Csr;
 use crate::spmv::lowp::{LowpCsr, StoredValue};
@@ -54,6 +55,9 @@ fn file_path(dir: &Path, key: &Key) -> PathBuf {
             format!("{}-{}.spill", digest.to_hex(), tag)
         }
         Key::Gse { digest, k } => format!("{}-gse{}.spill", digest.to_hex(), k),
+        Key::Sainv { digest, params } => {
+            format!("{}-sainv{}d{:016x}.spill", digest.to_hex(), params.k, params.drop_bits)
+        }
     };
     dir.join(name)
 }
@@ -74,6 +78,7 @@ fn try_write(dir: &Path, path: &Path, v: &CachedVal, build_s: f64) -> Result<()>
     let payload = match v {
         CachedVal::Op(op) => op.spill_bytes().context("operator opts out of spill")?,
         CachedVal::Gse(g) => encode_gse(g),
+        CachedVal::Sainv(f) => encode_sainv(f),
     };
     let mut w = crate::util::codec::ByteWriter::new();
     w.put_u64(MAGIC);
@@ -141,6 +146,7 @@ fn try_decode(key: &Key, bytes: &[u8]) -> Result<(CachedVal, f64)> {
     let v = match key {
         Key::Gse { .. } => CachedVal::Gse(Arc::new(decode_gse(&payload)?)),
         Key::Op { format, .. } => CachedVal::Op(decode_op(*format, &payload)?),
+        Key::Sainv { params, .. } => CachedVal::Sainv(Arc::new(decode_sainv(&payload, *params)?)),
     };
     Ok((v, build_s))
 }
@@ -194,6 +200,41 @@ fn decode_gse(payload: &[u8]) -> Result<GseCsr> {
     }
     let table = GseTable::from_entries(entries);
     Ok(GseCsr::from_parts(nrows, ncols, rowptr, cols, heads, tail1, tail2, ext_idx, table, packed))
+}
+
+/// SAINV payload: the construction params (revalidated against the key
+/// on decode), the pivot reciprocals, and the two GSE factor encodes —
+/// each nested through [`encode_gse`] so a restored factor pair shares
+/// every bitwise guarantee of the plain GSE round trip.
+fn encode_sainv(f: &SainvFactors) -> Vec<u8> {
+    let mut w = crate::util::codec::ByteWriter::new();
+    w.put_u8(spill_tag::SAINV);
+    let key: SainvParamsKey = f.params().into();
+    w.put_u64(key.k as u64);
+    w.put_u64(key.drop_bits);
+    w.put_f64s(f.inv_d());
+    w.put_bytes(&encode_gse(f.z()));
+    w.put_bytes(&encode_gse(f.wt()));
+    w.into_bytes()
+}
+
+fn decode_sainv(payload: &[u8], key_params: SainvParamsKey) -> Result<SainvFactors> {
+    let mut r = crate::util::codec::ByteReader::new(payload);
+    if r.get_u8()? != spill_tag::SAINV {
+        bail!("spill payload is not a SAINV factor pair");
+    }
+    let k = r.get_u64()? as usize;
+    let drop_bits = r.get_u64()?;
+    if k != key_params.k || drop_bits != key_params.drop_bits {
+        bail!("sainv spill params do not match the key");
+    }
+    let inv_d = r.get_f64s()?;
+    let z = decode_gse(&r.get_bytes()?)?;
+    let wt = decode_gse(&r.get_bytes()?)?;
+    if z.nrows != inv_d.len() || wt.nrows != inv_d.len() {
+        bail!("inconsistent sainv spill structure");
+    }
+    Ok(SainvFactors::from_parts(z, wt, inv_d, key_params.params()))
 }
 
 fn decode_op(format: ValueFormat, payload: &[u8]) -> Result<Arc<dyn SpmvOp>> {
@@ -318,6 +359,42 @@ mod tests {
             restored.apply(&x, &mut y1);
             assert_eq!(max_abs_diff(&y0, &y1), 0.0, "{format:?}");
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sainv_round_trip_is_bitwise() {
+        use crate::solvers::sainv::SainvParams;
+        let a = Arc::new(poisson2d(9, 9));
+        let params = SainvParams { drop_tol: 0.05, k: 8 };
+        let f = SainvFactors::build(&a, params).expect("spd build");
+        let dir = tmp_dir("sainv");
+        let key = Key::Sainv { digest: a.digest(), params: params.into() };
+        assert!(write(&dir, &key, &CachedVal::Sainv(Arc::new(f.clone())), 0.25));
+        let r = read(&dir, &key).expect("restore");
+        assert_eq!(r.build_s, 0.25);
+        assert!(r.file_bytes > 0);
+        let CachedVal::Sainv(restored) = r.v else { panic!("sainv key restores factors") };
+        // plane-for-plane equality on both factors and the pivots
+        assert_eq!(restored.inv_d(), f.inv_d());
+        assert_eq!(restored.z().heads, f.z().heads);
+        assert_eq!(restored.z().tail2, f.z().tail2);
+        assert_eq!(restored.wt().heads, f.wt().heads);
+        assert_eq!(restored.wt().tail2, f.wt().tail2);
+        assert_eq!(restored.params(), f.params());
+        // and the applied preconditioner is bitwise identical per rung
+        let r0: Vec<f64> = (0..f.nrows()).map(|i| (i % 7) as f64 - 3.0).collect();
+        for level in [Precision::Head, Precision::HeadTail1, Precision::Full] {
+            let mut y0 = vec![0.0; f.nrows()];
+            f.apply(&r0, &mut y0, level);
+            let mut y1 = vec![0.0; f.nrows()];
+            restored.apply(&r0, &mut y1, level);
+            assert_eq!(y0, y1, "restored SAINV apply must be bitwise identical at {level:?}");
+        }
+        // a mismatched-params key refuses the file instead of mis-decoding
+        let wrong = SainvParams { drop_tol: 0.25, k: 8 };
+        let wrong_key = Key::Sainv { digest: a.digest(), params: wrong.into() };
+        assert!(read(&dir, &wrong_key).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -15,8 +15,8 @@
 
 use gsem::coordinator::cli::Cli;
 use gsem::coordinator::{
-    FormatChoice, RhsSpec, ServiceConfig, ServiceError, SolveRequest, SolveResult, SolveSpec,
-    SolverKind, SolverPool, SolverService,
+    FormatChoice, Precond, RhsSpec, SainvParams, ServiceConfig, ServiceError, SolveRequest,
+    SolveResult, SolveSpec, SolverKind, SolverPool, SolverService,
 };
 use gsem::formats::{Precision, ValueFormat};
 use gsem::solvers::stepped::SteppedParams;
@@ -61,15 +61,19 @@ fn print_usage() {
            spmv     --matrix <name|path.mtx> [--k 8] [--threads N]\n\
                     compare SpMV formats (Fig. 6)\n\
            solve    --matrix <name|path.mtx> --solver cg|gmres|bicgstab\n\
-                    --format fp64|fp32|fp16|bf16|gse-head|gse-t1|gse-full|stepped|stepped-copy\n\
+                    --format fp64|fp32|fp16|bf16|gse-head|gse-t1|gse-full|stepped|stepped-copy|ir\n\
+                    [--precond none|jacobi|sainv] [--drop-tol 0.1]\n\
                     [--k 8] [--nrhs N] [--workers N]  (N > 1 pools N random RHS over\n\
                     --workers threads, 0 = auto; every solver/format combination —\n\
                     CG/GMRES/BiCGSTAB, fixed or stepped — merges them into one\n\
-                    multi-RHS block solve)\n\
+                    multi-RHS block solve; `ir` runs preconditioned GMRES-IR over\n\
+                    the GSE ladder — sainv requires it, and its factors are\n\
+                    registry-cached per digest x params)\n\
            serve    [--requests 24] [--window-ms 5] [--batch-width 8] [--stagger-us 300]\n\
                     [--workers 0] [--op-threads 0] [--cache-mb 0] [--queue-depth 0]\n\
                     [--deadline-ms 0] [--spill-dir <dir>] [--metrics-json <path>]\n\
                     [--matrix <...>] [--solver cg] [--format fp64]\n\
+                    [--precond none|jacobi|sainv] [--drop-tol 0.1]\n\
                     replay a staggered request trace through the windowed SolverService\n\
                     and report intake/cache metrics (0 = auto workers / unbounded\n\
                     cache / unbounded queue / no deadline); sheds past --queue-depth\n\
@@ -80,7 +84,9 @@ fn print_usage() {
                     [--metrics-json <path>] [--workers 0] [--stagger-us 200]\n\
                     serving-hardening soak: overload/load-shed with an\n\
                     admitted-vs-one-shot parity audit, a deadline+cancellation\n\
-                    mix, and spill/restore churn under a tiny cache budget\n\
+                    mix, spill/restore churn under a tiny cache budget, and\n\
+                    repeated SAINV GMRES-IR traffic (factors built once per\n\
+                    digest, per-ticket parity)\n\
            suite    [--solver cg|gmres|both] [--size small|medium|full] [--workers N] (0 = auto)\n\
            kernels                                      PJRT artifact check\n\
            gen      --matrix <name> --out <path.mtx> | --list\n\n\
@@ -210,9 +216,10 @@ fn parse_solver(s: &str) -> Option<SolverKind> {
     }
 }
 
-/// Full format axis shared by `solve` and `serve`: fixed formats plus
-/// the two stepped ladders (whose controller thresholds depend on the
-/// solver family).
+/// Full format axis shared by `solve` and `serve`: fixed formats, the
+/// two stepped ladders (whose controller thresholds depend on the
+/// solver family), and GMRES-based iterative refinement (`ir`, which
+/// drives its own inner GMRES and accepts every `--precond`).
 fn parse_format_choice(s: &str, solver: SolverKind, k: usize, scale: f64) -> Option<FormatChoice> {
     let stepped_base = match solver {
         SolverKind::Cg | SolverKind::Bicgstab => SteppedParams::cg_paper(),
@@ -221,7 +228,26 @@ fn parse_format_choice(s: &str, solver: SolverKind, k: usize, scale: f64) -> Opt
     match s {
         "stepped" => Some(FormatChoice::Stepped { k, params: stepped_base.scaled(scale) }),
         "stepped-copy" => Some(FormatChoice::SteppedCopy { params: stepped_base.scaled(scale) }),
+        "ir" => Some(FormatChoice::Ir { k }),
         other => parse_format(other, k),
+    }
+}
+
+/// The `--precond` axis shared by `solve` and `serve`: `none`
+/// (default), `jacobi`, or `sainv` (drop tolerance from `--drop-tol`,
+/// exponent-group width shared with `--k`). SAINV requires
+/// `--format ir`; the dispatch layer enforces that with a typed error.
+fn parse_precond(cli: &Cli, k: usize) -> Result<Precond, String> {
+    match cli.get_or("precond", "none") {
+        "none" => Ok(Precond::None),
+        "jacobi" => Ok(Precond::Jacobi),
+        "sainv" => {
+            let Ok(drop_tol) = cli.get_f64("drop-tol", 0.1) else {
+                return Err("--drop-tol failed to parse".into());
+            };
+            Ok(Precond::Sainv(SainvParams { drop_tol, k }))
+        }
+        other => Err(format!("unknown preconditioner {other} (none|jacobi|sainv)")),
     }
 }
 
@@ -241,6 +267,13 @@ fn cmd_solve(cli: &Cli) -> i32 {
         eprintln!("unknown format {fmt_str}");
         return 2;
     };
+    let precond = match parse_precond(cli, k) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let a = match load_matrix(spec) {
         Ok(a) => a,
         Err(e) => {
@@ -250,6 +283,7 @@ fn cmd_solve(cli: &Cli) -> i32 {
     };
     let nrhs = cli.get_usize("nrhs", 1).unwrap_or(1).max(1);
     let mut req = SolveRequest::new(spec, Arc::new(a), solver, format);
+    req.precond = precond;
     req.tol = cli.get_f64("tol", 1e-6).unwrap_or(1e-6);
     if nrhs > 1 {
         // --workers 0 = auto, matching serve/suite
@@ -407,6 +441,13 @@ fn cmd_serve(cli: &Cli) -> i32 {
         eprintln!("unknown format {fmt_str}");
         return 2;
     };
+    let precond = match parse_precond(cli, k) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let mats: Vec<(String, Arc<Csr>)> = match cli.get("matrix") {
         Some(spec) => match load_matrix(spec) {
             Ok(a) => vec![(spec.to_string(), Arc::new(a))],
@@ -455,6 +496,7 @@ fn cmd_serve(cli: &Cli) -> i32 {
         let name = format!("{mname}#{i}");
         let mut spec = SolveSpec::new(&name, handle.clone(), solver, format.clone())
             .rhs(RhsSpec::Random(1000 + i as u64))
+            .precond(precond.clone())
             .tol(tol);
         if deadline_ms > 0 {
             spec = spec.deadline_in(std::time::Duration::from_millis(deadline_ms));
@@ -556,10 +598,15 @@ fn one_shot(
 ///   same digests re-touched: the second pass must be answered by spill
 ///   restores (restore counter > 0) with zero re-encodes, bitwise equal
 ///   to the first pass.
+/// * **D — preconditioner residency.** Repeated SAINV GMRES-IR traffic
+///   over two digests: the registry must build each digest's factors
+///   exactly once (`precond.builds` == digest count) while every
+///   ticket converges and matches its one-shot dispatch bitwise.
 ///
 /// Prints one summary line per phase, optionally writes a combined
-/// `--metrics-json` snapshot, and exits non-zero if any check fails.
-/// `GSEM_BENCH_FAST=1` shrinks the trace for CI smoke runs.
+/// `--metrics-json` snapshot (`overload` / `deadline_cancel` /
+/// `spill_restore` / `precond` keys), and exits non-zero if any check
+/// fails. `GSEM_BENCH_FAST=1` shrinks the trace for CI smoke runs.
 fn cmd_serve_soak(cli: &Cli) -> i32 {
     let fast = std::env::var("GSEM_BENCH_FAST").is_ok();
     let (queue_depth, cache_kb, stagger_us) = match (
@@ -781,13 +828,81 @@ fn cmd_serve_soak(cli: &Cli) -> i32 {
         if parity_c { "ok" } else { "MISMATCH" }
     );
     let snap_c = svc.metrics().snapshot();
+    drop(svc);
+
+    // -- phase D: SAINV factor residency under repeated GMRES-IR traffic
+    let svc = SolverService::manual(ServiceConfig::new().workers(workers));
+    let ir = FormatChoice::Ir { k: 8 };
+    let sainv = Precond::Sainv(SainvParams { drop_tol: 0.1, k: 8 });
+    let dmats = &mats[..2];
+    let dhandles: Vec<_> = dmats.iter().map(|(_, a)| svc.register(a)).collect();
+    let reps = if fast { 3 } else { 6 };
+    let mut tickets = Vec::new();
+    for (j, (mname, _)) in dmats.iter().enumerate() {
+        for i in 0..reps {
+            let name = format!("{mname}/soak-d#{i}");
+            let spec = SolveSpec::new(&name, dhandles[j].clone(), SolverKind::Gmres, ir.clone())
+                .rhs(RhsSpec::Random(9500 + (j * reps + i) as u64))
+                .precond(sainv.clone());
+            match svc.submit(spec) {
+                Ok(t) => tickets.push((j, i, t)),
+                Err(e) => failures.push(format!("phase D: submit {name}: {e}")),
+            }
+        }
+    }
+    let n_d = tickets.len();
+    svc.flush();
+    let mut parity_d = true;
+    let mut d_ok = 0usize;
+    for (j, i, t) in tickets {
+        match t.wait() {
+            Ok(r) => {
+                if !r.outcome.converged || r.format_label != "GSE-IR(sainv)" {
+                    failures.push(format!(
+                        "phase D: {} did not converge as GSE-IR(sainv) (label {}, relres {:.3E})",
+                        r.name, r.format_label, r.relres_fp64
+                    ));
+                    continue;
+                }
+                d_ok += 1;
+                // per-ticket parity against one-shot IR dispatch (its
+                // own factor build through the global registry)
+                let a = &dmats[j].1;
+                let mut req =
+                    SolveRequest::new(&r.name, Arc::clone(a), SolverKind::Gmres, ir.clone());
+                req.rhs = RhsSpec::Random(9500 + (j * reps + i) as u64);
+                req.precond = sainv.clone();
+                match gsem::coordinator::jobs::dispatch(&req) {
+                    Ok(s) if bits_eq(&r.outcome.x, &s.outcome.x) => {}
+                    _ => parity_d = false,
+                }
+            }
+            Err(e) => failures.push(format!("phase D: ticket failed: {e}")),
+        }
+    }
+    let builds = svc.metrics().counter("precond.builds");
+    if builds != dmats.len() as u64 {
+        failures.push(format!(
+            "phase D: expected {} sainv builds (one per digest), got {builds}",
+            dmats.len()
+        ));
+    }
+    if !parity_d {
+        failures.push("phase D: serviced IR results diverge from one-shot dispatch".into());
+    }
+    println!(
+        "soak D (precond): requests={n_d} ok={d_ok} sainv_builds={builds} parity={}",
+        if parity_d { "ok" } else { "MISMATCH" }
+    );
+    let snap_d = svc.metrics().snapshot();
 
     if let Some(path) = cli.get("metrics-json") {
         let json = format!(
-            "{{\"overload\":{},\"deadline_cancel\":{},\"spill_restore\":{}}}\n",
+            "{{\"overload\":{},\"deadline_cancel\":{},\"spill_restore\":{},\"precond\":{}}}\n",
             snap_a.to_json(),
             snap_b.to_json(),
-            snap_c.to_json()
+            snap_c.to_json(),
+            snap_d.to_json()
         );
         if let Err(e) = std::fs::write(path, json) {
             eprintln!("serve --soak: cannot write {path}: {e}");

@@ -154,9 +154,26 @@ impl BlockCtl {
         Self { cancels, deadlines, any }
     }
 
+    /// Any column carrying a cancel flag or deadline at all? (A
+    /// control-free ctl lets drivers skip polling entirely.)
+    pub(crate) fn has_controls(&self) -> bool {
+        self.any
+    }
+
+    /// A ctl over a sub-block: column `s` of the subset maps to column
+    /// `idxs[s]` here, sharing the same cancel flags and deadlines.
+    /// The GMRES-IR outer loop uses this to forward per-ticket controls
+    /// into each rung group's inner solve.
+    pub(crate) fn subset(&self, idxs: &[usize]) -> BlockCtl {
+        BlockCtl::new(
+            idxs.iter().map(|&i| self.cancels[i].clone()).collect(),
+            idxs.iter().map(|&i| self.deadlines[i]).collect(),
+        )
+    }
+
     /// Should column `j` deflate now? Cancel wins over deadline when
     /// both have triggered.
-    fn poll(&self, j: usize) -> Option<ColumnExit> {
+    pub(crate) fn poll(&self, j: usize) -> Option<ColumnExit> {
         if let Some(c) = &self.cancels[j] {
             if c.load(Ordering::Relaxed) {
                 return Some(ColumnExit::Cancelled);

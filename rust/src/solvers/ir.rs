@@ -1,18 +1,52 @@
-//! Mixed-precision iterative refinement (Carson & Higham [11] style) —
-//! the related-work baseline the paper positions itself against. The
-//! inner solver runs entirely on the *low-precision* GSE-SEM head
-//! operator; the outer loop computes residuals with the full-precision
-//! operator and accumulates the correction in FP64.
+//! Mixed-precision iterative refinement.
+//!
+//! Two drivers live here:
+//!
+//! * [`ir_solve`] — the Carson & Higham-style CG baseline the paper
+//!   positions itself against: inner CG on a low GSE-SEM rung, outer
+//!   FP64 residual correction on the full-precision operator, with the
+//!   inner rung escalated when the outer contraction stalls (escalations
+//!   land in [`SolveOutcome::switches`]).
+//! * [`ir_gmres_solve`] / [`ir_solve_multi`] — GMRES-based iterative
+//!   refinement in the style of Loe et al. (arXiv:2109.01232): the
+//!   inner solver is restarted GMRES on the **left-preconditioned
+//!   ladder operator** `M⁻¹A` ([`PrecondLadderOp`]), with the
+//!   preconditioner (`None`/`Jacobi`/SAINV, see
+//!   [`crate::solvers::sainv`]) applied at a rung chosen per outer
+//!   iteration from the residual trajectory — the adaptive-precision
+//!   preconditioning of Carson & Khan (arXiv:2307.03914). The
+//!   multi-RHS variant batches same-rung columns into fused
+//!   `apply_multi` rounds over [`crate::solvers::block`], each column
+//!   bitwise identical to single dispatch, and honours the intake's
+//!   per-ticket cancel/deadline controls mid-solve.
+//!
+//! Rung-selection policy: every column starts on rung 1 (head). After
+//! each outer correction the contraction ratio `relₖ/relₖ₋₁` is
+//! compared against `escalate_ratio`; a slower-than-expected outer step
+//! means the inner rung's precision is the bottleneck, so the column's
+//! next inner solve (matrix **and** preconditioner) runs one rung
+//! finer. Escalations are logged as `(total_inner_iters, new_tag)` in
+//! [`SolveOutcome::switches`], exactly like the stepped controller's.
 
 use super::blas1::nrm2;
+use super::block::{BlockCtl, ColumnExit};
 use super::cg::{cg_solve, CgOpts};
+use super::gmres::{gmres_solve_multi_ctl, GmresOpts};
+use super::ladder::PrecisionSwitchable;
+use super::sainv::{PrecondLadderOp, PrecondOp};
 use super::SolveOutcome;
 use crate::formats::Precision;
-use crate::spmv::gse::GseCsr;
+use crate::spmv::gse::{GseCsr, GseSpmv};
 use crate::spmv::SpmvOp;
 use crate::util::Timer;
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
-/// Iterative-refinement options.
+/// Contraction ratio above which [`ir_solve`] escalates its inner CG
+/// rung (the GMRES driver takes the ratio from [`IrGmresOpts`]).
+const ESCALATE_RATIO: f64 = 0.5;
+
+/// Iterative-refinement options (CG baseline, [`ir_solve`]).
 #[derive(Clone, Debug)]
 pub struct IrOpts {
     /// outer tolerance on ‖b − Ax‖/‖b‖ (full-precision residual)
@@ -29,23 +63,32 @@ impl Default for IrOpts {
     }
 }
 
-/// Solve SPD `A x = b`: inner CG on the head-precision operator, outer
-/// FP64 residual correction on the full-precision operator.
+/// Solve SPD `A x = b`: inner CG on a low-precision GSE rung, outer
+/// FP64 residual correction on the full-precision operator. The inner
+/// rung starts at head and escalates (head → head+tail1 → full) when
+/// an outer step contracts by less than [`ESCALATE_RATIO`]; switch
+/// events are reported in [`SolveOutcome::switches`].
 pub fn ir_solve(m: &GseCsr, b: &[f64], opts: &IrOpts) -> SolveOutcome {
     let n = m.nrows;
     let timer = Timer::start();
-    let low = m.clone().at_level(Precision::Head);
-    let full = m.clone().at_level(Precision::Full);
+    // one encode, shared by every rung view (no per-level clones)
+    let enc = Arc::new(m.clone());
+    let full = GseSpmv::new(Arc::clone(&enc), Precision::Full);
     let bnorm = nrm2(b);
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
+    let mut ax = vec![0.0; n];
     let mut history = Vec::new();
+    let mut switches = Vec::new();
     let mut total_inner = 0usize;
     let mut converged = false;
     let mut broke_down = false;
+    let mut tag = 1u8;
+    let mut prev_rel = f64::INFINITY;
 
     for _outer in 0..opts.max_outer {
-        // inner solve A_low d = r
+        // inner solve A_tag d = r
+        let low = GseSpmv::new(Arc::clone(&enc), Precision::from_tag(tag));
         let inner = cg_solve(
             &low,
             &r,
@@ -61,7 +104,6 @@ pub fn ir_solve(m: &GseCsr, b: &[f64], opts: &IrOpts) -> SolveOutcome {
             x[i] += inner.x[i];
         }
         // full-precision residual r = b - A x
-        let mut ax = vec![0.0; n];
         full.apply(&x, &mut ax);
         for i in 0..n {
             r[i] = b[i] - ax[i];
@@ -76,6 +118,12 @@ pub fn ir_solve(m: &GseCsr, b: &[f64], opts: &IrOpts) -> SolveOutcome {
             converged = true;
             break;
         }
+        // stalled outer contraction: the inner rung is the bottleneck
+        if rel / prev_rel > ESCALATE_RATIO && tag < Precision::LADDER.len() as u8 {
+            tag += 1;
+            switches.push((total_inner, tag));
+        }
+        prev_rel = rel;
     }
 
     let relres = super::true_relres(&full, &x, b);
@@ -84,18 +132,272 @@ pub fn ir_solve(m: &GseCsr, b: &[f64], opts: &IrOpts) -> SolveOutcome {
         iters: total_inner,
         relres,
         history,
-        switches: vec![],
+        switches,
         seconds: timer.elapsed_s(),
         x,
         broke_down,
     }
 }
 
+/// Options of the GMRES-based iterative-refinement driver.
+#[derive(Clone, Debug)]
+pub struct IrGmresOpts {
+    /// outer tolerance on ‖b − Ax‖/‖b‖ (full-precision residual)
+    pub tol: f64,
+    /// outer correction cap
+    pub max_outer: usize,
+    /// inner GMRES run per outer step (loose tolerance, few cycles)
+    pub inner: GmresOpts,
+    /// escalate the column's rung when `relₖ/relₖ₋₁` exceeds this
+    pub escalate_ratio: f64,
+}
+
+impl Default for IrGmresOpts {
+    fn default() -> Self {
+        Self {
+            tol: 1e-6,
+            max_outer: 40,
+            inner: GmresOpts { tol: 1e-2, restart: 30, max_outer: 4 },
+            escalate_ratio: 0.5,
+        }
+    }
+}
+
+impl IrGmresOpts {
+    /// Derive outer/inner budgets from a request's `(tol, max_iters)`
+    /// caps: each outer step spends at most `restart × inner.max_outer`
+    /// = 120 inner iterations, so the outer cap is the iteration cap in
+    /// units of 120 (clamped to something useful).
+    pub fn for_caps(tol: f64, max_iters: usize) -> Self {
+        Self { tol, max_outer: max_iters.div_ceil(120).clamp(4, 200), ..Self::default() }
+    }
+}
+
+/// Solve `A x = b` by preconditioned GMRES-IR on one GSE encode: inner
+/// restarted GMRES on `M⁻¹A` at the column's current rung, outer FP64
+/// residual correction at full precision. Single-RHS wrapper over
+/// [`ir_solve_multi`] — bitwise identical to a width-1 block.
+pub fn ir_gmres_solve(
+    a: &Arc<GseCsr>,
+    m: &PrecondOp,
+    b: &[f64],
+    opts: &IrGmresOpts,
+) -> SolveOutcome {
+    ir_solve_multi(a, m, b, 1, opts).pop().expect("one column in, one outcome out")
+}
+
+/// Multi-RHS GMRES-IR over `nrhs` column-major packed right-hand
+/// sides: per outer round, active columns group by rung (coarsest
+/// first) and each group runs one fused inner GMRES block on the
+/// shared [`PrecondLadderOp`], followed by one fused full-precision
+/// residual pass — every column bitwise identical to
+/// [`ir_gmres_solve`] on its RHS alone.
+pub fn ir_solve_multi(
+    a: &Arc<GseCsr>,
+    m: &PrecondOp,
+    bs: &[f64],
+    nrhs: usize,
+    opts: &IrGmresOpts,
+) -> Vec<SolveOutcome> {
+    ir_solve_multi_ctl(a, m, bs, nrhs, opts, &BlockCtl::none(nrhs)).0
+}
+
+/// Per-column outer-loop state of the block GMRES-IR driver.
+struct IrColumn {
+    x: Vec<f64>,
+    r: Vec<f64>,
+    bnorm: f64,
+    history: Vec<f64>,
+    switches: Vec<(usize, u8)>,
+    iters: usize,
+    outer: usize,
+    tag: u8,
+    prev_rel: f64,
+    active: bool,
+    converged: bool,
+    broke_down: bool,
+}
+
+/// [`ir_solve_multi`] plus the intake's per-ticket cancel/deadline
+/// controls: triggered columns deflate out of the block between (and,
+/// via a forwarded sub-ctl, during) inner solves, like every other
+/// `_ctl` block runner.
+pub(crate) fn ir_solve_multi_ctl(
+    a: &Arc<GseCsr>,
+    m: &PrecondOp,
+    bs: &[f64],
+    nrhs: usize,
+    opts: &IrGmresOpts,
+    ctl: &BlockCtl,
+) -> (Vec<SolveOutcome>, Vec<ColumnExit>) {
+    let n = a.nrows;
+    assert_eq!(a.ncols, n, "GMRES-IR requires a square operator");
+    assert_eq!(bs.len(), n * nrhs);
+    if nrhs == 0 {
+        return (Vec::new(), Vec::new());
+    }
+    let timer = Timer::start();
+    let op = PrecondLadderOp::new(Arc::clone(a), m.clone());
+    let full = GseSpmv::new(Arc::clone(a), Precision::Full);
+    let mut exits = vec![ColumnExit::Completed; nrhs];
+    let mut cols: Vec<IrColumn> = (0..nrhs)
+        .map(|j| {
+            let b = &bs[j * n..(j + 1) * n];
+            let bnorm = nrm2(b);
+            IrColumn {
+                x: vec![0.0; n],
+                r: b.to_vec(),
+                bnorm,
+                history: Vec::new(),
+                switches: Vec::new(),
+                iters: 0,
+                outer: 0,
+                tag: 1,
+                prev_rel: f64::INFINITY,
+                // a zero RHS is solved by x = 0 before any work
+                active: bnorm != 0.0,
+                converged: bnorm == 0.0,
+                broke_down: false,
+            }
+        })
+        .collect();
+
+    let mut xs: Vec<f64> = Vec::new();
+    let mut axs: Vec<f64> = Vec::new();
+    loop {
+        if ctl.has_controls() {
+            for (j, col) in cols.iter_mut().enumerate() {
+                if col.active {
+                    if let Some(exit) = ctl.poll(j) {
+                        col.active = false;
+                        exits[j] = exit;
+                    }
+                }
+            }
+        }
+        // group live columns by rung; BTreeMap iterates coarsest first
+        let mut by_tag: BTreeMap<u8, Vec<usize>> = BTreeMap::new();
+        for (j, col) in cols.iter().enumerate() {
+            if col.active {
+                by_tag.entry(col.tag).or_default().push(j);
+            }
+        }
+        if by_tag.is_empty() {
+            break;
+        }
+        for (tag, idxs) in by_tag {
+            op.set_tag(tag);
+            let level = Precision::from_tag(tag);
+            let width = idxs.len();
+            // fused M⁻¹r across the group: the inner right-hand sides
+            xs.clear();
+            xs.resize(n * width, 0.0);
+            for (slot, &j) in idxs.iter().enumerate() {
+                xs[slot * n..(slot + 1) * n].copy_from_slice(&cols[j].r);
+            }
+            let mut zs = vec![0.0f64; n * width];
+            m.apply_multi_level(&xs, &mut zs, width, level);
+            // inner block solve (M⁻¹A) d = M⁻¹r at this rung, with the
+            // group's slice of the ticket controls forwarded
+            let sub = ctl.subset(&idxs);
+            let (inner_outs, inner_exits) =
+                gmres_solve_multi_ctl(&op, &zs, width, &opts.inner, &sub);
+            for (slot, &j) in idxs.iter().enumerate() {
+                let col = &mut cols[j];
+                if inner_exits[slot] != ColumnExit::Completed {
+                    col.active = false;
+                    exits[j] = inner_exits[slot];
+                    continue;
+                }
+                let inner = &inner_outs[slot];
+                col.iters += inner.iters;
+                if inner.broke_down {
+                    col.broke_down = true;
+                    col.active = false;
+                    continue;
+                }
+                for (xi, di) in col.x.iter_mut().zip(&inner.x) {
+                    *xi += di;
+                }
+            }
+        }
+        // one fused full-precision residual pass over the survivors
+        let live: Vec<usize> = (0..nrhs).filter(|&j| cols[j].active).collect();
+        if live.is_empty() {
+            continue; // loop top will observe no active columns
+        }
+        let width = live.len();
+        xs.clear();
+        xs.resize(n * width, 0.0);
+        axs.clear();
+        axs.resize(n * width, 0.0);
+        for (slot, &j) in live.iter().enumerate() {
+            xs[slot * n..(slot + 1) * n].copy_from_slice(&cols[j].x);
+        }
+        full.apply_multi(&xs, &mut axs, width);
+        for (slot, &j) in live.iter().enumerate() {
+            let col = &mut cols[j];
+            let b = &bs[j * n..(j + 1) * n];
+            let ax = &axs[slot * n..(slot + 1) * n];
+            for i in 0..n {
+                col.r[i] = b[i] - ax[i];
+            }
+            let rel = nrm2(&col.r) / col.bnorm.max(f64::MIN_POSITIVE);
+            col.history.push(rel);
+            col.outer += 1;
+            if !rel.is_finite() {
+                col.broke_down = true;
+                col.active = false;
+                continue;
+            }
+            if rel <= opts.tol {
+                col.converged = true;
+                col.active = false;
+                continue;
+            }
+            if col.outer >= opts.max_outer {
+                col.active = false;
+                continue;
+            }
+            // residual-trajectory rung selection (arXiv:2307.03914)
+            if rel / col.prev_rel > opts.escalate_ratio && col.tag < Precision::LADDER.len() as u8 {
+                col.tag += 1;
+                col.switches.push((col.iters, col.tag));
+            }
+            col.prev_rel = rel;
+        }
+    }
+    let seconds = timer.elapsed_s();
+    let outcomes = cols
+        .into_iter()
+        .enumerate()
+        .map(|(j, col)| {
+            let b = &bs[j * n..(j + 1) * n];
+            let relres = super::true_relres(&full, &col.x, b);
+            SolveOutcome {
+                converged: col.converged,
+                iters: col.iters,
+                relres,
+                history: col.history,
+                switches: col.switches,
+                seconds,
+                x: col.x,
+                broke_down: col.broke_down,
+            }
+        })
+        .collect();
+    (outcomes, exits)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::solvers::sainv::{SainvFactors, SainvParams};
+    use crate::sparse::gen::circuit::conductance_network;
     use crate::sparse::gen::fem::diffusion2d;
     use crate::sparse::gen::poisson::poisson2d;
+    use crate::util::Prng;
+    use std::sync::atomic::AtomicBool;
 
     #[test]
     fn refines_to_full_tolerance_on_poisson() {
@@ -134,5 +436,146 @@ mod tests {
         );
         assert!(!out.converged);
         assert_eq!(out.history.len(), 2);
+    }
+
+    #[test]
+    fn cg_ir_reports_switches_when_stalling() {
+        // a weak inner solve stalls the outer contraction, forcing the
+        // rung up the ladder — the satellite fix: switches are no
+        // longer silently dropped
+        let a = poisson2d(16, 16);
+        let g = GseCsr::from_csr(&a, 8);
+        let b = vec![1.0; a.nrows];
+        let out = ir_solve(
+            &g,
+            &b,
+            &IrOpts { tol: 1e-14, max_outer: 8, inner_tol: 0.9, inner_iters: 1 },
+        );
+        assert!(!out.switches.is_empty(), "stalled IR must escalate");
+        for w in out.switches.windows(2) {
+            assert!(w[0].1 < w[1].1, "tags escalate monotonically");
+        }
+        assert!(out.switches.iter().all(|&(_, t)| (2..=3).contains(&t)));
+    }
+
+    #[test]
+    fn gmres_ir_converges_unpreconditioned() {
+        let a = poisson2d(10, 10);
+        let g = Arc::new(GseCsr::from_csr(&a, 8));
+        let ones = vec![1.0; a.ncols];
+        let mut b = vec![0.0; a.nrows];
+        crate::spmv::fp64::spmv(&a, &ones, &mut b);
+        let out = ir_gmres_solve(&g, &PrecondOp::None, &b, &IrGmresOpts::default());
+        assert!(out.converged, "relres {}", out.relres);
+        assert!(out.relres < 1e-6);
+        assert!(out.iters > 0);
+    }
+
+    #[test]
+    fn sainv_ir_reaches_tight_tolerance_on_circuit() {
+        // the ill-conditioned corpus instance: exponent-skewed
+        // conductances; SAINV-preconditioned GMRES-IR drives the true
+        // residual far below where low-rung inner solves alone stall
+        let a = conductance_network(300, 6, 3.0, 0.0, 42);
+        let g = Arc::new(GseCsr::from_csr(&a, 8));
+        let f = SainvFactors::build(&a, SainvParams { drop_tol: 0.05, k: 8 }).unwrap();
+        let mut rng = Prng::new(9);
+        let b: Vec<f64> = (0..a.nrows).map(|_| rng.f64() - 0.5).collect();
+        let opts = IrGmresOpts { tol: 1e-10, max_outer: 60, ..Default::default() };
+        let out = ir_gmres_solve(&g, &PrecondOp::Sainv(Arc::new(f)), &b, &opts);
+        assert!(out.converged, "relres {}", out.relres);
+        assert!(out.relres < 1e-8, "relres {}", out.relres);
+    }
+
+    #[test]
+    fn block_columns_match_single_dispatch_bitwise() {
+        let a = poisson2d(9, 9);
+        let n = a.nrows;
+        let g = Arc::new(GseCsr::from_csr(&a, 8));
+        let f = Arc::new(SainvFactors::build(&a, SainvParams::default()).unwrap());
+        let m = PrecondOp::Sainv(f);
+        let nrhs = 3usize;
+        let mut rng = Prng::new(4);
+        let mut bs = vec![0.0; n * nrhs];
+        let ones = vec![1.0; n];
+        crate::spmv::fp64::spmv(&a, &ones, &mut bs[0..n]);
+        for v in bs[n..].iter_mut() {
+            *v = rng.f64() - 0.5;
+        }
+        let opts = IrGmresOpts::default();
+        let block = ir_solve_multi(&g, &m, &bs, nrhs, &opts);
+        for (j, got) in block.iter().enumerate() {
+            let single = ir_gmres_solve(&g, &m, &bs[j * n..(j + 1) * n], &opts);
+            assert_eq!(got.x, single.x, "column {j} x");
+            assert_eq!(got.history, single.history, "column {j} history");
+            assert_eq!(got.iters, single.iters, "column {j} iters");
+            assert_eq!(got.switches, single.switches, "column {j} switches");
+            assert_eq!(got.converged, single.converged, "column {j}");
+        }
+    }
+
+    #[test]
+    fn gmres_ir_escalates_rungs_from_residual_trajectory() {
+        let a = poisson2d(12, 12);
+        let g = Arc::new(GseCsr::from_csr(&a, 8));
+        let b = vec![1.0; a.nrows];
+        // an escalate_ratio of 0 forces a switch after every outer step
+        // past the first — rungs must walk 1 → 2 → 3 and stop
+        let opts = IrGmresOpts {
+            tol: 1e-30,
+            max_outer: 4,
+            escalate_ratio: 0.0,
+            ..Default::default()
+        };
+        let out = ir_gmres_solve(&g, &PrecondOp::None, &b, &opts);
+        assert_eq!(out.history.len(), 4);
+        let tags: Vec<u8> = out.switches.iter().map(|&(_, t)| t).collect();
+        assert_eq!(tags, vec![2, 3], "ladder walk is capped at full");
+    }
+
+    #[test]
+    fn cancelled_column_deflates_out_of_the_block() {
+        let a = poisson2d(10, 10);
+        let n = a.nrows;
+        let g = Arc::new(GseCsr::from_csr(&a, 8));
+        let nrhs = 2usize;
+        let bs = vec![1.0; n * nrhs];
+        let flag = Arc::new(AtomicBool::new(true));
+        let ctl = BlockCtl::new(vec![None, Some(Arc::clone(&flag))], vec![None, None]);
+        let (outs, exits) = ir_solve_multi_ctl(
+            &g,
+            &PrecondOp::None,
+            &bs,
+            nrhs,
+            &IrGmresOpts::default(),
+            &ctl,
+        );
+        assert_eq!(exits[0], ColumnExit::Completed);
+        assert_eq!(exits[1], ColumnExit::Cancelled);
+        assert!(outs[0].converged);
+        assert!(!outs[1].converged);
+        // the survivor matches a solo run bitwise
+        let solo = ir_gmres_solve(&g, &PrecondOp::None, &bs[0..n], &IrGmresOpts::default());
+        assert_eq!(outs[0].x, solo.x);
+    }
+
+    #[test]
+    fn zero_rhs_column_converges_instantly() {
+        let a = poisson2d(6, 6);
+        let g = Arc::new(GseCsr::from_csr(&a, 8));
+        let b = vec![0.0; a.nrows];
+        let out = ir_gmres_solve(&g, &PrecondOp::None, &b, &IrGmresOpts::default());
+        assert!(out.converged);
+        assert_eq!(out.iters, 0);
+        assert!(out.x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn for_caps_scales_outer_budget() {
+        let o = IrGmresOpts::for_caps(1e-9, 15000);
+        assert_eq!(o.tol, 1e-9);
+        assert_eq!(o.max_outer, 125);
+        assert_eq!(IrGmresOpts::for_caps(1e-6, 10).max_outer, 4);
+        assert_eq!(IrGmresOpts::for_caps(1e-6, 1_000_000).max_outer, 200);
     }
 }

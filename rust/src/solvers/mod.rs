@@ -21,9 +21,16 @@
 //! * [`ladder`] — the [`ladder::PrecisionSwitchable`] ladder trait with
 //!   the zero-copy GSE-SEM tag ladder ([`SwitchableOp`]) and the
 //!   copy-based fp32→fp64 baseline ([`ladder::CopyLadderOp`]).
-//! * [`precond`] — Jacobi preconditioning (extension).
-//! * [`ir`] — mixed-precision iterative refinement baseline (related
-//!   work [11]).
+//! * [`precond`] — Jacobi / symmetric Gauss–Seidel preconditioner
+//!   data (extension).
+//! * [`sainv`] — drop-tolerance SAINV factored approximate inverse
+//!   with GSE-resident factors ([`sainv::SainvFactors`]), the
+//!   [`sainv::Precond`] spec axis, and the left-preconditioned ladder
+//!   operator [`sainv::PrecondLadderOp`].
+//! * [`ir`] — mixed-precision iterative refinement: the CG baseline
+//!   ([`ir::ir_solve`], related work [11]) and preconditioned GMRES-IR
+//!   over the ladder ([`ir::ir_gmres_solve`] /
+//!   [`ir::ir_solve_multi`]).
 
 pub mod blas1;
 pub mod cg;
@@ -33,12 +40,15 @@ pub(crate) mod block;
 pub mod ladder;
 pub mod stepped;
 pub mod precond;
+pub mod sainv;
 pub mod ir;
 
 pub use bicgstab::{bicgstab_solve, bicgstab_solve_multi, BicgstabOpts};
 pub use cg::{cg_solve, cg_solve_multi, CgOpts};
 pub use gmres::{gmres_solve, gmres_solve_multi, GmresOpts};
+pub use ir::{ir_gmres_solve, ir_solve, ir_solve_multi, IrGmresOpts, IrOpts};
 pub use ladder::{CopyLadderOp, PrecisionSwitchable, SwitchableOp};
+pub use sainv::{Precond, PrecondLadderOp, PrecondOp, SainvFactors, SainvParams};
 pub use stepped::{run_stepped_multi, BlockSolver, PrecisionController, SteppedParams};
 
 use crate::spmv::SpmvOp;

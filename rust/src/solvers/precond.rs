@@ -3,6 +3,7 @@
 //! and exercises the stepped controller in a second regime).
 
 use crate::sparse::csr::Csr;
+use std::sync::Arc;
 
 /// Inverse-diagonal (Jacobi) preconditioner data.
 #[derive(Clone, Debug)]
@@ -33,14 +34,18 @@ impl Jacobi {
 /// backward sweep), a stronger option for the hardest FEM instances.
 #[derive(Clone, Debug)]
 pub struct SymGaussSeidel {
-    a: Csr,
+    a: Arc<Csr>,
     diag: Vec<f64>,
 }
 
 impl SymGaussSeidel {
-    pub fn from_csr(a: &Csr) -> Self {
-        let diag = a.diag().iter().map(|&d| if d != 0.0 { d } else { 1.0 }).collect();
-        Self { a: a.clone(), diag }
+    /// Build from a matrix, sharing (not copying) an `Arc`-held one;
+    /// zero or non-finite diagonals fall back to 1 like [`Jacobi`].
+    pub fn from_csr(a: impl Into<Arc<Csr>>) -> Self {
+        let a = a.into();
+        let diag =
+            a.diag().iter().map(|&d| if d != 0.0 && d.is_finite() { d } else { 1.0 }).collect();
+        Self { a, diag }
     }
 
     /// z ≈ M⁻¹ r via (D+L) D⁻¹ (D+U) splitting.
@@ -94,7 +99,7 @@ mod tests {
     #[test]
     fn sgs_is_identity_on_diagonal_matrix() {
         let a = crate::sparse::csr::Csr::identity(5);
-        let m = SymGaussSeidel::from_csr(&a);
+        let m = SymGaussSeidel::from_csr(a);
         let r = vec![3.0, -1.0, 0.5, 2.0, 7.0];
         let mut z = vec![0.0; 5];
         m.apply(&r, &mut z);
@@ -104,9 +109,20 @@ mod tests {
     }
 
     #[test]
+    fn sgs_guards_nonfinite_diagonals() {
+        let mut a = crate::sparse::csr::Csr::identity(3);
+        a.vals[1] = f64::NAN;
+        let m = SymGaussSeidel::from_csr(a);
+        let r = vec![1.0, 1.0, 1.0];
+        let mut z = vec![0.0; 3];
+        m.apply(&r, &mut z);
+        assert!(z.iter().all(|v| v.is_finite()), "NaN diagonal must not poison the sweep");
+    }
+
+    #[test]
     fn sgs_reduces_residual_as_smoother() {
-        let a = poisson2d(8, 8);
-        let m = SymGaussSeidel::from_csr(&a);
+        let a = Arc::new(poisson2d(8, 8));
+        let m = SymGaussSeidel::from_csr(Arc::clone(&a));
         let b = vec![1.0; 64];
         let mut z = vec![0.0; 64];
         m.apply(&b, &mut z); // one SGS application = one smoothing step

@@ -1,0 +1,804 @@
+//! Factored sparse approximate inverse (SAINV) preconditioning with the
+//! factors resident in GSE-SEM storage (Carson & Khan, arXiv:2202.10204
+//! and the adaptive-precision follow-up arXiv:2307.03914).
+//!
+//! A right-looking biconjugation of `A` produces `Z`, `W` and a diagonal
+//! `D` with `Wᵀ A Z ≈ D`, so `A⁻¹ ≈ Z·D⁻¹·Wᵀ`. Off-diagonal factor
+//! entries below `drop_tol × max|column|` are dropped during the
+//! biconjugation (the SAINV sparsification), which keeps the factors as
+//! sparse as the matrix itself on the generator corpus. Both factors are
+//! encoded as [`GseCsr`], so **applying `M⁻¹` is two fused multi-RHS
+//! SpMVs** plus a diagonal scale — it runs through the same register
+//! tiles, [`crate::spmv::ThreadBudget`] and byte accounting as any other
+//! operator, and can be applied at any rung of the precision ladder
+//! ([`Precision::Head`] / [`Precision::HeadTail1`] / [`Precision::Full`])
+//! of one shared encode.
+//!
+//! Three layers live here:
+//!
+//! * [`SainvFactors`] — the encoded factors, built fallibly (a zero or
+//!   non-finite pivot means the matrix is singular/indefinite beyond
+//!   what the drop tolerance can absorb and construction fails typed);
+//! * [`PrecondOp`] — the runtime preconditioner chosen by a
+//!   [`Precond`] spec: identity, Jacobi, or SAINV;
+//! * [`PrecondLadderOp`] — the left-preconditioned operator
+//!   `x ↦ M⁻¹(A·x)` as a [`PrecisionSwitchable`] ladder rung, which is
+//!   what the GMRES-IR inner solver iterates on
+//!   (see [`crate::solvers::ir`]).
+
+use crate::formats::{Precision, ValueFormat};
+use crate::solvers::ladder::PrecisionSwitchable;
+use crate::solvers::precond::Jacobi;
+use crate::sparse::csr::Csr;
+use crate::spmv::gse::GseCsr;
+use crate::spmv::SpmvOp;
+use crate::util::error::{bail, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+
+/// Pivots smaller than this (in magnitude) abort the factorization —
+/// the column is numerically dependent on its predecessors, so the
+/// approximate inverse would be garbage.
+const PIVOT_FLOOR: f64 = 1e-300;
+
+/// SAINV construction parameters — together with the matrix digest they
+/// key the factors in the coordinator registry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SainvParams {
+    /// Relative drop tolerance: factor entries below
+    /// `drop_tol × max|column entry|` are discarded (diagonals are
+    /// always kept). `0.0` keeps everything (the exact factorization up
+    /// to rounding).
+    pub drop_tol: f64,
+    /// Shared-exponent group count of the GSE encode of both factors.
+    pub k: usize,
+}
+
+impl Default for SainvParams {
+    fn default() -> Self {
+        Self { drop_tol: 0.1, k: 8 }
+    }
+}
+
+/// Hashable fingerprint of [`SainvParams`] (`drop_tol` via its bit
+/// pattern), used in registry/grouping keys.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SainvParamsKey {
+    /// `drop_tol.to_bits()`.
+    pub(crate) drop_bits: u64,
+    /// group count, verbatim.
+    pub(crate) k: usize,
+}
+
+impl SainvParamsKey {
+    /// Reconstruct the parameters this key fingerprints (spill decode).
+    pub(crate) fn params(self) -> SainvParams {
+        SainvParams { drop_tol: f64::from_bits(self.drop_bits), k: self.k }
+    }
+}
+
+impl From<SainvParams> for SainvParamsKey {
+    fn from(p: SainvParams) -> Self {
+        Self { drop_bits: p.drop_tol.to_bits(), k: p.k }
+    }
+}
+
+/// Sparse accumulator: a dense value array with an epoch-stamped mark
+/// array and a touched list, so clearing between columns is O(touched).
+struct Accum {
+    val: Vec<f64>,
+    mark: Vec<u32>,
+    touched: Vec<u32>,
+    epoch: u32,
+}
+
+impl Accum {
+    fn new(n: usize) -> Self {
+        Self { val: vec![0.0; n], mark: vec![0; n], touched: Vec::new(), epoch: 0 }
+    }
+
+    fn begin(&mut self) {
+        self.epoch += 1;
+        self.touched.clear();
+    }
+
+    fn add(&mut self, i: usize, v: f64) {
+        if self.mark[i] != self.epoch {
+            self.mark[i] = self.epoch;
+            self.val[i] = 0.0;
+            self.touched.push(i as u32);
+        }
+        self.val[i] += v;
+    }
+
+    fn get(&self, i: usize) -> f64 {
+        if self.mark[i] == self.epoch {
+            self.val[i]
+        } else {
+            0.0
+        }
+    }
+
+    /// All touched non-zero entries, index-sorted.
+    fn gather(&mut self) -> SparseVec {
+        self.touched.sort_unstable();
+        let mut out = SparseVec::default();
+        for &i in &self.touched {
+            let v = self.val[i as usize];
+            if v != 0.0 {
+                out.idx.push(i);
+                out.val.push(v);
+            }
+        }
+        out
+    }
+
+    /// Touched entries surviving the relative drop tolerance
+    /// (`keep` — the diagonal — always survives), index-sorted.
+    fn gather_dropped(&mut self, keep: usize, drop_tol: f64) -> SparseVec {
+        self.touched.sort_unstable();
+        let mut amax = 0.0f64;
+        for &i in &self.touched {
+            amax = amax.max(self.val[i as usize].abs());
+        }
+        let floor = drop_tol * amax;
+        let mut out = SparseVec::default();
+        for &i in &self.touched {
+            let v = self.val[i as usize];
+            if i as usize == keep || (v != 0.0 && v.abs() >= floor) {
+                out.idx.push(i);
+                out.val.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// One factor column/row in index-sorted sparse form.
+#[derive(Default)]
+struct SparseVec {
+    idx: Vec<u32>,
+    val: Vec<f64>,
+}
+
+impl SparseVec {
+    fn iter(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.idx.iter().zip(&self.val).map(|(&i, &v)| (i as usize, v))
+    }
+}
+
+/// Assemble a CSR whose row `j` is `rows[j]` (entries already sorted).
+fn csr_from_rows(n: usize, rows: &[SparseVec]) -> Csr {
+    let mut rowptr = Vec::with_capacity(n + 1);
+    rowptr.push(0usize);
+    let mut colidx = Vec::new();
+    let mut vals = Vec::new();
+    for r in rows {
+        colidx.extend_from_slice(&r.idx);
+        vals.extend_from_slice(&r.val);
+        rowptr.push(colidx.len());
+    }
+    Csr { nrows: n, ncols: n, rowptr, colidx, vals }
+}
+
+/// Assemble a CSR whose **column** `j` is `cols[j]`: counting sort by
+/// row; iterating `j` ascending keeps each row's columns sorted.
+fn csr_from_cols(n: usize, cols: &[SparseVec]) -> Csr {
+    let mut counts = vec![0usize; n + 1];
+    for c in cols {
+        for &i in &c.idx {
+            counts[i as usize + 1] += 1;
+        }
+    }
+    for i in 0..n {
+        counts[i + 1] += counts[i];
+    }
+    let rowptr = counts.clone();
+    let nnz = rowptr[n];
+    let mut colidx = vec![0u32; nnz];
+    let mut vals = vec![0.0f64; nnz];
+    let mut next = rowptr.clone();
+    for (j, c) in cols.iter().enumerate() {
+        for (i, v) in c.iter() {
+            let slot = next[i];
+            next[i] += 1;
+            colidx[slot] = j as u32;
+            vals[slot] = v;
+        }
+    }
+    Csr { nrows: n, ncols: n, rowptr, colidx, vals }
+}
+
+/// The factored sparse approximate inverse `A⁻¹ ≈ Z·D⁻¹·Wᵀ`, with `Z`
+/// and `Wᵀ` resident as GSE-SEM encodes so `M⁻¹` applies at any ladder
+/// rung. Registry-cacheable (keyed by matrix digest ×
+/// [`SainvParamsKey`]), LRU-evictable and spillable like any operator.
+#[derive(Clone)]
+pub struct SainvFactors {
+    z: Arc<GseCsr>,
+    wt: Arc<GseCsr>,
+    inv_d: Vec<f64>,
+    params: SainvParams,
+}
+
+impl SainvFactors {
+    /// Run the drop-tolerance biconjugation and encode the factors.
+    ///
+    /// Fails typed when the matrix is not square or a pivot
+    /// `d_j = ⟨w_j, A z_j⟩` is (near-)zero or non-finite — a singular
+    /// or too-indefinite matrix for this drop tolerance.
+    pub fn build(a: &Csr, params: SainvParams) -> Result<Self> {
+        let n = a.nrows;
+        if n != a.ncols {
+            bail!("sainv requires a square matrix, got {}x{}", a.nrows, a.ncols);
+        }
+        if !params.drop_tol.is_finite() || params.drop_tol < 0.0 {
+            bail!("sainv drop_tol must be finite and >= 0, got {}", params.drop_tol);
+        }
+        let at = a.transpose();
+        let mut zs: Vec<SparseVec> = Vec::with_capacity(n);
+        let mut ws: Vec<SparseVec> = Vec::with_capacity(n);
+        // u_i = A·z_i and v_i = Aᵀ·w_i, kept so later columns
+        // biconjugate against finalized ones with sparse dots only
+        let mut us: Vec<SparseVec> = Vec::with_capacity(n);
+        let mut vs: Vec<SparseVec> = Vec::with_capacity(n);
+        let mut inv_d = vec![0.0f64; n];
+        let mut z_acc = Accum::new(n);
+        let mut w_acc = Accum::new(n);
+        let mut u_acc = Accum::new(n);
+        let mut v_acc = Accum::new(n);
+        for j in 0..n {
+            z_acc.begin();
+            w_acc.begin();
+            z_acc.add(j, 1.0);
+            w_acc.add(j, 1.0);
+            for i in 0..j {
+                // z_j ← z_j − (⟨v_i, z_j⟩/d_i)·z_i
+                let mut dot = 0.0;
+                for (idx, v) in vs[i].iter() {
+                    dot += v * z_acc.get(idx);
+                }
+                if dot != 0.0 {
+                    let alpha = dot * inv_d[i];
+                    for (idx, v) in zs[i].iter() {
+                        z_acc.add(idx, -alpha * v);
+                    }
+                }
+                // w_j ← w_j − (⟨u_i, w_j⟩/d_i)·w_i
+                let mut dot = 0.0;
+                for (idx, v) in us[i].iter() {
+                    dot += v * w_acc.get(idx);
+                }
+                if dot != 0.0 {
+                    let beta = dot * inv_d[i];
+                    for (idx, v) in ws[i].iter() {
+                        w_acc.add(idx, -beta * v);
+                    }
+                }
+            }
+            let zj = z_acc.gather_dropped(j, params.drop_tol);
+            let wj = w_acc.gather_dropped(j, params.drop_tol);
+            // u_j = A·z_j: column c of A is row c of Aᵀ
+            u_acc.begin();
+            for (c, x) in zj.iter() {
+                let (rows, avals) = at.row(c);
+                for (&r, &av) in rows.iter().zip(avals) {
+                    u_acc.add(r as usize, x * av);
+                }
+            }
+            // v_j = Aᵀ·w_j: scatter row c of A
+            v_acc.begin();
+            for (c, x) in wj.iter() {
+                let (cols, avals) = a.row(c);
+                for (&cc, &av) in cols.iter().zip(avals) {
+                    v_acc.add(cc as usize, x * av);
+                }
+            }
+            let mut d = 0.0;
+            for (idx, x) in wj.iter() {
+                d += x * u_acc.get(idx);
+            }
+            if !d.is_finite() || d.abs() < PIVOT_FLOOR {
+                bail!(
+                    "sainv breakdown at column {j}: pivot {d:e} \
+                     (singular or indefinite beyond drop_tol {})",
+                    params.drop_tol
+                );
+            }
+            inv_d[j] = 1.0 / d;
+            us.push(u_acc.gather());
+            vs.push(v_acc.gather());
+            zs.push(zj);
+            ws.push(wj);
+        }
+        let z_csr = csr_from_cols(n, &zs);
+        let wt_csr = csr_from_rows(n, &ws);
+        Ok(Self::from_parts(
+            GseCsr::from_csr(&z_csr, params.k),
+            GseCsr::from_csr(&wt_csr, params.k),
+            inv_d,
+            params,
+        ))
+    }
+
+    /// Reassemble factors from already-encoded parts (spill restore).
+    pub(crate) fn from_parts(z: GseCsr, wt: GseCsr, inv_d: Vec<f64>, params: SainvParams) -> Self {
+        assert_eq!(z.nrows, inv_d.len());
+        assert_eq!(wt.nrows, inv_d.len());
+        Self { z: Arc::new(z), wt: Arc::new(wt), inv_d, params }
+    }
+
+    /// Problem size `n` (the factors are square `n × n`).
+    pub fn nrows(&self) -> usize {
+        self.inv_d.len()
+    }
+
+    /// The encoded `Z` factor.
+    pub fn z(&self) -> &Arc<GseCsr> {
+        &self.z
+    }
+
+    /// The encoded `Wᵀ` factor.
+    pub fn wt(&self) -> &Arc<GseCsr> {
+        &self.wt
+    }
+
+    /// `1/d_j` pivot reciprocals.
+    pub fn inv_d(&self) -> &[f64] {
+        &self.inv_d
+    }
+
+    /// Construction parameters (cache-key half).
+    pub fn params(&self) -> SainvParams {
+        self.params
+    }
+
+    /// `y ← M⁻¹·r = Z·(D⁻¹·(Wᵀ·r))` at one GSE precision rung.
+    pub fn apply(&self, r: &[f64], y: &mut [f64], level: Precision) {
+        let n = self.inv_d.len();
+        assert_eq!(r.len(), n);
+        assert_eq!(y.len(), n);
+        let mut t = vec![0.0f64; n];
+        self.wt.spmv(r, &mut t, level);
+        for (ti, di) in t.iter_mut().zip(&self.inv_d) {
+            *ti *= di;
+        }
+        self.z.spmv(&t, y, level);
+    }
+
+    /// Fused multi-RHS `M⁻¹` over `nrhs` column-major packed vectors —
+    /// two fused SpMVs plus a per-column diagonal scale, bit-for-bit
+    /// identical per column to looped [`SainvFactors::apply`].
+    pub fn apply_multi(&self, rs: &[f64], ys: &mut [f64], nrhs: usize, level: Precision) {
+        let n = self.inv_d.len();
+        assert_eq!(rs.len(), n * nrhs);
+        assert_eq!(ys.len(), n * nrhs);
+        let mut t = vec![0.0f64; n * nrhs];
+        self.wt.spmv_multi(rs, &mut t, nrhs, level);
+        for col in t.chunks_exact_mut(n) {
+            for (ti, di) in col.iter_mut().zip(&self.inv_d) {
+                *ti *= di;
+            }
+        }
+        self.z.spmv_multi(&t, ys, nrhs, level);
+    }
+
+    /// Resident bytes of both encodes plus the pivot vector — what the
+    /// registry budget ledger charges for cached factors.
+    pub fn encoded_bytes(&self) -> usize {
+        self.z.encoded_bytes() + self.wt.encoded_bytes() + self.inv_d.len() * 8
+    }
+
+    /// Per-apply matrix traffic at one rung (roofline input).
+    pub fn bytes_at(&self, level: Precision) -> usize {
+        self.z.bytes_at(level) + self.wt.bytes_at(level) + self.inv_d.len() * 8
+    }
+
+    /// Retune both factor encodes' worker counts (see
+    /// [`crate::spmv::ThreadBudget`]); bitwise-neutral like any retune.
+    pub fn set_threads(&self, threads: usize) {
+        self.z.threads.set(threads);
+        self.wt.threads.set(threads);
+    }
+
+    /// Current worker count of the factor applies.
+    pub fn threads(&self) -> usize {
+        self.z.threads.get()
+    }
+}
+
+/// Which preconditioner a solve request asks for — the spec half,
+/// carried by `SolveRequest` / `SolveSpec` and fingerprinted into the
+/// intake group key (preconditioning is a batching axis: only
+/// same-preconditioner requests merge).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum Precond {
+    /// Unpreconditioned (the default — every pre-existing path).
+    #[default]
+    None,
+    /// Inverse-diagonal scaling ([`Jacobi`]); for CG it fills
+    /// `CgOpts::inv_diag`, for IR it is applied between the SpMVs.
+    Jacobi,
+    /// Drop-tolerance SAINV factors, registry-cached per digest ×
+    /// params. Requires the IR format (`FormatChoice::Ir`).
+    Sainv(SainvParams),
+}
+
+/// Hashable fingerprint of a [`Precond`] for grouping/registry keys.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PrecondKey {
+    /// no preconditioner
+    None,
+    /// Jacobi scaling
+    Jacobi,
+    /// SAINV with these parameters
+    Sainv(SainvParamsKey),
+}
+
+impl From<&Precond> for PrecondKey {
+    fn from(p: &Precond) -> Self {
+        match p {
+            Precond::None => PrecondKey::None,
+            Precond::Jacobi => PrecondKey::Jacobi,
+            Precond::Sainv(sp) => PrecondKey::Sainv((*sp).into()),
+        }
+    }
+}
+
+/// A built, applicable preconditioner — what the solvers consume.
+/// Cloning shares the underlying factors.
+#[derive(Clone, Default)]
+pub enum PrecondOp {
+    /// identity (no preconditioning)
+    #[default]
+    None,
+    /// inverse-diagonal scale
+    Jacobi(Arc<Jacobi>),
+    /// SAINV factors (two fused SpMVs + diagonal scale per apply)
+    Sainv(Arc<SainvFactors>),
+}
+
+impl PrecondOp {
+    /// Build the operator for a spec against a matrix — the uncached
+    /// one-shot path (the registry-backed path lives in
+    /// `coordinator::registry::MatrixRegistry::sainv`).
+    pub fn for_spec(spec: &Precond, a: &Csr) -> Result<Self> {
+        Ok(match spec {
+            Precond::None => PrecondOp::None,
+            Precond::Jacobi => PrecondOp::Jacobi(Arc::new(Jacobi::from_csr(a))),
+            Precond::Sainv(p) => PrecondOp::Sainv(Arc::new(SainvFactors::build(a, *p)?)),
+        })
+    }
+
+    /// `y ← M⁻¹·r` at a ladder rung (`None` copies, `Jacobi` scales —
+    /// both rung-independent; SAINV reads its encodes at `level`).
+    pub fn apply_level(&self, r: &[f64], y: &mut [f64], level: Precision) {
+        match self {
+            PrecondOp::None => y.copy_from_slice(r),
+            PrecondOp::Jacobi(j) => j.apply(r, y),
+            PrecondOp::Sainv(f) => f.apply(r, y, level),
+        }
+    }
+
+    /// Fused multi-RHS `M⁻¹` over column-major packed vectors,
+    /// bit-for-bit identical per column to looped
+    /// [`PrecondOp::apply_level`].
+    pub fn apply_multi_level(&self, rs: &[f64], ys: &mut [f64], nrhs: usize, level: Precision) {
+        match self {
+            PrecondOp::None => ys.copy_from_slice(rs),
+            PrecondOp::Jacobi(j) => {
+                let n = j.inv_diag.len();
+                for (rcol, ycol) in rs.chunks_exact(n).zip(ys.chunks_exact_mut(n)).take(nrhs) {
+                    j.apply(rcol, ycol);
+                }
+            }
+            PrecondOp::Sainv(f) => f.apply_multi(rs, ys, nrhs, level),
+        }
+    }
+
+    /// Resident bytes of the preconditioner (0 for `None`).
+    pub fn encoded_bytes(&self) -> usize {
+        match self {
+            PrecondOp::None => 0,
+            PrecondOp::Jacobi(j) => j.inv_diag.len() * 8,
+            PrecondOp::Sainv(f) => f.encoded_bytes(),
+        }
+    }
+
+    /// Per-apply traffic at a rung (roofline input; 0 for `None`).
+    pub fn bytes_at(&self, level: Precision) -> usize {
+        match self {
+            PrecondOp::None => 0,
+            PrecondOp::Jacobi(j) => j.inv_diag.len() * 8,
+            PrecondOp::Sainv(f) => f.bytes_at(level),
+        }
+    }
+
+    /// Retune any parallel applies the preconditioner owns.
+    pub fn set_threads(&self, threads: usize) {
+        if let PrecondOp::Sainv(f) = self {
+            f.set_threads(threads);
+        }
+    }
+
+    /// Label suffix for result/metrics reporting: `""`, `"(jacobi)"`
+    /// or `"(sainv)"`.
+    pub fn label_suffix(&self) -> &'static str {
+        match self {
+            PrecondOp::None => "",
+            PrecondOp::Jacobi(_) => "(jacobi)",
+            PrecondOp::Sainv(_) => "(sainv)",
+        }
+    }
+}
+
+/// The left-preconditioned ladder operator `x ↦ M⁻¹(A·x)` over one
+/// shared GSE encode of `A` — the system GMRES-IR's inner solver
+/// iterates on. Both the matrix apply and (for SAINV) the
+/// preconditioner apply read their encodes at the current rung, so one
+/// `set_tag` moves the whole preconditioned product down or up the
+/// ladder (arXiv:2307.03914's adaptive-precision preconditioning).
+pub struct PrecondLadderOp {
+    a: Arc<GseCsr>,
+    m: PrecondOp,
+    level: AtomicU8,
+}
+
+impl PrecondLadderOp {
+    /// Wrap a shared encode and a built preconditioner; dimensions must
+    /// agree. Starts at rung 1 (head) like [`super::SwitchableOp`].
+    pub fn new(a: Arc<GseCsr>, m: PrecondOp) -> Self {
+        match &m {
+            PrecondOp::None => {}
+            PrecondOp::Jacobi(j) => assert_eq!(j.inv_diag.len(), a.nrows),
+            PrecondOp::Sainv(f) => assert_eq!(f.nrows(), a.nrows),
+        }
+        Self { a, m, level: AtomicU8::new(1) }
+    }
+
+    /// Current precision rung of both the matrix and `M⁻¹` applies.
+    pub fn level(&self) -> Precision {
+        Precision::from_tag(self.level.load(Ordering::Relaxed))
+    }
+
+    /// Move both applies to `p`'s rung.
+    pub fn set_level(&self, p: Precision) {
+        self.level.store(p.tag(), Ordering::Relaxed);
+    }
+
+    /// The wrapped preconditioner.
+    pub fn precond(&self) -> &PrecondOp {
+        &self.m
+    }
+}
+
+impl SpmvOp for PrecondLadderOp {
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let level = self.level();
+        let mut t = vec![0.0f64; self.a.nrows];
+        self.a.spmv(x, &mut t, level);
+        self.m.apply_level(&t, y, level);
+    }
+
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], nrhs: usize) {
+        let level = self.level();
+        let mut t = vec![0.0f64; self.a.nrows * nrhs];
+        self.a.spmv_multi(x, &mut t, nrhs, level);
+        self.m.apply_multi_level(&t, y, nrhs, level);
+    }
+
+    fn nrows(&self) -> usize {
+        self.a.nrows
+    }
+
+    fn ncols(&self) -> usize {
+        self.a.ncols
+    }
+
+    fn format(&self) -> ValueFormat {
+        ValueFormat::GseSem(self.level())
+    }
+
+    fn matrix_bytes(&self) -> usize {
+        self.a.bytes_at(self.level()) + self.m.bytes_at(self.level())
+    }
+
+    fn encoded_bytes(&self) -> usize {
+        // one shared encode of A serves every rung; the preconditioner
+        // adds its own resident factors
+        self.a.encoded_bytes() + self.m.encoded_bytes()
+    }
+
+    fn set_threads(&self, threads: usize) {
+        self.a.threads.set(threads);
+        self.m.set_threads(threads);
+    }
+
+    fn threads(&self) -> usize {
+        self.a.threads.get()
+    }
+}
+
+impl PrecisionSwitchable for PrecondLadderOp {
+    fn num_tags(&self) -> u8 {
+        Precision::LADDER.len() as u8
+    }
+
+    fn tag(&self) -> u8 {
+        self.level.load(Ordering::Relaxed)
+    }
+
+    fn set_tag(&self, tag: u8) {
+        self.set_level(Precision::from_tag(tag));
+    }
+
+    fn tag_label(&self, tag: u8) -> String {
+        format!(
+            "{}{}",
+            ValueFormat::GseSem(Precision::from_tag(tag)).label(),
+            self.m.label_suffix()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson::poisson2d;
+    use crate::util::Prng;
+
+    fn scaled_identity(n: usize) -> Csr {
+        let mut a = Csr::identity(n);
+        for (i, v) in a.vals.iter_mut().enumerate() {
+            // powers of two: exact in every GSE rung
+            *v = f64::powi(2.0, (i % 3) as i32 + 1);
+        }
+        a
+    }
+
+    #[test]
+    fn exact_inverse_on_diagonal_matrix() {
+        let a = scaled_identity(6);
+        let f = SainvFactors::build(&a, SainvParams::default()).unwrap();
+        let r: Vec<f64> = (0..6).map(|i| (i as f64) - 2.5).collect();
+        for level in Precision::LADDER {
+            let mut y = vec![0.0; 6];
+            f.apply(&r, &mut y, level);
+            for i in 0..6 {
+                assert_eq!(y[i], r[i] / a.vals[i], "level {level:?} i {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_drop_factorization_inverts_poisson() {
+        let a = poisson2d(6, 6);
+        let n = a.nrows;
+        let f = SainvFactors::build(&a, SainvParams { drop_tol: 0.0, k: 8 }).unwrap();
+        let mut rng = Prng::new(7);
+        let x: Vec<f64> = (0..n).map(|_| rng.f64() - 0.5).collect();
+        let mut ax = vec![0.0; n];
+        crate::spmv::fp64::spmv(&a, &x, &mut ax);
+        let mut y = vec![0.0; n];
+        f.apply(&ax, &mut y, Precision::Full);
+        let err = crate::spmv::max_abs_diff(&x, &y);
+        assert!(err < 1e-8, "M⁻¹(Ax) should recover x, err {err:e}");
+    }
+
+    #[test]
+    fn drop_tolerance_sparsifies_factors() {
+        let a = poisson2d(8, 8);
+        let dense = SainvFactors::build(&a, SainvParams { drop_tol: 0.0, k: 8 }).unwrap();
+        let sparse = SainvFactors::build(&a, SainvParams { drop_tol: 0.3, k: 8 }).unwrap();
+        let nnz = |g: &GseCsr| *g.rowptr.last().unwrap();
+        assert!(nnz(sparse.z()) < nnz(dense.z()), "dropping must sparsify Z");
+        assert!(nnz(sparse.wt()) < nnz(dense.wt()), "dropping must sparsify Wᵀ");
+        // diagonals always survive: M⁻¹ stays full-rank-ish
+        assert!(nnz(sparse.z()) >= a.nrows);
+    }
+
+    #[test]
+    fn fails_typed_on_singular_matrix() {
+        let mut a = Csr::identity(5);
+        a.vals[2] = 0.0; // zero pivot row
+        let err = SainvFactors::build(&a, SainvParams::default()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sainv breakdown"), "{msg}");
+        assert!(msg.contains("column 2"), "{msg}");
+    }
+
+    #[test]
+    fn fails_typed_on_rectangular_matrix() {
+        let a = Csr { nrows: 3, ncols: 4, rowptr: vec![0, 0, 0, 0], colidx: vec![], vals: vec![] };
+        assert!(SainvFactors::build(&a, SainvParams::default()).is_err());
+    }
+
+    #[test]
+    fn apply_multi_matches_looped_applies() {
+        let a = poisson2d(7, 5);
+        let n = a.nrows;
+        let f = SainvFactors::build(&a, SainvParams { drop_tol: 0.05, k: 8 }).unwrap();
+        let nrhs = 3usize;
+        let mut rng = Prng::new(11);
+        let rs: Vec<f64> = (0..n * nrhs).map(|_| rng.f64() - 0.5).collect();
+        for level in Precision::LADDER {
+            let mut fused = vec![0.0; n * nrhs];
+            f.apply_multi(&rs, &mut fused, nrhs, level);
+            let mut looped = vec![0.0; n * nrhs];
+            for j in 0..nrhs {
+                f.apply(&rs[j * n..(j + 1) * n], &mut looped[j * n..(j + 1) * n], level);
+            }
+            assert_eq!(fused, looped, "level {level:?}");
+        }
+    }
+
+    #[test]
+    fn precond_ladder_op_is_preconditioned_product() {
+        let a = poisson2d(6, 6);
+        let n = a.nrows;
+        let g = Arc::new(GseCsr::from_csr(&a, 8));
+        let f = Arc::new(SainvFactors::build(&a, SainvParams::default()).unwrap());
+        let op = PrecondLadderOp::new(Arc::clone(&g), PrecondOp::Sainv(Arc::clone(&f)));
+        assert_eq!(op.num_tags(), 3);
+        assert_eq!(op.tag(), 1);
+        assert_eq!(op.tag_label(3), "GSE-SEM(full)(sainv)");
+        let mut rng = Prng::new(3);
+        let x: Vec<f64> = (0..n).map(|_| rng.f64() - 0.5).collect();
+        for level in Precision::LADDER {
+            op.set_level(level);
+            let mut got = vec![0.0; n];
+            op.apply(&x, &mut got);
+            let mut ax = vec![0.0; n];
+            g.spmv(&x, &mut ax, level);
+            let mut want = vec![0.0; n];
+            f.apply(&ax, &mut want, level);
+            assert_eq!(got, want, "level {level:?}");
+        }
+        // resident accounting covers A plus both factors
+        assert_eq!(op.encoded_bytes(), g.encoded_bytes() + f.encoded_bytes());
+        op.set_threads(3);
+        assert_eq!(op.threads(), 3);
+        assert_eq!(f.threads(), 3);
+    }
+
+    #[test]
+    fn precond_op_none_and_jacobi() {
+        let a = scaled_identity(4);
+        let none = PrecondOp::for_spec(&Precond::None, &a).unwrap();
+        let jac = PrecondOp::for_spec(&Precond::Jacobi, &a).unwrap();
+        let r = vec![4.0, 4.0, 4.0, 4.0];
+        let mut y = vec![0.0; 4];
+        none.apply_level(&r, &mut y, Precision::Head);
+        assert_eq!(y, r);
+        jac.apply_level(&r, &mut y, Precision::Head);
+        for i in 0..4 {
+            assert_eq!(y[i], r[i] / a.vals[i]);
+        }
+        assert_eq!(none.label_suffix(), "");
+        assert_eq!(jac.label_suffix(), "(jacobi)");
+        assert_eq!(none.encoded_bytes(), 0);
+        assert_eq!(jac.encoded_bytes(), 32);
+        // multi matches looped for the cheap variants too
+        let nrhs = 2usize;
+        let rs = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut fused = vec![0.0; 4 * nrhs];
+        jac.apply_multi_level(&rs, &mut fused, nrhs, Precision::Head);
+        let mut looped = vec![0.0; 4 * nrhs];
+        for j in 0..nrhs {
+            let (r, y) = (&rs[j * 4..(j + 1) * 4], &mut looped[j * 4..(j + 1) * 4]);
+            jac.apply_level(r, y, Precision::Head);
+        }
+        assert_eq!(fused, looped);
+    }
+
+    #[test]
+    fn params_key_round_trips() {
+        let p = SainvParams { drop_tol: 0.125, k: 16 };
+        let key: SainvParamsKey = p.into();
+        assert_eq!(key.params(), p);
+        let q: PrecondKey = (&Precond::Sainv(p)).into();
+        assert_eq!(q, PrecondKey::Sainv(key));
+        assert_eq!(PrecondKey::from(&Precond::None), PrecondKey::None);
+        assert_eq!(PrecondKey::from(&Precond::Jacobi), PrecondKey::Jacobi);
+    }
+}

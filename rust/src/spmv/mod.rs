@@ -160,6 +160,7 @@ pub(crate) mod spill_tag {
     pub const FP16: u8 = 2;
     pub const BF16: u8 = 3;
     pub const GSE: u8 = 4;
+    pub const SAINV: u8 = 5;
 }
 
 /// The serial-fallback work threshold every parallel split gates on —

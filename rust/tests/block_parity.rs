@@ -10,9 +10,11 @@
 
 use gsem::solvers::bicgstab::{bicgstab_solve, bicgstab_solve_multi, BicgstabOpts};
 use gsem::solvers::gmres::{gmres_solve, gmres_solve_multi, GmresOpts};
+use gsem::solvers::precond::Jacobi;
 use gsem::solvers::stepped::{run_stepped_multi, run_stepped_with, BlockSolver, SteppedParams};
 use gsem::solvers::{
-    cg_solve, CgOpts, CopyLadderOp, MonitorCmd, PrecisionSwitchable, SolveOutcome, SwitchableOp,
+    cg_solve, ir_gmres_solve, ir_solve_multi, CgOpts, CopyLadderOp, IrGmresOpts, MonitorCmd,
+    PrecisionSwitchable, PrecondOp, SainvFactors, SainvParams, SolveOutcome, SwitchableOp,
 };
 use gsem::sparse::gen::convdiff::convdiff2d;
 use gsem::sparse::gen::fem::diffusion2d;
@@ -180,6 +182,48 @@ fn stepped_block_matches_single_dispatch_bitwise() {
         }
     }
     assert!(any_switched, "the eager controller must escalate at least one column");
+}
+
+#[test]
+fn ir_gmres_block_matches_single_dispatch_bitwise() {
+    // preconditioned GMRES-IR: the block driver groups active columns
+    // by rung per outer round, so parity covers the regrouping path as
+    // well as the fused inner solves — for every preconditioner and
+    // operator worker count
+    let a = convdiff2d(8, 8, 4.0, 2.0);
+    let opts = IrGmresOpts { tol: 1e-8, ..IrGmresOpts::default() };
+    let g = Arc::new(GseCsr::from_csr(&a, 8));
+    let sainv = SainvFactors::build(&a, SainvParams { drop_tol: 0.05, k: 8 })
+        .expect("convdiff is sainv-friendly");
+    let preconds = [
+        PrecondOp::None,
+        PrecondOp::Jacobi(Arc::new(Jacobi::from_csr(a.clone()))),
+        PrecondOp::Sainv(Arc::new(sainv)),
+    ];
+    let op = gsem::spmv::fp64::Fp64Csr::new(a.clone());
+    for threads in [1usize, 3] {
+        g.threads.set(threads);
+        for m in &preconds {
+            m.set_threads(threads);
+            for nrhs in [1usize, 3, 8] {
+                let bs = rhs_block(&op, nrhs, 17);
+                let outs = ir_solve_multi(&g, m, &bs, nrhs, &opts);
+                assert_eq!(outs.len(), nrhs);
+                for (j, multi) in outs.iter().enumerate() {
+                    let b = &bs[j * a.nrows..(j + 1) * a.nrows];
+                    let single = ir_gmres_solve(&g, m, b, &opts);
+                    let ctx =
+                        format!("ir{} threads={threads} nrhs={nrhs} col={j}", m.label_suffix());
+                    assert_bitwise(&single, multi, &ctx);
+                }
+                assert!(
+                    outs.iter().all(|o| o.converged),
+                    "ir{} nrhs={nrhs} must converge",
+                    m.label_suffix()
+                );
+            }
+        }
+    }
 }
 
 #[test]

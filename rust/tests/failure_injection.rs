@@ -239,6 +239,67 @@ fn expired_deadline_in_merged_group_fails_only_itself() {
 }
 
 #[test]
+fn sainv_breakdown_fails_typed_without_poisoning_the_registry() {
+    use gsem::coordinator::{
+        Precond, RhsSpec, SainvParams, ServiceConfig, SolveSpec, SolverService,
+    };
+    // identity with one zeroed pivot: the SAINV biconjugation hits a
+    // zero pivot at that column and the factor build fails — a typed
+    // registry error per ticket, never a panic or a hang
+    let mut sing = Csr::identity(8);
+    sing.vals[3] = 0.0;
+    let sing = Arc::new(sing);
+    let params = SainvParams { drop_tol: 0.1, k: 8 };
+    let svc = SolverService::manual(ServiceConfig::new().workers(2));
+    let hb = svc.register(&sing);
+    let mk = |name: &str, seed: u64| {
+        SolveSpec::new(name, hb.clone(), SolverKind::Gmres, FormatChoice::Ir { k: 8 })
+            .rhs(RhsSpec::Random(seed))
+            .precond(Precond::Sainv(params))
+    };
+    // two tickets merge into one group; the build error fans out to both
+    let t1 = svc.submit(mk("bad1", 1)).unwrap();
+    let t2 = svc.submit(mk("bad2", 2)).unwrap();
+    svc.flush();
+    for t in [t1, t2] {
+        match t.wait() {
+            Err(ServiceError::Registry(e)) => {
+                assert!(e.to_string().contains("sainv breakdown"), "unexpected error: {e}");
+            }
+            other => panic!("expected Registry error, got {:?}", other.map(|r| r.name)),
+        }
+    }
+    assert_eq!(svc.metrics().counter("precond.builds"), 0, "failed builds must not count");
+    // the same service (same registry shards) then serves a healthy
+    // matrix with the same params — the failed build left no residue
+    let good = Arc::new(gsem::sparse::gen::poisson::poisson2d(6, 6));
+    let hg = svc.register(&good);
+    let tg = svc
+        .submit(
+            SolveSpec::new("good", hg, SolverKind::Gmres, FormatChoice::Ir { k: 8 })
+                .rhs(RhsSpec::Random(3))
+                .precond(Precond::Sainv(params)),
+        )
+        .unwrap();
+    svc.flush();
+    let rg = tg.wait().expect("healthy matrix must solve after the failed build");
+    assert!(rg.outcome.converged, "relres {}", rg.relres_fp64);
+    assert_eq!(rg.format_label, "GSE-IR(sainv)");
+    assert_eq!(svc.metrics().counter("precond.builds"), 1);
+    // resubmitting the degenerate system fails typed again: the shard
+    // retries the build instead of waiting on a poisoned latch
+    let t3 = svc.submit(mk("bad3", 4)).unwrap();
+    svc.flush();
+    match t3.wait() {
+        Err(ServiceError::Registry(e)) => {
+            assert!(e.to_string().contains("sainv breakdown"), "unexpected error: {e}");
+        }
+        other => panic!("expected Registry error, got {:?}", other.map(|r| r.name)),
+    }
+    assert_eq!(svc.metrics().counter("precond.builds"), 1, "good-matrix build stays the only one");
+}
+
+#[test]
 fn cli_rejects_bad_invocations() {
     use gsem::coordinator::cli::Cli;
     // bare double-dash
