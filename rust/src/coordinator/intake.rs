@@ -595,12 +595,13 @@ impl ServiceInner {
     /// solve them on the worker queue, answering every ticket. Results
     /// are routed by per-ticket channels, so callers see submission
     /// order regardless of how groups interleave.
-    fn run_flush(&self, batch: Vec<PendingSolve>) {
+    fn run_flush(&self, mut batch: Vec<PendingSolve>) {
         self.metrics.gauge_set("intake.depth", self.intake.len() as u64);
         if batch.is_empty() {
             return;
         }
         self.metrics.incr("intake.flushes");
+        self.resolve_auto_formats(&mut batch);
         let mut groups: Vec<Vec<PendingSolve>> = Vec::new();
         let mut by_key: HashMap<GroupKey, usize> = HashMap::new();
         for p in batch {
@@ -624,6 +625,42 @@ impl ServiceInner {
         }
         let jobs: Vec<(Vec<PendingSolve>, usize)> = groups.into_iter().zip(budgets).collect();
         parallel::run_queue(self.workers, jobs, |(g, threads)| self.run_group(g, threads));
+    }
+
+    /// Resolve every [`FormatChoice::Auto`] spec in a drained batch to
+    /// its concrete choice *before* grouping keys are formed, so auto
+    /// requests merge with hand-picked requests for the same resolved
+    /// configuration. The policy's batch width is the number of
+    /// same-digest × same-solver Auto specs in this flush — the width
+    /// those columns will solve at if they all merge (hand-picked
+    /// siblings only widen the block, which favors the same choice).
+    /// Decisions are digest-cached in the registry, so repeat flushes
+    /// pay one lookup per Auto spec (`policy.cache_hits`).
+    fn resolve_auto_formats(&self, batch: &mut [PendingSolve]) {
+        let mut widths: HashMap<(MatrixDigest, SolverKind), usize> = HashMap::new();
+        for p in batch.iter() {
+            if matches!(p.spec.format, FormatChoice::Auto) {
+                *widths.entry((p.spec.matrix.digest(), p.spec.solver)).or_insert(0) += 1;
+            }
+        }
+        if widths.is_empty() {
+            return;
+        }
+        for p in batch.iter_mut() {
+            if !matches!(p.spec.format, FormatChoice::Auto) {
+                continue;
+            }
+            let nrhs = widths[&(p.spec.matrix.digest(), p.spec.solver)];
+            let choice = crate::coordinator::policy::resolve_dispatch(
+                Some((self.registry.as_ref(), &p.spec.matrix)),
+                p.spec.matrix.matrix(),
+                p.spec.solver,
+                &p.spec.precond,
+                nrhs,
+                Some(&self.metrics),
+            );
+            p.spec.format = choice;
+        }
     }
 
     /// Answer a ticket that never ran (triage or mid-block deflation).
@@ -671,6 +708,9 @@ impl ServiceInner {
                 // owns the typed error; budgets are bitwise-neutral,
                 // so the factors keep their sticky budget
                 self.registry.gse(handle, *k, m).threads.set(threads);
+            }
+            FormatChoice::Auto => {
+                unreachable!("Auto resolves before grouping (resolve_auto_formats)")
             }
         }
     }
@@ -778,6 +818,19 @@ impl ServiceInner {
                     ladder.set_threads(threads);
                     let (outs, exits) =
                         run_stepped_multi_ctl(&ladder, &bs, nrhs, *params, &block_solver, &ctl);
+                    // feed the policy's online ladder-depth refinement
+                    // (completed columns only — deflated traces are
+                    // truncated and would miscount early escalations)
+                    for (out, exit) in outs.iter().zip(&exits) {
+                        if *exit == ColumnExit::Completed {
+                            crate::coordinator::policy::record_switches(
+                                handle.digest(),
+                                solver,
+                                out.iters,
+                                &out.switches,
+                            );
+                        }
+                    }
                     (outs, exits, "GSE-SEM".to_string())
                 }
                 FormatChoice::SteppedCopy { params } => {
@@ -819,6 +872,9 @@ impl ServiceInner {
                     let opts = IrGmresOpts::for_caps(tol, max_iters);
                     let (outs, exits) = ir_solve_multi_ctl(&g, &m, &bs, nrhs, &opts, &ctl);
                     (outs, exits, ir_label(&precond).to_string())
+                }
+                FormatChoice::Auto => {
+                    unreachable!("Auto resolves before grouping (resolve_auto_formats)")
                 }
             };
         let fp64 = self.registry.operator(&handle, ValueFormat::Fp64, 0, Some(&self.metrics));

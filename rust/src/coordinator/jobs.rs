@@ -115,6 +115,13 @@ pub enum FormatChoice {
     /// [`Precond`] picks the preconditioner and the request's
     /// [`SolverKind`] is ignored — IR drives its own inner GMRES.
     Ir { k: usize },
+    /// Entropy/byte-model-driven automatic selection
+    /// ([`crate::coordinator::policy`]). Resolved to one of the
+    /// concrete choices above — per matrix digest × solver ×
+    /// nrhs-bucket, digest-cached in the registry — before grouping or
+    /// the format dispatch ever sees it, so an `Auto` request merges
+    /// with hand-picked requests for the same configuration.
+    Auto,
 }
 
 /// Hashable fingerprint of a [`SteppedParams`]: the f64 thresholds are
@@ -168,7 +175,9 @@ impl FormatChoice {
             FormatChoice::Fixed { format: ValueFormat::GseSem(_), k } => Some(*k),
             FormatChoice::Stepped { k, .. } => Some(*k),
             FormatChoice::Ir { k } => Some(*k),
-            FormatChoice::Fixed { .. } | FormatChoice::SteppedCopy { .. } => None,
+            FormatChoice::Fixed { .. } | FormatChoice::SteppedCopy { .. } | FormatChoice::Auto => {
+                None
+            }
         }
     }
 
@@ -194,6 +203,9 @@ impl FormatChoice {
                 FormatKey::SteppedCopy { params: params.into() }
             }
             FormatChoice::Ir { k } => FormatKey::Ir { k: *k },
+            FormatChoice::Auto => {
+                unreachable!("Auto resolves to a concrete choice before grouping")
+            }
         }
     }
 }
@@ -307,6 +319,25 @@ fn dispatch_inner(
     cached: Option<(&MatrixRegistry, &MatrixHandle)>,
     metrics: Option<&Metrics>,
 ) -> Result<SolveResult, ServiceError> {
+    // an Auto choice resolves here on the one-shot path (the serving
+    // path resolves in the intake flusher, before grouping) at batch
+    // width 1 — digest-cached when a registry is present
+    let resolved;
+    let req = match req.format {
+        FormatChoice::Auto => {
+            let choice = crate::coordinator::policy::resolve_dispatch(
+                cached,
+                &req.a,
+                req.solver,
+                &req.precond,
+                1,
+                metrics,
+            );
+            resolved = SolveRequest { format: choice, ..req.clone() };
+            &resolved
+        }
+        _ => req,
+    };
     if matches!(req.precond, Precond::Sainv(_)) && !matches!(req.format, FormatChoice::Ir { .. })
     {
         return Err(ServiceError::Registry(crate::util::error::Error::msg(
@@ -337,6 +368,15 @@ fn dispatch_inner(
             let (out, _, _) = run_stepped(g, *params, |op, monitor| {
                 run_solver_monitored(req, op, &b, monitor)
             });
+            // feed the policy's online ladder-depth refinement
+            if let Some((_, h)) = cached {
+                crate::coordinator::policy::record_switches(
+                    h.digest(),
+                    req.solver,
+                    out.iters,
+                    &out.switches,
+                );
+            }
             (out, "GSE-SEM".to_string())
         }
         FormatChoice::SteppedCopy { params } => {
@@ -367,6 +407,9 @@ fn dispatch_inner(
             let opts = IrGmresOpts::for_caps(req.tol, req.max_iters);
             let out = ir_gmres_solve(&g, &m, &b, &opts);
             (out, ir_label(&req.precond).to_string())
+        }
+        FormatChoice::Auto => {
+            unreachable!("Auto resolved to a concrete choice at the top of dispatch_inner")
         }
     };
     // the paper's reported residual: against the FP64 matrix

@@ -5,12 +5,15 @@
 //! priorities, cancellation), a typed failure taxonomy ([`error`]), a
 //! sharded content-addressed operator registry ([`registry`]) with disk
 //! spill of evicted encodes (the `spill` codec) — holding fixed-format
-//! operators, shared GSE encodes, **and** SAINV preconditioner factors
-//! (built fallibly, exactly once per digest × params) — the
-//! [`SolverPool`] batch wrapper with same-matrix multi-RHS merging, a
-//! metrics registry with serializable snapshots ([`metrics`]), and the
-//! CLI plumbing that runs the experiment suite and the `serve` trace
-//! replay / soak harness. No request-path python anywhere.
+//! operators, shared GSE encodes, SAINV preconditioner factors
+//! (built fallibly, exactly once per digest × params), **and**
+//! auto-format policy decisions ([`policy`]: entropy + byte-model
+//! driven [`FormatChoice::Auto`] resolution, cached per digest ×
+//! solver × nrhs bucket) — the [`SolverPool`] batch wrapper with
+//! same-matrix multi-RHS merging, a metrics registry with serializable
+//! snapshots ([`metrics`]), and the CLI plumbing that runs the
+//! experiment suite and the `serve` trace replay / soak harness. No
+//! request-path python anywhere.
 
 pub mod registry;
 pub mod intake;
@@ -18,6 +21,7 @@ pub mod jobs;
 pub mod error;
 pub mod metrics;
 pub mod cli;
+pub mod policy;
 pub(crate) mod spill;
 
 pub use crate::solvers::{Precond, SainvParams};
@@ -25,4 +29,5 @@ pub use error::ServiceError;
 pub use intake::{ServiceConfig, SolveSpec, SolveTicket, SolverService};
 pub use jobs::{FormatChoice, RhsSpec, SolveRequest, SolveResult, SolverKind, SolverPool};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use policy::PolicyDecision;
 pub use registry::{MatrixHandle, MatrixRegistry, RegistryStats};

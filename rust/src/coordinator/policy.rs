@@ -1,0 +1,570 @@
+//! Entropy-driven automatic format selection — the paper's "exponent
+//! entropy is far below the 11 bits IEEE spends on it" observation
+//! (§II, Fig. 1a) turned into a serving-path policy.
+//!
+//! Every caller used to pick [`FormatChoice`] by hand. With
+//! [`FormatChoice::Auto`] the coordinator decides instead, per
+//! registered matrix, from three inputs:
+//!
+//! 1. **Exponent entropy and dynamic range** of the matrix non-zeros
+//!    *and* the reference right-hand side (`b = A·1`, so the analysis
+//!    is a pure function of the matrix content) via
+//!    [`crate::formats::entropy::analyze`]. They decide the GSE group
+//!    count `k` (smallest table covering [`COVERAGE_TARGET`] of the
+//!    exponent population, [`GseTable::auto_k`]) and whether a
+//!    lowp/head rung is safe at all: populations wider than the safe
+//!    thresholds refuse a head start (the stepped ladder escalates
+//!    from the first residual check instead), and populations beyond
+//!    the hard thresholds get plain fp64.
+//! 2. **The [`crate::spmv::traffic`] byte model** at the request's
+//!    batch width, ranking fp64 against the GSE head rung with the
+//!    k-exact table bytes, per-nnz decode cost, k staging overhead and
+//!    table-miss scan penalty. Wide batches legitimately flip the
+//!    decision to fp64: RHS traffic dominates and the format stops
+//!    mattering (modeled speedup below [`MIN_MODELED_SPEEDUP`]).
+//! 3. **Observed stepped switch logs** ([`record_switches`], fed by
+//!    every registry-backed stepped solve): when a digest's solves
+//!    mostly escalate off the head rung in their first quarter, the
+//!    ladder is not paying for its low-precision start and the policy
+//!    collapses it to fp64 for that digest × solver.
+//!
+//! Decisions are **cached in the [`MatrixRegistry`]** per digest ×
+//! solver × nrhs-bucket (power-of-two widths) through the same
+//! latch/LRU/spill machinery as operators: computed exactly once under
+//! concurrency, byte-charged, evictable and restorable from disk.
+//! Resolution happens *before* intake grouping keys are formed, so an
+//! Auto request merges with hand-picked requests for the same
+//! configuration. Outcomes surface as `policy.decisions` /
+//! `policy.cache_hits` / `policy.fallbacks` metrics.
+
+use crate::coordinator::jobs::{FormatChoice, RhsSpec, SolverKind, DEFAULT_K};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::{MatrixHandle, MatrixRegistry};
+use crate::formats::entropy;
+use crate::formats::gse::ExpHistogram;
+use crate::formats::{GseTable, Precision, ValueFormat};
+use crate::solvers::sainv::Precond;
+use crate::solvers::stepped::SteppedParams;
+use crate::sparse::csr::{Csr, MatrixDigest};
+use crate::sparse::stats::matrix_stats;
+use crate::spmv::traffic::{k_overhead_time, V100};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Above this exponent range (bits between the largest and smallest
+/// non-zero magnitude), the head/lowp rung is refused as a starting
+/// point and the ladder escalates from the first check.
+pub const SAFE_EXP_RANGE_BITS: f64 = 24.0;
+
+/// Above this exponent-field entropy (bits), same refusal.
+pub const SAFE_EXP_ENTROPY_BITS: f64 = 4.5;
+
+/// Beyond this range the population is treated as fp64-only — no GSE
+/// rung (subnormal-heavy or wildly ill-scaled instances land here).
+pub const HARD_EXP_RANGE_BITS: f64 = 48.0;
+
+/// Beyond this exponent entropy, same fp64-only fallback.
+pub const HARD_EXP_ENTROPY_BITS: f64 = 6.0;
+
+/// Exponent-population coverage the auto-sized GSE table must reach
+/// ([`GseTable::auto_k`] picks the smallest k achieving it).
+pub const COVERAGE_TARGET: f64 = 0.99;
+
+/// Minimum modeled head-rung speedup over fp64 for a GSE choice to be
+/// worth the table + decode overhead at the request's batch width.
+pub const MIN_MODELED_SPEEDUP: f64 = 1.02;
+
+/// Row count at which the stepped controller runs the paper's full
+/// iteration schedule; smaller systems shrink it proportionally
+/// ([`SteppedParams::scaled`], floored at [`MIN_PARAM_SCALE`]).
+const PARAM_SCALE_ROWS: f64 = 150_000.0;
+const MIN_PARAM_SCALE: f64 = 0.005;
+
+/// Observed solves required before switch-log feedback may override
+/// the entropy/byte-model decision (keeps decisions deterministic
+/// until the evidence is real).
+const FEEDBACK_MIN_SOLVES: u32 = 3;
+
+/// Per-nnz bit-scan cost (seconds) for values whose exponent misses
+/// the shared table — mirrors [`crate::spmv::traffic::gse_head_time_at_k`].
+const MISS_SCAN_S: f64 = 0.004e-9;
+
+/// One resolved auto-format decision (see module docs). `rationale` is
+/// a human-readable account of which tier fired and why — it rides
+/// spill round-trips so a restored decision still explains itself.
+#[derive(Clone, Debug)]
+pub struct PolicyDecision {
+    /// The concrete choice (never [`FormatChoice::Auto`]).
+    pub choice: FormatChoice,
+    /// Why: the decision inputs and the tier that fired.
+    pub rationale: String,
+    /// True when a safety tier fired (hard/safe threshold exceeded) —
+    /// exported as the `policy.fallbacks` counter.
+    pub fallback: bool,
+}
+
+impl PolicyDecision {
+    /// Resident size charged against the registry byte budget.
+    pub fn encoded_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.rationale.len()
+    }
+}
+
+/// Batch widths are bucketed to powers of two so nearby widths share
+/// one cached decision (the byte model varies slowly in nrhs).
+pub fn nrhs_bucket(nrhs: usize) -> usize {
+    nrhs.max(1).next_power_of_two()
+}
+
+#[derive(Clone, Copy, Default)]
+struct LadderFeedback {
+    solves: u32,
+    early_full: u32,
+}
+
+/// Process-wide switch-log accumulator. Keyed by digest × solver, like
+/// the cached decisions it refines; a plain mutex is fine — recording
+/// is a few loads per completed stepped solve.
+fn feedback() -> &'static Mutex<HashMap<(MatrixDigest, SolverKind), LadderFeedback>> {
+    static FEEDBACK: OnceLock<Mutex<HashMap<(MatrixDigest, SolverKind), LadderFeedback>>> =
+        OnceLock::new();
+    FEEDBACK.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Feed one completed stepped solve's escalation trace into the online
+/// ladder-depth refinement: a switch to the full rung (tag ≥ 3) within
+/// the first quarter of the solve means the low-precision start bought
+/// almost nothing. Called by the dispatch and intake stepped paths.
+pub fn record_switches(
+    digest: MatrixDigest,
+    solver: SolverKind,
+    iters: usize,
+    switches: &[(usize, u8)],
+) {
+    let early = switches.iter().any(|&(it, tag)| tag >= 3 && it.saturating_mul(4) <= iters);
+    let mut map = feedback().lock().unwrap();
+    let e = map.entry((digest, solver)).or_default();
+    e.solves = e.solves.saturating_add(1);
+    if early {
+        e.early_full = e.early_full.saturating_add(1);
+    }
+}
+
+/// Whether observed solves say the ladder's low start pays for this
+/// digest × solver. Optimistic until [`FEEDBACK_MIN_SOLVES`] solves
+/// are on record; after that, a majority of early full-escalations
+/// collapses the ladder.
+fn ladder_pays(digest: MatrixDigest, solver: SolverKind) -> bool {
+    let map = feedback().lock().unwrap();
+    match map.get(&(digest, solver)) {
+        Some(f) if f.solves >= FEEDBACK_MIN_SOLVES => f.early_full * 2 < f.solves,
+        _ => true,
+    }
+}
+
+/// Modeled per-SpMV time of a format choice at a batch width — the
+/// ranking function behind the policy's traffic tier, public so the
+/// `ablation_autoformat` bench can report the same numbers it acted
+/// on. Stepped/IR choices are modeled at their head rung (the rung
+/// the ladder is meant to spend its bandwidth-bound iterations on);
+/// an unresolved `Auto` models as fp64.
+pub fn modeled_time(a: &Csr, choice: &FormatChoice, nrhs: usize) -> f64 {
+    let nnz = a.nnz();
+    let nrows = a.nrows;
+    let nrhs = nrhs.max(1);
+    let gse = |level: Precision, k: usize| {
+        let mut hist = ExpHistogram::new();
+        hist.push_all(&a.vals);
+        let hit = hist.topk_coverage(k);
+        V100.spmv_multi_time_at_k(nnz, nrows, ValueFormat::GseSem(level), nrhs, k)
+            + k_overhead_time(&V100, k, nnz)
+            + nnz as f64 * (1.0 - hit).max(0.0) * MISS_SCAN_S
+    };
+    match choice {
+        FormatChoice::Fixed { format: ValueFormat::GseSem(level), k } => gse(*level, (*k).max(1)),
+        FormatChoice::Fixed { format, .. } => {
+            V100.spmv_multi_time_at_k(nnz, nrows, *format, nrhs, 0)
+        }
+        FormatChoice::Stepped { k, .. } | FormatChoice::Ir { k } => {
+            gse(Precision::Head, (*k).max(1))
+        }
+        FormatChoice::SteppedCopy { .. } => {
+            V100.spmv_multi_time_at_k(nnz, nrows, ValueFormat::Fp32, nrhs, 0)
+        }
+        FormatChoice::Auto => V100.spmv_multi_time_at_k(nnz, nrows, ValueFormat::Fp64, nrhs, 0),
+    }
+}
+
+/// Stepped controller parameters for a solver, with the iteration
+/// schedule scaled to the system size (deterministic per matrix shape,
+/// so auto and repeated requests agree bit-for-bit).
+fn stepped_params(solver: SolverKind, nrows: usize) -> SteppedParams {
+    let base = match solver {
+        SolverKind::Gmres => SteppedParams::gmres_paper(),
+        SolverKind::Cg | SolverKind::Bicgstab => SteppedParams::cg_paper(),
+    };
+    base.scaled((nrows as f64 / PARAM_SCALE_ROWS).clamp(MIN_PARAM_SCALE, 1.0))
+}
+
+/// Compute a decision without any cache — the pure function the cached
+/// path memoizes. Public for benches and tests that want the policy's
+/// answer outside a registry; `nrhs` is bucketed exactly like the
+/// cached path, so the two always agree.
+pub fn decide(a: &Csr, solver: SolverKind, nrhs: usize) -> PolicyDecision {
+    compute(a, a.digest(), solver, nrhs_bucket(nrhs))
+}
+
+/// The registry-cached decision for `(handle, solver, nrhs bucket)`:
+/// computed once per key under concurrency (latch path), LRU-charged
+/// and spill-safe. Counters: a fresh compute is `policy.decisions`
+/// (+`policy.fallbacks` when a safety tier fired); anything served
+/// from the cache — including a spill restore — is `policy.cache_hits`.
+pub fn decide_cached(
+    reg: &MatrixRegistry,
+    h: &MatrixHandle,
+    solver: SolverKind,
+    nrhs: usize,
+    metrics: Option<&Metrics>,
+) -> Arc<PolicyDecision> {
+    let bucket = nrhs_bucket(nrhs);
+    let (d, built) =
+        reg.policy(h, solver, bucket, metrics, || compute(h.matrix(), h.digest(), solver, bucket));
+    if let Some(m) = metrics {
+        if built {
+            m.incr("policy.decisions");
+            if d.fallback {
+                m.incr("policy.fallbacks");
+            }
+        } else {
+            m.incr("policy.cache_hits");
+        }
+    }
+    d
+}
+
+/// Resolve an [`FormatChoice::Auto`] request to its concrete choice —
+/// the single entry point shared by one-shot dispatch and the intake
+/// flusher. SAINV preconditioning only rides the IR format, so that
+/// pairing resolves directly (forced by the precond spec, not the
+/// value population); everything else goes through the cached policy
+/// when a registry is present, or a fresh [`decide`] when not.
+pub(crate) fn resolve_dispatch(
+    cached: Option<(&MatrixRegistry, &MatrixHandle)>,
+    a: &Arc<Csr>,
+    solver: SolverKind,
+    precond: &Precond,
+    nrhs: usize,
+    metrics: Option<&Metrics>,
+) -> FormatChoice {
+    if matches!(precond, Precond::Sainv(_)) {
+        if let Some(m) = metrics {
+            m.incr("policy.decisions");
+        }
+        return FormatChoice::Ir { k: DEFAULT_K };
+    }
+    match cached {
+        Some((reg, h)) => decide_cached(reg, h, solver, nrhs, metrics).choice.clone(),
+        None => {
+            let d = decide(a, solver, nrhs);
+            if let Some(m) = metrics {
+                m.incr("policy.decisions");
+                if d.fallback {
+                    m.incr("policy.fallbacks");
+                }
+            }
+            d.choice
+        }
+    }
+}
+
+/// The decision function itself (see module docs for the three tiers).
+fn compute(a: &Csr, digest: MatrixDigest, solver: SolverKind, bucket: usize) -> PolicyDecision {
+    let stats = matrix_stats(a);
+    if stats.nnz == 0 || stats.min_abs_nonzero == 0.0 {
+        return PolicyDecision {
+            choice: FormatChoice::fixed(ValueFormat::Fp64),
+            rationale: "degenerate value population (no finite non-zeros): fp64".into(),
+            fallback: true,
+        };
+    }
+    // the reference RHS is b = A·1 — a pure function of the matrix
+    // content, so folding its dynamic range into the decision keeps
+    // the result cacheable per digest
+    let b = RhsSpec::AxOnes.build(a);
+    let rhs = entropy::analyze(&b);
+    let (mut rhs_min, mut rhs_max) = (f64::INFINITY, 0f64);
+    for &v in &b {
+        let x = v.abs();
+        if x > 0.0 && x.is_finite() {
+            rhs_min = rhs_min.min(x);
+            rhs_max = rhs_max.max(x);
+        }
+    }
+    let mat_range = (stats.max_abs / stats.min_abs_nonzero).log2();
+    let rhs_range =
+        if rhs_min.is_finite() && rhs_min > 0.0 { (rhs_max / rhs_min).log2() } else { 0.0 };
+    let range = mat_range.max(rhs_range);
+    let exp_entropy = stats.entropy.exponent_bits.max(rhs.exponent_bits);
+    let mut hist = ExpHistogram::new();
+    hist.push_all(&a.vals);
+    let k = GseTable::auto_k(&hist, COVERAGE_TARGET);
+    let coverage = hist.topk_coverage(k);
+    if range > HARD_EXP_RANGE_BITS || exp_entropy > HARD_EXP_ENTROPY_BITS {
+        return PolicyDecision {
+            choice: FormatChoice::fixed(ValueFormat::Fp64),
+            rationale: format!(
+                "exponent range {range:.1} bits / entropy {exp_entropy:.2} bits beyond the hard \
+                 thresholds ({HARD_EXP_RANGE_BITS}/{HARD_EXP_ENTROPY_BITS}): every reduced rung \
+                 is unsafe, fp64"
+            ),
+            fallback: true,
+        };
+    }
+    let params = stepped_params(solver, a.nrows);
+    if range > SAFE_EXP_RANGE_BITS || exp_entropy > SAFE_EXP_ENTROPY_BITS {
+        return PolicyDecision {
+            choice: FormatChoice::Stepped { k, params },
+            rationale: format!(
+                "exponent range {range:.1} bits / entropy {exp_entropy:.2} bits above the safe \
+                 thresholds ({SAFE_EXP_RANGE_BITS}/{SAFE_EXP_ENTROPY_BITS}): head start refused, \
+                 escalating GSE ladder at k={k}"
+            ),
+            fallback: true,
+        };
+    }
+    let t64 = modeled_time(a, &FormatChoice::fixed(ValueFormat::Fp64), bucket);
+    let ladder = FormatChoice::Stepped { k, params };
+    let t_head = modeled_time(a, &ladder, bucket);
+    let speedup = t64 / t_head;
+    if speedup < MIN_MODELED_SPEEDUP {
+        return PolicyDecision {
+            choice: FormatChoice::fixed(ValueFormat::Fp64),
+            rationale: format!(
+                "modeled head speedup {speedup:.3}x at nrhs {bucket} below \
+                 {MIN_MODELED_SPEEDUP}x (table + decode overhead not amortized): fp64"
+            ),
+            fallback: false,
+        };
+    }
+    if !ladder_pays(digest, solver) {
+        return PolicyDecision {
+            choice: FormatChoice::fixed(ValueFormat::Fp64),
+            rationale: "observed stepped switch logs escalate off the head rung early for this \
+                        digest: ladder depth collapsed to fp64"
+                .into(),
+            fallback: false,
+        };
+    }
+    PolicyDecision {
+        choice: ladder,
+        rationale: format!(
+            "exponent entropy {exp_entropy:.2} bits over {} binades, top-{k} coverage \
+             {coverage:.3}, modeled head speedup {speedup:.2}x at nrhs {bucket}: stepped GSE \
+             ladder",
+            stats.num_distinct_exponents
+        ),
+        fallback: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::jobs::{dispatch_cached, SolveRequest};
+    use crate::solvers::SainvParams;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::gen::corpus::{cg_set, gmres_set, CorpusSize};
+    use crate::sparse::gen::poisson::poisson2d;
+    use crate::sparse::gen::randmat::{exp_controlled, ExpLaw};
+
+    #[test]
+    fn nrhs_buckets_round_up_to_powers_of_two() {
+        assert_eq!(nrhs_bucket(0), 1);
+        assert_eq!(nrhs_bucket(1), 1);
+        assert_eq!(nrhs_bucket(3), 4);
+        assert_eq!(nrhs_bucket(8), 8);
+        assert_eq!(nrhs_bucket(9), 16);
+    }
+
+    #[test]
+    fn narrow_population_picks_the_stepped_gse_ladder() {
+        // poisson has two distinct exponents: tiny table, safe head rung
+        let a = poisson2d(16, 16);
+        let d = decide(&a, SolverKind::Cg, 1);
+        assert!(!d.fallback, "{}", d.rationale);
+        match &d.choice {
+            FormatChoice::Stepped { k, .. } => {
+                assert!(*k <= 8, "two-exponent population, got k={k}")
+            }
+            other => panic!("expected the stepped ladder, got {other:?}"),
+        }
+        assert!(d.rationale.contains("stepped"), "{}", d.rationale);
+    }
+
+    #[test]
+    fn wide_exponent_population_refuses_low_rungs() {
+        // sigma-30 binade spread: range and entropy far beyond the
+        // hard thresholds — the policy must never start low here
+        let a = exp_controlled(40, 40, 4, ExpLaw::Gaussian { e0: 0, sigma: 30.0 }, 7);
+        let d = decide(&a, SolverKind::Gmres, 1);
+        assert!(d.fallback, "{}", d.rationale);
+        match &d.choice {
+            FormatChoice::Fixed { format, .. } => {
+                assert_eq!(*format, ValueFormat::Fp64, "only fp64 is safe this wide")
+            }
+            FormatChoice::Stepped { .. } => {} // safe-tier refusal: ladder from the bottom
+            other => panic!("wide population must not pick {other:?}"),
+        }
+    }
+
+    #[test]
+    fn subnormal_entries_force_the_hard_fp64_fallback() {
+        // subnormal off-diagonals put ~1000 bits between the largest
+        // and smallest magnitude; before the entropy/stats subnormal
+        // fix these values were invisible to the analysis
+        let sub = f64::MIN_POSITIVE / 8.0;
+        let mut c = Coo::new(3, 3);
+        for i in 0..3 {
+            c.push(i, i, 1.0);
+        }
+        c.push(0, 1, sub);
+        c.push(1, 0, sub);
+        let a = c.to_csr();
+        let d = decide(&a, SolverKind::Cg, 1);
+        assert!(d.fallback, "{}", d.rationale);
+        assert!(
+            matches!(d.choice, FormatChoice::Fixed { format: ValueFormat::Fp64, .. }),
+            "{:?}",
+            d.choice
+        );
+    }
+
+    #[test]
+    fn wide_batches_amortize_away_the_gse_advantage() {
+        // at huge nrhs the RHS traffic dominates and the modeled head
+        // speedup collapses toward 1: auto legitimately picks fp64
+        let a = poisson2d(16, 16);
+        let d = decide(&a, SolverKind::Cg, 4096);
+        assert!(
+            matches!(d.choice, FormatChoice::Fixed { format: ValueFormat::Fp64, .. }),
+            "{:?}",
+            d.choice
+        );
+        assert!(!d.fallback, "a modeled ranking is not a safety fallback");
+    }
+
+    #[test]
+    fn early_full_escalations_collapse_the_ladder() {
+        let a = poisson2d(14, 14); // digest unique to this test
+        let digest = a.digest();
+        assert!(matches!(decide(&a, SolverKind::Cg, 1).choice, FormatChoice::Stepped { .. }));
+        // three observed solves, each at the full rung within the
+        // first quarter: the low start is not paying
+        for _ in 0..3 {
+            record_switches(digest, SolverKind::Cg, 400, &[(30, 2), (60, 3)]);
+        }
+        let d = decide(&a, SolverKind::Cg, 1);
+        assert!(
+            matches!(d.choice, FormatChoice::Fixed { format: ValueFormat::Fp64, .. }),
+            "{:?}",
+            d.choice
+        );
+        assert!(d.rationale.contains("switch logs"), "{}", d.rationale);
+        // feedback is keyed per solver: the GMRES ladder is untouched
+        assert!(matches!(decide(&a, SolverKind::Gmres, 1).choice, FormatChoice::Stepped { .. }));
+        // late escalations do not count against the ladder
+        let late = poisson2d(15, 15);
+        for _ in 0..4 {
+            record_switches(late.digest(), SolverKind::Cg, 400, &[(350, 3)]);
+        }
+        assert!(matches!(decide(&late, SolverKind::Cg, 1).choice, FormatChoice::Stepped { .. }));
+    }
+
+    #[test]
+    fn sainv_precond_resolves_auto_to_ir() {
+        let a = Arc::new(poisson2d(6, 6));
+        let m = Metrics::new();
+        let choice = resolve_dispatch(
+            None,
+            &a,
+            SolverKind::Gmres,
+            &Precond::Sainv(SainvParams::default()),
+            1,
+            Some(&m),
+        );
+        assert!(matches!(choice, FormatChoice::Ir { k: DEFAULT_K }), "{choice:?}");
+        assert_eq!(m.counter("policy.decisions"), 1);
+    }
+
+    #[test]
+    fn corpus_decisions_are_deterministic_and_cache_on_second_request() {
+        let size = CorpusSize::Small;
+        let reg = MatrixRegistry::new();
+        let m = Metrics::new();
+        let mut total = 0u64;
+        for (set, solver) in
+            [(cg_set(size), SolverKind::Cg), (gmres_set(size), SolverKind::Gmres)]
+        {
+            for nm in &set {
+                let a = Arc::new(nm.a.clone());
+                let h = reg.register(&a);
+                let d1 = decide_cached(&reg, &h, solver, 1, Some(&m));
+                let d2 = decide_cached(&reg, &h, solver, 1, Some(&m));
+                assert!(
+                    Arc::ptr_eq(&d1, &d2),
+                    "{}: second request must serve the cached decision",
+                    nm.name
+                );
+                assert!(
+                    !matches!(d1.choice, FormatChoice::Auto),
+                    "{}: every corpus matrix resolves concretely",
+                    nm.name
+                );
+                // a fresh uncached compute agrees exactly
+                let fresh = decide(&nm.a, solver, 1);
+                assert_eq!(fresh.choice.group_key(), d1.choice.group_key(), "{}", nm.name);
+                assert_eq!(fresh.rationale, d1.rationale, "{}", nm.name);
+                assert_eq!(fresh.fallback, d1.fallback, "{}", nm.name);
+                total += 1;
+            }
+        }
+        assert_eq!(m.counter("policy.decisions"), total);
+        assert_eq!(m.counter("policy.cache_hits"), total);
+    }
+
+    #[test]
+    fn auto_dispatch_resolves_and_caches() {
+        let a = Arc::new(poisson2d(12, 12));
+        let reg = MatrixRegistry::new();
+        let m = Metrics::new();
+        let req = SolveRequest::new("auto", Arc::clone(&a), SolverKind::Cg, FormatChoice::Auto);
+        let r1 = dispatch_cached(&req, Some(&reg), Some(&m)).unwrap();
+        assert!(r1.outcome.converged);
+        assert_eq!(r1.format_label, "GSE-SEM", "narrow population resolves to the ladder");
+        assert_eq!(m.counter("policy.decisions"), 1);
+        assert_eq!(m.counter("policy.fallbacks"), 0);
+        let r2 = dispatch_cached(&req, Some(&reg), Some(&m)).unwrap();
+        assert_eq!(m.counter("policy.cache_hits"), 1);
+        assert_eq!(r1.outcome.x, r2.outcome.x);
+        // registry-less dispatch resolves the same choice bitwise
+        let r3 = dispatch_cached(&req, None, None).unwrap();
+        assert_eq!(r3.outcome.x, r1.outcome.x);
+    }
+
+    #[test]
+    fn modeled_time_ranks_formats_sanely() {
+        let a = poisson2d(24, 24);
+        let t64 = modeled_time(&a, &FormatChoice::fixed(ValueFormat::Fp64), 1);
+        let stepped = FormatChoice::Stepped {
+            k: 2,
+            params: SteppedParams::cg_paper().scaled(0.01),
+        };
+        let t_head = modeled_time(&a, &stepped, 1);
+        assert!(t_head < t64, "head rung must model faster at nrhs 1");
+        // and the gap closes as the batch widens
+        let r1 = modeled_time(&a, &stepped, 1) / t64;
+        let r64 = modeled_time(&a, &stepped, 64)
+            / modeled_time(&a, &FormatChoice::fixed(ValueFormat::Fp64), 64);
+        assert!(r64 > r1, "wider batches amortize the format difference");
+    }
+}

@@ -38,7 +38,9 @@
 //! independent of them, so concurrent holders racing on a budget is
 //! benign; spill round-trips restore operators at budget 1.
 
+use crate::coordinator::jobs::SolverKind;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::PolicyDecision;
 use crate::formats::ValueFormat;
 use crate::solvers::sainv::{SainvFactors, SainvParams, SainvParamsKey};
 use crate::sparse::csr::{Csr, MatrixDigest};
@@ -112,6 +114,9 @@ pub(crate) enum Key {
     Gse { digest: MatrixDigest, k: usize },
     /// SAINV factors: one entry per (matrix content, sainv params).
     Sainv { digest: MatrixDigest, params: SainvParamsKey },
+    /// Auto-format policy decision: one entry per (matrix content,
+    /// solver, nrhs bucket) — see [`crate::coordinator::policy`].
+    Policy { digest: MatrixDigest, solver: SolverKind, bucket: usize },
 }
 
 /// What a cache entry holds (`pub(crate)` for the [`super::spill`]
@@ -121,6 +126,7 @@ pub(crate) enum CachedVal {
     Op(Arc<dyn SpmvOp>),
     Gse(Arc<GseCsr>),
     Sainv(Arc<SainvFactors>),
+    Policy(Arc<PolicyDecision>),
 }
 
 impl CachedVal {
@@ -129,6 +135,7 @@ impl CachedVal {
             CachedVal::Op(op) => op.encoded_bytes(),
             CachedVal::Gse(m) => m.encoded_bytes(),
             CachedVal::Sainv(f) => f.encoded_bytes(),
+            CachedVal::Policy(d) => d.encoded_bytes(),
         }
     }
 
@@ -150,6 +157,13 @@ impl CachedVal {
         match self {
             CachedVal::Sainv(f) => f,
             _ => unreachable!("sainv keys hold factors"),
+        }
+    }
+
+    fn into_policy(self) -> Arc<PolicyDecision> {
+        match self {
+            CachedVal::Policy(d) => d,
+            _ => unreachable!("policy keys hold decisions"),
         }
     }
 }
@@ -416,6 +430,31 @@ impl MatrixRegistry {
             Ok(CachedVal::Sainv(Arc::new(f)))
         })
         .map(CachedVal::into_sainv)
+    }
+
+    /// The auto-format [`PolicyDecision`] for `(handle, solver, nrhs
+    /// bucket)`, computing it on a miss. Decisions ride the same
+    /// latch/LRU/spill machinery as operators: one compute under
+    /// concurrency, byte-charged (they are tiny), evictable and
+    /// restorable. Returns `(decision, freshly_built)` so the caller
+    /// can split `policy.decisions` from `policy.cache_hits` — a
+    /// spill restore counts as a hit (the compute was skipped).
+    pub(crate) fn policy(
+        &self,
+        h: &MatrixHandle,
+        solver: SolverKind,
+        bucket: usize,
+        metrics: Option<&Metrics>,
+        build: impl FnOnce() -> PolicyDecision,
+    ) -> (Arc<PolicyDecision>, bool) {
+        let built = std::cell::Cell::new(false);
+        let d = self
+            .get_or_build(Key::Policy { digest: h.digest(), solver, bucket }, metrics, || {
+                built.set(true);
+                CachedVal::Policy(Arc::new(build()))
+            })
+            .into_policy();
+        (d, built.get())
     }
 
     /// Aggregate hit/miss/eviction/byte counters.

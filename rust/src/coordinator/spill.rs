@@ -21,9 +21,12 @@
 //! to f64. A restored operator is bitwise indistinguishable from the
 //! original encode.
 
+use super::jobs::{FormatChoice, SolverKind};
+use super::policy::PolicyDecision;
 use super::registry::{CachedVal, Key};
 use crate::formats::{GseTable, Precision, ValueFormat};
 use crate::solvers::sainv::{SainvFactors, SainvParamsKey};
+use crate::solvers::stepped::SteppedParams;
 use crate::sparse::csr::Csr;
 use crate::spmv::fp64::Fp64Csr;
 use crate::spmv::lowp::{LowpCsr, StoredValue};
@@ -58,8 +61,19 @@ fn file_path(dir: &Path, key: &Key) -> PathBuf {
         Key::Sainv { digest, params } => {
             format!("{}-sainv{}d{:016x}.spill", digest.to_hex(), params.k, params.drop_bits)
         }
+        Key::Policy { digest, solver, bucket } => {
+            format!("{}-policy{}n{}.spill", digest.to_hex(), solver_tag(*solver), bucket)
+        }
     };
     dir.join(name)
+}
+
+fn solver_tag(s: SolverKind) -> &'static str {
+    match s {
+        SolverKind::Cg => "cg",
+        SolverKind::Gmres => "gm",
+        SolverKind::Bicgstab => "bi",
+    }
 }
 
 /// Serialize an evicted entry. Best-effort: returns `false` (and writes
@@ -79,6 +93,7 @@ fn try_write(dir: &Path, path: &Path, v: &CachedVal, build_s: f64) -> Result<()>
         CachedVal::Op(op) => op.spill_bytes().context("operator opts out of spill")?,
         CachedVal::Gse(g) => encode_gse(g),
         CachedVal::Sainv(f) => encode_sainv(f),
+        CachedVal::Policy(d) => encode_policy(d)?,
     };
     let mut w = crate::util::codec::ByteWriter::new();
     w.put_u64(MAGIC);
@@ -147,6 +162,7 @@ fn try_decode(key: &Key, bytes: &[u8]) -> Result<(CachedVal, f64)> {
         Key::Gse { .. } => CachedVal::Gse(Arc::new(decode_gse(&payload)?)),
         Key::Op { format, .. } => CachedVal::Op(decode_op(*format, &payload)?),
         Key::Sainv { params, .. } => CachedVal::Sainv(Arc::new(decode_sainv(&payload, *params)?)),
+        Key::Policy { .. } => CachedVal::Policy(Arc::new(decode_policy(&payload)?)),
     };
     Ok((v, build_s))
 }
@@ -235,6 +251,110 @@ fn decode_sainv(payload: &[u8], key_params: SainvParamsKey) -> Result<SainvFacto
         bail!("inconsistent sainv spill structure");
     }
     Ok(SainvFactors::from_parts(z, wt, inv_d, key_params.params()))
+}
+
+/// Policy payload: tag, fallback flag, the concrete [`FormatChoice`]
+/// (format/k/stepped params bit-for-bit), then the rationale text. A
+/// restored decision must group-key identically to the original so a
+/// post-restore Auto request still merges with hand-picked ones.
+fn encode_policy(d: &PolicyDecision) -> Result<Vec<u8>> {
+    let mut w = crate::util::codec::ByteWriter::new();
+    w.put_u8(spill_tag::POLICY);
+    w.put_u8(d.fallback as u8);
+    match &d.choice {
+        FormatChoice::Fixed { format, k } => {
+            w.put_u8(0);
+            w.put_u8(format_tag(*format));
+            w.put_u64(*k as u64);
+        }
+        FormatChoice::Stepped { k, params } => {
+            w.put_u8(1);
+            w.put_u64(*k as u64);
+            encode_params(&mut w, params);
+        }
+        FormatChoice::SteppedCopy { params } => {
+            w.put_u8(2);
+            encode_params(&mut w, params);
+        }
+        FormatChoice::Ir { k } => {
+            w.put_u8(3);
+            w.put_u64(*k as u64);
+        }
+        FormatChoice::Auto => bail!("Auto is never a concrete policy decision"),
+    }
+    w.put_bytes(d.rationale.as_bytes());
+    Ok(w.into_bytes())
+}
+
+fn decode_policy(payload: &[u8]) -> Result<PolicyDecision> {
+    let mut r = crate::util::codec::ByteReader::new(payload);
+    if r.get_u8()? != spill_tag::POLICY {
+        bail!("spill payload is not a policy decision");
+    }
+    let fallback = r.get_u8()? != 0;
+    let choice = match r.get_u8()? {
+        0 => {
+            let format = format_from_tag(r.get_u8()?)?;
+            FormatChoice::Fixed { format, k: r.get_u64()? as usize }
+        }
+        1 => {
+            let k = r.get_u64()? as usize;
+            FormatChoice::Stepped { k, params: decode_params(&mut r)? }
+        }
+        2 => FormatChoice::SteppedCopy { params: decode_params(&mut r)? },
+        3 => FormatChoice::Ir { k: r.get_u64()? as usize },
+        t => bail!("unknown policy choice tag {t}"),
+    };
+    let rationale = String::from_utf8(r.get_bytes()?)
+        .map_err(|_| crate::util::error::Error::msg("policy rationale is not utf-8"))?;
+    Ok(PolicyDecision { choice, rationale, fallback })
+}
+
+fn format_tag(f: ValueFormat) -> u8 {
+    match f {
+        ValueFormat::Fp64 => 0,
+        ValueFormat::Fp32 => 1,
+        ValueFormat::Fp16 => 2,
+        ValueFormat::Bf16 => 3,
+        ValueFormat::GseSem(Precision::Head) => 4,
+        ValueFormat::GseSem(Precision::HeadTail1) => 5,
+        ValueFormat::GseSem(Precision::Full) => 6,
+    }
+}
+
+fn format_from_tag(t: u8) -> Result<ValueFormat> {
+    Ok(match t {
+        0 => ValueFormat::Fp64,
+        1 => ValueFormat::Fp32,
+        2 => ValueFormat::Fp16,
+        3 => ValueFormat::Bf16,
+        4 => ValueFormat::GseSem(Precision::Head),
+        5 => ValueFormat::GseSem(Precision::HeadTail1),
+        6 => ValueFormat::GseSem(Precision::Full),
+        _ => bail!("unknown value-format tag {t}"),
+    })
+}
+
+fn encode_params(w: &mut crate::util::codec::ByteWriter, p: &SteppedParams) {
+    w.put_u64(p.l as u64);
+    w.put_u64(p.t as u64);
+    w.put_u64(p.m as u64);
+    w.put_u64(p.ndec_limit as u64);
+    w.put_f64(p.rsd_limit);
+    w.put_f64(p.reldec_limit);
+    w.put_f64(p.divergence_factor);
+}
+
+fn decode_params(r: &mut crate::util::codec::ByteReader) -> Result<SteppedParams> {
+    Ok(SteppedParams {
+        l: r.get_u64()? as usize,
+        t: r.get_u64()? as usize,
+        m: r.get_u64()? as usize,
+        ndec_limit: r.get_u64()? as usize,
+        rsd_limit: r.get_f64()?,
+        reldec_limit: r.get_f64()?,
+        divergence_factor: r.get_f64()?,
+    })
 }
 
 fn decode_op(format: ValueFormat, payload: &[u8]) -> Result<Arc<dyn SpmvOp>> {
@@ -395,6 +515,41 @@ mod tests {
         let wrong = SainvParams { drop_tol: 0.25, k: 8 };
         let wrong_key = Key::Sainv { digest: a.digest(), params: wrong.into() };
         assert!(read(&dir, &wrong_key).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn policy_round_trip_is_exact() {
+        let a = Arc::new(poisson2d(5, 5));
+        let dir = tmp_dir("policy");
+        let choices = [
+            FormatChoice::Fixed { format: ValueFormat::GseSem(Precision::Full), k: 16 },
+            FormatChoice::Stepped { k: 4, params: SteppedParams::cg_paper().scaled(0.25) },
+            FormatChoice::Ir { k: 8 },
+        ];
+        for (i, choice) in choices.iter().enumerate() {
+            let d = PolicyDecision {
+                choice: choice.clone(),
+                rationale: format!("test rationale {i}"),
+                fallback: i == 0,
+            };
+            let key =
+                Key::Policy { digest: a.digest(), solver: SolverKind::Cg, bucket: 1 << i };
+            assert!(write(&dir, &key, &CachedVal::Policy(Arc::new(d.clone())), 0.01));
+            let r = read(&dir, &key).expect("restore");
+            let CachedVal::Policy(restored) = r.v else {
+                panic!("policy key restores a decision")
+            };
+            // group-key equality = the restored choice still merges
+            // with the original's groups (params bit-for-bit)
+            assert_eq!(restored.choice.group_key(), choice.group_key());
+            assert_eq!(restored.rationale, d.rationale);
+            assert_eq!(restored.fallback, d.fallback);
+        }
+        // distinct solver/bucket keys name distinct files
+        let k1 = Key::Policy { digest: a.digest(), solver: SolverKind::Cg, bucket: 1 };
+        let k2 = Key::Policy { digest: a.digest(), solver: SolverKind::Gmres, bucket: 1 };
+        assert_ne!(file_path(&dir, &k1), file_path(&dir, &k2));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

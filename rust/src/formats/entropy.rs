@@ -16,14 +16,16 @@ pub struct EntropyReport {
 }
 
 /// Compute the paper's Fig. 1(a) entropies for a set of values.
-/// Zeros and non-finite values are excluded (sparse-matrix non-zeros).
+/// Only true zeros and non-finite values are excluded (sparse-matrix
+/// non-zeros); subnormals count toward `n` and populate the exponent
+/// field 0 bin they actually encode.
 pub fn analyze(xs: &[f64]) -> EntropyReport {
     let mut value_counts: HashMap<u64, u64> = HashMap::new();
     let mut mant_counts: HashMap<u64, u64> = HashMap::new();
     let mut exp_counts = vec![0u64; 2048];
     let mut n = 0usize;
     for &x in xs {
-        if !ieee::is_normal_nonzero(x) {
+        if x == 0.0 || !x.is_finite() {
             continue;
         }
         let p = ieee::split(x);
@@ -81,5 +83,28 @@ mod tests {
         let r = analyze(&[0.0, f64::NAN, f64::INFINITY, 1.0, 2.0]);
         assert_eq!(r.n, 2);
         assert_eq!(r.exponent_bits, 1.0); // two equally likely exponents
+    }
+
+    #[test]
+    fn counts_subnormals_in_the_zero_exponent_bin() {
+        // Regression: subnormals were silently dropped, so an ill-scaled
+        // population reported too-low n and skewed exponent entropy —
+        // exactly the inputs where a format policy must see the full
+        // dynamic range. Subnormals carry exponent field 0.
+        let sub = f64::MIN_POSITIVE / 4.0; // 2^-1024, subnormal
+        debug_assert!(sub.is_subnormal());
+        let xs = [sub, 2.0 * sub, -sub, 1.0, 2.0, 0.0, f64::NAN];
+        let r = analyze(&xs);
+        assert_eq!(r.n, 5, "subnormal non-zeros must count");
+        // exponent population {0: 3, 1023: 1, 1024: 1}
+        assert!(
+            (r.exponent_bits - entropy_from_counts(&[3, 1, 1])).abs() < 1e-12,
+            "exp entropy {}",
+            r.exponent_bits
+        );
+        // an all-subnormal population shares one exponent field
+        let only = analyze(&[sub, 2.0 * sub, 3.0 * sub]);
+        assert_eq!(only.n, 3);
+        assert_eq!(only.exponent_bits, 0.0);
     }
 }

@@ -61,7 +61,10 @@ fn print_usage() {
            spmv     --matrix <name|path.mtx> [--k 8] [--threads N]\n\
                     compare SpMV formats (Fig. 6)\n\
            solve    --matrix <name|path.mtx> --solver cg|gmres|bicgstab\n\
-                    --format fp64|fp32|fp16|bf16|gse-head|gse-t1|gse-full|stepped|stepped-copy|ir\n\
+                    --format auto|fp64|fp32|fp16|bf16|gse-head|gse-t1|gse-full\n\
+                             |stepped|stepped-copy|ir\n\
+                    (auto = entropy + byte-model policy picks per matrix digest,\n\
+                    cached in the registry — see the policy.* metrics)\n\
                     [--precond none|jacobi|sainv] [--drop-tol 0.1]\n\
                     [--k 8] [--nrhs N] [--workers N]  (N > 1 pools N random RHS over\n\
                     --workers threads, 0 = auto; every solver/format combination —\n\
@@ -72,7 +75,7 @@ fn print_usage() {
            serve    [--requests 24] [--window-ms 5] [--batch-width 8] [--stagger-us 300]\n\
                     [--workers 0] [--op-threads 0] [--cache-mb 0] [--queue-depth 0]\n\
                     [--deadline-ms 0] [--spill-dir <dir>] [--metrics-json <path>]\n\
-                    [--matrix <...>] [--solver cg] [--format fp64]\n\
+                    [--matrix <...>] [--solver cg] [--format auto]\n\
                     [--precond none|jacobi|sainv] [--drop-tol 0.1]\n\
                     replay a staggered request trace through the windowed SolverService\n\
                     and report intake/cache metrics (0 = auto workers / unbounded\n\
@@ -218,14 +221,18 @@ fn parse_solver(s: &str) -> Option<SolverKind> {
 
 /// Full format axis shared by `solve` and `serve`: fixed formats, the
 /// two stepped ladders (whose controller thresholds depend on the
-/// solver family), and GMRES-based iterative refinement (`ir`, which
-/// drives its own inner GMRES and accepts every `--precond`).
+/// solver family), GMRES-based iterative refinement (`ir`, which
+/// drives its own inner GMRES and accepts every `--precond`), and
+/// `auto` — the entropy/byte-model-driven policy
+/// ([`gsem::coordinator::policy`]) that picks per matrix digest and
+/// caches the decision in the registry.
 fn parse_format_choice(s: &str, solver: SolverKind, k: usize, scale: f64) -> Option<FormatChoice> {
     let stepped_base = match solver {
         SolverKind::Cg | SolverKind::Bicgstab => SteppedParams::cg_paper(),
         SolverKind::Gmres => SteppedParams::gmres_paper(),
     };
     match s {
+        "auto" => Some(FormatChoice::Auto),
         "stepped" => Some(FormatChoice::Stepped { k, params: stepped_base.scaled(scale) }),
         "stepped-copy" => Some(FormatChoice::SteppedCopy { params: stepped_base.scaled(scale) }),
         "ir" => Some(FormatChoice::Ir { k }),
@@ -436,7 +443,9 @@ fn cmd_serve(cli: &Cli) -> i32 {
         eprintln!("unknown solver {}", cli.get_or("solver", "cg"));
         return 2;
     };
-    let fmt_str = cli.get_or("format", "fp64");
+    // serving default: let the policy pick per digest — hand-picked
+    // formats remain available via --format
+    let fmt_str = cli.get_or("format", "auto");
     let Some(format) = parse_format_choice(fmt_str, solver, k, scale) else {
         eprintln!("unknown format {fmt_str}");
         return 2;
@@ -602,11 +611,18 @@ fn one_shot(
 ///   over two digests: the registry must build each digest's factors
 ///   exactly once (`precond.builds` == digest count) while every
 ///   ticket converges and matches its one-shot dispatch bitwise.
+/// * **E — auto-format policy residency.** Two passes of
+///   `--format auto` traffic over the same digests: the first pass
+///   computes one policy decision per digest (`policy.decisions`), the
+///   second is answered entirely from the registry cache
+///   (`policy.cache_hits`), and every serviced result matches its
+///   one-shot Auto dispatch bitwise.
 ///
 /// Prints one summary line per phase, optionally writes a combined
 /// `--metrics-json` snapshot (`overload` / `deadline_cancel` /
-/// `spill_restore` / `precond` keys), and exits non-zero if any check
-/// fails. `GSEM_BENCH_FAST=1` shrinks the trace for CI smoke runs.
+/// `spill_restore` / `precond` / `policy` keys), and exits non-zero if
+/// any check fails. `GSEM_BENCH_FAST=1` shrinks the trace for CI smoke
+/// runs.
 fn cmd_serve_soak(cli: &Cli) -> i32 {
     let fast = std::env::var("GSEM_BENCH_FAST").is_ok();
     let (queue_depth, cache_kb, stagger_us) = match (
@@ -895,14 +911,80 @@ fn cmd_serve_soak(cli: &Cli) -> i32 {
         if parity_d { "ok" } else { "MISMATCH" }
     );
     let snap_d = svc.metrics().snapshot();
+    drop(svc);
+
+    // -- phase E: auto-format policy residency + one-shot parity
+    let svc = SolverService::manual(ServiceConfig::new().workers(workers));
+    let ehandles: Vec<_> = mats.iter().map(|(_, a)| svc.register(a)).collect();
+    let auto = FormatChoice::Auto;
+    let mut parity_e = true;
+    let mut e_firsts: Vec<Option<SolveResult>> = vec![None; mats.len()];
+    for pass in 0..2usize {
+        for (j, (mname, a)) in mats.iter().enumerate() {
+            let name = format!("{mname}/soak-e");
+            let spec = SolveSpec::new(&name, ehandles[j].clone(), SolverKind::Cg, auto.clone())
+                .rhs(RhsSpec::Random(9900 + j as u64));
+            match svc.submit(spec) {
+                Ok(t) => {
+                    svc.flush();
+                    match t.wait() {
+                        Ok(r) => {
+                            if pass == 0 {
+                                // one-shot Auto dispatch resolves the
+                                // same digest-deterministic decision
+                                match one_shot(&r.name, a, SolverKind::Cg, &auto, 9900 + j as u64)
+                                {
+                                    Some(s) if bits_eq(&r.outcome.x, &s.outcome.x) => {}
+                                    _ => parity_e = false,
+                                }
+                                e_firsts[j] = Some(r);
+                            } else {
+                                match &e_firsts[j] {
+                                    Some(r1) if bits_eq(&r1.outcome.x, &r.outcome.x) => {}
+                                    _ => parity_e = false,
+                                }
+                            }
+                        }
+                        Err(e) => failures.push(format!("phase E: ticket {mname}: {e}")),
+                    }
+                }
+                Err(e) => failures.push(format!("phase E: submit {mname}: {e}")),
+            }
+        }
+    }
+    let decisions = svc.metrics().counter("policy.decisions");
+    let cache_hits = svc.metrics().counter("policy.cache_hits");
+    if decisions != mats.len() as u64 {
+        failures.push(format!(
+            "phase E: expected {} policy decisions (one per digest), got {decisions}",
+            mats.len()
+        ));
+    }
+    if cache_hits != mats.len() as u64 {
+        failures.push(format!(
+            "phase E: expected {} policy cache hits on the second pass, got {cache_hits}",
+            mats.len()
+        ));
+    }
+    if !parity_e {
+        failures.push("phase E: auto-format results diverge across passes/one-shot".into());
+    }
+    println!(
+        "soak E (auto): decisions={decisions} cache_hits={cache_hits} fallbacks={} parity={}",
+        svc.metrics().counter("policy.fallbacks"),
+        if parity_e { "ok" } else { "MISMATCH" }
+    );
+    let snap_e = svc.metrics().snapshot();
 
     if let Some(path) = cli.get("metrics-json") {
         let json = format!(
-            "{{\"overload\":{},\"deadline_cancel\":{},\"spill_restore\":{},\"precond\":{}}}\n",
+            "{{\"overload\":{},\"deadline_cancel\":{},\"spill_restore\":{},\"precond\":{},\
+             \"policy\":{}}}\n",
             snap_a.to_json(),
             snap_b.to_json(),
             snap_c.to_json(),
-            snap_d.to_json()
+            snap_d.to_json(),
+            snap_e.to_json()
         );
         if let Err(e) = std::fs::write(path, json) {
             eprintln!("serve --soak: cannot write {path}: {e}");

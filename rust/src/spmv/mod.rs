@@ -161,6 +161,7 @@ pub(crate) mod spill_tag {
     pub const BF16: u8 = 3;
     pub const GSE: u8 = 4;
     pub const SAINV: u8 = 5;
+    pub const POLICY: u8 = 6;
 }
 
 /// The serial-fallback work threshold every parallel split gates on —

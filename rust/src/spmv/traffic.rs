@@ -36,6 +36,11 @@ pub struct Device {
 pub const V100: Device =
     Device { name: "V100-SXM2", bw: 898e9, gse_decode_ns: 0.0022, widen_ns: 0.0005 };
 
+/// Table size charged by the k-agnostic entry points below — the
+/// paper's maximum group count ([`crate::formats::gse::MAX_SHARED_EXPONENTS`]).
+/// Callers that know the actual k should use the `*_at_k` variants.
+pub const DEFAULT_MODEL_K: usize = 64;
+
 impl Device {
     /// Bytes moved by one SpMV for a matrix stored in `fmt`.
     /// Counts matrix values + column indexes + rowptr + input gather +
@@ -48,11 +53,25 @@ impl Device {
 
     /// Matrix-plane bytes of one SpMV — the part a fused multi-RHS
     /// kernel streams **once** regardless of batch width: values,
-    /// column indexes, rowptr, and the shared-exponent table.
+    /// column indexes, rowptr, and the shared-exponent table. Charges a
+    /// [`DEFAULT_MODEL_K`]-entry table for `GseSem`; see
+    /// [`Device::spmv_matrix_bytes_at_k`] for the k-exact model.
     pub fn spmv_matrix_bytes(&self, nnz: usize, nrows: usize, fmt: ValueFormat) -> f64 {
+        self.spmv_matrix_bytes_at_k(nnz, nrows, fmt, DEFAULT_MODEL_K)
+    }
+
+    /// Matrix-plane bytes with the shared-exponent table charged at its
+    /// actual size: `k` 4-byte entries for `GseSem`, nothing otherwise.
+    pub fn spmv_matrix_bytes_at_k(
+        &self,
+        nnz: usize,
+        nrows: usize,
+        fmt: ValueFormat,
+        k: usize,
+    ) -> f64 {
         let value_bytes = fmt.bytes_per_value();
         let gse_table = match fmt {
-            ValueFormat::GseSem(_) => 64 * 4,
+            ValueFormat::GseSem(_) => k * 4,
             _ => 0,
         };
         (nnz * (value_bytes + 4) + (nrows + 1) * 8 + gse_table) as f64
@@ -74,17 +93,50 @@ impl Device {
         self.spmv_matrix_bytes(nnz, nrows, fmt) + nrhs as f64 * self.spmv_rhs_bytes(nnz, nrows)
     }
 
-    /// Modeled kernel time for one SpMV.
-    pub fn spmv_time(&self, nnz: usize, nrows: usize, fmt: ValueFormat) -> f64 {
-        let mem = self.spmv_bytes(nnz, nrows, fmt) / self.bw;
-        let decode = match fmt {
+    /// [`Device::spmv_multi_bytes`] with the table charged at its actual
+    /// k ([`Device::spmv_matrix_bytes_at_k`]).
+    pub fn spmv_multi_bytes_at_k(
+        &self,
+        nnz: usize,
+        nrows: usize,
+        fmt: ValueFormat,
+        nrhs: usize,
+        k: usize,
+    ) -> f64 {
+        self.spmv_matrix_bytes_at_k(nnz, nrows, fmt, k)
+            + nrhs as f64 * self.spmv_rhs_bytes(nnz, nrows)
+    }
+
+    /// Per-nonzero decode cost (seconds) of widening `fmt` to fp64.
+    fn decode_time(&self, nnz: usize, fmt: ValueFormat) -> f64 {
+        match fmt {
             ValueFormat::GseSem(_) => nnz as f64 * self.gse_decode_ns * 1e-9,
             ValueFormat::Fp16 | ValueFormat::Bf16 | ValueFormat::Fp32 => {
                 nnz as f64 * self.widen_ns * 1e-9
             }
             ValueFormat::Fp64 => 0.0,
-        };
-        mem + decode
+        }
+    }
+
+    /// Modeled kernel time for one SpMV.
+    pub fn spmv_time(&self, nnz: usize, nrows: usize, fmt: ValueFormat) -> f64 {
+        self.spmv_bytes(nnz, nrows, fmt) / self.bw + self.decode_time(nnz, fmt)
+    }
+
+    /// Modeled kernel time for one fused multi-RHS SpMV with the
+    /// shared-exponent table charged at its actual k. The decode cost is
+    /// paid once per non-zero — fused kernels decode each value once and
+    /// broadcast it across the RHS block.
+    pub fn spmv_multi_time_at_k(
+        &self,
+        nnz: usize,
+        nrows: usize,
+        fmt: ValueFormat,
+        nrhs: usize,
+        k: usize,
+    ) -> f64 {
+        self.spmv_multi_bytes_at_k(nnz, nrows, fmt, nrhs, k) / self.bw
+            + self.decode_time(nnz, fmt)
     }
 
     /// Modeled speedup of `fmt` over FP64 storage.
@@ -113,12 +165,7 @@ pub fn k_overhead_time(dev: &Device, k: usize, nnz: usize) -> f64 {
 /// cost and the miss-ratio-dependent bit-scan cost: values whose
 /// exponent is NOT an exact table hit pay a longer renormalization path
 /// (Alg. 2's "finding cost is relatively low" fast path discussion).
-pub fn gse_head_time_at_k(
-    dev: &Device,
-    a: &Csr,
-    k: usize,
-    exact_hit_ratio: f64,
-) -> f64 {
+pub fn gse_head_time_at_k(dev: &Device, a: &Csr, k: usize, exact_hit_ratio: f64) -> f64 {
     let base = dev.spmv_time(a.nnz(), a.nrows, ValueFormat::GseSem(Precision::Head));
     let miss = (1.0 - exact_hit_ratio).max(0.0);
     base + k_overhead_time(dev, k, a.nnz()) + a.nnz() as f64 * miss * 0.004e-9
@@ -190,6 +237,45 @@ mod tests {
             .unwrap()
             .0;
         assert!(best > 0 && best < 5, "best index {best}, times {times:?}");
+    }
+
+    #[test]
+    fn table_bytes_follow_k_with_k64_default_unchanged() {
+        // Regression: the GSE table was hard-coded at 64 × 4 bytes for
+        // every k. The k-agnostic entry points must stay byte-for-byte
+        // at k = 64 (roofline columns, ablation_batch asserts), while
+        // the *_at_k variants charge the real table.
+        let d = V100;
+        let head = ValueFormat::GseSem(Precision::Head);
+        let full = ValueFormat::GseSem(Precision::Full);
+        for fmt in [ValueFormat::Fp64, ValueFormat::Fp16, head, full] {
+            assert_eq!(
+                d.spmv_matrix_bytes(1000, 100, fmt),
+                d.spmv_matrix_bytes_at_k(1000, 100, fmt, DEFAULT_MODEL_K)
+            );
+            assert_eq!(
+                d.spmv_multi_bytes(1000, 100, fmt, 4),
+                d.spmv_multi_bytes_at_k(1000, 100, fmt, 4, DEFAULT_MODEL_K)
+            );
+            assert_eq!(
+                d.spmv_time(1000, 100, fmt),
+                d.spmv_multi_time_at_k(1000, 100, fmt, 1, DEFAULT_MODEL_K)
+            );
+        }
+        // a k=8 table is exactly 56 entries (224 bytes) lighter
+        let b64 = d.spmv_matrix_bytes_at_k(1000, 100, head, 64);
+        let b8 = d.spmv_matrix_bytes_at_k(1000, 100, head, 8);
+        assert_eq!(b64 - b8, 56.0 * 4.0);
+        // non-GSE formats carry no table regardless of k
+        assert_eq!(
+            d.spmv_matrix_bytes_at_k(1000, 100, ValueFormat::Fp64, 2),
+            d.spmv_matrix_bytes_at_k(1000, 100, ValueFormat::Fp64, 64)
+        );
+        // smaller tables shrink modeled time, consistent with k_overhead_time
+        assert!(
+            d.spmv_multi_time_at_k(1000, 100, head, 4, 8)
+                < d.spmv_multi_time_at_k(1000, 100, head, 4, 64)
+        );
     }
 
     #[test]

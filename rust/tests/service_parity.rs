@@ -317,6 +317,55 @@ fn bounded_intake_sheds_excess_and_admitted_match_dispatch() {
 }
 
 #[test]
+fn auto_format_resolves_before_grouping_and_merges_with_hand_picked() {
+    let a = Arc::new(poisson2d(12, 12));
+    // what the policy will resolve Auto to for this digest at width 1
+    let hand = gsem::coordinator::policy::decide(&a, SolverKind::Cg, 1).choice;
+    assert!(
+        matches!(hand, FormatChoice::Stepped { .. }),
+        "narrow poisson population resolves to the stepped ladder, got {hand:?}"
+    );
+    let svc = SolverService::manual(ServiceConfig::new().workers(2));
+    let auto_req = {
+        let mut r = SolveRequest::new("auto", Arc::clone(&a), SolverKind::Cg, FormatChoice::Auto);
+        r.rhs = RhsSpec::Random(7);
+        r
+    };
+    let hand_req = {
+        let mut r = SolveRequest::new("hand", Arc::clone(&a), SolverKind::Cg, hand.clone());
+        r.rhs = RhsSpec::Random(8);
+        r
+    };
+    let t_auto = svc.submit_request(auto_req.clone()).unwrap();
+    let t_hand = svc.submit_request(hand_req.clone()).unwrap();
+    assert_eq!(svc.flush(), 2);
+    let r_auto = t_auto.wait().unwrap();
+    let r_hand = t_hand.wait().unwrap();
+    // Auto resolved to the hand-picked key BEFORE the grouping pass:
+    // the two requests land in one merged multi-RHS block
+    assert_eq!(svc.metrics().counter("intake.merged"), 2);
+    assert_eq!(svc.metrics().counter("pool.batched_groups"), 1);
+    assert_eq!(svc.metrics().counter("policy.decisions"), 1);
+    // each column bitwise-matches one-shot dispatch at the resolved format
+    let mut single_auto = auto_req;
+    single_auto.format = hand.clone();
+    let s_auto = gsem::coordinator::jobs::dispatch(&single_auto).unwrap();
+    let s_hand = gsem::coordinator::jobs::dispatch(&hand_req).unwrap();
+    assert_eq!(r_auto.format_label, "GSE-SEM");
+    assert_eq!(r_auto.outcome.x, s_auto.outcome.x, "auto column diverged bitwise");
+    assert_eq!(r_hand.outcome.x, s_hand.outcome.x, "hand column diverged bitwise");
+    // a second Auto request: the digest's decision is served from cache
+    // and resolves to the identical solve
+    let mut again = SolveRequest::new("auto2", Arc::clone(&a), SolverKind::Cg, FormatChoice::Auto);
+    again.rhs = RhsSpec::Random(7);
+    let t2 = svc.submit_request(again).unwrap();
+    svc.flush();
+    let r2 = t2.wait().unwrap();
+    assert_eq!(svc.metrics().counter("policy.cache_hits"), 1);
+    assert_eq!(r2.outcome.x, s_auto.outcome.x, "cached decision changed the result");
+}
+
+#[test]
 fn new_counters_appear_in_metrics_report() {
     let svc = SolverService::manual(ServiceConfig::new().workers(2).cache_bytes(8 * 1024));
     let tickets: Vec<_> =
